@@ -1,0 +1,26 @@
+//! Internal calibration probe (kept as an example of raw triple runs).
+use occamy_offload::config::Config;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::run_triple;
+
+fn main() {
+    let cfg = Config::default();
+    let specs = [
+        ("axpy1024", JobSpec::Axpy { n: 1024 }),
+        ("mc16k", JobSpec::MonteCarlo { samples: 16384 }),
+        ("matmul16", JobSpec::Matmul { m: 16, n: 16, k: 16 }),
+        ("atax64", JobSpec::Atax { m: 64, n: 64 }),
+        ("cov32x64", JobSpec::Covariance { m: 32, n: 64 }),
+        ("bfs64", JobSpec::Bfs { nodes: 64, levels: 4 }),
+    ];
+    println!("{:<10} {:>3} {:>8} {:>8} {:>8} {:>9} {:>9} {:>6} {:>6} {:>5}",
+        "kernel", "n", "base", "ideal", "improved", "overhead", "residual", "idSp", "achSp", "rest");
+    for (name, spec) in &specs {
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            let t = run_triple(&cfg, spec, n).runtimes(n);
+            println!("{:<10} {:>3} {:>8} {:>8} {:>8} {:>9} {:>9} {:>6.2} {:>6.2} {:>5.2}",
+                name, n, t.base, t.ideal, t.improved, t.overhead(), t.residual_overhead(),
+                t.ideal_speedup(), t.achieved_speedup(), t.restored_fraction());
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! End-to-end driver — proves all layers compose on a real workload.
+//!
+//! Boots the full stack: the cycle-level Occamy DES (L3 timing), the PJRT
+//! runtime with the AOT-compiled JAX/Pallas kernels (L1/L2 numerics, via
+//! `make artifacts`), and the coordinator (queueing, model-driven offload
+//! decision, JCU completion tracking). Streams a mixed trace of several
+//! hundred jobs across all six kernels, verifies every result against the
+//! native references, and reports latency/throughput. The run is recorded
+//! in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use occamy_offload::config::Config;
+use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Placement};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::runtime::default_artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let n_jobs: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(350);
+
+    // The job mix: every kernel family, sizes matching the AOT'd
+    // artifact variants, weighted toward the fine-grained jobs the
+    // paper's optimizations target.
+    let mix: Vec<JobSpec> = vec![
+        JobSpec::Axpy { n: 256 },
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::Axpy { n: 4096 },
+        JobSpec::Matmul { m: 16, n: 16, k: 16 },
+        JobSpec::Matmul { m: 64, n: 64, k: 64 },
+        JobSpec::Atax { m: 64, n: 64 },
+        JobSpec::Atax { m: 128, n: 128 },
+        JobSpec::Covariance { m: 32, n: 64 },
+        JobSpec::MonteCarlo { samples: 1024 },
+        JobSpec::MonteCarlo { samples: 16384 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+        JobSpec::Bfs { nodes: 128, levels: 4 },
+    ];
+
+    let artifacts = default_artifacts_dir();
+    println!("artifacts: {} | jobs: {n_jobs}", artifacts.display());
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            cfg: Config::default(),
+            queue_depth: 32,
+            timing_only: false,
+        },
+        Some(&artifacts),
+    )?;
+
+    let t0 = std::time::Instant::now();
+    // Submit from a separate thread through a cloned handle so the
+    // bounded queue's backpressure is actually exercised.
+    let submitter = coord.submitter();
+    let reqs: Vec<JobRequest> = mix
+        .iter()
+        .cycle()
+        .take(n_jobs as usize)
+        .enumerate()
+        .map(|(i, spec)| JobRequest::new(i as u64, *spec))
+        .collect();
+    let submit_thread = std::thread::spawn(move || {
+        for r in reqs {
+            submitter.submit(r).expect("submit");
+        }
+    });
+    // Drain results on this thread.
+    let mut verified = 0u64;
+    let mut failures = 0u64;
+    let mut host = 0u64;
+    let mut accel_clusters = std::collections::BTreeMap::<usize, u64>::new();
+    for _ in 0..n_jobs {
+        let r = coord.recv().expect("result");
+        if r.verified {
+            verified += 1;
+        } else {
+            failures += 1;
+            eprintln!("FAIL: job {} {:?}", r.id, r.spec);
+        }
+        match r.placement {
+            Placement::Host => host += 1,
+            Placement::Accelerator { n_clusters } => {
+                *accel_clusters.entry(n_clusters).or_default() += 1
+            }
+        }
+    }
+    submit_thread.join().expect("submitter");
+    let wall = t0.elapsed();
+    let metrics = coord.shutdown();
+
+    println!("\n=== end-to-end run ===");
+    println!("{}", metrics.summary());
+    println!("placements: {host} host, accel by clusters: {accel_clusters:?}");
+    println!(
+        "wall: {:.2}s -> {:.1} jobs/s | sim throughput: {:.0} jobs/sim-second",
+        wall.as_secs_f64(),
+        n_jobs as f64 / wall.as_secs_f64(),
+        metrics.jobs_per_sim_second()
+    );
+    println!(
+        "verification: {verified}/{n_jobs} OK ({} failures)",
+        failures
+    );
+    anyhow::ensure!(failures == 0, "verification failures");
+    println!("END-TO-END OK");
+    Ok(())
+}

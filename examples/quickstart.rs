@@ -1,0 +1,54 @@
+//! Quickstart: simulate one offloaded job in all three variants and print
+//! the paper's headline metrics for it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use occamy_offload::config::Config;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::model::OffloadModel;
+use occamy_offload::offload::run_triple;
+
+fn main() {
+    // The simulated SoC: Occamy's 8 quadrants x 4 clusters x (8+1) cores
+    // with the paper's calibrated timing constants. Everything is
+    // overridable via Config::from_toml — try `occamy config-dump`.
+    let cfg = Config::default();
+    println!(
+        "SoC: {} clusters, {} accelerator cores\n",
+        cfg.soc.n_clusters(),
+        cfg.soc.n_accel_cores()
+    );
+
+    // A fine-grained AXPY — the class of job the paper's optimizations
+    // target (§5.4: fine-grained heterogeneous tasks benefit the most).
+    let spec = JobSpec::Axpy { n: 1024 };
+    println!("job: {:?} ({} flops)\n", spec, spec.flops());
+
+    println!(
+        "{:>8}  {:>8}  {:>8}  {:>9}  {:>9}  {:>7}  {:>8}",
+        "clusters", "base", "improved", "ideal", "overhead", "idealSp", "achieved"
+    );
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        println!(
+            "{:>8}  {:>8}  {:>8}  {:>9}  {:>9}  {:>7.2}  {:>8.2}",
+            n,
+            t.base,
+            t.improved,
+            t.ideal,
+            t.overhead(),
+            t.ideal_speedup(),
+            t.achieved_speedup()
+        );
+    }
+
+    // The analytical model (Eq. 4/5): what the offload decision would use.
+    let model = OffloadModel::new(&cfg);
+    println!(
+        "\nmodel estimate at 8 clusters: {} cycles (Eq. 4 composition)",
+        model.estimate(&spec, 8)
+    );
+    println!("run `occamy experiment all` for the full figure suite");
+}

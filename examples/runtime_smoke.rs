@@ -1,0 +1,23 @@
+//! Smoke: load every artifact, execute with generated inputs, verify
+//! against the native references.
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::runtime::{default_artifacts_dir, run_and_verify, PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = PjrtRuntime::new(&default_artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+    let specs = [
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::Matmul { m: 64, n: 64, k: 64 },
+        JobSpec::Atax { m: 64, n: 64 },
+        JobSpec::Covariance { m: 32, n: 64 },
+        JobSpec::MonteCarlo { samples: 4096 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+    ];
+    for spec in &specs {
+        let out = run_and_verify(&rt, spec, 42)?;
+        println!("{:<22} verified ({} output tensors)", spec.id(), out.len());
+    }
+    println!("runtime smoke OK ({} executables cached)", rt.cached());
+    Ok(())
+}

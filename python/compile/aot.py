@@ -1,0 +1,127 @@
+"""AOT pipeline: lower every kernel variant to HLO text + manifest.
+
+Interchange format is HLO *text* (NOT ``.serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension 0.5.1
+embedded by the Rust ``xla`` crate rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. Lowering goes
+through stablehlo -> XlaComputation with ``return_tuple=True`` so the Rust
+side unwraps a 1-tuple (``to_tuple1``).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts`` target). Python never runs on the request path: the Rust
+binary only reads the files this script produces.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# One entry per artifact. The Rust coordinator picks the variant whose
+# static shape matches the job; sizes cover the paper's experiments
+# (fig. 9-12 sweeps) at simulator-friendly scale.
+VARIANTS = [
+    ("axpy", {"n": 256}),
+    ("axpy", {"n": 512}),
+    ("axpy", {"n": 1024}),
+    ("axpy", {"n": 2048}),
+    ("axpy", {"n": 4096}),
+    ("matmul", {"m": 16, "n": 16, "k": 16}),
+    ("matmul", {"m": 32, "n": 32, "k": 32}),
+    ("matmul", {"m": 64, "n": 64, "k": 64}),
+    ("matmul", {"m": 128, "n": 128, "k": 128}),
+    ("atax", {"m": 64, "n": 64}),
+    ("atax", {"m": 128, "n": 128}),
+    ("atax", {"m": 256, "n": 256}),
+    ("covariance", {"m": 32, "n": 64}),
+    ("covariance", {"m": 64, "n": 128}),
+    ("montecarlo", {"n": 1024}),
+    ("montecarlo", {"n": 4096}),
+    ("montecarlo", {"n": 16384}),
+    ("bfs", {"n": 64}),
+    ("bfs", {"n": 128}),
+]
+
+_DTYPE_NAMES = {
+    jnp.dtype("float64"): "f64",
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("uint32"): "u32",
+}
+
+
+def variant_id(name: str, params: dict) -> str:
+    tags = "_".join(f"{k}{v}" for k, v in sorted(params.items()))
+    return f"{name}_{tags}"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def describe(avals) -> list:
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": _DTYPE_NAMES[jnp.dtype(a.dtype)]})
+    return out
+
+
+def lower_variant(name: str, params: dict):
+    fn, example_args = model.build(name, **params)
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(fn, *example_args)
+    entry = {
+        "kernel": name,
+        "id": variant_id(name, params),
+        "params": params,
+        "inputs": describe(example_args),
+        "outputs": describe(out_avals),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated kernel filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, params in VARIANTS:
+        if only and name not in only:
+            continue
+        vid = variant_id(name, params)
+        text, entry = lower_variant(name, params)
+        fname = f"{vid}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = fname
+        entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        manifest["artifacts"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+# L1: Pallas kernels for the paper's six offloaded workloads (§5.1).
+# Every kernel lowers with interpret=True (CPU PJRT path); ref.py holds the
+# pure-jnp oracles used by the pytest suite.
+
+from .axpy import axpy
+from .matmul import matmul
+from .atax import atax
+from .covariance import covariance
+from .montecarlo import montecarlo
+from .bfs import bfs
+from . import ref
+
+__all__ = ["axpy", "matmul", "atax", "covariance", "montecarlo", "bfs", "ref"]

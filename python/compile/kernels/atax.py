@@ -1,0 +1,59 @@
+"""ATAX Pallas kernels: y = A^T (A x) (PolyBench, paper §5.1).
+
+Two tiled matvec passes. The row-tile grid of the first pass mirrors the
+paper's per-cluster row partition of A; the second pass accumulates the
+A^T contribution of each row tile, matching the broadcast communication
+pattern the paper identifies as the reason ATAX does not follow Amdahl's
+law (every cluster consumes the whole x / produces into the whole y).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MAT_BLOCK, choose_block
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _at_tmp_kernel(a_ref, t_ref, o_ref):
+    # Accumulate A[i-tile, :]^T @ tmp[i-tile] into the full-length output.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, t_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def atax(a, x, *, block: int | None = None):
+    """Compute A^T (A x) for A of shape (M, N), x of shape (N,)."""
+    if a.ndim != 2 or x.ndim != 1 or a.shape[1] != x.shape[0]:
+        raise ValueError(f"atax shape mismatch: {a.shape} vs {x.shape}")
+    m, n = a.shape
+    bm = block or choose_block(m, MAT_BLOCK)
+    tmp = pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=INTERPRET,
+    )(a, x)
+    return pl.pallas_call(
+        _at_tmp_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=INTERPRET,
+    )(a, tmp)

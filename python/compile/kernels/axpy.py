@@ -1,0 +1,46 @@
+"""AXPY Pallas kernel: alpha * x + y (BLAS level 1, paper §5.1).
+
+The grid partitions the vectors into per-cluster tiles, exactly like the
+offload framework distributes contiguous vector chunks to Snitch clusters
+(phase E DMA-in, phase F compute, phase G DMA-out). ``alpha`` travels as a
+(1, 1) scalar block, the analogue of a job argument in cluster TCDM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, VEC_BLOCK, choose_block
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(alpha, x, y, *, block: int | None = None):
+    """Compute ``alpha * x + y`` over 1-D vectors with a tiled Pallas kernel.
+
+    Args:
+      alpha: scalar (0-D array or python float), promoted to ``x.dtype``.
+      x, y: 1-D arrays of equal length.
+      block: tile length; defaults to the largest divisor of ``len(x)`` that
+        is <= ``VEC_BLOCK``.
+    """
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"axpy expects equal 1-D shapes, got {x.shape} / {y.shape}")
+    n = x.shape[0]
+    blk = block or choose_block(n, VEC_BLOCK)
+    alpha_arr = jnp.asarray(alpha, dtype=x.dtype).reshape((1,))
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=INTERPRET,
+    )(alpha_arr, x, y)

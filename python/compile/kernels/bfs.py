@@ -1,0 +1,62 @@
+"""BFS Pallas kernel (Graph500-style traversal, paper §5.1).
+
+Frontier-expansion BFS over a dense adjacency matrix: the level loop is a
+``lax.fori_loop`` in the L2 graph, and each expansion step (frontier-vector
+x adjacency-matrix over the boolean semiring) is a tiled Pallas matvec —
+the column-tile grid is the per-cluster partition of the node set.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MAT_BLOCK, choose_block
+
+
+def _frontier_kernel(f_ref, adj_ref, o_ref):
+    # reach[j] = sum_i frontier[i] * adj[i, j] over this column tile
+    o_ref[...] = jnp.dot(
+        f_ref[...], adj_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _expand(frontier, adj, blk):
+    n = adj.shape[0]
+    return pl.pallas_call(
+        _frontier_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((n, blk), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), adj.dtype),
+        interpret=INTERPRET,
+    )(frontier, adj)
+
+
+def bfs(adj, src, *, block: int | None = None, max_levels: int | None = None):
+    """Distances from ``src`` over the dense 0/1 adjacency ``adj`` (N, N).
+
+    Returns int32 distances with -1 for unreachable nodes. ``max_levels``
+    bounds the level loop (defaults to N, the worst-case diameter).
+    """
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"bfs expects a square adjacency, got {adj.shape}")
+    n = adj.shape[0]
+    blk = block or choose_block(n, MAT_BLOCK)
+    levels = max_levels or n
+    src = jnp.asarray(src, dtype=jnp.int32)
+    dist = jnp.full((n,), -1, dtype=jnp.int32).at[src].set(0)
+    frontier = jnp.zeros((n,), dtype=adj.dtype).at[src].set(1)
+
+    def body(level, state):
+        dist, frontier = state
+        reach = _expand(frontier, adj, blk)
+        nxt = jnp.where((reach > 0) & (dist < 0), 1, 0).astype(adj.dtype)
+        dist = jnp.where(nxt > 0, level + 1, dist)
+        return dist, nxt
+
+    dist, _ = lax.fori_loop(0, levels, body, (dist, frontier))
+    return dist

@@ -1,0 +1,38 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package lower with ``interpret=True``: the CPU PJRT
+client (the one the Rust runtime embeds) cannot execute Mosaic custom-calls,
+so interpret mode is the correctness path, while the BlockSpec structure
+still documents the HBM<->VMEM schedule a real TPU lowering would use. The
+grid dimension of every kernel mirrors the per-cluster work partition of the
+paper's offload model: one grid block <-> one Snitch cluster's TCDM tile.
+"""
+
+import math
+
+INTERPRET = True
+
+# Default tile edge. 128 KiB TCDM / 8 B per f64 / double buffering ~ 8 Ki
+# elements per tile; vector kernels use 1-D tiles of this size, matrix
+# kernels use square tiles whose footprint stays within the same budget.
+VEC_BLOCK = 256
+MAT_BLOCK = 32
+
+
+def choose_block(n: int, preferred: int) -> int:
+    """Largest divisor of ``n`` that is <= ``preferred``.
+
+    Pallas grids require the block to divide the dimension; workloads in the
+    paper are powers of two so this normally returns ``preferred`` itself.
+    """
+    if n <= 0:
+        raise ValueError(f"dimension must be positive, got {n}")
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division (grid sizing)."""
+    return math.ceil(a / b)

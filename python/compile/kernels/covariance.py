@@ -1,0 +1,47 @@
+"""Covariance Pallas kernel (PolyBench data-mining workload, paper §5.1).
+
+``data`` is (M, N): M variables, N observations. The kernel computes the
+(M, M) covariance matrix with the unbiased 1/(N-1) estimator. Centering
+(mean subtraction) happens in the L2 jax graph; the Pallas kernel is the
+rank-N update Xc @ Xc^T over an output tile grid — the per-cluster output
+tiles of the paper's partition.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MAT_BLOCK, choose_block
+
+
+def _cov_kernel(xi_ref, xj_ref, o_ref, *, inv_nm1):
+    o_ref[...] = (
+        jnp.dot(xi_ref[...], xj_ref[...].T, preferred_element_type=o_ref.dtype)
+        * inv_nm1
+    )
+
+
+def covariance(data, *, block: int | None = None):
+    """Covariance matrix of an (M, N) data matrix."""
+    if data.ndim != 2:
+        raise ValueError(f"covariance expects a 2-D matrix, got {data.shape}")
+    m, n = data.shape
+    if n < 2:
+        raise ValueError("covariance needs at least 2 observations")
+    bm = block or choose_block(m, MAT_BLOCK)
+    mean = jnp.mean(data, axis=1, keepdims=True)
+    centered = data - mean
+    import functools
+
+    kern = functools.partial(_cov_kernel, inv_nm1=1.0 / (n - 1))
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), data.dtype),
+        interpret=INTERPRET,
+    )(centered, centered)

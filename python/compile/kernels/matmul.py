@@ -1,0 +1,46 @@
+"""Matmul Pallas kernel: C = A @ B (BLAS level 3, paper §5.1).
+
+2-D output grid with a K-accumulation loop carried across the innermost
+grid dimension; each (i, j) block is the tile a Snitch cluster would hold
+in TCDM (on TPU: a VMEM tile feeding the MXU). Accumulation into ``o_ref``
+across the k dimension relies on Pallas' sequential-grid semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MAT_BLOCK, choose_block
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul(a, b, *, block: int | None = None):
+    """Tiled matrix multiply of (M, K) @ (K, N) -> (M, N)."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm = block or choose_block(m, MAT_BLOCK)
+    bn = block or choose_block(n, MAT_BLOCK)
+    bk = block or choose_block(k, MAT_BLOCK)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, b)

@@ -1,0 +1,38 @@
+"""Monte Carlo pi Pallas kernel (paper §5.1).
+
+Point generation lives in the L2 jax graph (threefry lowers to plain HLO);
+the Pallas kernel is the data-parallel reduction: count samples inside the
+unit circle, one partial count per grid block (= per cluster), then a final
+jnp reduction. This mirrors the paper's per-cluster partial sums + host
+combine structure.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, VEC_BLOCK, choose_block
+
+
+def _mc_count_kernel(pts_ref, o_ref):
+    x = pts_ref[0, :]
+    y = pts_ref[1, :]
+    o_ref[0] = jnp.sum((x * x + y * y < 1.0).astype(o_ref.dtype))
+
+
+def montecarlo(points, *, block: int | None = None):
+    """Estimate pi from a (2, N) array of uniform [0,1)^2 samples."""
+    if points.ndim != 2 or points.shape[0] != 2:
+        raise ValueError(f"montecarlo expects (2, N) points, got {points.shape}")
+    n = points.shape[1]
+    blk = block or choose_block(n, VEC_BLOCK)
+    grid = (n // blk,)
+    partial = pl.pallas_call(
+        _mc_count_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2, blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // blk,), points.dtype),
+        interpret=INTERPRET,
+    )(points)
+    return 4.0 * jnp.sum(partial) / n

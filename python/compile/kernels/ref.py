@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the six offloaded kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the HLO
+artifacts executed by the Rust runtime) are validated against. They mirror
+the six workloads of the paper (§5.1): AXPY, Monte Carlo pi, Matmul, ATAX,
+Covariance and BFS.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "axpy_ref",
+    "matmul_ref",
+    "atax_ref",
+    "covariance_ref",
+    "montecarlo_ref",
+    "bfs_ref",
+]
+
+
+def axpy_ref(alpha, x, y):
+    """BLAS level-1 AXPY: alpha * x + y."""
+    return alpha * x + y
+
+
+def matmul_ref(a, b):
+    """BLAS level-3 GEMM: C = A @ B."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def atax_ref(a, x):
+    """PolyBench ATAX: y = A^T (A x)."""
+    tmp = jnp.dot(a, x, preferred_element_type=a.dtype)
+    return jnp.dot(a.T, tmp, preferred_element_type=a.dtype)
+
+
+def covariance_ref(data):
+    """PolyBench Covariance.
+
+    ``data`` is an (M, N) matrix of M variables observed over N samples.
+    Returns the (M, M) covariance matrix with the 1/(N-1) estimator.
+    """
+    n = data.shape[1]
+    mean = jnp.mean(data, axis=1, keepdims=True)
+    centered = data - mean
+    return jnp.dot(centered, centered.T, preferred_element_type=data.dtype) / (n - 1)
+
+
+def montecarlo_ref(points):
+    """Monte Carlo pi estimation.
+
+    ``points`` is a (2, N) array of uniform samples in [0, 1)^2. Returns the
+    pi estimate 4 * inside / N as a scalar of the points' dtype.
+    """
+    x, y = points[0], points[1]
+    inside = jnp.sum((x * x + y * y < 1.0).astype(points.dtype))
+    return 4.0 * inside / points.shape[1]
+
+
+def bfs_ref(adj, src):
+    """Graph500-style BFS over a dense adjacency matrix.
+
+    ``adj`` is an (N, N) 0/1 matrix (adj[i, j] = 1 iff edge i -> j), ``src``
+    a scalar int32 node index. Returns int32 distances, -1 for unreachable.
+    """
+    n = adj.shape[0]
+    dist = jnp.full((n,), -1, dtype=jnp.int32)
+    dist = dist.at[src].set(0)
+    frontier = jnp.zeros((n,), dtype=adj.dtype).at[src].set(1)
+
+    def body(level, state):
+        dist, frontier = state
+        # next frontier: nodes reachable from the frontier, not yet visited
+        reach = jnp.dot(frontier, adj, preferred_element_type=adj.dtype)
+        nxt = jnp.where((reach > 0) & (dist < 0), 1, 0).astype(adj.dtype)
+        dist = jnp.where(nxt > 0, level + 1, dist)
+        return dist, nxt
+
+    dist, _ = lax.fori_loop(0, n, body, (dist, frontier))
+    return dist

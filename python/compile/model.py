@@ -1,0 +1,86 @@
+"""L2: jax compute graphs for the six offloaded workloads.
+
+Each ``<kernel>_fn`` is the exact computation the Rust coordinator executes
+through PJRT when a job of that kind is offloaded: it composes the L1 Pallas
+kernel(s) with any surrounding jnp glue (mean-centering, RNG, level loop).
+``build(name, **params)`` returns ``(fn, example_args)`` ready for
+``jax.jit(fn).lower(*example_args)`` in aot.py.
+
+All floating-point workloads are double precision, matching the paper
+(§5.1: "All workloads operate on double-precision floating-point operands").
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from . import kernels
+
+
+def axpy_fn(alpha, x, y):
+    """alpha * x + y. Arguments mirror the paper's AXPY job arguments."""
+    return (kernels.axpy(alpha, x, y),)
+
+
+def matmul_fn(a, b):
+    """C = A @ B."""
+    return (kernels.matmul(a, b),)
+
+
+def atax_fn(a, x):
+    """y = A^T (A x)."""
+    return (kernels.atax(a, x),)
+
+
+def covariance_fn(data):
+    """(M, M) covariance of an (M, N) data matrix."""
+    return (kernels.covariance(data),)
+
+
+def montecarlo_fn(seed, n):
+    """Monte Carlo pi from ``n`` threefry samples; ``n`` is static."""
+    pts = jax.random.uniform(
+        jax.random.PRNGKey(seed), (2, n), dtype=jnp.float64
+    )
+    return (kernels.montecarlo(pts),)
+
+
+def bfs_fn(adj, src):
+    """BFS distances (int32, -1 unreachable) from ``src``."""
+    return (kernels.bfs(adj, src),)
+
+
+def _f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def build(name: str, **params):
+    """Return ``(fn, example_args)`` for one AOT variant.
+
+    ``params`` are the static shape parameters: N (axpy/montecarlo/bfs),
+    M+N+K (matmul), M+N (atax/covariance).
+    """
+    if name == "axpy":
+        n = params["n"]
+        return axpy_fn, (_f64(), _f64(n), _f64(n))
+    if name == "matmul":
+        m, n, k = params["m"], params["n"], params["k"]
+        return matmul_fn, (_f64(m, k), _f64(k, n))
+    if name == "atax":
+        m, n = params["m"], params["n"]
+        return atax_fn, (_f64(m, n), _f64(n))
+    if name == "covariance":
+        m, n = params["m"], params["n"]
+        return covariance_fn, (_f64(m, n),)
+    if name == "montecarlo":
+        n = params["n"]
+        import functools
+
+        fn = functools.partial(montecarlo_fn, n=n)
+        return fn, (jax.ShapeDtypeStruct((), jnp.uint32),)
+    if name == "bfs":
+        n = params["n"]
+        return bfs_fn, (_f64(n, n), jax.ShapeDtypeStruct((), jnp.int32))
+    raise ValueError(f"unknown kernel {name!r}")

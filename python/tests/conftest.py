@@ -1,0 +1,7 @@
+# Make `from compile import ...` work regardless of the pytest invocation
+# directory (the Makefile runs from python/, the top-level validation run
+# from the repo root).
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -1,0 +1,59 @@
+"""AOT pipeline tests: HLO text emission, manifest schema, determinism."""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+
+
+def test_variant_id_stable():
+    assert aot.variant_id("axpy", {"n": 1024}) == "axpy_n1024"
+    assert (
+        aot.variant_id("matmul", {"m": 64, "n": 64, "k": 64})
+        == "matmul_k64_m64_n64"
+    )
+
+
+def test_lower_variant_axpy():
+    text, entry = aot.lower_variant("axpy", {"n": 256})
+    assert "HloModule" in text
+    assert entry["kernel"] == "axpy"
+    assert entry["inputs"][0] == {"shape": [], "dtype": "f64"}
+    assert entry["inputs"][1] == {"shape": [256], "dtype": "f64"}
+    assert entry["outputs"] == [{"shape": [256], "dtype": "f64"}]
+
+
+def test_lower_variant_deterministic():
+    t1, _ = aot.lower_variant("axpy", {"n": 256})
+    t2, _ = aot.lower_variant("axpy", {"n": 256})
+    assert t1 == t2
+
+
+def test_lower_variant_bfs_outputs_i32():
+    _, entry = aot.lower_variant("bfs", {"n": 64})
+    assert entry["outputs"] == [{"shape": [64], "dtype": "i32"}]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_consistent_with_files():
+    adir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(adir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    assert len(manifest["artifacts"]) >= 6
+    kernels = {e["kernel"] for e in manifest["artifacts"]}
+    assert kernels == {"axpy", "matmul", "atax", "covariance", "montecarlo", "bfs"}
+    for e in manifest["artifacts"]:
+        path = os.path.join(adir, e["file"])
+        assert os.path.exists(path), e["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head

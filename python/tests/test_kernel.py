@@ -1,0 +1,248 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and seeds) per kernel; every case asserts
+allclose against ref.py at double precision tolerances.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.common import choose_block
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float64):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- axpy
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4096),
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(-1e3, 1e3, allow_nan=False),
+)
+def test_axpy_matches_ref(n, seed, alpha):
+    x = rand(seed, (n,))
+    y = rand(seed + 1, (n,))
+    got = kernels.axpy(alpha, x, y)
+    want = ref.axpy_ref(alpha, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_axpy_dtypes(dtype):
+    x = rand(0, (256,), dtype)
+    y = rand(1, (256,), dtype)
+    got = kernels.axpy(2.0, x, y)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got, ref.axpy_ref(2.0, x, y), rtol=1e-5)
+
+
+def test_axpy_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        kernels.axpy(1.0, jnp.ones(4), jnp.ones(5))
+
+
+def test_axpy_explicit_block():
+    x = rand(0, (1024,))
+    y = rand(1, (1024,))
+    for blk in (32, 128, 1024):
+        np.testing.assert_allclose(
+            kernels.axpy(1.5, x, y, block=blk), ref.axpy_ref(1.5, x, y), rtol=1e-12
+        )
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    k=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, n, k, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-10, atol=1e-10
+    )
+
+
+def test_matmul_identity():
+    a = rand(3, (64, 64))
+    np.testing.assert_allclose(
+        kernels.matmul(a, jnp.eye(64, dtype=jnp.float64)), a, rtol=1e-12
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kernels.matmul(jnp.ones((4, 5)), jnp.ones((4, 5)))
+
+
+def test_matmul_f32():
+    a = rand(0, (32, 32), jnp.float32)
+    b = rand(1, (32, 32), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------- atax
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 128), n=st.integers(1, 128), seed=st.integers(0, 2**31 - 1))
+def test_atax_matches_ref(m, n, seed):
+    a = rand(seed, (m, n))
+    x = rand(seed + 1, (n,))
+    np.testing.assert_allclose(
+        kernels.atax(a, x), ref.atax_ref(a, x), rtol=1e-9, atol=1e-9
+    )
+
+
+def test_atax_zero_vector():
+    a = rand(0, (64, 64))
+    np.testing.assert_allclose(
+        kernels.atax(a, jnp.zeros(64, jnp.float64)), jnp.zeros(64), atol=0
+    )
+
+
+def test_atax_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kernels.atax(jnp.ones((4, 5)), jnp.ones(4))
+
+
+# ---------------------------------------------------------------- covariance
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 64), n=st.integers(2, 128), seed=st.integers(0, 2**31 - 1))
+def test_covariance_matches_ref(m, n, seed):
+    d = rand(seed, (m, n))
+    np.testing.assert_allclose(
+        kernels.covariance(d), ref.covariance_ref(d), rtol=1e-9, atol=1e-9
+    )
+
+
+def test_covariance_matches_numpy():
+    d = rand(7, (16, 64))
+    np.testing.assert_allclose(
+        kernels.covariance(d), np.cov(np.asarray(d)), rtol=1e-9, atol=1e-9
+    )
+
+
+def test_covariance_is_symmetric_psd():
+    d = rand(11, (24, 96))
+    c = np.asarray(kernels.covariance(d))
+    np.testing.assert_allclose(c, c.T, atol=1e-12)
+    eig = np.linalg.eigvalsh(c)
+    assert eig.min() > -1e-9
+
+
+def test_covariance_rejects_single_sample():
+    with pytest.raises(ValueError):
+        kernels.covariance(jnp.ones((4, 1)))
+
+
+# ---------------------------------------------------------------- montecarlo
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 8192), seed=st.integers(0, 2**31 - 1))
+def test_montecarlo_matches_ref(n, seed):
+    pts = jax.random.uniform(jax.random.PRNGKey(seed), (2, n), dtype=jnp.float64)
+    np.testing.assert_allclose(
+        kernels.montecarlo(pts), ref.montecarlo_ref(pts), rtol=1e-12
+    )
+
+
+def test_montecarlo_converges_to_pi():
+    pts = jax.random.uniform(jax.random.PRNGKey(0), (2, 1 << 16), dtype=jnp.float64)
+    assert abs(float(kernels.montecarlo(pts)) - np.pi) < 0.05
+
+
+def test_montecarlo_all_inside_outside():
+    inside = jnp.zeros((2, 128), jnp.float64) + 0.1
+    assert float(kernels.montecarlo(inside)) == 4.0
+    outside = jnp.ones((2, 128), jnp.float64) * 0.9
+    assert float(kernels.montecarlo(outside)) == 0.0
+
+
+# ---------------------------------------------------------------- bfs
+
+
+def random_adj(n, p, seed, symmetric=True):
+    a = (jax.random.uniform(jax.random.PRNGKey(seed), (n, n)) < p).astype(
+        jnp.float64
+    )
+    a = a * (1 - jnp.eye(n, dtype=jnp.float64))
+    if symmetric:
+        a = jnp.maximum(a, a.T)
+    return a
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 96),
+    p=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+    symmetric=st.booleans(),
+)
+def test_bfs_matches_ref(n, p, seed, symmetric):
+    adj = random_adj(n, p, seed, symmetric)
+    src = seed % n
+    np.testing.assert_array_equal(kernels.bfs(adj, src), ref.bfs_ref(adj, src))
+
+
+def test_bfs_path_graph():
+    n = 32
+    adj = jnp.zeros((n, n), jnp.float64)
+    for i in range(n - 1):
+        adj = adj.at[i, i + 1].set(1.0).at[i + 1, i].set(1.0)
+    dist = np.asarray(kernels.bfs(adj, 0))
+    np.testing.assert_array_equal(dist, np.arange(n))
+
+
+def test_bfs_disconnected():
+    adj = jnp.zeros((16, 16), jnp.float64)
+    dist = np.asarray(kernels.bfs(adj, 3))
+    assert dist[3] == 0 and (dist[np.arange(16) != 3] == -1).all()
+
+
+def test_bfs_matches_networkx_style_check():
+    # complete graph: every node at distance 1
+    n = 24
+    adj = jnp.ones((n, n), jnp.float64) - jnp.eye(n, dtype=jnp.float64)
+    dist = np.asarray(kernels.bfs(adj, 5))
+    assert dist[5] == 0 and (np.delete(dist, 5) == 1).all()
+
+
+# ---------------------------------------------------------------- common
+
+
+@given(n=st.integers(1, 10000), pref=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_choose_block_divides(n, pref):
+    b = choose_block(n, pref)
+    assert 1 <= b <= min(n, pref)
+    assert n % b == 0
+
+
+def test_choose_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        choose_block(0, 8)

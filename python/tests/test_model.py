@@ -1,0 +1,73 @@
+"""L2 graph shape/behaviour tests: model.build variants and jit round-trips."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize(
+    "name,params",
+    [
+        ("axpy", {"n": 256}),
+        ("matmul", {"m": 32, "n": 32, "k": 32}),
+        ("atax", {"m": 64, "n": 64}),
+        ("covariance", {"m": 32, "n": 64}),
+        ("montecarlo", {"n": 1024}),
+        ("bfs", {"n": 64}),
+    ],
+)
+def test_build_shapes(name, params):
+    fn, example_args = model.build(name, **params)
+    out = jax.eval_shape(fn, *example_args)
+    assert isinstance(out, tuple) and len(out) == 1
+
+
+def test_build_unknown_kernel():
+    with pytest.raises(ValueError):
+        model.build("nope")
+
+
+def test_axpy_fn_numerics():
+    fn, _ = model.build("axpy", n=128)
+    x = jnp.arange(128, dtype=jnp.float64)
+    y = jnp.ones(128, dtype=jnp.float64)
+    (got,) = jax.jit(fn)(jnp.float64(3.0), x, y)
+    np.testing.assert_allclose(got, 3.0 * x + 1.0, rtol=1e-12)
+
+
+def test_matmul_fn_numerics():
+    fn, _ = model.build("matmul", m=32, n=32, k=32)
+    a = jax.random.normal(jax.random.PRNGKey(0), (32, 32), dtype=jnp.float64)
+    b = jax.random.normal(jax.random.PRNGKey(1), (32, 32), dtype=jnp.float64)
+    (got,) = jax.jit(fn)(a, b)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-10)
+
+
+def test_montecarlo_fn_estimates_pi():
+    fn, _ = model.build("montecarlo", n=4096)
+    (got,) = jax.jit(fn)(jnp.uint32(42))
+    assert abs(float(got) - np.pi) < 0.2
+
+
+def test_montecarlo_fn_deterministic_per_seed():
+    fn, _ = model.build("montecarlo", n=1024)
+    a = jax.jit(fn)(jnp.uint32(7))[0]
+    b = jax.jit(fn)(jnp.uint32(7))[0]
+    c = jax.jit(fn)(jnp.uint32(8))[0]
+    assert float(a) == float(b)
+    assert float(a) != float(c) or True  # different seeds usually differ
+
+
+def test_bfs_fn_numerics():
+    fn, _ = model.build("bfs", n=64)
+    adj = jnp.ones((64, 64), jnp.float64) - jnp.eye(64, dtype=jnp.float64)
+    (dist,) = jax.jit(fn)(adj, jnp.int32(0))
+    assert dist.dtype == jnp.int32
+    assert int(dist[0]) == 0 and (np.asarray(dist)[1:] == 1).all()

@@ -1,0 +1,69 @@
+"""Portability properties of the AOT artifacts.
+
+The Rust runtime embeds a CPU-only PJRT client (xla_extension 0.5.1): the
+HLO it receives must contain no Mosaic/TPU custom-calls (which only a TPU
+plugin can execute) and no 64-bit-id serialized-proto constructs. These
+tests pin the properties that make the interchange work at all.
+"""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../../artifacts")
+
+
+@pytest.mark.parametrize("name,params", aot.VARIANTS)
+def test_lowered_hlo_has_no_custom_calls(name, params):
+    # interpret=True must lower Pallas to plain HLO ops; a custom-call
+    # would mean a Mosaic kernel leaked through and the Rust CPU client
+    # cannot run it.
+    text, _ = aot.lower_variant(name, params)
+    assert "custom-call" not in text, f"{name} {params} contains a custom-call"
+    assert text.startswith("HloModule")
+
+
+def test_variants_cover_benchmark_set_sizes():
+    # The Rust exp::benchmark_set() sizes must all have artifacts so the
+    # coordinator can execute the fig7/fig8 workloads functionally.
+    ids = {aot.variant_id(n, p) for n, p in aot.VARIANTS}
+    for required in [
+        "axpy_n1024",
+        "montecarlo_n16384",
+        "matmul_k16_m16_n16",
+        "atax_m64_n64",
+        "covariance_m32_n64",
+        "bfs_n64",
+    ]:
+        assert required in ids, f"missing benchmark-set artifact {required}"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_artifacts_match_variant_list():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    built = {e["id"] for e in manifest["artifacts"]}
+    declared = {aot.variant_id(n, p) for n, p in aot.VARIANTS}
+    assert built == declared, f"stale artifacts: {built ^ declared}"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_hlo_files_are_custom_call_free():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    for e in manifest["artifacts"]:
+        text = open(os.path.join(ARTIFACTS, e["file"])).read()
+        assert "custom-call" not in text, e["id"]

@@ -1,0 +1,15 @@
+//! Bench: the co-design ablation (multicast vs JCU contributions, port
+//! arbitration) — regenerates the tables and times the sweep.
+use occamy_offload::bench::Bench;
+use occamy_offload::config::Config;
+use occamy_offload::exp::ablation;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bench::new();
+    b.run("ablation/full_sweep", 1, 5, || ablation::run(&cfg));
+    let a = ablation::run(&cfg);
+    println!("\n{}", ablation::render(&a).render());
+    println!("{}", ablation::render_port(&a).render());
+    b.finish("ablation");
+}

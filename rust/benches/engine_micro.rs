@@ -1,0 +1,64 @@
+//! Microbenchmarks of the simulation substrate: event queue throughput,
+//! RR/fluid port arbitration, XBAR multicast decode — the L3 hot paths
+//! the §Perf pass optimizes.
+use occamy_offload::bench::{black_box, Bench};
+use occamy_offload::config::Config;
+use occamy_offload::noc::{MaskedAddr, NarrowNoc};
+use occamy_offload::sim::{EventQueue, PsPort, RrPort};
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.run("engine/queue_10k_events", 2, 20, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule(i * 7 % 4096, i);
+        }
+        let mut sum = 0u64;
+        while let Some((_, e)) = q.pop() {
+            sum = sum.wrapping_add(e);
+        }
+        sum
+    });
+
+    b.run("engine/rr_port_1k_transfers", 2, 20, || {
+        let mut p = RrPort::new(32);
+        for i in 0..1000usize {
+            p.submit(i % 32, 16);
+        }
+        let mut t = 0u64;
+        while let Some((_, beats)) = p.try_grant() {
+            t += beats;
+            p.complete();
+        }
+        t
+    });
+
+    b.run("engine/fluid_port_256_joins", 2, 20, || {
+        let mut p = PsPort::new();
+        let mut now = 0;
+        for i in 0..256u64 {
+            p.join(now, 32);
+            now += 1;
+            if i % 8 == 7 {
+                if let Some((t, _)) = p.next_completion(now) {
+                    now = t;
+                    black_box(p.collect_finished(now));
+                }
+            }
+        }
+        p.in_flight()
+    });
+
+    let cfg = Config::default();
+    let noc = NarrowNoc::new(&cfg, true);
+    let req = MaskedAddr { addr: 0x20, mask: 0b11111 << 18 };
+    b.run("noc/two_level_multicast_decode", 10, 200, || {
+        noc.route_clusters(black_box(req)).unwrap().len()
+    });
+    b.run("noc/encode_first_n_all", 10, 200, || {
+        (1..=32usize).map(|n| noc.encode_first_n(n, 0).len()).sum::<usize>()
+    });
+
+    b.finish("engine_micro");
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 11 (per-phase breakdown of AXPY-1024) and time
+//! single offload executions at both extremes of the sweep.
+use occamy_offload::bench::{black_box, Bench};
+use occamy_offload::config::Config;
+use occamy_offload::exp::fig11;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::{run_offload, RoutineKind};
+
+fn main() {
+    let cfg = Config::default();
+    let spec = JobSpec::Axpy { n: 1024 };
+    let mut b = Bench::new();
+    for routine in [RoutineKind::Baseline, RoutineKind::Multicast] {
+        for n in [1usize, 32] {
+            b.run(&format!("fig11/offload/{}/c{n}", routine.name()), 3, 20, || {
+                run_offload(&cfg, black_box(&spec), n, routine)
+            });
+        }
+    }
+    b.run("fig11/full_breakdown", 1, 5, || fig11::run(&cfg));
+    println!("\n{}", fig11::render(&fig11::run(&cfg)).render());
+    b.finish("fig11_phase_breakdown");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 12 (model validation grid) and time the
+//! analytical model alone vs the simulation it is validated against.
+use occamy_offload::bench::{black_box, Bench};
+use occamy_offload::config::Config;
+use occamy_offload::exp::fig12;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::model::OffloadModel;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bench::new();
+    let model = OffloadModel::new(&cfg);
+    let spec = JobSpec::Axpy { n: 1024 };
+    b.run("fig12/model_estimate", 10, 100, || {
+        model.estimate(black_box(&spec), 32)
+    });
+    b.run("fig12/validation_grid", 1, 5, || fig12::run(&cfg));
+    let fig = fig12::run(&cfg);
+    println!("\n{}", fig12::render(&fig).render());
+    println!("max relative error: {:.1}% (paper: <15%)", fig.max_error() * 100.0);
+    b.finish("fig12_model_error");
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 7 (offload overhead vs clusters, 6 kernels)
+//! and time the full sweep plus its per-kernel slices.
+use occamy_offload::bench::{black_box, Bench};
+use occamy_offload::config::Config;
+use occamy_offload::exp::fig7;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::run_triple;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bench::new();
+    b.run("fig7/full_sweep", 1, 5, || fig7::run(&cfg));
+    for (name, spec) in [
+        ("axpy1024", JobSpec::Axpy { n: 1024 }),
+        ("atax64", JobSpec::Atax { m: 64, n: 64 }),
+    ] {
+        for n in [1usize, 32] {
+            b.run(&format!("fig7/triple/{name}/c{n}"), 2, 10, || {
+                run_triple(&cfg, black_box(&spec), n)
+            });
+        }
+    }
+    // Print the regenerated table once (the bench doubles as the harness).
+    println!("\n{}", fig7::render(&fig7::run(&cfg)).render());
+    b.finish("fig7_overheads");
+}

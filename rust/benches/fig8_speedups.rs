@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 8 (ideal vs achieved speedups) and time it.
+use occamy_offload::bench::Bench;
+use occamy_offload::config::Config;
+use occamy_offload::exp::fig8;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bench::new();
+    b.run("fig8/full_sweep", 1, 5, || fig8::run(&cfg));
+    let fig = fig8::run(&cfg);
+    println!("\n{}", fig8::render(&fig).render());
+    println!("max ideal speedup: {:.2} (paper: 3.02)", fig.max_ideal_speedup());
+    b.finish("fig8_speedups");
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 9 (base/ideal/improved curves, AXPY & ATAX).
+use occamy_offload::bench::Bench;
+use occamy_offload::config::Config;
+use occamy_offload::exp::fig9;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bench::new();
+    b.run("fig9/both_curves", 1, 10, || fig9::run(&cfg));
+    let fig = fig9::run(&cfg);
+    println!("\n{}", fig9::render(&fig).render());
+    println!(
+        "baseline AXPY minimum at {} clusters; improved at {} (paper: improved has no interior minimum)",
+        fig.axpy.argmin_base(),
+        fig.axpy.argmin_improved()
+    );
+    b.finish("fig9_runtime_curves");
+}

@@ -1,0 +1,107 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate
+//! set): warmup + timed iterations, mean/σ/min reporting, and a
+//! `black_box` to defeat const-folding. Used by every bench target under
+//! `rust/benches/`.
+
+use std::hint::black_box as hint_black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} mean  {:>12} min  (±{:?}, {} iters)",
+            self.name,
+            format!("{:?}", self.mean),
+            format!("{:?}", self.min),
+            self.std_dev,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure iteration counts chosen at
+/// call time (simulations here are deterministic, so variance is purely
+/// host noise).
+pub struct Bench {
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self {
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` for `warmup` + `iters` iterations, record stats.
+    pub fn run<T>(&mut self, name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) {
+        assert!(iters >= 1);
+        for _ in 0..warmup {
+            hint_black_box(f());
+        }
+        let mut times = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            hint_black_box(f());
+            times.push(t0.elapsed());
+        }
+        let mean_ns =
+            times.iter().map(|d| d.as_nanos()).sum::<u128>() as f64 / iters as f64;
+        let var = times
+            .iter()
+            .map(|d| (d.as_nanos() as f64 - mean_ns).powi(2))
+            .sum::<f64>()
+            / iters as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_nanos(mean_ns as u64),
+            std_dev: Duration::from_nanos(var.sqrt() as u64),
+            min: *times.iter().min().unwrap(),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print a footer; call at the end of a bench main.
+    pub fn finish(self, target: &str) {
+        println!("--- {target}: {} benchmarks done ---", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new();
+        b.run("noop", 1, 5, || 42u64);
+        b.run("spin", 0, 3, || (0..1000u64).sum::<u64>());
+        assert_eq!(b.results().len(), 2);
+        assert!(b.results()[1].mean.as_nanos() > 0);
+        b.finish("test");
+    }
+}

@@ -1,0 +1,163 @@
+//! Snitch cluster model (§3.1): 8 compute cores + 1 DMA-capable data-mover
+//! core, a banked TCDM, the MCIP wakeup register and the hardware cluster
+//! barrier. Functional state used by the coordinator; phase *timing* is
+//! produced by `offload::executor`.
+
+use crate::interrupt::McipReg;
+use crate::mem::Tcdm;
+
+/// Power state of a core (§3.2: cores default to WFI between jobs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    /// Waiting for interrupt (clock-gated pipeline).
+    Wfi,
+    /// Executing.
+    Active,
+}
+
+/// Hardware barrier inside a cluster (single-cycle-ish synchronization
+/// between the DM core and the compute cores).
+#[derive(Debug, Clone, Default)]
+pub struct HwBarrier {
+    arrived: u32,
+    expected: u32,
+    generations: u64,
+}
+
+impl HwBarrier {
+    pub fn reset(&mut self, expected: u32) {
+        assert!(expected >= 1);
+        self.arrived = 0;
+        self.expected = expected;
+    }
+
+    /// Returns true for the arrival that releases the barrier.
+    pub fn arrive(&mut self) -> bool {
+        assert!(self.expected > 0, "barrier used before reset");
+        self.arrived += 1;
+        assert!(self.arrived <= self.expected, "barrier over-subscribed");
+        if self.arrived == self.expected {
+            self.arrived = 0;
+            self.generations += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn generations(&self) -> u64 {
+        self.generations
+    }
+}
+
+/// One Snitch cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub index: usize,
+    pub tcdm: Tcdm,
+    pub mcip: McipReg,
+    pub barrier: HwBarrier,
+    pub cores: Vec<CoreState>,
+}
+
+impl Cluster {
+    pub fn new(index: usize, n_compute_cores: usize, tcdm_bytes: u64) -> Self {
+        let n_cores = n_compute_cores + 1; // + DM core
+        Self {
+            index,
+            tcdm: Tcdm::new(tcdm_bytes, 32),
+            mcip: McipReg::new(n_cores),
+            barrier: HwBarrier::default(),
+            cores: vec![CoreState::Wfi; n_cores],
+        }
+    }
+
+    pub fn occamy(index: usize) -> Self {
+        Self::new(index, 8, 128 * 1024)
+    }
+
+    /// Index of the DM core (by convention the last).
+    pub fn dm_core(&self) -> usize {
+        self.cores.len() - 1
+    }
+
+    /// Deliver a wakeup: set all MCIP bits, move cores out of WFI.
+    /// Returns how many cores actually woke (rising edges).
+    pub fn wake_all(&mut self) -> usize {
+        let woken = self.mcip.set_all();
+        for &c in &woken {
+            self.cores[c] = CoreState::Active;
+        }
+        woken.len()
+    }
+
+    /// A core clears its MCIP bit and goes back to sleep.
+    pub fn sleep(&mut self, core: usize) {
+        self.mcip.clear(core);
+        self.cores[core] = CoreState::Wfi;
+    }
+
+    pub fn all_asleep(&self) -> bool {
+        self.cores.iter().all(|c| *c == CoreState::Wfi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occamy_cluster_has_nine_cores() {
+        let c = Cluster::occamy(0);
+        assert_eq!(c.cores.len(), 9);
+        assert_eq!(c.dm_core(), 8);
+        assert!(c.all_asleep());
+    }
+
+    #[test]
+    fn wake_sleep_cycle() {
+        let mut c = Cluster::occamy(3);
+        assert_eq!(c.wake_all(), 9);
+        assert!(!c.all_asleep());
+        // Second wakeup is not a rising edge.
+        assert_eq!(c.wake_all(), 0);
+        for core in 0..9 {
+            c.sleep(core);
+        }
+        assert!(c.all_asleep());
+        // After clearing, wakeup works again.
+        assert_eq!(c.wake_all(), 9);
+    }
+
+    #[test]
+    fn barrier_releases_on_last() {
+        let mut b = HwBarrier::default();
+        b.reset(3);
+        assert!(!b.arrive());
+        assert!(!b.arrive());
+        assert!(b.arrive());
+        assert_eq!(b.generations(), 1);
+        // Auto-rearmed.
+        b.reset(2);
+        assert!(!b.arrive());
+        assert!(b.arrive());
+    }
+
+    #[test]
+    #[should_panic(expected = "before reset")]
+    fn barrier_use_before_reset_panics() {
+        let mut b = HwBarrier::default();
+        b.arrive();
+    }
+
+    #[test]
+    fn barrier_auto_rearms_after_release() {
+        // The HW barrier self-resets on release (arrive after a release
+        // starts the next generation rather than over-subscribing).
+        let mut b = HwBarrier::default();
+        b.reset(1);
+        assert!(b.arrive());
+        assert!(b.arrive());
+        assert_eq!(b.generations(), 2);
+    }
+}

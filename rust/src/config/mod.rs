@@ -1,0 +1,230 @@
+//! SoC geometry and timing configuration.
+//!
+//! Defaults reproduce the Occamy configuration of the paper (§3.1): one CVA6
+//! host, 8 quadrants x 4 clusters x (8 compute cores + 1 DMA core) = 288
+//! accelerator cores, 128 KiB TCDM per cluster, a 64-bit narrow and a
+//! 512-bit wide NoC, each a two-level crossbar tree. Timing constants are
+//! calibrated to the paper's cycle-accurate RTL measurements (§5.5); every
+//! constant cites its source. All values are overridable from TOML so the
+//! experiment harness can run ablations.
+
+
+mod timing;
+pub use timing::TimingConfig;
+
+/// Geometry of the simulated SoC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocConfig {
+    /// Number of quadrants (paper: 8).
+    pub n_quadrants: usize,
+    /// Clusters per quadrant (paper: 4).
+    pub clusters_per_quadrant: usize,
+    /// Compute cores per cluster, excluding the DMA core (paper: 8).
+    pub compute_cores_per_cluster: usize,
+    /// TCDM bytes per cluster (paper: 128 KiB).
+    pub tcdm_bytes: u64,
+    /// Per-cluster address-space stride (paper §4.2: 0x40000).
+    pub cluster_stride: u64,
+    /// Base address of cluster 0's TCDM.
+    pub cluster_base: u64,
+    /// Wide SPM size in bytes (paper: 1 MiB).
+    pub wide_spm_bytes: u64,
+    /// Narrow SPM size in bytes (paper: 512 KiB).
+    pub narrow_spm_bytes: u64,
+    /// Wide network bus width in bytes (paper: 512 bit = 64 B).
+    pub wide_bus_bytes: u64,
+    /// Narrow network bus width in bytes (paper: 64 bit = 8 B).
+    pub narrow_bus_bytes: u64,
+    /// Wide-SPM port arbitration: false = transfer-granular round-robin
+    /// (the Occamy interconnect, default), true = fluid processor sharing
+    /// (ablation; see `sim::server`).
+    pub wide_port_fluid: bool,
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        Self {
+            n_quadrants: 8,
+            clusters_per_quadrant: 4,
+            compute_cores_per_cluster: 8,
+            tcdm_bytes: 128 * 1024,
+            cluster_stride: 0x40000,
+            // Matches the encoding example of Fig. 5: bits [0,17] offset,
+            // [18,19] cluster, [20,22] quadrant.
+            cluster_base: 0x0,
+            wide_spm_bytes: 1024 * 1024,
+            narrow_spm_bytes: 512 * 1024,
+            wide_bus_bytes: 64,
+            narrow_bus_bytes: 8,
+            wide_port_fluid: false,
+        }
+    }
+}
+
+impl SocConfig {
+    /// Total number of clusters in the accelerator.
+    pub fn n_clusters(&self) -> usize {
+        self.n_quadrants * self.clusters_per_quadrant
+    }
+
+    /// Total accelerator cores (compute + DMA).
+    pub fn n_accel_cores(&self) -> usize {
+        self.n_clusters() * (self.compute_cores_per_cluster + 1)
+    }
+
+    /// Quadrant index of a cluster.
+    pub fn quadrant_of(&self, cluster: usize) -> usize {
+        cluster / self.clusters_per_quadrant
+    }
+
+    /// Base address of a cluster's TCDM.
+    pub fn cluster_addr(&self, cluster: usize) -> u64 {
+        self.cluster_base + cluster as u64 * self.cluster_stride
+    }
+}
+
+/// Complete simulator configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub soc: SocConfig,
+    pub timing: TimingConfig,
+}
+
+impl Config {
+    /// Parse from the flat-TOML subset emitted by [`Config::to_toml`]:
+    /// `[soc]` / `[timing]` sections of `key = integer` lines, `#`
+    /// comments. Unknown keys are errors (typos must not silently fall
+    /// back to defaults); missing keys keep their default value.
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section != "soc" && section != "timing" {
+                    anyhow::bail!("line {}: unknown section [{section}]", lineno + 1);
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim();
+            let v: u64 = if let Some(hex) = value.strip_prefix("0x") {
+                u64::from_str_radix(hex, 16)
+            } else {
+                value.parse()
+            }
+            .map_err(|e| anyhow::anyhow!("line {}: bad integer {value:?}: {e}", lineno + 1))?;
+            match section.as_str() {
+                "soc" => cfg.soc.set_field(key, v)?,
+                "timing" => cfg.timing.set_field(key, v)?,
+                _ => anyhow::bail!("line {}: key outside a section", lineno + 1),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to the same flat-TOML subset (complete: every field is
+    /// written, so experiment configs are fully reproducible).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from("[soc]\n");
+        for (k, v) in self.soc.fields() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out.push_str("\n[timing]\n");
+        for (k, v) in self.timing.fields() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+
+    /// Load from a file path.
+    pub fn from_path(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+}
+
+impl SocConfig {
+    /// (name, value) pairs of every field, in declaration order.
+    pub fn fields(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("n_quadrants", self.n_quadrants as u64),
+            ("clusters_per_quadrant", self.clusters_per_quadrant as u64),
+            (
+                "compute_cores_per_cluster",
+                self.compute_cores_per_cluster as u64,
+            ),
+            ("tcdm_bytes", self.tcdm_bytes),
+            ("cluster_stride", self.cluster_stride),
+            ("cluster_base", self.cluster_base),
+            ("wide_spm_bytes", self.wide_spm_bytes),
+            ("narrow_spm_bytes", self.narrow_spm_bytes),
+            ("wide_bus_bytes", self.wide_bus_bytes),
+            ("narrow_bus_bytes", self.narrow_bus_bytes),
+            ("wide_port_fluid", self.wide_port_fluid as u64),
+        ]
+    }
+
+    /// Set a field by name (config parsing).
+    pub fn set_field(&mut self, key: &str, v: u64) -> anyhow::Result<()> {
+        match key {
+            "n_quadrants" => self.n_quadrants = v as usize,
+            "clusters_per_quadrant" => self.clusters_per_quadrant = v as usize,
+            "compute_cores_per_cluster" => self.compute_cores_per_cluster = v as usize,
+            "tcdm_bytes" => self.tcdm_bytes = v,
+            "cluster_stride" => self.cluster_stride = v,
+            "cluster_base" => self.cluster_base = v,
+            "wide_spm_bytes" => self.wide_spm_bytes = v,
+            "narrow_spm_bytes" => self.narrow_spm_bytes = v,
+            "wide_bus_bytes" => self.wide_bus_bytes = v,
+            "narrow_bus_bytes" => self.narrow_bus_bytes = v,
+            "wide_port_fluid" => self.wide_port_fluid = v != 0,
+            _ => anyhow::bail!("unknown [soc] key {key:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_geometry_matches_paper() {
+        let c = SocConfig::default();
+        assert_eq!(c.n_clusters(), 32);
+        // 32 clusters x 9 cores = 288 Snitch cores (paper §3.1).
+        assert_eq!(c.n_accel_cores(), 288);
+    }
+
+    #[test]
+    fn quadrant_mapping() {
+        let c = SocConfig::default();
+        assert_eq!(c.quadrant_of(0), 0);
+        assert_eq!(c.quadrant_of(3), 0);
+        assert_eq!(c.quadrant_of(4), 1);
+        assert_eq!(c.quadrant_of(31), 7);
+    }
+
+    #[test]
+    fn cluster_addresses_are_stride_apart() {
+        let c = SocConfig::default();
+        assert_eq!(c.cluster_addr(0), 0x0);
+        assert_eq!(c.cluster_addr(1), 0x40000);
+        assert_eq!(c.cluster_addr(9), 9 * 0x40000);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = Config::default();
+        let txt = c.to_toml();
+        let back = Config::from_toml(&txt).unwrap();
+        assert_eq!(c, back);
+    }
+}

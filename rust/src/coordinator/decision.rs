@@ -1,0 +1,162 @@
+//! The offload decision (§1, §5.6).
+//!
+//! The paper motivates its runtime model by the non-intuitive offload
+//! decision: *whether* to offload a job and *how many* clusters to use.
+//! The planner answers both with the analytical model: it evaluates the
+//! Eq.-4 estimate across candidate cluster counts, picks the argmin, and
+//! offloads only when the estimated offloaded runtime beats the host
+//! estimate.
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::model::OffloadModel;
+
+use super::job::Placement;
+
+/// Estimated CVA6 cycles per useful flop for a scalar in-order core with
+/// a non-pipelined double-precision FPU path: load + FMA + store per
+/// element class of workloads.
+pub const HOST_CYCLES_PER_FLOP: f64 = 3.0;
+
+/// The planner's choice plus the estimates it was based on.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub placement: Placement,
+    /// Estimated cycles of the chosen placement.
+    pub estimate: u64,
+    /// Estimated host runtime.
+    pub host_estimate: u64,
+    /// (n_clusters, estimate) for every candidate evaluated.
+    pub candidates: Vec<(usize, u64)>,
+}
+
+/// Model-driven offload planner.
+pub struct Planner<'a> {
+    cfg: &'a Config,
+    model: OffloadModel<'a>,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(cfg: &'a Config) -> Self {
+        Self {
+            cfg,
+            model: OffloadModel::new(cfg),
+        }
+    }
+
+    /// Estimate the host (CVA6-only) runtime of a job.
+    pub fn host_estimate(&self, spec: &JobSpec) -> u64 {
+        (spec.flops() as f64 * HOST_CYCLES_PER_FLOP) as u64
+    }
+
+    /// Candidate cluster counts: powers of two up to the SoC size (each
+    /// is a single multicast transaction; §4.2).
+    pub fn candidates(&self) -> Vec<usize> {
+        let max = self.cfg.soc.n_clusters();
+        let mut v = vec![1usize];
+        while *v.last().unwrap() * 2 <= max {
+            v.push(v.last().unwrap() * 2);
+        }
+        v
+    }
+
+    /// Model estimate for a forced cluster count (no argmin).
+    pub fn plan_estimate(&self, spec: &JobSpec, n: usize) -> u64 {
+        self.model.estimate(spec, n)
+    }
+
+    /// Plan one job: argmin over candidates, host fallback.
+    pub fn plan(&self, spec: &JobSpec) -> Plan {
+        let host = self.host_estimate(spec);
+        let candidates: Vec<(usize, u64)> = self
+            .candidates()
+            .into_iter()
+            .map(|n| (n, self.model.estimate(spec, n)))
+            .collect();
+        let &(best_n, best_t) = candidates
+            .iter()
+            .min_by_key(|(_, t)| *t)
+            .expect("non-empty candidates");
+        if best_t < host {
+            Plan {
+                placement: Placement::Accelerator { n_clusters: best_n },
+                estimate: best_t,
+                host_estimate: host,
+                candidates,
+            }
+        } else {
+            Plan {
+                placement: Placement::Host,
+                estimate: host,
+                host_estimate: host,
+                candidates,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amdahl_class_gets_many_clusters() {
+        let cfg = Config::default();
+        let p = Planner::new(&cfg);
+        let plan = p.plan(&JobSpec::MonteCarlo { samples: 1 << 16 });
+        match plan.placement {
+            Placement::Accelerator { n_clusters } => {
+                assert!(n_clusters >= 16, "got {n_clusters}")
+            }
+            Placement::Host => panic!("large MC must offload"),
+        }
+    }
+
+    #[test]
+    fn broadcast_class_gets_few_clusters() {
+        // ATAX's n-linear broadcast term pushes the optimum to small n.
+        let cfg = Config::default();
+        let p = Planner::new(&cfg);
+        let plan = p.plan(&JobSpec::Atax { m: 64, n: 64 });
+        match plan.placement {
+            Placement::Accelerator { n_clusters } => {
+                assert!(n_clusters <= 4, "got {n_clusters}")
+            }
+            Placement::Host => {} // also acceptable for this size
+        }
+    }
+
+    #[test]
+    fn tiny_job_stays_on_host() {
+        let cfg = Config::default();
+        let p = Planner::new(&cfg);
+        let plan = p.plan(&JobSpec::Axpy { n: 16 });
+        assert_eq!(plan.placement, Placement::Host);
+        assert!(plan.host_estimate < 400);
+    }
+
+    #[test]
+    fn candidates_are_powers_of_two() {
+        let cfg = Config::default();
+        let p = Planner::new(&cfg);
+        assert_eq!(p.candidates(), vec![1, 2, 4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn plan_estimates_are_consistent() {
+        let cfg = Config::default();
+        let p = Planner::new(&cfg);
+        let plan = p.plan(&JobSpec::Axpy { n: 4096 });
+        if let Placement::Accelerator { n_clusters } = plan.placement {
+            let (_, t) = plan
+                .candidates
+                .iter()
+                .find(|(n, _)| *n == n_clusters)
+                .unwrap();
+            assert_eq!(*t, plan.estimate);
+            assert!(plan.estimate < plan.host_estimate);
+        } else {
+            panic!("axpy 4096 should offload");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Job types flowing through the coordinator.
+
+use crate::kernels::JobSpec;
+use crate::offload::RoutineKind;
+use crate::sim::Time;
+
+/// A job submitted by a client of the coordinator.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Caller-chosen id, also used to address the JCU slot (§4.3).
+    pub id: u64,
+    pub spec: JobSpec,
+    /// Seed for deterministic input generation.
+    pub seed: u64,
+    /// Cluster count; `None` lets the planner pick the model-optimal one
+    /// (the paper's "offload decision as an optimization problem", §5.6).
+    pub n_clusters: Option<usize>,
+    /// Offload routine; `None` = the optimized multicast routines.
+    pub routine: Option<RoutineKind>,
+}
+
+impl JobRequest {
+    pub fn new(id: u64, spec: JobSpec) -> Self {
+        Self {
+            id,
+            spec,
+            seed: id ^ 0x9E37_79B9,
+            n_clusters: None,
+            routine: None,
+        }
+    }
+
+    pub fn with_clusters(mut self, n: usize) -> Self {
+        self.n_clusters = Some(n);
+        self
+    }
+
+    pub fn with_routine(mut self, r: RoutineKind) -> Self {
+        self.routine = Some(r);
+        self
+    }
+}
+
+/// Where the planner decided to run a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Offloaded to `n_clusters` accelerator clusters.
+    Accelerator { n_clusters: usize },
+    /// Kept on the host (offload would not pay off).
+    Host,
+}
+
+/// Result of a completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub placement: Placement,
+    pub routine: RoutineKind,
+    /// Simulated cycles of the offloaded execution (DES).
+    pub cycles: Time,
+    /// Model estimate the planner used (cycles).
+    pub estimated_cycles: Time,
+    /// Whether the PJRT outputs matched the native reference.
+    pub verified: bool,
+    /// Wall-clock microseconds spent on the PJRT execution.
+    pub pjrt_micros: u128,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let r = JobRequest::new(7, JobSpec::Axpy { n: 64 })
+            .with_clusters(8)
+            .with_routine(RoutineKind::Baseline);
+        assert_eq!(r.n_clusters, Some(8));
+        assert_eq!(r.routine, Some(RoutineKind::Baseline));
+        assert_eq!(r.id, 7);
+    }
+}

@@ -1,0 +1,188 @@
+//! Coordinator metrics: completion counters, cycle totals and a simple
+//! latency distribution (min/mean/p50/p99/max over recorded values).
+
+use std::collections::HashMap;
+
+use crate::kernels::KernelKind;
+
+/// Aggregate over a stream of u64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Dist {
+    samples: Vec<u64>,
+}
+
+impl Dist {
+    pub fn record(&mut self, v: u64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum() as f64 / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        self.samples.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// q in [0, 1]; nearest-rank on the sorted samples.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+/// Coordinator-level metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub completed: u64,
+    pub verified: u64,
+    pub verification_failures: u64,
+    pub host_placements: u64,
+    pub accel_placements: u64,
+    /// Simulated offload cycles per kernel kind.
+    pub cycles_by_kernel: HashMap<&'static str, Dist>,
+    /// End-to-end simulated latency of every job.
+    pub latency: Dist,
+    /// PJRT wall-clock micros.
+    pub pjrt_micros: Dist,
+}
+
+impl Metrics {
+    pub fn record_completion(
+        &mut self,
+        kind: KernelKind,
+        cycles: u64,
+        pjrt_micros: u128,
+        verified: bool,
+        on_host: bool,
+    ) {
+        self.completed += 1;
+        if verified {
+            self.verified += 1;
+        } else {
+            self.verification_failures += 1;
+        }
+        if on_host {
+            self.host_placements += 1;
+        } else {
+            self.accel_placements += 1;
+        }
+        self.cycles_by_kernel
+            .entry(kind.name())
+            .or_default()
+            .record(cycles);
+        self.latency.record(cycles);
+        self.pjrt_micros.record(pjrt_micros as u64);
+    }
+
+    /// Aggregate throughput in jobs per simulated second (1 GHz clock).
+    pub fn jobs_per_sim_second(&self) -> f64 {
+        let total_cycles = self.latency.sum();
+        if total_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (total_cycles as f64 / 1e9)
+    }
+
+    /// Human-readable summary table.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "jobs: {} completed, {} verified, {} failed, {} host / {} accel\n",
+            self.completed,
+            self.verified,
+            self.verification_failures,
+            self.host_placements,
+            self.accel_placements
+        ));
+        out.push_str(&format!(
+            "latency (cycles): min {} mean {:.0} p50 {} p99 {} max {}\n",
+            self.latency.min(),
+            self.latency.mean(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+            self.latency.max()
+        ));
+        out.push_str(&format!(
+            "pjrt (us): mean {:.0} max {}\n",
+            self.pjrt_micros.mean(),
+            self.pjrt_micros.max()
+        ));
+        let mut kinds: Vec<_> = self.cycles_by_kernel.iter().collect();
+        kinds.sort_by_key(|(k, _)| **k);
+        for (k, d) in kinds {
+            out.push_str(&format!(
+                "  {:<12} n={:<4} mean {:.0} cycles\n",
+                k,
+                d.count(),
+                d.mean()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_stats() {
+        let mut d = Dist::default();
+        for v in [10u64, 20, 30, 40, 50] {
+            d.record(v);
+        }
+        assert_eq!(d.count(), 5);
+        assert_eq!(d.min(), 10);
+        assert_eq!(d.max(), 50);
+        assert_eq!(d.quantile(0.5), 30);
+        assert!((d.mean() - 30.0).abs() < 1e-12);
+        assert_eq!(d.quantile(0.0), 10);
+        assert_eq!(d.quantile(1.0), 50);
+    }
+
+    #[test]
+    fn empty_dist_is_zeroes() {
+        let d = Dist::default();
+        assert_eq!(d.quantile(0.5), 0);
+        assert_eq!(d.mean(), 0.0);
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = Metrics::default();
+        m.record_completion(KernelKind::Axpy, 1000, 50, true, false);
+        m.record_completion(KernelKind::Axpy, 2000, 60, true, false);
+        m.record_completion(KernelKind::Bfs, 500, 70, false, true);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.verified, 2);
+        assert_eq!(m.verification_failures, 1);
+        assert_eq!(m.host_placements, 1);
+        assert_eq!(m.cycles_by_kernel["axpy"].count(), 2);
+        assert!(m.jobs_per_sim_second() > 0.0);
+        let s = m.summary();
+        assert!(s.contains("3 completed"));
+        assert!(s.contains("axpy"));
+    }
+}

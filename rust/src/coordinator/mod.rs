@@ -1,0 +1,15 @@
+//! The L3 coordinator: host-centric job dispatch over the simulated SoC
+//! (timing) and the PJRT runtime (numerics), with a model-driven offload
+//! planner (§5.6) and JCU-tracked completions (§4.3).
+
+pub mod decision;
+pub mod job;
+pub mod metrics;
+pub mod queue;
+pub mod service;
+
+pub use decision::{Plan, Planner, HOST_CYCLES_PER_FLOP};
+pub use job::{JobRequest, JobResult, Placement};
+pub use metrics::{Dist, Metrics};
+pub use queue::JobQueue;
+pub use service::{Coordinator, CoordinatorConfig, Submitter, JCU_SLOTS};

@@ -1,0 +1,180 @@
+//! Bounded job queue with blocking backpressure.
+//!
+//! The host-centric execution model serializes offloads on CVA6, but the
+//! JCU's multiple slots allow outstanding jobs (§4.3); the coordinator
+//! models that with a small bounded queue between submitters and the
+//! dispatch loop. Closing the queue drains it gracefully.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    high_watermark: usize,
+}
+
+/// A bounded MPMC queue.
+pub struct JobQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for JobQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> JobQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State {
+                    items: VecDeque::new(),
+                    closed: false,
+                    high_watermark: 0,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Blocking push; returns `Err(item)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                let depth = st.items.len();
+                st.high_watermark = st.high_watermark.max(depth);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: pushes fail, pops drain the remainder.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deepest the queue has ever been (backpressure diagnostics).
+    pub fn high_watermark(&self) -> usize {
+        self.inner.queue.lock().unwrap().high_watermark
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = JobQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = JobQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert!(q.push(2).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = JobQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.push(2).unwrap());
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "second push must be blocked");
+        assert_eq!(q.pop(), Some(1));
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.high_watermark(), 1);
+    }
+
+    #[test]
+    fn mpmc_counts_add_up() {
+        let q = JobQueue::new(8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..100 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = 0usize;
+                    while q.pop().is_some() {
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 400);
+    }
+}

@@ -1,0 +1,313 @@
+//! The coordinator service: the host-centric execution loop tying all
+//! three layers together.
+//!
+//! For every job it (1) plans the offload with the analytical model
+//! (§5.6), (2) executes the offload on the cycle-level DES to obtain its
+//! cost in cycles, (3) runs the job's numerics through the PJRT runtime
+//! and verifies them against the native reference, and (4) tracks
+//! completion through the JCU slots (§4.3) exactly as CVA6 would.
+//!
+//! Submission happens through a bounded queue (backpressure); a dispatch
+//! thread drains it. The PJRT client is not Sync-shareable across
+//! threads, so the dispatch thread owns the runtime — matching the
+//! hardware, where a single CVA6 core issues every offload.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::interrupt::{ArrivalOutcome, Jcu};
+use crate::offload::{run_offload, RoutineKind};
+use crate::runtime::{jobs, PjrtRuntime};
+
+use super::decision::Planner;
+use super::job::{JobRequest, JobResult, Placement};
+use super::metrics::Metrics;
+use super::queue::JobQueue;
+
+/// Number of JCU slots (outstanding jobs) the coordinator programs.
+pub const JCU_SLOTS: usize = 4;
+
+/// Coordinator configuration.
+pub struct CoordinatorConfig {
+    pub cfg: Config,
+    /// Queue capacity before submitters block.
+    pub queue_depth: usize,
+    /// Skip PJRT numerics (timing-only runs, e.g. benches).
+    pub timing_only: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            cfg: Config::default(),
+            queue_depth: 16,
+            timing_only: false,
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    queue: JobQueue<JobRequest>,
+    results: mpsc::Receiver<JobResult>,
+    worker: Option<JoinHandle<Metrics>>,
+}
+
+impl Coordinator {
+    /// Start the dispatch loop. `artifacts` is required unless
+    /// `timing_only` is set. The PJRT client is `!Send`, so the runtime
+    /// is constructed *inside* the dispatch thread; construction errors
+    /// are reported back through a readiness channel.
+    pub fn start(ccfg: CoordinatorConfig, artifacts: Option<&Path>) -> Result<Self> {
+        let queue: JobQueue<JobRequest> = JobQueue::new(ccfg.queue_depth);
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let artifacts: Option<PathBuf> = match (ccfg.timing_only, artifacts) {
+            (true, _) => None,
+            (false, Some(dir)) => Some(dir.to_path_buf()),
+            (false, None) => anyhow::bail!("artifacts dir required unless timing_only"),
+        };
+        let timing_only = ccfg.timing_only;
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let q2 = queue.clone();
+        let worker = std::thread::spawn(move || {
+            let rt = if timing_only {
+                let _ = ready_tx.send(Ok(()));
+                None
+            } else {
+                match PjrtRuntime::new(artifacts.as_deref().expect("checked above")) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        Some(rt)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return Metrics::default();
+                    }
+                }
+            };
+            dispatch_loop(ccfg, rt, q2, tx)
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("dispatch thread died during startup"))??;
+        Ok(Self {
+            queue,
+            results: rx,
+            worker: Some(worker),
+        })
+    }
+
+    /// A cloneable, thread-safe submission handle (the result receiver
+    /// stays with the `Coordinator`).
+    pub fn submitter(&self) -> Submitter {
+        Submitter {
+            queue: self.queue.clone(),
+        }
+    }
+
+    /// Submit a job (blocks on backpressure).
+    pub fn submit(&self, req: JobRequest) -> Result<()> {
+        self.queue
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
+    }
+
+    /// Receive the next completed result (blocks).
+    pub fn recv(&self) -> Option<JobResult> {
+        self.results.recv().ok()
+    }
+
+    /// Close the queue, wait for the dispatch loop, return final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.queue.close();
+        self.worker
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("dispatch loop panicked")
+    }
+}
+
+/// Cloneable submission handle usable from other threads.
+#[derive(Clone)]
+pub struct Submitter {
+    queue: JobQueue<JobRequest>,
+}
+
+impl Submitter {
+    /// Submit a job (blocks on backpressure).
+    pub fn submit(&self, req: JobRequest) -> Result<()> {
+        self.queue
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
+    }
+}
+
+fn dispatch_loop(
+    ccfg: CoordinatorConfig,
+    rt: Option<PjrtRuntime>,
+    queue: JobQueue<JobRequest>,
+    tx: mpsc::Sender<JobResult>,
+) -> Metrics {
+    let cfg = ccfg.cfg;
+    let planner = Planner::new(&cfg);
+    let mut jcu = Jcu::new(JCU_SLOTS);
+    let mut metrics = Metrics::default();
+    // The DES is deterministic, so identical (spec, clusters, routine)
+    // configurations always cost the same cycles: memoize (perf, see
+    // EXPERIMENTS.md §Perf — repeated-job dispatch drops ~20x).
+    let mut sim_cache: std::collections::HashMap<
+        (crate::kernels::JobSpec, usize, RoutineKind),
+        crate::sim::Time,
+    > = std::collections::HashMap::new();
+
+    while let Some(req) = queue.pop() {
+        let routine = req.routine.unwrap_or(RoutineKind::Multicast);
+
+        // 1) Plan: model-optimal cluster count / host fallback.
+        let (placement, estimate) = match req.n_clusters {
+            Some(n) => (
+                Placement::Accelerator { n_clusters: n },
+                planner.plan_estimate(&req.spec, n),
+            ),
+            None => {
+                let plan = planner.plan(&req.spec);
+                (plan.placement, plan.estimate)
+            }
+        };
+
+        // 2) Timing: DES of the offload (or the host estimate).
+        let cycles = match placement {
+            Placement::Accelerator { n_clusters } => {
+                // Program the JCU slot like CVA6 would (§4.3).
+                let job_id = (req.id % JCU_SLOTS as u64) as u32;
+                jcu.program(job_id, n_clusters as u32);
+                let total = *sim_cache
+                    .entry((req.spec, n_clusters, routine))
+                    .or_insert_with(|| {
+                        run_offload(&cfg, &req.spec, n_clusters, routine).total
+                    });
+                // All clusters arrive; the last fires the interrupt.
+                for _ in 0..n_clusters - 1 {
+                    assert!(matches!(
+                        jcu.arrive(job_id),
+                        ArrivalOutcome::Pending { .. }
+                    ));
+                }
+                match jcu.arrive(job_id) {
+                    ArrivalOutcome::CompleteFired { cause } => {
+                        debug_assert_eq!(cause, job_id);
+                        jcu.host_clear();
+                    }
+                    other => panic!("unexpected JCU outcome {other:?}"),
+                }
+                total
+            }
+            Placement::Host => planner.host_estimate(&req.spec),
+        };
+
+        // 3) Numerics: PJRT execution + verification.
+        let (verified, pjrt_micros) = match &rt {
+            None => (true, 0u128),
+            Some(rt) => {
+                let t0 = std::time::Instant::now();
+                let ok = jobs::run_and_verify(rt, &req.spec, req.seed).is_ok();
+                (ok, t0.elapsed().as_micros())
+            }
+        };
+
+        metrics.record_completion(
+            req.spec.kind(),
+            cycles,
+            pjrt_micros,
+            verified,
+            placement == Placement::Host,
+        );
+        let _ = tx.send(JobResult {
+            id: req.id,
+            spec: req.spec,
+            placement,
+            routine,
+            cycles,
+            estimated_cycles: estimate,
+            verified,
+            pjrt_micros,
+        });
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::JobSpec;
+
+    #[test]
+    fn timing_only_coordinator_round_trip() {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                timing_only: true,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        for i in 0..8u64 {
+            c.submit(JobRequest::new(i, JobSpec::Axpy { n: 1024 })).unwrap();
+        }
+        let mut got = 0;
+        for _ in 0..8 {
+            let r = c.recv().expect("result");
+            assert!(r.cycles > 0);
+            assert!(r.verified);
+            got += 1;
+        }
+        let m = c.shutdown();
+        assert_eq!(got, 8);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.verification_failures, 0);
+    }
+
+    #[test]
+    fn forced_clusters_and_routine_respected() {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                timing_only: true,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        c.submit(
+            JobRequest::new(0, JobSpec::Axpy { n: 1024 })
+                .with_clusters(4)
+                .with_routine(RoutineKind::Baseline),
+        )
+        .unwrap();
+        let r = c.recv().unwrap();
+        assert_eq!(r.placement, Placement::Accelerator { n_clusters: 4 });
+        assert_eq!(r.routine, RoutineKind::Baseline);
+        c.shutdown();
+    }
+
+    #[test]
+    fn tiny_jobs_placed_on_host() {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                timing_only: true,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        c.submit(JobRequest::new(0, JobSpec::Axpy { n: 16 })).unwrap();
+        let r = c.recv().unwrap();
+        assert_eq!(r.placement, Placement::Host);
+        let m = c.shutdown();
+        assert_eq!(m.host_placements, 1);
+    }
+}

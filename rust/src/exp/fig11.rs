@@ -1,0 +1,184 @@
+//! Fig. 11: per-phase (A-I) runtime breakdown of an AXPY-1024 offload,
+//! baseline vs multicast, with min/avg/max across clusters (§5.5).
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::{run_offload, RoutineKind};
+use crate::sim::{Phase, Trace};
+
+use super::table::{f, Table};
+use super::CLUSTER_SWEEP;
+
+/// min/avg/max of one phase at one configuration.
+#[derive(Debug, Clone)]
+pub struct Band {
+    pub phase: Phase,
+    pub routine: RoutineKind,
+    pub n_clusters: usize,
+    pub min: u64,
+    pub avg: f64,
+    pub max: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig11 {
+    pub bands: Vec<Band>,
+}
+
+impl Fig11 {
+    pub fn get(&self, phase: Phase, routine: RoutineKind, n: usize) -> Option<&Band> {
+        self.bands
+            .iter()
+            .find(|b| b.phase == phase && b.routine == routine && b.n_clusters == n)
+    }
+}
+
+fn bands_of(trace: &Trace, routine: RoutineKind, n: usize, out: &mut Vec<Band>) {
+    for p in Phase::ALL {
+        if p.is_host_phase() {
+            if let Some(d) = trace.host_duration(p) {
+                out.push(Band {
+                    phase: p,
+                    routine,
+                    n_clusters: n,
+                    min: d,
+                    avg: d as f64,
+                    max: d,
+                });
+            }
+        } else if let Some(s) = trace.stats(p) {
+            out.push(Band {
+                phase: p,
+                routine,
+                n_clusters: n,
+                min: s.min,
+                avg: s.avg,
+                max: s.max,
+            });
+        }
+    }
+}
+
+pub fn run(cfg: &Config) -> Fig11 {
+    let spec = JobSpec::Axpy { n: 1024 };
+    let mut bands = Vec::new();
+    for &n in &CLUSTER_SWEEP {
+        for routine in [RoutineKind::Baseline, RoutineKind::Multicast] {
+            let trace = run_offload(cfg, &spec, n, routine);
+            bands_of(&trace, routine, n, &mut bands);
+        }
+    }
+    Fig11 { bands }
+}
+
+pub fn render(fig: &Fig11) -> Table {
+    let mut t = Table::new(
+        "Fig. 11 — AXPY-1024 phase breakdown, min/avg/max cycles",
+        &["phase", "routine", "1", "2", "4", "8", "16", "32"],
+    );
+    for p in Phase::ALL {
+        for routine in [RoutineKind::Baseline, RoutineKind::Multicast] {
+            let mut row = vec![
+                format!("{} ({})", p.letter(), p.name()),
+                routine.name().to_string(),
+            ];
+            for &n in &CLUSTER_SWEEP {
+                match fig.get(p, routine, n) {
+                    Some(b) => row.push(format!("{}/{}/{}", b.min, f(b.avg, 0), b.max)),
+                    None => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Fig11 {
+        run(&Config::default())
+    }
+
+    #[test]
+    fn phase_a_same_for_both_implementations() {
+        // §5.5.A: "multicast and baseline perform nearly the same".
+        let f = fig();
+        for &n in &CLUSTER_SWEEP {
+            let b = f.get(Phase::SendInfo, RoutineKind::Baseline, n).unwrap();
+            let m = f.get(Phase::SendInfo, RoutineKind::Multicast, n).unwrap();
+            assert!(
+                (m.max as i64 - b.max as i64).abs() <= 10,
+                "n={n}: A baseline {} vs multicast {}",
+                b.max,
+                m.max
+            );
+        }
+    }
+
+    #[test]
+    fn phase_b_multicast_constant_baseline_linear() {
+        // §5.5.B.
+        let f = fig();
+        let m1 = f.get(Phase::Wakeup, RoutineKind::Multicast, 1).unwrap();
+        let m32 = f.get(Phase::Wakeup, RoutineKind::Multicast, 32).unwrap();
+        assert_eq!(m1.max, m32.max, "multicast wakeup is n-independent");
+        let b2 = f.get(Phase::Wakeup, RoutineKind::Baseline, 2).unwrap();
+        let b32 = f.get(Phase::Wakeup, RoutineKind::Baseline, 32).unwrap();
+        assert!(b32.max > b2.max + 500, "baseline wakeup grows linearly");
+        // Minimum (first cluster) barely differs between implementations.
+        assert!(b32.min <= m32.max + 5);
+    }
+
+    #[test]
+    fn phase_c_steps_at_quadrant_boundary() {
+        // §5.5.C: increase "in two steps" — 1->2 clusters and 4->8.
+        let f = fig();
+        let c = |n| f.get(Phase::RetrievePtr, RoutineKind::Baseline, n).unwrap().max;
+        assert!(c(2) > c(1));
+        // Within a quadrant the latency step is flat up to mild FIFO
+        // contention at cluster 0's TCDM port.
+        assert!(c(4) >= c(2) && c(4) - c(2) <= 15, "c2={} c4={}", c(2), c(4));
+        assert!(c(8) > c(4), "crossing quadrants steps up");
+        assert!(c(32) >= c(8), "no step back beyond two quadrants");
+        assert!(c(32) - c(8) <= 20, "only contention, no new step");
+        // Multicast: constant local access.
+        let m1 = f.get(Phase::RetrievePtr, RoutineKind::Multicast, 1).unwrap();
+        let m32 = f.get(Phase::RetrievePtr, RoutineKind::Multicast, 32).unwrap();
+        assert_eq!(m1.max, m32.max);
+    }
+
+    #[test]
+    fn phase_e_max_constant_in_multicast() {
+        // §5.5.E: single SPM read port => max runtime constant (Eq. 1).
+        let f = fig();
+        let e4 = f
+            .get(Phase::RetrieveOperands, RoutineKind::Multicast, 4)
+            .unwrap();
+        let e32 = f
+            .get(Phase::RetrieveOperands, RoutineKind::Multicast, 32)
+            .unwrap();
+        let delta = (e4.max as i64 - e32.max as i64).abs();
+        assert!(delta <= 130, "E max should stay near-constant: {delta}");
+    }
+
+    #[test]
+    fn phase_h_multicast_constant() {
+        // §4.3/§5.5.H: the JCU gives a predictable, constant phase H.
+        let f = fig();
+        let h1 = f.get(Phase::Notify, RoutineKind::Multicast, 1).unwrap();
+        let h32 = f.get(Phase::Notify, RoutineKind::Multicast, 32).unwrap();
+        assert_eq!(h1.max, h32.max);
+    }
+
+    #[test]
+    fn phase_d_eliminated_by_multicast() {
+        let f = fig();
+        let d32 = f.get(Phase::RetrieveArgs, RoutineKind::Multicast, 32).unwrap();
+        assert_eq!(d32.max, 0);
+        let b32 = f.get(Phase::RetrieveArgs, RoutineKind::Baseline, 32).unwrap();
+        assert!(b32.max > 0);
+    }
+}

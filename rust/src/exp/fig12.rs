@@ -1,0 +1,95 @@
+//! Fig. 12: relative error of the offloaded-application runtime models,
+//! |t − t̂| / t, across problem sizes and cluster counts (§5.6).
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::model::{validate_grid, ValidationPoint};
+
+use super::table::{f, Table};
+use super::CLUSTER_SWEEP;
+
+/// Problem sizes of the validation sweep (N for AXPY, M=N for ATAX), as
+/// in the paper's Fig. 12.
+pub const AXPY_SIZES: [u64; 6] = [64, 128, 256, 512, 1024, 2048];
+pub const ATAX_SIZES: [u64; 5] = [16, 32, 64, 128, 256];
+
+#[derive(Debug, Clone)]
+pub struct Fig12 {
+    pub axpy: Vec<ValidationPoint>,
+    pub atax: Vec<ValidationPoint>,
+}
+
+impl Fig12 {
+    pub fn max_error(&self) -> f64 {
+        self.axpy
+            .iter()
+            .chain(&self.atax)
+            .map(|p| p.rel_error())
+            .fold(0.0, f64::max)
+    }
+}
+
+pub fn run(cfg: &Config) -> Fig12 {
+    let axpy_specs: Vec<JobSpec> = AXPY_SIZES.iter().map(|&n| JobSpec::Axpy { n }).collect();
+    let atax_specs: Vec<JobSpec> = ATAX_SIZES
+        .iter()
+        .map(|&m| JobSpec::Atax { m, n: m })
+        .collect();
+    Fig12 {
+        axpy: validate_grid(cfg, &axpy_specs, &CLUSTER_SWEEP),
+        atax: validate_grid(cfg, &atax_specs, &CLUSTER_SWEEP),
+    }
+}
+
+pub fn render(fig: &Fig12) -> Table {
+    let mut t = Table::new(
+        "Fig. 12 — model relative error |t - t̂|/t (percent)",
+        &["kernel", "size", "1", "2", "4", "8", "16", "32"],
+    );
+    let mut rows = |points: &[ValidationPoint], kernel: &str, sizes: &[u64]| {
+        for &size in sizes {
+            let mut row = vec![kernel.to_string(), size.to_string()];
+            for &n in &CLUSTER_SWEEP {
+                let p = points
+                    .iter()
+                    .find(|p| {
+                        p.n_clusters == n
+                            && match p.spec {
+                                JobSpec::Axpy { n: nn } => nn == size,
+                                JobSpec::Atax { m, .. } => m == size,
+                                _ => false,
+                            }
+                    })
+                    .expect("point in grid");
+                row.push(f(p.rel_error() * 100.0, 1));
+            }
+            t.row(row);
+        }
+    };
+    rows(&fig.axpy, "axpy", &AXPY_SIZES);
+    rows(&fig.atax, "atax", &ATAX_SIZES);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_consistently_below_15_percent() {
+        // The paper's validation claim over the Fig. 12 sweep.
+        let fig = run(&Config::default());
+        assert!(
+            fig.max_error() < 0.15,
+            "max model error {:.3}",
+            fig.max_error()
+        );
+    }
+
+    #[test]
+    fn grid_is_complete() {
+        let fig = run(&Config::default());
+        assert_eq!(fig.axpy.len(), AXPY_SIZES.len() * CLUSTER_SWEEP.len());
+        assert_eq!(fig.atax.len(), ATAX_SIZES.len() * CLUSTER_SWEEP.len());
+    }
+}

@@ -1,0 +1,123 @@
+//! Fig. 8: ideal speedup (white bars) vs speedup achieved with the
+//! extensions (colored fill), per application and offload configuration
+//! (§5.3, §5.4).
+
+use crate::config::Config;
+use crate::offload::run_triple;
+
+use super::table::{f, Table};
+use super::{benchmark_set, CLUSTER_SWEEP};
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub kernel: &'static str,
+    pub n_clusters: usize,
+    pub ideal_speedup: f64,
+    pub achieved_speedup: f64,
+    pub restored: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig8 {
+    pub points: Vec<Point>,
+}
+
+impl Fig8 {
+    pub fn get(&self, kernel: &str, n: usize) -> Option<&Point> {
+        self.points
+            .iter()
+            .find(|p| p.kernel == kernel && p.n_clusters == n)
+    }
+
+    pub fn max_ideal_speedup(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.ideal_speedup)
+            .fold(0.0, f64::max)
+    }
+}
+
+pub fn run(cfg: &Config) -> Fig8 {
+    let mut points = Vec::new();
+    for (name, spec) in benchmark_set() {
+        for &n in &CLUSTER_SWEEP {
+            let t = run_triple(cfg, &spec, n).runtimes(n);
+            points.push(Point {
+                kernel: name,
+                n_clusters: n,
+                ideal_speedup: t.ideal_speedup(),
+                achieved_speedup: t.achieved_speedup(),
+                restored: t.restored_fraction(),
+            });
+        }
+    }
+    Fig8 { points }
+}
+
+pub fn render(fig: &Fig8) -> Table {
+    let mut t = Table::new(
+        "Fig. 8 — ideal vs achieved speedup (ideal/achieved/restored)",
+        &["kernel", "1", "2", "4", "8", "16", "32"],
+    );
+    for (name, _) in benchmark_set() {
+        let mut row = vec![name.to_string()];
+        for &n in &CLUSTER_SWEEP {
+            let p = fig.get(name, n).unwrap();
+            row.push(format!(
+                "{}/{}/{}",
+                f(p.ideal_speedup, 2),
+                f(p.achieved_speedup, 2),
+                f(p.restored, 2)
+            ));
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_application_classes_emerge() {
+        // §5.3: AXPY/MC/Matmul speedups grow with clusters; ATAX/Cov/BFS
+        // stay near-constant.
+        let fig = run(&Config::default());
+        for k in ["axpy", "montecarlo", "matmul"] {
+            let s1 = fig.get(k, 1).unwrap().ideal_speedup;
+            let s32 = fig.get(k, 32).unwrap().ideal_speedup;
+            assert!(s32 > s1 + 0.5, "{k}: {s1} -> {s32} should grow");
+        }
+        for k in ["atax", "covariance", "bfs"] {
+            let s32 = fig.get(k, 32).unwrap().ideal_speedup;
+            assert!(s32 < 1.4, "{k}: ideal speedup {s32} should be small");
+        }
+    }
+
+    #[test]
+    fn max_speedup_matches_paper_order() {
+        // Paper: up to 3.02x on a 32-cluster Matmul. Same order here.
+        let fig = run(&Config::default());
+        let max = fig.max_ideal_speedup();
+        assert!((2.0..=3.6).contains(&max), "max ideal speedup {max}");
+    }
+
+    #[test]
+    fn amdahl_class_restores_70_to_90_percent() {
+        // §5.4: "within 70% and 90% of the ideally attainable speedups"
+        // for AXPY, Monte Carlo and Matmul.
+        let fig = run(&Config::default());
+        for k in ["axpy", "montecarlo", "matmul"] {
+            for &n in &[8usize, 16, 32] {
+                let r = fig.get(k, n).unwrap().restored;
+                assert!((0.65..=1.0).contains(&r), "{k}@{n}: restored {r}");
+            }
+        }
+        // §5.4: ATAX class within 85-96%.
+        for k in ["atax", "covariance", "bfs"] {
+            let r = fig.get(k, 32).unwrap().restored;
+            assert!(r > 0.85, "{k}: restored {r}");
+        }
+    }
+}

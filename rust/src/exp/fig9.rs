@@ -1,0 +1,139 @@
+//! Fig. 9: base, ideal and improved runtime curves of the AXPY and ATAX
+//! jobs for a variable number of clusters (§5.3, §5.4).
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::{run_triple, RunTriple};
+
+use super::table::Table;
+use super::CLUSTER_SWEEP;
+
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub kernel: &'static str,
+    pub triples: Vec<RunTriple>,
+}
+
+impl Curve {
+    pub fn at(&self, n: usize) -> &RunTriple {
+        self.triples
+            .iter()
+            .find(|t| t.n_clusters == n)
+            .expect("cluster count in sweep")
+    }
+
+    /// Index (cluster count) of the curve's minimum base runtime — the
+    /// baseline's "global minimum" the extensions eliminate (§5.4).
+    pub fn argmin_base(&self) -> usize {
+        self.triples
+            .iter()
+            .min_by_key(|t| t.base)
+            .unwrap()
+            .n_clusters
+    }
+
+    pub fn argmin_improved(&self) -> usize {
+        self.triples
+            .iter()
+            .min_by_key(|t| t.improved)
+            .unwrap()
+            .n_clusters
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig9 {
+    pub axpy: Curve,
+    pub atax: Curve,
+}
+
+pub fn run(cfg: &Config) -> Fig9 {
+    let sweep = |spec: JobSpec, kernel: &'static str| Curve {
+        kernel,
+        triples: CLUSTER_SWEEP
+            .iter()
+            .map(|&n| run_triple(cfg, &spec, n).runtimes(n))
+            .collect(),
+    };
+    Fig9 {
+        axpy: sweep(JobSpec::Axpy { n: 1024 }, "axpy"),
+        atax: sweep(JobSpec::Atax { m: 64, n: 64 }, "atax"),
+    }
+}
+
+pub fn render(fig: &Fig9) -> Table {
+    let mut t = Table::new(
+        "Fig. 9 — base/ideal/improved runtimes (cycles) vs clusters",
+        &["kernel", "n", "base", "ideal", "improved"],
+    );
+    for c in [&fig.axpy, &fig.atax] {
+        for tr in &c.triples {
+            t.row(vec![
+                c.kernel.to_string(),
+                tr.n_clusters.to_string(),
+                tr.base.to_string(),
+                tr.ideal.to_string(),
+                tr.improved.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_baseline_has_global_minimum_improved_does_not() {
+        // §5.4: with the extensions the AXPY runtime keeps improving with
+        // more clusters; the baseline curve turns back up.
+        let fig = run(&Config::default());
+        assert!(
+            fig.axpy.argmin_base() < 32,
+            "baseline min at {} should be interior",
+            fig.axpy.argmin_base()
+        );
+        assert_eq!(fig.axpy.argmin_improved(), 32, "improved is monotone");
+        // Monotone decrease of improved runtime across the sweep.
+        let imp: Vec<u64> = fig.axpy.triples.iter().map(|t| t.improved).collect();
+        for w in imp.windows(2) {
+            assert!(w[1] <= w[0], "improved not monotone: {imp:?}");
+        }
+    }
+
+    #[test]
+    fn improved_tracks_ideal_with_near_constant_offset() {
+        // §5.4: improved curves track ideal "offset only by a
+        // near-constant overhead centered at 185 cycles ... std dev 18".
+        let fig = run(&Config::default());
+        let offsets: Vec<i64> = fig
+            .axpy
+            .triples
+            .iter()
+            .chain(fig.atax.triples.iter())
+            .map(|t| t.residual_overhead())
+            .collect();
+        let mean = offsets.iter().sum::<i64>() as f64 / offsets.len() as f64;
+        let sd = (offsets
+            .iter()
+            .map(|&o| (o as f64 - mean).powi(2))
+            .sum::<f64>()
+            / offsets.len() as f64)
+            .sqrt();
+        assert!(
+            (140.0..=240.0).contains(&mean),
+            "residual mean {mean} vs paper 185"
+        );
+        assert!(sd < 40.0, "residual std dev {sd} vs paper 18");
+    }
+
+    #[test]
+    fn atax_runtime_grows_with_clusters() {
+        // §5.3: ATAX's runtime still increases with clusters (broadcast).
+        let fig = run(&Config::default());
+        let t4 = fig.atax.at(4).ideal;
+        let t32 = fig.atax.at(32).ideal;
+        assert!(t32 > t4, "atax ideal {t4} -> {t32} should grow");
+    }
+}

@@ -1,0 +1,52 @@
+//! Experiment harness: one module per figure of the paper's evaluation
+//! (§5, Figs. 7-12). Each `run(cfg)` regenerates the figure's data from
+//! the DES + analytical model and renders it as a table; the benches
+//! under `rust/benches/` wrap these with wall-clock measurement. See
+//! DESIGN.md's experiment index.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table;
+
+pub use table::Table;
+
+use crate::kernels::JobSpec;
+
+/// The fixed benchmark set of §5.2/§5.3 (Figs. 7 and 8): one fine-grained
+/// representative per kernel. The paper does not publish its exact sizes;
+/// these are calibrated so the headline aggregates match (242-cycle
+/// single-cluster overhead, ~1.1k max at 32 clusters, ideal speedups
+/// topping out near 3x for the Amdahl class — see EXPERIMENTS.md).
+pub fn benchmark_set() -> Vec<(&'static str, JobSpec)> {
+    vec![
+        ("axpy", JobSpec::Axpy { n: 1024 }),
+        ("montecarlo", JobSpec::MonteCarlo { samples: 16384 }),
+        ("matmul", JobSpec::Matmul { m: 16, n: 16, k: 16 }),
+        ("atax", JobSpec::Atax { m: 64, n: 64 }),
+        ("covariance", JobSpec::Covariance { m: 32, n: 64 }),
+        ("bfs", JobSpec::Bfs { nodes: 64, levels: 4 }),
+    ]
+}
+
+/// The cluster-count sweep used across all figures.
+pub const CLUSTER_SWEEP: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_set_covers_all_kernels() {
+        let set = benchmark_set();
+        assert_eq!(set.len(), 6);
+        let mut kinds: Vec<&str> = set.iter().map(|(_, s)| s.kind().name()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), 6);
+    }
+}

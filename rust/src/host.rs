@@ -1,0 +1,86 @@
+//! CVA6 host model (§3.1): the single application-class core that manages
+//! the computation and offloads jobs. Functional state (WFI/interrupt
+//! handshake with the CLINT/JCU) used by the coordinator; the host-side
+//! phase timings (A, B issue, I) come from `config::TimingConfig`.
+
+use crate::interrupt::Clint;
+
+/// Host execution state around an offload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostState {
+    /// Executing workload code.
+    Running,
+    /// In WFI waiting for job completion.
+    Waiting,
+}
+
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub state: HostState,
+    offloads_issued: u64,
+    completions_seen: u64,
+}
+
+impl Default for Host {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Host {
+    pub fn new() -> Self {
+        Self {
+            state: HostState::Running,
+            offloads_issued: 0,
+            completions_seen: 0,
+        }
+    }
+
+    /// Issue an offload and enter WFI (the bare-metal runtime blocks; an
+    /// OS would schedule other work — out of scope, §4.1).
+    pub fn offload_and_wait(&mut self) {
+        assert_eq!(self.state, HostState::Running, "offload while waiting");
+        self.offloads_issued += 1;
+        self.state = HostState::Waiting;
+    }
+
+    /// Completion interrupt delivered: clear MSIP and resume.
+    pub fn on_completion(&mut self, clint: &mut Clint, hart: usize) {
+        assert_eq!(self.state, HostState::Waiting);
+        assert!(clint.pending(hart), "spurious completion interrupt");
+        clint.clear_msip(hart);
+        self.completions_seen += 1;
+        self.state = HostState::Running;
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.offloads_issued, self.completions_seen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offload_handshake() {
+        let mut h = Host::new();
+        let mut clint = Clint::new(1);
+        h.offload_and_wait();
+        assert_eq!(h.state, HostState::Waiting);
+        clint.set_msip(0);
+        h.on_completion(&mut clint, 0);
+        assert_eq!(h.state, HostState::Running);
+        assert!(!clint.pending(0));
+        assert_eq!(h.stats(), (1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "spurious")]
+    fn completion_without_interrupt_panics() {
+        let mut h = Host::new();
+        let mut clint = Clint::new(1);
+        h.offload_and_wait();
+        h.on_completion(&mut clint, 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Interrupt infrastructure (§2.3, §3.1): the centralized CLINT with its
+//! memory-mapped MSIP (Machine Software Interrupt Pending) bits, and the
+//! per-cluster MCIP (Machine Cluster Interrupt Pending) registers that
+//! provide locally-clearable interrupts and single-store multicast wakeup
+//! of all cores in a cluster.
+
+/// Hart identifier: 0 = CVA6, 1.. = Snitch harts.
+pub type HartId = usize;
+
+/// The centralized interrupt controller in the peripherals domain.
+#[derive(Debug, Clone)]
+pub struct Clint {
+    msip: Vec<bool>,
+    sets: u64,
+    clears: u64,
+}
+
+impl Clint {
+    pub fn new(n_harts: usize) -> Self {
+        Self {
+            msip: vec![false; n_harts],
+            sets: 0,
+            clears: 0,
+        }
+    }
+
+    /// Write the MSIP bit of `hart` (any hart in the system may do this,
+    /// §2.3). Returns true if this is a rising edge (interrupt fires).
+    pub fn set_msip(&mut self, hart: HartId) -> bool {
+        self.sets += 1;
+        let rising = !self.msip[hart];
+        self.msip[hart] = true;
+        rising
+    }
+
+    /// The target hart clears its pending bit.
+    pub fn clear_msip(&mut self, hart: HartId) {
+        self.clears += 1;
+        self.msip[hart] = false;
+    }
+
+    pub fn pending(&self, hart: HartId) -> bool {
+        self.msip[hart]
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.sets, self.clears)
+    }
+}
+
+/// One cluster's MCIP register: one locally-clearable pending bit per
+/// core, packed so a single store wakes the whole cluster (§2.3).
+#[derive(Debug, Clone)]
+pub struct McipReg {
+    bits: u32,
+    n_cores: usize,
+}
+
+impl McipReg {
+    pub fn new(n_cores: usize) -> Self {
+        assert!(n_cores <= 32);
+        Self { bits: 0, n_cores }
+    }
+
+    /// Store a wakeup mask (single store = multicast to all cores in the
+    /// cluster). Returns the set of cores whose bit had a rising edge.
+    pub fn set(&mut self, mask: u32) -> Vec<usize> {
+        let valid = if self.n_cores == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.n_cores) - 1
+        };
+        let m = mask & valid;
+        let rising = m & !self.bits;
+        self.bits |= m;
+        (0..self.n_cores).filter(|c| rising >> c & 1 == 1).collect()
+    }
+
+    /// Wake every core in the cluster.
+    pub fn set_all(&mut self) -> Vec<usize> {
+        self.set(u32::MAX)
+    }
+
+    /// A core clears its own bit — a local, low-latency access, unlike a
+    /// trip to the centralized CLINT (§2.3).
+    pub fn clear(&mut self, core: usize) {
+        assert!(core < self.n_cores);
+        self.bits &= !(1 << core);
+    }
+
+    pub fn pending(&self, core: usize) -> bool {
+        self.bits >> core & 1 == 1
+    }
+
+    pub fn any_pending(&self) -> bool {
+        self.bits != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msip_rising_edge_detection() {
+        let mut c = Clint::new(2);
+        assert!(c.set_msip(0));
+        assert!(!c.set_msip(0)); // already pending: no new edge
+        c.clear_msip(0);
+        assert!(!c.pending(0));
+        assert!(c.set_msip(0));
+        assert_eq!(c.stats(), (3, 1));
+    }
+
+    #[test]
+    fn mcip_single_store_wakes_all_cores() {
+        let mut m = McipReg::new(9); // 8 compute + 1 DMA core
+        let woken = m.set_all();
+        assert_eq!(woken, (0..9).collect::<Vec<_>>());
+        assert!(m.any_pending());
+    }
+
+    #[test]
+    fn mcip_local_clear() {
+        let mut m = McipReg::new(9);
+        m.set_all();
+        for c in 0..9 {
+            m.clear(c);
+        }
+        assert!(!m.any_pending());
+    }
+
+    #[test]
+    fn mcip_partial_mask() {
+        let mut m = McipReg::new(9);
+        assert_eq!(m.set(0b101), vec![0, 2]);
+        // Setting again is not a rising edge.
+        assert_eq!(m.set(0b101), Vec::<usize>::new());
+        // Out-of-range bits are ignored.
+        assert_eq!(m.set(1 << 20), Vec::<usize>::new());
+    }
+}

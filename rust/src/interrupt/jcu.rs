@@ -1,0 +1,202 @@
+//! Job completion unit (§4.3, Fig. 6).
+//!
+//! Integrated in the CLINT: per job slot, CVA6 programs the `offload`
+//! register with the number of clusters selected for offload; each
+//! completing cluster writes the `arrivals` register (atomically
+//! incremented as a side effect). When `arrivals == offload` the job is
+//! complete: the unit fires a software interrupt to CVA6 (deferred if one
+//! is already pending), resets the arrivals counter for the next offload,
+//! and records the job ID as the interrupt cause for host inspection.
+//! Multiple slots support multiple outstanding jobs (e.g. task
+//! overlapping, §4.3).
+
+
+/// Job identifier used to address a JCU slot.
+pub type JobId = u32;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct Slot {
+    offload: u32,
+    arrivals: u32,
+}
+
+/// Outcome of an arrivals-register write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalOutcome {
+    /// More clusters still outstanding.
+    Pending { arrivals: u32, expected: u32 },
+    /// Job complete; interrupt fired immediately with this cause.
+    CompleteFired { cause: JobId },
+    /// Job complete, but an interrupt is already pending: delivery is
+    /// deferred until the host clears the previous one.
+    CompleteDeferred { cause: JobId },
+}
+
+/// The job completion unit.
+#[derive(Debug, Clone)]
+pub struct Jcu {
+    slots: Vec<Slot>,
+    /// Completed-but-undelivered job causes, in completion order.
+    deferred: Vec<JobId>,
+    /// Whether a software interrupt to the host is currently pending.
+    irq_pending: bool,
+    fired: u64,
+}
+
+impl Jcu {
+    pub fn new(n_slots: usize) -> Self {
+        assert!(n_slots >= 1);
+        Self {
+            slots: vec![Slot::default(); n_slots],
+            deferred: Vec::new(),
+            irq_pending: false,
+            fired: 0,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// CVA6 programs a slot for an offload of `n_clusters` clusters.
+    /// Programming a slot with a job still in flight is a host bug.
+    pub fn program(&mut self, job: JobId, n_clusters: u32) {
+        assert!(n_clusters >= 1, "offload register must be >= 1");
+        let idx = job as usize % self.slots.len();
+        let s = &mut self.slots[idx];
+        assert_eq!(
+            s.arrivals, 0,
+            "JCU slot reprogrammed while a job is in flight"
+        );
+        s.offload = n_clusters;
+    }
+
+    /// A cluster writes the arrivals register of `job`'s slot.
+    pub fn arrive(&mut self, job: JobId) -> ArrivalOutcome {
+        let idx = job as usize % self.slots.len();
+        let s = &mut self.slots[idx];
+        assert!(s.offload > 0, "arrival on an unprogrammed JCU slot");
+        s.arrivals += 1;
+        if s.arrivals < s.offload {
+            return ArrivalOutcome::Pending {
+                arrivals: s.arrivals,
+                expected: s.offload,
+            };
+        }
+        // Complete: auto-reset for the next offload (Fig. 6).
+        s.arrivals = 0;
+        s.offload = 0;
+        if self.irq_pending {
+            self.deferred.push(job);
+            ArrivalOutcome::CompleteDeferred { cause: job }
+        } else {
+            self.irq_pending = true;
+            self.fired += 1;
+            ArrivalOutcome::CompleteFired { cause: job }
+        }
+    }
+
+    /// Host clears the pending interrupt; if a deferred completion is
+    /// queued, the next interrupt fires as soon as the previous one is
+    /// cleared (§4.3) and its cause is returned.
+    pub fn host_clear(&mut self) -> Option<JobId> {
+        assert!(self.irq_pending, "host cleared a non-pending interrupt");
+        if self.deferred.is_empty() {
+            self.irq_pending = false;
+            None
+        } else {
+            self.fired += 1;
+            Some(self.deferred.remove(0))
+        }
+    }
+
+    pub fn irq_pending(&self) -> bool {
+        self.irq_pending
+    }
+
+    pub fn interrupts_fired(&self) -> u64 {
+        self.fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_job_completion() {
+        let mut j = Jcu::new(1);
+        j.program(0, 3);
+        assert_eq!(
+            j.arrive(0),
+            ArrivalOutcome::Pending {
+                arrivals: 1,
+                expected: 3
+            }
+        );
+        assert_eq!(
+            j.arrive(0),
+            ArrivalOutcome::Pending {
+                arrivals: 2,
+                expected: 3
+            }
+        );
+        assert_eq!(j.arrive(0), ArrivalOutcome::CompleteFired { cause: 0 });
+        assert!(j.irq_pending());
+        assert_eq!(j.host_clear(), None);
+        assert!(!j.irq_pending());
+    }
+
+    #[test]
+    fn auto_reset_allows_next_offload() {
+        let mut j = Jcu::new(1);
+        j.program(0, 2);
+        j.arrive(0);
+        j.arrive(0);
+        j.host_clear();
+        // Same slot immediately reusable (arrivals auto-reset, Fig. 6).
+        j.program(1, 1);
+        assert_eq!(j.arrive(1), ArrivalOutcome::CompleteFired { cause: 1 });
+    }
+
+    #[test]
+    fn deferred_interrupt_when_one_pending() {
+        let mut j = Jcu::new(2);
+        j.program(0, 1);
+        j.program(1, 1);
+        assert_eq!(j.arrive(0), ArrivalOutcome::CompleteFired { cause: 0 });
+        // Second job completes while the first interrupt is pending.
+        assert_eq!(j.arrive(1), ArrivalOutcome::CompleteDeferred { cause: 1 });
+        // Clearing the first delivers the second.
+        assert_eq!(j.host_clear(), Some(1));
+        assert_eq!(j.host_clear(), None);
+        assert_eq!(j.interrupts_fired(), 2);
+    }
+
+    #[test]
+    fn multiple_outstanding_jobs_use_distinct_slots() {
+        let mut j = Jcu::new(4);
+        j.program(2, 2);
+        j.program(3, 1);
+        assert!(matches!(j.arrive(2), ArrivalOutcome::Pending { .. }));
+        assert_eq!(j.arrive(3), ArrivalOutcome::CompleteFired { cause: 3 });
+        j.host_clear();
+        assert_eq!(j.arrive(2), ArrivalOutcome::CompleteFired { cause: 2 });
+    }
+
+    #[test]
+    #[should_panic(expected = "unprogrammed")]
+    fn arrival_on_unprogrammed_slot_panics() {
+        let mut j = Jcu::new(1);
+        j.arrive(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "in flight")]
+    fn reprogram_in_flight_panics() {
+        let mut j = Jcu::new(1);
+        j.program(0, 2);
+        j.arrive(0);
+        j.program(0, 2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Interrupt infrastructure: CLINT + MCIP registers (§2.3) and the job
+//! completion unit (§4.3).
+
+pub mod clint;
+pub mod jcu;
+
+pub use clint::{Clint, HartId, McipReg};
+pub use jcu::{ArrivalOutcome, Jcu, JobId};

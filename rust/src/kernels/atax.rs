@@ -1,0 +1,95 @@
+//! ATAX workload descriptor, calibrated to the paper's Eq. 6:
+//!
+//! ```text
+//! t(n) = 566 + 3.98*N*M + 2.9*N/(n*8) + N*(1+M)/8 * n
+//! ```
+//!
+//! The implementation the paper measures broadcasts the whole A matrix
+//! and x vector to every selected cluster (the `N*(1+M)/8 * n` term: n
+//! sequential full-size transfers through the single wide-SPM port),
+//! computes the A^T(Ax) passes redundantly per cluster (the `3.98*N*M`
+//! term, independent of n), and partitions only the final y writeback
+//! (part of the `2.9*N/(n*8)` term). This communication pattern is why
+//! ATAX "does not follow Amdahl's law directly" (§5.6) and shows
+//! near-constant ideal speedups (§5.3).
+
+use crate::config::TimingConfig;
+
+use super::partition;
+
+/// Eq. 6 compute coefficient: 3.98 cycles per element of A, stored as a
+/// rational for integer-exact simulation.
+pub const CYCLES_PER_ELEM_NUM: u64 = 398;
+pub const CYCLES_PER_ELEM_DEN: u64 = 100;
+
+/// Phase-F constant for ATAX, chosen so the composed model constant is
+/// Eq. 6's 566 (see `model::analytical` tests).
+pub const INIT_CYCLES: u64 = 221;
+
+/// Phase-F parallel coefficient: Eq. 6's 2.9*N/(8n) splits into N/(8n)
+/// writeback beats (phase G) and 1.9*N/(8n) cycles of parallel epilogue
+/// in phase F (per-column reduction + store of the y chunk).
+pub const PAR_NUM: u64 = 19;
+pub const PAR_DEN: u64 = 10;
+
+/// Phase E: every cluster fetches the full A (M*N doubles) and x (N).
+pub fn operand_transfers(m: u64, n: u64) -> Vec<u64> {
+    vec![m * n * 8, n * 8]
+}
+
+/// Phase F: redundant full-A passes + parallelized epilogue.
+pub fn compute_cycles(m: u64, n: u64, n_clusters: usize, t: &TimingConfig) -> u64 {
+    let _ = t; // ATAX's init is its own calibrated constant
+    let serial = (m * n * CYCLES_PER_ELEM_NUM).div_ceil(CYCLES_PER_ELEM_DEN);
+    let chunk = partition(n, n_clusters, 0); // max chunk (first cluster)
+    let parallel = (chunk * PAR_NUM).div_ceil(PAR_DEN * 8);
+    INIT_CYCLES + serial + parallel
+}
+
+/// Phase G: the cluster's y chunk.
+pub fn writeback_bytes(_m: u64, n: u64, n_clusters: usize, c: usize) -> u64 {
+    partition(n, n_clusters, c) * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_volume_grows_linearly() {
+        // Eq. 6's n-linear term: total phase-E bytes = n * (M*N + N) * 8.
+        let (m, n) = (64u64, 64u64);
+        let per: u64 = operand_transfers(m, n).iter().sum();
+        assert_eq!(per, (m * n + n) * 8);
+        for nc in [1u64, 8, 32] {
+            assert_eq!(nc * per, nc * (m * n + n) * 8);
+        }
+    }
+
+    #[test]
+    fn beats_match_eq6_linear_term() {
+        // N*(1+M)/8 beats per cluster on the 64 B/cycle port.
+        let (m, n) = (64u64, 64u64);
+        let bytes: u64 = operand_transfers(m, n).iter().sum();
+        assert_eq!(bytes / 64, n * (1 + m) / 8);
+    }
+
+    #[test]
+    fn compute_dominated_by_serial_term() {
+        let t = TimingConfig::default();
+        let f1 = compute_cycles(64, 64, 1, &t);
+        let f32 = compute_cycles(64, 64, 32, &t);
+        // Speedup of phase F alone is marginal (paper: near-constant
+        // ideal speedups, Fig. 8).
+        assert!((f1 as f64) / (f32 as f64) < 1.05, "f1={f1} f32={f32}");
+        // And the 3.98*M*N term is present.
+        let serial = 398 * 64 * 64 / 100;
+        assert!(f1 >= serial);
+    }
+
+    #[test]
+    fn writeback_partitions_y() {
+        let total: u64 = (0..16).map(|c| writeback_bytes(64, 64, 16, c)).sum();
+        assert_eq!(total, 64 * 8);
+    }
+}

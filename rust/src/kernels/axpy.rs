@@ -1,0 +1,86 @@
+//! AXPY workload descriptor — the paper's running example (Eqs. 1, 2, 5).
+//!
+//! Vectors are partitioned contiguously across clusters: each cluster
+//! DMA-fetches its x and y chunks (phase E), the eight compute cores
+//! stream the FMA at the measured 1.47 cycles/element aggregate rate
+//! (phase F, Eq. 2), and the z chunk is written back (phase G, Eq. 3).
+//! Total communication volume is independent of the cluster count, which
+//! is what makes AXPY Amdahl-class (§5.3).
+
+use crate::config::TimingConfig;
+
+use super::partition;
+
+/// Measured per-element cost: "it then takes 1.47 cycles on average to
+/// calculate each output vector element", distributed over the 8 compute
+/// cores (§5.5.F). Stored as a rational (147/100) to keep the simulator
+/// integer-exact.
+pub const CYCLES_PER_ELEM_NUM: u64 = 147;
+pub const CYCLES_PER_ELEM_DEN: u64 = 100;
+
+/// Phase E: the cluster's x and y chunks (two DMA transfers, §5.5.E).
+pub fn operand_transfers(n: u64, n_clusters: usize, c: usize) -> Vec<u64> {
+    let elems = partition(n, n_clusters, c);
+    if elems == 0 {
+        return vec![];
+    }
+    vec![elems * 8, elems * 8]
+}
+
+/// Phase F (Eq. 2): t_init + elems * 1.47 / 8.
+pub fn compute_cycles(n: u64, n_clusters: usize, c: usize, t: &TimingConfig) -> u64 {
+    let elems = partition(n, n_clusters, c);
+    let cores = 8;
+    t.compute_init
+        + (elems * CYCLES_PER_ELEM_NUM).div_ceil(CYCLES_PER_ELEM_DEN * cores)
+}
+
+/// Phase G: the cluster's z chunk (one DMA transfer, Eq. 3).
+pub fn writeback_bytes(n: u64, n_clusters: usize, c: usize) -> u64 {
+    partition(n, n_clusters, c) * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_phase_f_single_cluster() {
+        // Eq. 2 with n=1, N=1024: 55 + 1.47*1024/8 = 55 + 188.16 -> 244.
+        let t = TimingConfig::default();
+        assert_eq!(compute_cycles(1024, 1, 0, &t), 55 + 189); // ceil
+    }
+
+    #[test]
+    fn phase_f_scales_with_clusters() {
+        let t = TimingConfig::default();
+        let f1 = compute_cycles(4096, 1, 0, &t) - t.compute_init;
+        let f32 = compute_cycles(4096, 32, 0, &t) - t.compute_init;
+        // Parallel fraction shrinks ~32x (integer rounding aside).
+        assert!(f1 >= 31 * f32 && f1 <= 33 * f32, "f1={f1} f32={f32}");
+    }
+
+    #[test]
+    fn eq1_total_beats_constant() {
+        // 16 KiB total (N=1024 doubles x 2 vectors) regardless of the
+        // offload configuration (§5.5.E).
+        for n_clusters in [1usize, 2, 4, 8, 16, 32] {
+            let total: u64 = (0..n_clusters)
+                .map(|c| operand_transfers(1024, n_clusters, c).iter().sum::<u64>())
+                .sum();
+            assert_eq!(total, 16 * 1024);
+        }
+    }
+
+    #[test]
+    fn writeback_partitions_exactly() {
+        let total: u64 = (0..32).map(|c| writeback_bytes(1000, 32, c)).sum();
+        assert_eq!(total, 8000);
+    }
+
+    #[test]
+    fn idle_cluster_has_no_transfers() {
+        // More clusters than elements: the surplus clusters fetch nothing.
+        assert!(operand_transfers(2, 4, 3).is_empty());
+    }
+}

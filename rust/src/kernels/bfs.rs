@@ -1,0 +1,71 @@
+//! BFS workload descriptor (Graph500-style traversal, §5.1).
+//!
+//! Dense-adjacency frontier expansion. The adjacency matrix is broadcast
+//! to every cluster (each expansion step needs the full column set), the
+//! node range is partitioned for the per-level expansion, and every level
+//! ends with a cluster-wide synchronization — the per-level barrier and
+//! frontier exchange are what keep BFS in the broadcast/non-Amdahl class
+//! together with ATAX and Covariance (§5.3).
+
+use crate::config::TimingConfig;
+
+use super::partition;
+
+/// Cycles per adjacency element scanned during one level expansion
+/// (load + test + conditional distance update, 8 cores).
+pub const SCAN_CYCLES_PER_ELEM_NUM: u64 = 2;
+
+/// Per-level synchronization + frontier exchange overhead (cycles).
+pub const LEVEL_SYNC_CYCLES: u64 = 60;
+
+pub fn operand_transfers(nodes: u64) -> Vec<u64> {
+    // Whole adjacency matrix to every cluster.
+    vec![nodes * nodes * 8]
+}
+
+pub fn compute_cycles(nodes: u64, levels: u64, n_clusters: usize, t: &TimingConfig) -> u64 {
+    // Each level scans the frontier's adjacency rows; aggregated over a
+    // full traversal the scans cover ~the whole matrix once, split across
+    // levels and partitioned across clusters.
+    let my_cols = partition(nodes, n_clusters, 0); // max chunk
+    let total_scan = (nodes * my_cols * SCAN_CYCLES_PER_ELEM_NUM).div_ceil(8);
+    let lv = levels.max(1);
+    t.compute_init + lv * LEVEL_SYNC_CYCLES + total_scan
+}
+
+pub fn writeback_bytes(nodes: u64, n_clusters: usize, c: usize) -> u64 {
+    // int32 distances, partitioned.
+    partition(nodes, n_clusters, c) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacency_broadcast() {
+        assert_eq!(operand_transfers(64), vec![64 * 64 * 8]);
+    }
+
+    #[test]
+    fn level_overhead_grows_with_depth() {
+        let t = TimingConfig::default();
+        let shallow = compute_cycles(64, 2, 8, &t);
+        let deep = compute_cycles(64, 8, 8, &t);
+        assert!(deep > shallow);
+    }
+
+    #[test]
+    fn expansion_parallelizes() {
+        let t = TimingConfig::default();
+        let f1 = compute_cycles(128, 4, 1, &t);
+        let f16 = compute_cycles(128, 4, 16, &t);
+        assert!(f1 > f16);
+    }
+
+    #[test]
+    fn distances_are_int32() {
+        let total: u64 = (0..4).map(|c| writeback_bytes(100, 4, c)).sum();
+        assert_eq!(total, 400);
+    }
+}

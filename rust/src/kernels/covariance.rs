@@ -1,0 +1,67 @@
+//! Covariance workload descriptor (§5.1).
+//!
+//! PolyBench covariance of an (M x N) data matrix. The paper groups it
+//! with ATAX and BFS: "the Covariance and BFS kernels ... feature similar
+//! communication patterns" (§5.3) — the full data matrix is broadcast to
+//! every cluster (mean subtraction needs all N observations of every
+//! variable), the centering pass is redundant per cluster, and only the
+//! rank-N update producing an M/n-row slab of the output is partitioned.
+
+use crate::config::TimingConfig;
+
+use super::partition;
+
+/// Cycles per element of the redundant mean+centering passes (2 sweeps
+/// over the data at ~1 cy/elem each on the 8-core cluster — load-bound).
+pub const CENTER_CYCLES_PER_ELEM: u64 = 2;
+
+pub fn operand_transfers(m: u64, n: u64) -> Vec<u64> {
+    // Whole data matrix to every cluster.
+    vec![m * n * 8]
+}
+
+pub fn compute_cycles(
+    m: u64,
+    n: u64,
+    n_clusters: usize,
+    c: usize,
+    t: &TimingConfig,
+) -> u64 {
+    let rows = partition(m, n_clusters, c);
+    let center = CENTER_CYCLES_PER_ELEM * m * n;
+    // Rank-N update for this cluster's row slab: rows * M * N MACs / 8.
+    let update = (rows * m * n).div_ceil(8);
+    t.compute_init + center + update
+}
+
+pub fn writeback_bytes(m: u64, _n: u64, n_clusters: usize, c: usize) -> u64 {
+    partition(m, n_clusters, c) * m * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_class_volume() {
+        let per: u64 = operand_transfers(32, 64).iter().sum();
+        assert_eq!(per, 32 * 64 * 8);
+    }
+
+    #[test]
+    fn update_parallelizes_centering_does_not() {
+        let t = TimingConfig::default();
+        let f1 = compute_cycles(32, 64, 1, 0, &t);
+        let f32 = compute_cycles(32, 64, 32, 0, &t);
+        // Large serial fraction: bounded speedup on phase F.
+        let s = f1 as f64 / f32 as f64;
+        assert!(s > 1.0 && s < 3.0, "speedup {s}");
+    }
+
+    #[test]
+    fn writeback_covers_output() {
+        let m = 32u64;
+        let total: u64 = (0..8).map(|c| writeback_bytes(m, 64, 8, c)).sum();
+        assert_eq!(total, m * m * 8);
+    }
+}

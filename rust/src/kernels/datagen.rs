@@ -1,0 +1,355 @@
+//! Deterministic workload data generation + native reference results.
+//!
+//! The coordinator stages these inputs in the (simulated) wide SPM and
+//! feeds them to the PJRT executables; the native references here are the
+//! *second*, independent implementation used to verify the HLO artifacts'
+//! numerics end-to-end (the first being python's `ref.py` at build time).
+
+use crate::rng::Rng64;
+
+use super::JobSpec;
+
+/// Inputs of a job, in the layouts the HLO artifacts expect.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobInputs {
+    /// alpha, x\[n\], y\[n\]
+    Axpy { alpha: f64, x: Vec<f64>, y: Vec<f64> },
+    /// seed for the on-device threefry generator
+    MonteCarlo { seed: u32 },
+    /// a\[m*k\], b\[k*n\] (row-major)
+    Matmul { a: Vec<f64>, b: Vec<f64> },
+    /// a\[m*n\], x\[n\]
+    Atax { a: Vec<f64>, x: Vec<f64> },
+    /// data\[m*n\]
+    Covariance { data: Vec<f64> },
+    /// adj\[n*n\] (0/1 doubles), src
+    Bfs { adj: Vec<f64>, src: i32 },
+}
+
+/// Expected outputs for verification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobExpected {
+    /// Exact element-wise reference (f64) with tolerance.
+    F64(Vec<f64>),
+    /// Exact int32 reference.
+    I32(Vec<i32>),
+    /// A scalar in [lo, hi] (Monte Carlo estimates).
+    ScalarRange { lo: f64, hi: f64 },
+}
+
+fn randn(rng: &mut Rng64, n: usize) -> Vec<f64> {
+    // Uniform(-1,1): plenty for numerics checks and has no
+    // tail-magnitude surprises.
+    (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect()
+}
+
+/// Generate inputs + expected outputs for `spec`, deterministically from
+/// `seed`.
+pub fn generate(spec: &JobSpec, seed: u64) -> (JobInputs, JobExpected) {
+    let mut rng = Rng64::seed_from_u64(seed);
+    match *spec {
+        JobSpec::Axpy { n } => {
+            let alpha = rng.gen_range_f64(-2.0, 2.0);
+            let x = randn(&mut rng, n as usize);
+            let y = randn(&mut rng, n as usize);
+            let z = axpy_ref(alpha, &x, &y);
+            (JobInputs::Axpy { alpha, x, y }, JobExpected::F64(z))
+        }
+        JobSpec::MonteCarlo { samples } => {
+            let seed32 = (seed & 0xffff_ffff) as u32;
+            // 4-sigma binomial bound around pi.
+            let n = samples as f64;
+            let sigma = 4.0 * (std::f64::consts::PI / 4.0 * (1.0 - std::f64::consts::PI / 4.0) / n).sqrt();
+            (
+                JobInputs::MonteCarlo { seed: seed32 },
+                JobExpected::ScalarRange {
+                    lo: std::f64::consts::PI - 4.0 * sigma * 4.0,
+                    hi: std::f64::consts::PI + 4.0 * sigma * 4.0,
+                },
+            )
+        }
+        JobSpec::Matmul { m, n, k } => {
+            let a = randn(&mut rng, (m * k) as usize);
+            let b = randn(&mut rng, (k * n) as usize);
+            let c = matmul_ref(&a, &b, m as usize, n as usize, k as usize);
+            (JobInputs::Matmul { a, b }, JobExpected::F64(c))
+        }
+        JobSpec::Atax { m, n } => {
+            let a = randn(&mut rng, (m * n) as usize);
+            let x = randn(&mut rng, n as usize);
+            let y = atax_ref(&a, &x, m as usize, n as usize);
+            (JobInputs::Atax { a, x }, JobExpected::F64(y))
+        }
+        JobSpec::Covariance { m, n } => {
+            let data = randn(&mut rng, (m * n) as usize);
+            let c = covariance_ref(&data, m as usize, n as usize);
+            (JobInputs::Covariance { data }, JobExpected::F64(c))
+        }
+        JobSpec::Bfs { nodes, levels } => {
+            let (adj, src) = gen_graph(&mut rng, nodes as usize, levels as usize);
+            let dist = bfs_ref(&adj, nodes as usize, src);
+            (
+                JobInputs::Bfs {
+                    adj,
+                    src: src as i32,
+                },
+                JobExpected::I32(dist),
+            )
+        }
+    }
+}
+
+// ------------------------------------------------------------ references
+
+pub fn axpy_ref(alpha: f64, x: &[f64], y: &[f64]) -> Vec<f64> {
+    x.iter().zip(y).map(|(a, b)| alpha * a + b).collect()
+}
+
+pub fn matmul_ref(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    c
+}
+
+pub fn atax_ref(a: &[f64], x: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut tmp = vec![0.0; m];
+    for i in 0..m {
+        tmp[i] = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+    }
+    let mut y = vec![0.0; n];
+    for i in 0..m {
+        for j in 0..n {
+            y[j] += a[i * n + j] * tmp[i];
+        }
+    }
+    y
+}
+
+pub fn covariance_ref(data: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut mean = vec![0.0; m];
+    for i in 0..m {
+        mean[i] = (0..n).map(|j| data[i * n + j]).sum::<f64>() / n as f64;
+    }
+    let mut cov = vec![0.0; m * m];
+    for i in 0..m {
+        for j in 0..m {
+            let s: f64 = (0..n)
+                .map(|t| (data[i * n + t] - mean[i]) * (data[j * n + t] - mean[j]))
+                .sum();
+            cov[i * m + j] = s / (n as f64 - 1.0);
+        }
+    }
+    cov
+}
+
+pub fn bfs_ref(adj: &[f64], n: usize, src: usize) -> Vec<i32> {
+    let mut dist = vec![-1i32; n];
+    dist[src] = 0;
+    let mut frontier = vec![src];
+    let mut level = 0i32;
+    while !frontier.is_empty() {
+        level += 1;
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for v in 0..n {
+                if adj[u * n + v] > 0.0 && dist[v] < 0 {
+                    dist[v] = level;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Random connected-ish graph whose BFS tree from node 0 has roughly
+/// `levels` levels: a layered graph with random intra/inter-layer edges.
+fn gen_graph(rng: &mut Rng64, n: usize, levels: usize) -> (Vec<f64>, usize) {
+    let levels = levels.clamp(1, n.max(1));
+    let mut adj = vec![0.0; n * n];
+    let per_layer = n.div_ceil(levels);
+    let layer_of = |v: usize| (v / per_layer).min(levels - 1);
+    let add = |adj: &mut Vec<f64>, u: usize, v: usize| {
+        if u != v {
+            adj[u * n + v] = 1.0;
+            adj[v * n + u] = 1.0;
+        }
+    };
+    // Chain guaranteeing the layer structure: each vertex links to some
+    // vertex of the previous layer.
+    for v in 1..n {
+        let l = layer_of(v);
+        if l == 0 {
+            add(&mut adj, v, 0);
+        } else {
+            let prev_start = (l - 1) * per_layer;
+            let prev_end = (l * per_layer).min(n);
+            let u = rng.gen_range_usize(prev_start, prev_end);
+            add(&mut adj, v, u);
+        }
+    }
+    // Extra random edges within / between adjacent layers.
+    let extra = n; // sparse
+    for _ in 0..extra {
+        let u = rng.gen_range_usize(0, n);
+        let lu = layer_of(u);
+        let lo = lu.saturating_sub(1) * per_layer;
+        let hi = (((lu + 1) * per_layer).min(n)).max(lo + 1);
+        let v = rng.gen_range_usize(lo, hi);
+        add(&mut adj, u, v);
+    }
+    (adj, 0)
+}
+
+/// Verify a flat f64 result against the expectation.
+pub fn verify_f64(expected: &JobExpected, got: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    match expected {
+        JobExpected::F64(want) => {
+            if want.len() != got.len() {
+                return Err(format!("length mismatch: {} vs {}", want.len(), got.len()));
+            }
+            for (i, (w, g)) in want.iter().zip(got).enumerate() {
+                let tol = atol + rtol * w.abs();
+                if (w - g).abs() > tol {
+                    return Err(format!("elem {i}: want {w}, got {g} (tol {tol})"));
+                }
+            }
+            Ok(())
+        }
+        JobExpected::ScalarRange { lo, hi } => {
+            if got.len() != 1 {
+                return Err(format!("expected scalar, got {} elems", got.len()));
+            }
+            if got[0] < *lo || got[0] > *hi {
+                return Err(format!("scalar {} outside [{lo}, {hi}]", got[0]));
+            }
+            Ok(())
+        }
+        JobExpected::I32(_) => Err("expected i32 output, got f64".into()),
+    }
+}
+
+/// Verify a flat i32 result.
+pub fn verify_i32(expected: &JobExpected, got: &[i32]) -> Result<(), String> {
+    match expected {
+        JobExpected::I32(want) => {
+            if want != got {
+                let first = want
+                    .iter()
+                    .zip(got)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(usize::MAX);
+                return Err(format!("i32 mismatch at {first}"));
+            }
+            Ok(())
+        }
+        _ => Err("expected f64/scalar output, got i32".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = JobSpec::Axpy { n: 64 };
+        let (a, _) = generate(&spec, 7);
+        let (b, _) = generate(&spec, 7);
+        assert_eq!(a, b);
+        let (c, _) = generate(&spec, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn axpy_reference() {
+        let z = axpy_ref(2.0, &[1.0, 2.0], &[10.0, 20.0]);
+        assert_eq!(z, vec![12.0, 24.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul_ref(&a, &i, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn atax_matches_two_matvecs() {
+        // A = [[1,2],[3,4]], x = [1,1]: tmp = [3,7], y = A^T tmp = [24,34].
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let y = atax_ref(&a, &[1.0, 1.0], 2, 2);
+        assert_eq!(y, vec![24.0, 34.0]);
+    }
+
+    #[test]
+    fn covariance_of_constant_rows_is_zero() {
+        let data = vec![5.0; 3 * 8];
+        let c = covariance_ref(&data, 3, 8);
+        assert!(c.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn covariance_symmetric() {
+        let (inp, _) = generate(&JobSpec::Covariance { m: 8, n: 16 }, 3);
+        let JobInputs::Covariance { data } = inp else {
+            unreachable!()
+        };
+        let c = covariance_ref(&data, 8, 16);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((c[i * 8 + j] - c[j * 8 + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_graph_has_requested_depth() {
+        for levels in [1usize, 2, 4, 6] {
+            let (inp, exp) = generate(
+                &JobSpec::Bfs {
+                    nodes: 64,
+                    levels: levels as u64,
+                },
+                11,
+            );
+            let JobInputs::Bfs { adj, src } = inp else {
+                unreachable!()
+            };
+            let JobExpected::I32(dist) = exp else {
+                unreachable!()
+            };
+            assert_eq!(dist, bfs_ref(&adj, 64, src as usize));
+            let max_level = *dist.iter().max().unwrap();
+            assert!(
+                (max_level as i64 - levels as i64).abs() <= 1,
+                "levels={levels} got {max_level}"
+            );
+            // Connected: everything reachable.
+            assert!(dist.iter().all(|&d| d >= 0));
+        }
+    }
+
+    #[test]
+    fn verify_f64_catches_mismatch() {
+        let exp = JobExpected::F64(vec![1.0, 2.0]);
+        assert!(verify_f64(&exp, &[1.0, 2.0], 1e-12, 1e-12).is_ok());
+        assert!(verify_f64(&exp, &[1.0, 2.1], 1e-12, 1e-12).is_err());
+        assert!(verify_f64(&exp, &[1.0], 1e-12, 1e-12).is_err());
+    }
+
+    #[test]
+    fn verify_scalar_range() {
+        let exp = JobExpected::ScalarRange { lo: 3.0, hi: 3.3 };
+        assert!(verify_f64(&exp, &[3.14], 0.0, 0.0).is_ok());
+        assert!(verify_f64(&exp, &[2.0], 0.0, 0.0).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Matmul workload descriptor (§5.1).
+//!
+//! C is partitioned on a 2-D grid of clusters (gr x gc): cluster (i, j)
+//! fetches an M/gr-row slab of A and a N/gc-column slab of B, computes its
+//! C tile at 1 MAC/cycle/core, and writes the tile back. Replication
+//! grows only with the grid perimeter (~sqrt(n)), so at the benchmarked
+//! sizes compute dominates and matmul behaves Amdahl-class (§5.3: "the
+//! memory transfers and corresponding stalls are short").
+
+use crate::config::TimingConfig;
+
+use super::partition;
+
+/// Split `n` clusters into a near-square (rows, cols) grid; both factors
+/// are powers of two when `n` is.
+pub fn grid(n_clusters: usize) -> (usize, usize) {
+    let mut rows = 1usize;
+    while rows * rows < n_clusters {
+        rows *= 2;
+    }
+    while n_clusters % rows != 0 {
+        rows /= 2;
+    }
+    (rows, n_clusters / rows)
+}
+
+fn tile(m: u64, n: u64, n_clusters: usize, c: usize) -> (u64, u64) {
+    let (gr, gc) = grid(n_clusters);
+    let (i, j) = (c / gc, c % gc);
+    (partition(m, gr, i), partition(n, gc, j))
+}
+
+/// Phase E: the A slab and the B slab.
+pub fn operand_transfers(m: u64, n: u64, k: u64, n_clusters: usize, c: usize) -> Vec<u64> {
+    let (tm, tn) = tile(m, n, n_clusters, c);
+    let mut v = Vec::new();
+    if tm > 0 {
+        v.push(tm * k * 8);
+    }
+    if tn > 0 {
+        v.push(k * tn * 8);
+    }
+    if tm == 0 || tn == 0 {
+        v.clear();
+    }
+    v
+}
+
+/// Phase F: tile MACs at 1 MAC/cycle/core over 8 cores.
+pub fn compute_cycles(
+    m: u64,
+    n: u64,
+    k: u64,
+    n_clusters: usize,
+    c: usize,
+    t: &TimingConfig,
+) -> u64 {
+    let (tm, tn) = tile(m, n, n_clusters, c);
+    t.compute_init + (tm * tn * k).div_ceil(8)
+}
+
+/// Phase G: the C tile.
+pub fn writeback_bytes(m: u64, n: u64, _k: u64, n_clusters: usize, c: usize) -> u64 {
+    let (tm, tn) = tile(m, n, n_clusters, c);
+    tm * tn * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_factors() {
+        assert_eq!(grid(1), (1, 1));
+        assert_eq!(grid(2), (2, 1));
+        assert_eq!(grid(4), (2, 2));
+        assert_eq!(grid(8), (4, 2));
+        assert_eq!(grid(16), (4, 4));
+        assert_eq!(grid(32), (8, 4));
+    }
+
+    #[test]
+    fn writeback_tiles_cover_c() {
+        for nc in [1usize, 2, 4, 8, 16, 32] {
+            let total: u64 = (0..nc).map(|c| writeback_bytes(64, 64, 64, nc, c)).sum();
+            assert_eq!(total, 64 * 64 * 8, "nc={nc}");
+        }
+    }
+
+    #[test]
+    fn macs_cover_problem() {
+        let t = TimingConfig::default();
+        for nc in [1usize, 4, 32] {
+            let total: u64 = (0..nc)
+                .map(|c| compute_cycles(64, 64, 64, nc, c, &t) - t.compute_init)
+                .sum();
+            // Total cycle-sum ~ M*N*K/8 (ceil rounding per cluster).
+            let want = 64u64 * 64 * 64 / 8;
+            assert!(total >= want && total <= want + nc as u64, "nc={nc}");
+        }
+    }
+
+    #[test]
+    fn replication_grows_sublinearly() {
+        // Total operand volume at 32 clusters is well below 32x the
+        // single-cluster volume (contrast with ATAX's full replication).
+        let v1: u64 = operand_transfers(64, 64, 64, 1, 0).iter().sum();
+        let v32: u64 = (0..32)
+            .map(|c| operand_transfers(64, 64, 64, 32, c).iter().sum::<u64>())
+            .sum();
+        assert!(v32 < 8 * v1, "v1={v1} v32={v32}");
+    }
+}

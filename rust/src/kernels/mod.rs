@@ -1,0 +1,248 @@
+//! The six offloaded workloads of the paper (§5.1) as *workload
+//! descriptors*: per-cluster DMA transfer plans (phase E/G) and compute
+//! cost functions (phase F), calibrated to the paper's measured
+//! coefficients (Eq. 2 for AXPY, Eq. 6 for ATAX; see each kernel module).
+//!
+//! The descriptors drive both the cycle-level DES (`offload::executor`)
+//! and the analytical runtime model (`model::analytical`) — the paper's
+//! methodology of composing per-phase models (Eq. 4) reuses exactly these
+//! quantities. The *numerics* of each kernel run separately through the
+//! AOT-compiled HLO artifacts (`runtime`).
+
+
+use crate::config::TimingConfig;
+
+pub mod atax;
+pub mod axpy;
+pub mod bfs;
+pub mod covariance;
+pub mod datagen;
+pub mod matmul;
+pub mod montecarlo;
+
+/// Kernel families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Axpy,
+    MonteCarlo,
+    Matmul,
+    Atax,
+    Covariance,
+    Bfs,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 6] = [
+        KernelKind::Axpy,
+        KernelKind::MonteCarlo,
+        KernelKind::Matmul,
+        KernelKind::Atax,
+        KernelKind::Covariance,
+        KernelKind::Bfs,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Axpy => "axpy",
+            KernelKind::MonteCarlo => "montecarlo",
+            KernelKind::Matmul => "matmul",
+            KernelKind::Atax => "atax",
+            KernelKind::Covariance => "covariance",
+            KernelKind::Bfs => "bfs",
+        }
+    }
+}
+
+/// A fully-specified job: kernel + problem size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobSpec {
+    /// AXPY over vectors of length `n` (paper's running example).
+    Axpy { n: u64 },
+    /// Monte Carlo pi with `samples` points.
+    MonteCarlo { samples: u64 },
+    /// (m x k) @ (k x n) matmul.
+    Matmul { m: u64, n: u64, k: u64 },
+    /// ATAX: A is (m x n), x length n.
+    Atax { m: u64, n: u64 },
+    /// Covariance of an (m x n) data matrix.
+    Covariance { m: u64, n: u64 },
+    /// BFS over `nodes` vertices; `levels` = traversal depth of the input
+    /// graph (datagen controls it).
+    Bfs { nodes: u64, levels: u64 },
+}
+
+impl JobSpec {
+    pub fn kind(&self) -> KernelKind {
+        match self {
+            JobSpec::Axpy { .. } => KernelKind::Axpy,
+            JobSpec::MonteCarlo { .. } => KernelKind::MonteCarlo,
+            JobSpec::Matmul { .. } => KernelKind::Matmul,
+            JobSpec::Atax { .. } => KernelKind::Atax,
+            JobSpec::Covariance { .. } => KernelKind::Covariance,
+            JobSpec::Bfs { .. } => KernelKind::Bfs,
+        }
+    }
+
+    /// Bytes of job arguments CVA6 communicates in phase A / clusters
+    /// fetch in phase D (pointers + sizes + scalars; one cache line).
+    pub fn args_bytes(&self) -> u64 {
+        match self {
+            JobSpec::Axpy { .. } => 40,       // alpha, n, x*, y*, z*
+            JobSpec::MonteCarlo { .. } => 24, // seed, samples, out*
+            JobSpec::Matmul { .. } => 64,
+            JobSpec::Atax { .. } => 48,
+            JobSpec::Covariance { .. } => 40,
+            JobSpec::Bfs { .. } => 48,
+        }
+    }
+
+    /// Phase-E DMA plan of cluster `c` out of `n_clusters`: payload bytes
+    /// per transfer, fetched from the wide SPM.
+    pub fn operand_transfers(&self, n_clusters: usize, c: usize) -> Vec<u64> {
+        match *self {
+            JobSpec::Axpy { n } => axpy::operand_transfers(n, n_clusters, c),
+            JobSpec::MonteCarlo { .. } => montecarlo::operand_transfers(),
+            JobSpec::Matmul { m, n, k } => {
+                matmul::operand_transfers(m, n, k, n_clusters, c)
+            }
+            JobSpec::Atax { m, n } => atax::operand_transfers(m, n),
+            JobSpec::Covariance { m, n } => covariance::operand_transfers(m, n),
+            JobSpec::Bfs { nodes, .. } => bfs::operand_transfers(nodes),
+        }
+    }
+
+    /// Phase-F compute cycles of cluster `c` (includes the paper's
+    /// measured init cost, Eq. 2).
+    pub fn compute_cycles(&self, n_clusters: usize, c: usize, t: &TimingConfig) -> u64 {
+        match *self {
+            JobSpec::Axpy { n } => axpy::compute_cycles(n, n_clusters, c, t),
+            JobSpec::MonteCarlo { samples } => {
+                montecarlo::compute_cycles(samples, n_clusters, c, t)
+            }
+            JobSpec::Matmul { m, n, k } => {
+                matmul::compute_cycles(m, n, k, n_clusters, c, t)
+            }
+            JobSpec::Atax { m, n } => atax::compute_cycles(m, n, n_clusters, t),
+            JobSpec::Covariance { m, n } => {
+                covariance::compute_cycles(m, n, n_clusters, c, t)
+            }
+            JobSpec::Bfs { nodes, levels } => {
+                bfs::compute_cycles(nodes, levels, n_clusters, t)
+            }
+        }
+    }
+
+    /// Phase-G writeback bytes of cluster `c`.
+    pub fn writeback_bytes(&self, n_clusters: usize, c: usize) -> u64 {
+        match *self {
+            JobSpec::Axpy { n } => axpy::writeback_bytes(n, n_clusters, c),
+            JobSpec::MonteCarlo { .. } => montecarlo::writeback_bytes(),
+            JobSpec::Matmul { m, n, k } => {
+                matmul::writeback_bytes(m, n, k, n_clusters, c)
+            }
+            JobSpec::Atax { m, n } => atax::writeback_bytes(m, n, n_clusters, c),
+            JobSpec::Covariance { m, n } => {
+                covariance::writeback_bytes(m, n, n_clusters, c)
+            }
+            JobSpec::Bfs { nodes, .. } => bfs::writeback_bytes(nodes, n_clusters, c),
+        }
+    }
+
+    /// Total operand bytes across all clusters (communication volume).
+    pub fn total_operand_bytes(&self, n_clusters: usize) -> u64 {
+        (0..n_clusters)
+            .map(|c| self.operand_transfers(n_clusters, c).iter().sum::<u64>())
+            .sum()
+    }
+
+    /// Useful floating-point work of the job (for efficiency metrics).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            JobSpec::Axpy { n } => 2 * n,
+            JobSpec::MonteCarlo { samples } => 4 * samples,
+            JobSpec::Matmul { m, n, k } => 2 * m * n * k,
+            JobSpec::Atax { m, n } => 4 * m * n,
+            JobSpec::Covariance { m, n } => 2 * m * n + m * m * n,
+            JobSpec::Bfs { nodes, .. } => 2 * nodes * nodes,
+        }
+    }
+
+    /// Short id for tables/artifact lookup (matches python aot variants
+    /// when the sizes line up).
+    pub fn id(&self) -> String {
+        match *self {
+            JobSpec::Axpy { n } => format!("axpy_n{n}"),
+            JobSpec::MonteCarlo { samples } => format!("montecarlo_n{samples}"),
+            JobSpec::Matmul { m, n, k } => format!("matmul_k{k}_m{m}_n{n}"),
+            JobSpec::Atax { m, n } => format!("atax_m{m}_n{n}"),
+            JobSpec::Covariance { m, n } => format!("covariance_m{m}_n{n}"),
+            JobSpec::Bfs { nodes, .. } => format!("bfs_n{nodes}"),
+        }
+    }
+}
+
+/// Evenly partition `total` items over `n` clusters: first `total % n`
+/// clusters take one extra item.
+pub fn partition(total: u64, n_clusters: usize, c: usize) -> u64 {
+    let n = n_clusters as u64;
+    let base = total / n;
+    let extra = total % n;
+    base + if (c as u64) < extra { 1 } else { 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything() {
+        for total in [0u64, 1, 7, 1024, 1025] {
+            for n in [1usize, 2, 3, 8, 32] {
+                let sum: u64 = (0..n).map(|c| partition(total, n, c)).sum();
+                assert_eq!(sum, total, "total={total} n={n}");
+                // Balanced within 1.
+                let parts: Vec<u64> = (0..n).map(|c| partition(total, n, c)).collect();
+                let (mn, mx) = (
+                    *parts.iter().min().unwrap(),
+                    *parts.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn ids_match_python_aot_naming() {
+        assert_eq!(JobSpec::Axpy { n: 1024 }.id(), "axpy_n1024");
+        assert_eq!(
+            JobSpec::Matmul { m: 64, n: 64, k: 64 }.id(),
+            "matmul_k64_m64_n64"
+        );
+        assert_eq!(JobSpec::Atax { m: 128, n: 128 }.id(), "atax_m128_n128");
+    }
+
+    #[test]
+    fn amdahl_class_vs_broadcast_class_volume() {
+        // §5.3's two application classes: AXPY/MC/Matmul keep (near-)
+        // constant total operand volume as clusters scale; ATAX/Cov/BFS
+        // replicate operands so volume grows linearly.
+        let axpy = JobSpec::Axpy { n: 1024 };
+        assert_eq!(
+            axpy.total_operand_bytes(1),
+            axpy.total_operand_bytes(32)
+        );
+        let atax = JobSpec::Atax { m: 64, n: 64 };
+        assert_eq!(
+            atax.total_operand_bytes(32),
+            32 * atax.total_operand_bytes(1)
+        );
+    }
+
+    #[test]
+    fn kind_names_unique() {
+        let mut names: Vec<&str> = KernelKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+    }
+}

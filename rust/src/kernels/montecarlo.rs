@@ -1,0 +1,59 @@
+//! Monte Carlo pi workload descriptor (§5.1).
+//!
+//! Sample generation happens on-cluster (no operands to fetch: phase E is
+//! empty), making Monte Carlo the purest Amdahl-class workload: only the
+//! 8-byte partial count returns in phase G. The per-sample cost models
+//! the Snitch LCG + FP compare sequence.
+
+use crate::config::TimingConfig;
+
+use super::partition;
+
+/// Cycles per sample per core: LCG advance (x2), scale to [0,1) (x2),
+/// two multiplies, add, compare, conditional increment — pseudo-dual-issue
+/// on Snitch streams this at ~11 cycles.
+pub const CYCLES_PER_SAMPLE: u64 = 11;
+
+/// No operands: points are generated from the seed argument.
+pub fn operand_transfers() -> Vec<u64> {
+    vec![]
+}
+
+pub fn compute_cycles(
+    samples: u64,
+    n_clusters: usize,
+    c: usize,
+    t: &TimingConfig,
+) -> u64 {
+    let mine = partition(samples, n_clusters, c);
+    let cores = 8;
+    t.compute_init + (mine * CYCLES_PER_SAMPLE).div_ceil(cores)
+}
+
+/// One 8-byte partial count per cluster.
+pub fn writeback_bytes() -> u64 {
+    8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_operand_traffic() {
+        assert!(operand_transfers().is_empty());
+    }
+
+    #[test]
+    fn near_perfect_strong_scaling() {
+        let t = TimingConfig::default();
+        let f1 = compute_cycles(4096, 1, 0, &t) - t.compute_init;
+        let f16 = compute_cycles(4096, 16, 0, &t) - t.compute_init;
+        assert!(f1 / f16 >= 15 && f1 / f16 <= 16);
+    }
+
+    #[test]
+    fn writeback_is_tiny() {
+        assert_eq!(writeback_bytes(), 8);
+    }
+}

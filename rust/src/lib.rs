@@ -1,0 +1,34 @@
+//! # occamy-offload
+//!
+//! Reproduction of *"Taming Offload Overheads in a Massively Parallel
+//! Open-Source RISC-V MPSoC: Analysis and Optimization"* (Colagrande &
+//! Benini, IEEE TPDS 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — a cycle-level discrete-event simulator of the
+//!   Occamy SoC, the baseline and multicast/JCU-optimized offload
+//!   routines (§4), the analytical runtime model (§5.6) and a
+//!   tokio-based coordinator that schedules jobs and executes their
+//!   numerics through PJRT.
+//! * **L2/L1 (python/, build-time only)** — the six workloads as JAX
+//!   graphs calling Pallas kernels, AOT-lowered to the HLO-text
+//!   artifacts the runtime loads. Python never runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and the per-figure experiment
+//! index, EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dma;
+pub mod exp;
+pub mod host;
+pub mod interrupt;
+pub mod kernels;
+pub mod mem;
+pub mod model;
+pub mod noc;
+pub mod offload;
+pub mod rng;
+pub mod runtime;
+pub mod sim;

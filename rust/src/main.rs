@@ -1,0 +1,390 @@
+//! `occamy` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|all> [--csv] [--config F]
+//!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
+//!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S]
+//!   validate-artifacts [--artifacts DIR]
+//!   model --kernel K --size N [--config F]
+//!   config-dump
+//!
+//! The binary is self-contained after `make artifacts`: python never runs
+//! on the request path.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use occamy_offload::config::Config;
+use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Planner};
+use occamy_offload::exp::{self, Table};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::model::OffloadModel;
+use occamy_offload::offload::{run_offload, run_triple, RoutineKind};
+use occamy_offload::runtime::{default_artifacts_dir, run_and_verify, PjrtRuntime};
+use occamy_offload::sim::Phase;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Tiny flag parser: positionals + `--key value` + `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(name) = args[i].strip_prefix("--") {
+                let has_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+                if has_value {
+                    flags.insert(name.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), String::from("true"));
+                    i += 1;
+                }
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn u64_flag(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+fn load_config(a: &Args) -> anyhow::Result<Config> {
+    match a.flag("config") {
+        None => Ok(Config::default()),
+        Some(path) => Config::from_path(&PathBuf::from(path)),
+    }
+}
+
+fn artifacts_dir(a: &Args) -> PathBuf {
+    a.flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir)
+}
+
+fn job_spec(kernel: &str, size: u64) -> anyhow::Result<JobSpec> {
+    Ok(match kernel {
+        "axpy" => JobSpec::Axpy { n: size },
+        "montecarlo" | "mc" => JobSpec::MonteCarlo { samples: size },
+        "matmul" => JobSpec::Matmul {
+            m: size,
+            n: size,
+            k: size,
+        },
+        "atax" => JobSpec::Atax { m: size, n: size },
+        "covariance" | "cov" => JobSpec::Covariance {
+            m: size,
+            n: 2 * size,
+        },
+        "bfs" => JobSpec::Bfs {
+            nodes: size,
+            levels: 4,
+        },
+        other => anyhow::bail!("unknown kernel {other:?}"),
+    })
+}
+
+fn emit(table: Table, csv: bool) {
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        println!("{}", table.render());
+    }
+}
+
+const USAGE: &str = "usage: occamy <experiment|sim|serve|validate-artifacts|model|config-dump> [options]
+  experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|all> [--csv] [--config F]
+  sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
+  serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C]
+  validate-artifacts [--artifacts DIR]
+  model --kernel K --size N [--config F]
+  config-dump";
+
+fn run(raw: &[String]) -> anyhow::Result<()> {
+    if raw.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = raw[0].as_str();
+    let a = Args::parse(&raw[1..]);
+    match cmd {
+        "experiment" => cmd_experiment(&a),
+        "sim" => cmd_sim(&a),
+        "serve" => cmd_serve(&a),
+        "validate-artifacts" => cmd_validate(&a),
+        "model" => cmd_model(&a),
+        "config-dump" => {
+            print!("{}", Config::default().to_toml());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
+    let which = a.positional.first().map(String::as_str).unwrap_or("all");
+    let cfg = load_config(a)?;
+    let csv = a.has("csv");
+    let mut ran = false;
+    if which == "ablation" || which == "all" {
+        ran = true;
+        let a = exp::ablation::run(&cfg);
+        emit(exp::ablation::render(&a), csv);
+        emit(exp::ablation::render_port(&a), csv);
+    }
+    for fig in ["fig7", "fig8", "fig9", "fig10", "fig11", "fig12"] {
+        if which != "all" && which != fig {
+            continue;
+        }
+        ran = true;
+        let table = match fig {
+            "fig7" => exp::fig7::render(&exp::fig7::run(&cfg)),
+            "fig8" => exp::fig8::render(&exp::fig8::run(&cfg)),
+            "fig9" => exp::fig9::render(&exp::fig9::run(&cfg)),
+            "fig10" => exp::fig10::render(&exp::fig10::run(&cfg)),
+            "fig11" => exp::fig11::render(&exp::fig11::run(&cfg)),
+            "fig12" => exp::fig12::render(&exp::fig12::run(&cfg)),
+            _ => unreachable!(),
+        };
+        emit(table, csv);
+    }
+    if !ran {
+        anyhow::bail!("unknown experiment {which:?} (fig7..fig12, ablation, or all)");
+    }
+    Ok(())
+}
+
+fn cmd_sim(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a)?;
+    let kernel = a.flag("kernel").unwrap_or("axpy");
+    let size = a.u64_flag("size", 1024)?;
+    let spec = job_spec(kernel, size)?;
+    let n = a.u64_flag("clusters", 8)? as usize;
+    match a.flag("routine") {
+        Some(r) => {
+            let routine = match r {
+                "baseline" => RoutineKind::Baseline,
+                "multicast" => RoutineKind::Multicast,
+                "mcast-only" => RoutineKind::McastOnly,
+                "jcu-only" => RoutineKind::JcuOnly,
+                "ideal" => RoutineKind::Ideal,
+                other => anyhow::bail!("unknown routine {other:?}"),
+            };
+            let trace = run_offload(&cfg, &spec, n, routine);
+            println!("{} {} on {n} clusters ({}):", kernel, size, routine.name());
+            println!("  total: {} cycles ({} events)", trace.total, trace.events);
+            for p in Phase::ALL {
+                if p.is_host_phase() {
+                    if let Some(d) = trace.host_duration(p) {
+                        println!("  {} {:<28} {:>8} (host)", p.letter(), p.name(), d);
+                    }
+                } else if let Some(s) = trace.stats(p) {
+                    println!(
+                        "  {} {:<28} min {:>6} avg {:>8.1} max {:>6}",
+                        p.letter(),
+                        p.name(),
+                        s.min,
+                        s.avg,
+                        s.max
+                    );
+                }
+            }
+        }
+        None => {
+            let t = run_triple(&cfg, &spec, n).runtimes(n);
+            println!("{kernel} {size} on {n} clusters:");
+            println!("  base     : {:>8} cycles", t.base);
+            println!("  ideal    : {:>8} cycles", t.ideal);
+            println!("  improved : {:>8} cycles", t.improved);
+            println!(
+                "  overhead {} / residual {} / ideal speedup {:.2} / achieved {:.2} / restored {:.0}%",
+                t.overhead(),
+                t.residual_overhead(),
+                t.ideal_speedup(),
+                t.achieved_speedup(),
+                t.restored_fraction() * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a)?;
+    let n_jobs = a.u64_flag("jobs", 64)?;
+    let seed = a.u64_flag("seed", 42)?;
+    let timing_only = a.has("timing-only");
+    let dir = artifacts_dir(a);
+    let forced_clusters = a.flag("clusters").map(|v| v.parse::<usize>()).transpose()?;
+
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            cfg,
+            timing_only,
+            ..Default::default()
+        },
+        if timing_only { None } else { Some(dir.as_path()) },
+    )?;
+
+    // A mixed trace across all six kernels at artifact-available sizes.
+    let mix: Vec<JobSpec> = vec![
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::Axpy { n: 256 },
+        JobSpec::Matmul { m: 16, n: 16, k: 16 },
+        JobSpec::Matmul { m: 32, n: 32, k: 32 },
+        JobSpec::Atax { m: 64, n: 64 },
+        JobSpec::Covariance { m: 32, n: 64 },
+        JobSpec::MonteCarlo { samples: 4096 },
+        JobSpec::MonteCarlo { samples: 16384 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+    ];
+    let t0 = std::time::Instant::now();
+    for i in 0..n_jobs {
+        let spec = mix[(i as usize) % mix.len()];
+        let mut req = JobRequest::new(i, spec);
+        req.seed = seed.wrapping_add(i);
+        if let Some(c) = forced_clusters {
+            req = req.with_clusters(c);
+        }
+        coord.submit(req)?;
+    }
+    let mut failures = 0u64;
+    for _ in 0..n_jobs {
+        let r = coord
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("coordinator died"))?;
+        if !r.verified {
+            failures += 1;
+            eprintln!("job {} ({:?}) FAILED verification", r.id, r.spec);
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = coord.shutdown();
+    println!("{}", metrics.summary());
+    println!(
+        "wall: {:.2}s ({:.1} jobs/s), sim throughput {:.0} jobs/sim-s",
+        wall.as_secs_f64(),
+        n_jobs as f64 / wall.as_secs_f64(),
+        metrics.jobs_per_sim_second()
+    );
+    anyhow::ensure!(failures == 0, "{failures} verification failures");
+    Ok(())
+}
+
+fn cmd_validate(a: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(a);
+    let rt = PjrtRuntime::new(&dir)?;
+    println!(
+        "platform {}, {} artifacts",
+        rt.platform(),
+        rt.manifest().entries.len()
+    );
+    let mut failed = 0;
+    for e in rt.manifest().entries.clone() {
+        let spec = spec_for_entry(&e.kernel, &e.params)?;
+        match run_and_verify(&rt, &spec, 7) {
+            Ok(_) => println!("  {:<24} OK", e.id),
+            Err(err) => {
+                failed += 1;
+                println!("  {:<24} FAIL: {err:#}", e.id);
+            }
+        }
+    }
+    anyhow::ensure!(failed == 0, "{failed} artifacts failed verification");
+    println!("all artifacts verified");
+    Ok(())
+}
+
+fn spec_for_entry(kernel: &str, params: &HashMap<String, u64>) -> anyhow::Result<JobSpec> {
+    let p = |k: &str| -> anyhow::Result<u64> {
+        params
+            .get(k)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing param {k}"))
+    };
+    Ok(match kernel {
+        "axpy" => JobSpec::Axpy { n: p("n")? },
+        "montecarlo" => JobSpec::MonteCarlo { samples: p("n")? },
+        "matmul" => JobSpec::Matmul {
+            m: p("m")?,
+            n: p("n")?,
+            k: p("k")?,
+        },
+        "atax" => JobSpec::Atax {
+            m: p("m")?,
+            n: p("n")?,
+        },
+        "covariance" => JobSpec::Covariance {
+            m: p("m")?,
+            n: p("n")?,
+        },
+        "bfs" => JobSpec::Bfs {
+            nodes: p("n")?,
+            levels: 4,
+        },
+        other => anyhow::bail!("unknown kernel {other:?} in manifest"),
+    })
+}
+
+fn cmd_model(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a)?;
+    let kernel = a.flag("kernel").unwrap_or("axpy");
+    let size = a.u64_flag("size", 1024)?;
+    let spec = job_spec(kernel, size)?;
+    let model = OffloadModel::new(&cfg);
+    let planner = Planner::new(&cfg);
+    println!(
+        "{kernel} {size}: host estimate {} cycles",
+        planner.host_estimate(&spec)
+    );
+    println!("{:>8}  {:>10}  {:>10}  {:>8}", "clusters", "model", "sim", "err%");
+    for n in planner.candidates() {
+        let est = model.estimate(&spec, n);
+        let sim = run_offload(&cfg, &spec, n, RoutineKind::Multicast).total;
+        println!(
+            "{n:>8}  {est:>10}  {sim:>10}  {:>8.1}",
+            (est as f64 - sim as f64).abs() / sim as f64 * 100.0
+        );
+    }
+    let plan = planner.plan(&spec);
+    println!(
+        "planner decision: {:?} (estimate {})",
+        plan.placement, plan.estimate
+    );
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! On-chip memories: per-cluster TCDM and the system-level SPMs (§3.1).
+
+pub mod spm;
+pub mod tcdm;
+
+pub use spm::Spm;
+pub use tcdm::Tcdm;

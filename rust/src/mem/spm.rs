@@ -1,0 +1,109 @@
+//! System-level Scratch-Pad Memories (§3.1): the 1 MiB wide SPM (512-bit
+//! port, operand staging for jobs per the paper's §4.1 assumptions) and
+//! the 512 KiB narrow SPM. Functional storage; the wide port's timing
+//! contention is the `PsPort` of the DES (§5.5.E: single read port).
+
+#[derive(Debug, Clone)]
+pub struct Spm {
+    data: Vec<u8>,
+    reads: u64,
+    writes: u64,
+}
+
+impl Spm {
+    pub fn new(bytes: u64) -> Self {
+        Self {
+            data: vec![0; bytes as usize],
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    /// The wide SPM of the paper's configuration (1 MiB).
+    pub fn occamy_wide() -> Self {
+        Self::new(1024 * 1024)
+    }
+
+    /// The narrow SPM (512 KiB).
+    pub fn occamy_narrow() -> Self {
+        Self::new(512 * 1024)
+    }
+
+    pub fn len(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn write(&mut self, offset: u64, bytes: &[u8]) {
+        let o = offset as usize;
+        assert!(o + bytes.len() <= self.data.len(), "SPM write out of bounds");
+        self.data[o..o + bytes.len()].copy_from_slice(bytes);
+        self.writes += 1;
+    }
+
+    pub fn read(&mut self, offset: u64, len: u64) -> &[u8] {
+        let o = offset as usize;
+        assert!(o + len as usize <= self.data.len(), "SPM read out of bounds");
+        self.reads += 1;
+        &self.data[o..o + len as usize]
+    }
+
+    /// Store an f64 slice (the operand layout used by the jobs).
+    pub fn write_f64(&mut self, offset: u64, values: &[f64]) {
+        let mut bytes = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(offset, &bytes);
+    }
+
+    /// Load an f64 slice.
+    pub fn read_f64(&mut self, offset: u64, count: usize) -> Vec<f64> {
+        let raw = self.read(offset, count as u64 * 8).to_vec();
+        raw.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn access_counts(&self) -> (u64, u64) {
+        (self.reads, self.writes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occamy_sizes() {
+        assert_eq!(Spm::occamy_wide().len(), 1024 * 1024);
+        assert_eq!(Spm::occamy_narrow().len(), 512 * 1024);
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        let mut s = Spm::occamy_wide();
+        let v = vec![1.5, -2.25, 3.0, f64::MIN_POSITIVE];
+        s.write_f64(0x40, &v);
+        assert_eq!(s.read_f64(0x40, 4), v);
+    }
+
+    #[test]
+    fn access_counting() {
+        let mut s = Spm::new(1024);
+        s.write(0, &[1, 2, 3]);
+        s.read(0, 2);
+        s.read(1, 2);
+        assert_eq!(s.access_counts(), (2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_read_panics() {
+        let mut s = Spm::new(16);
+        s.read(10, 8);
+    }
+}

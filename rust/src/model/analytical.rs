@@ -1,0 +1,268 @@
+//! Analytical offload-runtime model (§5.6).
+//!
+//! The paper models the runtime of a job offloaded with the *multicast*
+//! routines — whose per-phase runtimes are (near-)identical across
+//! clusters — as the sum over phases of the per-phase maxima (Eq. 4):
+//!
+//! ```text
+//! t̂(n) = Σ_{p ∈ [A, I]} max_{i ∈ [0, n)} t_p(n, N, i)
+//! ```
+//!
+//! Each phase model below mirrors §5.5's closed forms: constants for
+//! A/B/C/D/H/I, Eq. 1 for phase E (single wide-SPM port ⇒ the max sees
+//! the combined transfer length), the kernel's compute function for phase
+//! F (Eq. 2 for AXPY), and Eq. 3 for phase G (the phase-E completion skew
+//! makes writebacks effectively contention-free). The same workload
+//! descriptors drive the DES, so model-vs-simulation error (Fig. 12)
+//! measures exactly what the paper's validation measures: how much the
+//! closed forms miss of the emergent contention/overlap effects.
+
+use crate::config::Config;
+use crate::dma::DmaTransfer;
+use crate::kernels::JobSpec;
+use crate::sim::Phase;
+
+/// Cycles the DM core spends observing a completed DMA (matches the
+/// executor's constant).
+const DMA_POLL: u64 = 2;
+/// CVA6 store-issue cost (matches the executor).
+const HOST_STORE_ISSUE: u64 = 8;
+/// Per-extra-multicast-transaction cost (matches the executor).
+const HOST_EXTRA_TXN: u64 = 4;
+
+/// Per-phase runtime estimates (cycles), composable per Eq. 4.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseEstimates {
+    phases: [(Phase, u64); 9],
+}
+
+impl PhaseEstimates {
+    pub fn get(&self, p: Phase) -> u64 {
+        self.phases
+            .iter()
+            .find(|(q, _)| *q == p)
+            .map(|(_, v)| *v)
+            .expect("all phases present")
+    }
+
+    /// Eq. 4: total = sum of per-phase maxima.
+    pub fn total(&self) -> u64 {
+        self.phases.iter().map(|(_, v)| v).sum()
+    }
+
+    /// The constant (problem-size-independent) part: phases A-D, H, I.
+    pub fn offload_constant(&self) -> u64 {
+        self.phases
+            .iter()
+            .filter(|(p, _)| {
+                !matches!(
+                    p,
+                    Phase::RetrieveOperands | Phase::Execute | Phase::Writeback
+                )
+            })
+            .map(|(_, v)| v)
+            .sum()
+    }
+}
+
+/// The analytical model of one job offloaded with the multicast routines.
+pub struct OffloadModel<'a> {
+    cfg: &'a Config,
+}
+
+impl<'a> OffloadModel<'a> {
+    pub fn new(cfg: &'a Config) -> Self {
+        Self { cfg }
+    }
+
+    /// Per-phase estimates for `spec` offloaded to `n` clusters.
+    pub fn phases(&self, spec: &JobSpec, n: usize) -> PhaseEstimates {
+        let t = &self.cfg.timing;
+        let bus = self.cfg.soc.wide_bus_bytes;
+        let txns = n.count_ones() as u64; // masked writes per subcube
+
+        // A) Send job information: multicast write + CSR toggles.
+        let a = t.host_send_info + t.host_mcast_csr + (txns - 1) * HOST_EXTRA_TXN;
+        // B) Wakeup: one (set of) masked MCIP write(s), §5.5.B.
+        let b = HOST_STORE_ISSUE + (txns - 1) * HOST_EXTRA_TXN + t.wakeup_hw() + t.mcip_clear;
+        // C) Retrieve job pointer: local TCDM access (§5.5.C multicast).
+        let c = t.dispatch_load_ptr + t.tcdm_local_load;
+        // D) Eliminated by the multicast job-info write (§4.2).
+        let d = 0;
+
+        // E) Eq. 1 generalized: single wide-SPM port ⇒ the slowest cluster
+        // sees the combined length of ALL clusters' transfers.
+        let mut total_beats = 0u64;
+        let mut max_transfers = 0u64;
+        for i in 0..n {
+            let transfers = spec.operand_transfers(n, i);
+            max_transfers = max_transfers.max(transfers.len() as u64);
+            total_beats += transfers
+                .iter()
+                .map(|&bytes| {
+                    DmaTransfer {
+                        bytes,
+                        into_tcdm: true,
+                    }
+                    .beats(bus)
+                })
+                .sum::<u64>();
+        }
+        let e = if max_transfers == 0 {
+            0
+        } else {
+            t.dma_setup_phase_entry
+                + max_transfers * t.dma_setup_per_transfer
+                + t.dma_roundtrip
+                + total_beats
+                + DMA_POLL
+        };
+
+        // F) Kernel compute model (Eq. 2 for AXPY), plus the HW barrier
+        // handshakes on both sides.
+        let f = (0..n)
+            .map(|i| spec.compute_cycles(n, i, t))
+            .max()
+            .unwrap()
+            + t.cluster_barrier;
+
+        // G) Eq. 3: phase-E skew makes the writeback contention-free; the
+        // per-cluster runtime is a single transfer.
+        let max_wb = (0..n).map(|i| spec.writeback_bytes(n, i)).max().unwrap();
+        let g = if max_wb == 0 {
+            0
+        } else {
+            t.cluster_barrier
+                + t.dma_setup_per_transfer
+                + t.dma_roundtrip
+                + DmaTransfer {
+                    bytes: max_wb,
+                    into_tcdm: false,
+                }
+                .beats(bus)
+                + DMA_POLL
+        };
+
+        // H) JCU notification (§4.3): constant and predictable.
+        let h = t.jcu_notify_instr + t.cluster_to_clint_oneway() + t.jcu_fire + t.host_wake;
+        // I) Resume on host.
+        let i = t.host_resume;
+
+        PhaseEstimates {
+            phases: [
+                (Phase::SendInfo, a),
+                (Phase::Wakeup, b),
+                (Phase::RetrievePtr, c),
+                (Phase::RetrieveArgs, d),
+                (Phase::RetrieveOperands, e),
+                (Phase::Execute, f),
+                (Phase::Writeback, g),
+                (Phase::Notify, h),
+                (Phase::Resume, i),
+            ],
+        }
+    }
+
+    /// Eq. 4 total estimate.
+    pub fn estimate(&self, spec: &JobSpec, n: usize) -> u64 {
+        self.phases(spec, n).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_cfg() -> Config {
+        Config::default()
+    }
+
+    #[test]
+    fn axpy_model_matches_eq5_shape() {
+        // Eq. 5: t̂(n) = const + N/4 + 2.47*N/(8n). Verify the model's
+        // N- and n-dependence matches those coefficients exactly.
+        let cfg = model_cfg();
+        let m = OffloadModel::new(&cfg);
+        let t = |n: usize, nn: u64| m.estimate(&JobSpec::Axpy { n: nn }, n) as f64;
+        // N-dependence at fixed n=1: d t / d N = 1/4 (port) + 2.47/8.
+        let slope = (t(1, 4096) - t(1, 2048)) / 2048.0;
+        let want = 0.25 + 2.47 / 8.0;
+        assert!(
+            (slope - want).abs() < 0.01,
+            "slope {slope} vs eq5 {want}"
+        );
+        // n-dependence: the parallel part scales as 1/n.
+        let par_16 = t(16, 4096) - t(16, 0_u64.max(4096) / 1); // placeholder
+        let _ = par_16;
+        let diff_1 = t(1, 4096) - (0.25 * 4096.0); // strip port term
+        let diff_32 = t(32, 4096) - (0.25 * 4096.0);
+        // parallel fraction shrinks by ~(1 - 1/32) of 2.47*N/8
+        let shrink = diff_1 - diff_32;
+        let want_shrink = 2.47 * 4096.0 / 8.0 * (1.0 - 1.0 / 32.0);
+        assert!(
+            (shrink - want_shrink).abs() / want_shrink < 0.05,
+            "shrink {shrink} vs {want_shrink}"
+        );
+    }
+
+    #[test]
+    fn axpy_model_constant_near_eq5() {
+        // Eq. 5's constant is 400 on the paper's testbed; ours composes
+        // to the same order (within ~20%, see EXPERIMENTS.md).
+        let cfg = model_cfg();
+        let m = OffloadModel::new(&cfg);
+        let n = 1024u64;
+        let est = m.estimate(&JobSpec::Axpy { n }, 8) as f64;
+        let variable = n as f64 / 4.0 + 2.47 * n as f64 / (8.0 * 8.0);
+        let konst = est - variable;
+        assert!(
+            (320.0..480.0).contains(&konst),
+            "composed constant {konst} out of range"
+        );
+    }
+
+    #[test]
+    fn atax_model_has_eq6_linear_term() {
+        // Eq. 6's n-linear term: N*(1+M)/8 beats per additional cluster.
+        let cfg = model_cfg();
+        let m = OffloadModel::new(&cfg);
+        let (mm, nn) = (64u64, 64u64);
+        let spec = JobSpec::Atax { m: mm, n: nn };
+        let t16 = m.estimate(&spec, 16) as i64;
+        let t32 = m.estimate(&spec, 32) as i64;
+        let per_cluster_beats = (nn * (1 + mm) / 8) as i64;
+        let grew = t32 - t16;
+        let want = 16 * per_cluster_beats; // 16 extra clusters
+        assert!(
+            (grew - want).abs() as f64 / (want as f64) < 0.05,
+            "grew {grew} vs {want}"
+        );
+    }
+
+    #[test]
+    fn montecarlo_has_no_transfer_phases() {
+        let cfg = model_cfg();
+        let m = OffloadModel::new(&cfg);
+        let p = m.phases(&JobSpec::MonteCarlo { samples: 4096 }, 8);
+        assert_eq!(p.get(Phase::RetrieveOperands), 0);
+        assert!(p.get(Phase::Writeback) > 0); // partial counts return
+        assert!(p.get(Phase::Execute) > 0);
+    }
+
+    #[test]
+    fn offload_constant_excludes_efg() {
+        let cfg = model_cfg();
+        let m = OffloadModel::new(&cfg);
+        let p = m.phases(&JobSpec::Axpy { n: 1024 }, 4);
+        let k = p.offload_constant();
+        assert_eq!(
+            k + p.get(Phase::RetrieveOperands)
+                + p.get(Phase::Execute)
+                + p.get(Phase::Writeback),
+            p.total()
+        );
+        // The constant is independent of the problem size.
+        let p2 = m.phases(&JobSpec::Axpy { n: 4096 }, 4);
+        assert_eq!(k, p2.offload_constant());
+    }
+}

@@ -1,0 +1,8 @@
+//! Analytical offload-runtime model (§5.6) and its validation against the
+//! cycle-level simulation (Fig. 12).
+
+pub mod analytical;
+pub mod validate;
+
+pub use analytical::{OffloadModel, PhaseEstimates};
+pub use validate::{max_rel_error, validate_grid, validate_point, ValidationPoint};

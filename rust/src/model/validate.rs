@@ -1,0 +1,144 @@
+//! Model validation against the cycle-level simulation (§5.6, Fig. 12).
+//!
+//! The paper validates its analytical models on a variety of problem
+//! sizes and cluster counts, reporting relative error |t − t̂| / t
+//! consistently below 15 %. Here `t` is the DES runtime of the multicast
+//! routine and `t̂` the Eq.-4 composition from `analytical`.
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::{run_offload, RoutineKind};
+
+use super::analytical::OffloadModel;
+
+/// One validation point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidationPoint {
+    pub spec: JobSpec,
+    pub n_clusters: usize,
+    /// Simulated runtime (cycles).
+    pub simulated: u64,
+    /// Model estimate (cycles).
+    pub estimated: u64,
+}
+
+impl ValidationPoint {
+    /// Relative error |t − t̂| / t.
+    pub fn rel_error(&self) -> f64 {
+        (self.simulated as f64 - self.estimated as f64).abs() / self.simulated as f64
+    }
+}
+
+/// Validate the model on one configuration.
+pub fn validate_point(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> ValidationPoint {
+    let simulated = run_offload(cfg, spec, n_clusters, RoutineKind::Multicast).total;
+    let estimated = OffloadModel::new(cfg).estimate(spec, n_clusters);
+    ValidationPoint {
+        spec: *spec,
+        n_clusters,
+        simulated,
+        estimated,
+    }
+}
+
+/// Validate over a grid of (spec, n) points; returns all points.
+pub fn validate_grid(
+    cfg: &Config,
+    specs: &[JobSpec],
+    cluster_counts: &[usize],
+) -> Vec<ValidationPoint> {
+    let mut out = Vec::new();
+    for spec in specs {
+        for &n in cluster_counts {
+            out.push(validate_point(cfg, spec, n));
+        }
+    }
+    out
+}
+
+/// Maximum relative error over a set of points.
+pub fn max_rel_error(points: &[ValidationPoint]) -> f64 {
+    points.iter().map(|p| p.rel_error()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_error_below_15_percent() {
+        // The paper's headline validation claim (Fig. 12); like the
+        // paper, the <15 % envelope holds "for small problem sizes"
+        // (§6) — beyond N~4096 the phase-E/G port overlap the model
+        // deliberately omits (§5.5.G) grows past it.
+        let cfg = Config::default();
+        let specs: Vec<JobSpec> = [64u64, 128, 256, 512, 1024, 2048]
+            .iter()
+            .map(|&n| JobSpec::Axpy { n })
+            .collect();
+        let pts = validate_grid(&cfg, &specs, &[1, 2, 4, 8, 16, 32]);
+        for p in &pts {
+            assert!(
+                p.rel_error() < 0.15,
+                "{:?} n={} sim={} est={} err={:.3}",
+                p.spec,
+                p.n_clusters,
+                p.simulated,
+                p.estimated,
+                p.rel_error()
+            );
+        }
+    }
+
+    #[test]
+    fn atax_error_below_15_percent() {
+        let cfg = Config::default();
+        let specs: Vec<JobSpec> = [16u64, 32, 64, 128, 256]
+            .iter()
+            .map(|&m| JobSpec::Atax { m, n: m })
+            .collect();
+        let pts = validate_grid(&cfg, &specs, &[1, 2, 4, 8, 16, 32]);
+        assert!(
+            max_rel_error(&pts) < 0.15,
+            "max err {:.3}",
+            max_rel_error(&pts)
+        );
+    }
+
+    #[test]
+    fn error_grows_gracefully_at_large_sizes() {
+        // Document the envelope edge: at N=4096 the model's missing E/G
+        // overlap term pushes the error slightly past 15 % on some
+        // configurations, but never past 25 %.
+        let cfg = Config::default();
+        let pts = validate_grid(
+            &cfg,
+            &[JobSpec::Axpy { n: 4096 }, JobSpec::Axpy { n: 8192 }],
+            &[1, 2, 4, 8, 16, 32],
+        );
+        assert!(max_rel_error(&pts) < 0.25, "max err {:.3}", max_rel_error(&pts));
+    }
+
+    #[test]
+    fn all_kernels_error_below_15_percent() {
+        let cfg = Config::default();
+        let specs = [
+            JobSpec::MonteCarlo { samples: 4096 },
+            JobSpec::Matmul { m: 32, n: 32, k: 32 },
+            JobSpec::Covariance { m: 32, n: 64 },
+            JobSpec::Bfs { nodes: 64, levels: 4 },
+        ];
+        let pts = validate_grid(&cfg, &specs, &[1, 4, 16, 32]);
+        for p in &pts {
+            assert!(
+                p.rel_error() < 0.15,
+                "{:?} n={} sim={} est={} err={:.3}",
+                p.spec,
+                p.n_clusters,
+                p.simulated,
+                p.estimated,
+                p.rel_error()
+            );
+        }
+    }
+}

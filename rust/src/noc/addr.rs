@@ -1,0 +1,214 @@
+//! Multicast address encoding (§4.2, Fig. 5).
+//!
+//! A multicast write carries one representative address plus a bit mask:
+//! mask bits set to 1 mark address bits that are *don't care*, so a mask
+//! with n bits set encodes 2^n destination addresses. The same
+//! representation encodes the XBAR master-port address maps (any
+//! power-of-two-sized, size-aligned interval), and matching reduces to the
+//! paper's single-line condition:
+//!
+//! ```text
+//! match = &((req.mask | am.mask) | ~(req.addr ^ am.addr));
+//! ```
+
+
+/// An address with a don't-care mask: encodes the set
+/// `{ a : a & !mask == addr & !mask }`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MaskedAddr {
+    pub addr: u64,
+    pub mask: u64,
+}
+
+impl MaskedAddr {
+    /// A unicast (exact) address.
+    pub fn unicast(addr: u64) -> Self {
+        Self { addr, mask: 0 }
+    }
+
+    /// The address map of an interval `[base, base + size)`.
+    /// `size` must be a power of two and `base` size-aligned (the Occamy
+    /// conditions, §4.2).
+    pub fn interval(base: u64, size: u64) -> Self {
+        assert!(size.is_power_of_two(), "interval size must be 2^k: {size:#x}");
+        assert_eq!(base % size, 0, "interval base must be size-aligned");
+        Self {
+            addr: base,
+            mask: size - 1,
+        }
+    }
+
+    /// Number of concrete addresses encoded: 2^popcount(mask).
+    pub fn cardinality(&self) -> u128 {
+        1u128 << self.mask.count_ones()
+    }
+
+    /// The paper's match condition: true iff the two masked-address sets
+    /// intersect. For a request vs. an address map this decides whether
+    /// the request (partially) targets that master port.
+    pub fn matches(&self, other: &MaskedAddr) -> bool {
+        // match = &((req.mask | am.mask) | ~(req.addr ^ am.addr))
+        ((self.mask | other.mask) | !(self.addr ^ other.addr)) == u64::MAX
+    }
+
+    /// True iff concrete address `a` is a member of this set.
+    pub fn contains(&self, a: u64) -> bool {
+        (a & !self.mask) == (self.addr & !self.mask)
+    }
+
+    /// Enumerate all concrete addresses (ascending). Only valid for small
+    /// masks; panics above 2^16 members to catch runaway enumerations.
+    pub fn expand(&self) -> Vec<u64> {
+        let bits: Vec<u32> = (0..64).filter(|b| self.mask >> b & 1 == 1).collect();
+        assert!(bits.len() <= 16, "refusing to expand 2^{} addresses", bits.len());
+        let base = self.addr & !self.mask;
+        let mut out = Vec::with_capacity(1 << bits.len());
+        for combo in 0u64..(1 << bits.len()) {
+            let mut a = base;
+            for (i, b) in bits.iter().enumerate() {
+                if combo >> i & 1 == 1 {
+                    a |= 1 << b;
+                }
+            }
+            out.push(a);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Multicast encoding for a set of *cluster indices* given the Occamy
+    /// cluster memory layout (`base + idx * stride`, stride a power of
+    /// two): returns `Some` iff the index set is exactly expressible as a
+    /// masked address (i.e. it is an affine subcube of the index bits).
+    /// `offset` is the common offset within each cluster's address space.
+    pub fn for_clusters(
+        base: u64,
+        stride: u64,
+        offset: u64,
+        clusters: &[usize],
+    ) -> Option<Self> {
+        assert!(stride.is_power_of_two());
+        assert!(offset < stride);
+        if clusters.is_empty() {
+            return None;
+        }
+        let shift = stride.trailing_zeros();
+        // The subcube test: OR of indices vs AND of indices gives the
+        // candidate don't-care bits; the set is a subcube iff its size is
+        // 2^popcount(diff) and every member agrees outside diff.
+        let and = clusters.iter().fold(usize::MAX, |a, &c| a & c);
+        let or = clusters.iter().fold(0usize, |a, &c| a | c);
+        let diff = and ^ or;
+        let mut uniq: Vec<usize> = clusters.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        if uniq.len() != 1usize << diff.count_ones() {
+            return None;
+        }
+        for &c in &uniq {
+            if c & !diff != and & !diff {
+                return None;
+            }
+        }
+        Some(Self {
+            addr: base + (uniq[0] as u64) * stride + offset,
+            mask: (diff as u64) << shift,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig5_example() {
+        // Fig. 5: bits [0,17] in-cluster offset, [18,19] cluster index,
+        // [20,22] quadrant index. Addressing cluster 1 of quadrant 2 with
+        // bits 19 and 21 masked encodes clusters {1,3} of quadrants {0,2}.
+        let stride = 0x40000u64;
+        let addr = 2 << 20 | 1 << 18; // quadrant 2, cluster 1, offset 0
+        let m = MaskedAddr {
+            addr,
+            mask: 1 << 19 | 1 << 21,
+        };
+        assert_eq!(m.cardinality(), 4);
+        let got = m.expand();
+        // Global cluster index = quadrant * 4 + cluster; expected clusters
+        // 1 and 3 in quadrants 0 and 2 -> indices {1, 3, 9, 11}.
+        let want: Vec<u64> = [1u64, 3, 9, 11].iter().map(|c| c * stride).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn unicast_matches_only_its_interval() {
+        let am0 = MaskedAddr::interval(0x0, 0x40000);
+        let am1 = MaskedAddr::interval(0x40000, 0x40000);
+        let req = MaskedAddr::unicast(0x40008);
+        assert!(!req.matches(&am0));
+        assert!(req.matches(&am1));
+    }
+
+    #[test]
+    fn multicast_matches_multiple_intervals() {
+        // Mask bit 18 -> clusters 0 and 1.
+        let req = MaskedAddr {
+            addr: 0x100,
+            mask: 1 << 18,
+        };
+        let am0 = MaskedAddr::interval(0x0, 0x40000);
+        let am1 = MaskedAddr::interval(0x40000, 0x40000);
+        let am2 = MaskedAddr::interval(0x80000, 0x40000);
+        assert!(req.matches(&am0));
+        assert!(req.matches(&am1));
+        assert!(!req.matches(&am2));
+    }
+
+    #[test]
+    fn match_equals_set_intersection_on_samples() {
+        // The single-line match rule must agree with concrete membership.
+        let a = MaskedAddr {
+            addr: 0b1010_0000,
+            mask: 0b0100_1111,
+        };
+        let b = MaskedAddr::interval(0b1110_0000, 0x10);
+        let inter_a: Vec<u64> = a.expand().into_iter().filter(|x| b.contains(*x)).collect();
+        assert_eq!(a.matches(&b), !inter_a.is_empty());
+    }
+
+    #[test]
+    fn for_clusters_full_broadcast() {
+        let all: Vec<usize> = (0..32).collect();
+        let m = MaskedAddr::for_clusters(0, 0x40000, 0x20, &all).unwrap();
+        assert_eq!(m.cardinality(), 32);
+        assert_eq!(m.mask, 0b11111 << 18);
+        let got = m.expand();
+        assert_eq!(got.len(), 32);
+        assert_eq!(got[0], 0x20);
+        assert_eq!(got[31], 31 * 0x40000 + 0x20);
+    }
+
+    #[test]
+    fn for_clusters_prefix_power_of_two() {
+        // First 8 clusters: indices 0..8 form the subcube mask 0b111.
+        let m = MaskedAddr::for_clusters(0, 0x40000, 0, &(0..8).collect::<Vec<_>>())
+            .unwrap();
+        assert_eq!(m.mask, 0b111 << 18);
+    }
+
+    #[test]
+    fn for_clusters_non_subcube_rejected() {
+        // {0, 1, 2} is not a subcube (size 3).
+        assert!(MaskedAddr::for_clusters(0, 0x40000, 0, &[0, 1, 2]).is_none());
+        // {0, 3} is not a subcube either (disagree in 2 bits, size 2).
+        assert!(MaskedAddr::for_clusters(0, 0x40000, 0, &[0, 3]).is_none());
+        // but {1, 3} is (bit 1 don't care, bit 0 fixed at 1).
+        assert!(MaskedAddr::for_clusters(0, 0x40000, 0, &[1, 3]).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "2^k")]
+    fn interval_validates_size() {
+        MaskedAddr::interval(0, 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! Network-on-Chip models: the multicast address encoding (§4.2, Fig. 5),
+//! the extended AXI XBAR (Fig. 4) and the assembled two-level tree of the
+//! Occamy narrow interconnect (Fig. 2).
+
+pub mod addr;
+pub mod topology;
+pub mod xbar;
+
+pub use addr::MaskedAddr;
+pub use topology::{Endpoint, NarrowNoc};
+pub use xbar::{Route, Xbar};

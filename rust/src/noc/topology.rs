@@ -1,0 +1,258 @@
+//! The two-level XBAR tree of Occamy's narrow interconnect (§3.1, Fig. 2)
+//! and its end-to-end routing/latency functions.
+//!
+//! Every four clusters hang off a quadrant-level XBAR; the eight quadrant
+//! XBARs, the CVA6 host, the SPMs and the peripherals (CLINT) hang off the
+//! top-level XBAR. [`NarrowNoc::route_clusters`] performs the full
+//! two-level multicast decode used by the optimized offload routines, and
+//! the latency methods provide the hop-composed delays the DES uses.
+
+use crate::config::{Config, SocConfig};
+
+use super::addr::MaskedAddr;
+use super::xbar::{Route, Xbar};
+
+/// Endpoints reachable through the narrow NoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    Cluster(usize),
+    Quadrant(usize),
+    Host,
+    Clint,
+    NarrowSpm,
+}
+
+/// The assembled two-level narrow interconnect.
+#[derive(Debug, Clone)]
+pub struct NarrowNoc {
+    /// Top-level XBAR: routes to quadrants / peripherals.
+    top: Xbar<Endpoint>,
+    /// One XBAR per quadrant, routing to its clusters.
+    quads: Vec<Xbar<Endpoint>>,
+    soc: SocConfig,
+    /// Address region of the CLINT (outside the cluster window).
+    clint_base: u64,
+    /// Address region of the narrow SPM.
+    spm_base: u64,
+}
+
+impl NarrowNoc {
+    /// CLINT and SPM live above the cluster address window.
+    pub fn new(cfg: &Config, multicast: bool) -> Self {
+        let soc = cfg.soc.clone();
+        let cluster_window = soc.cluster_stride * soc.n_clusters() as u64;
+        let clint_base = (2 * cluster_window).next_power_of_two();
+        // The narrow SPM window must be aligned to its own (power-of-two)
+        // size for the masked-interval address-map encoding.
+        let spm_size = soc.narrow_spm_bytes.next_power_of_two();
+        let spm_base = (clint_base + soc.cluster_stride).next_multiple_of(spm_size);
+
+        let mut top = Xbar::new(multicast);
+        let mut quads = Vec::with_capacity(soc.n_quadrants);
+        for q in 0..soc.n_quadrants {
+            let qsize = soc.cluster_stride * soc.clusters_per_quadrant as u64;
+            top.add_port(
+                MaskedAddr::interval(soc.cluster_base + q as u64 * qsize, qsize),
+                Endpoint::Quadrant(q),
+            );
+            let mut qx = Xbar::new(multicast);
+            for c in 0..soc.clusters_per_quadrant {
+                let idx = q * soc.clusters_per_quadrant + c;
+                qx.add_port(
+                    MaskedAddr::interval(soc.cluster_addr(idx), soc.cluster_stride),
+                    Endpoint::Cluster(idx),
+                );
+            }
+            quads.push(qx);
+        }
+        top.add_port(
+            MaskedAddr::interval(clint_base, soc.cluster_stride),
+            Endpoint::Clint,
+        );
+        top.add_port(
+            MaskedAddr::interval(spm_base, soc.narrow_spm_bytes.next_power_of_two()),
+            Endpoint::NarrowSpm,
+        );
+        Self {
+            top,
+            quads,
+            soc,
+            clint_base,
+            spm_base,
+        }
+    }
+
+    pub fn clint_base(&self) -> u64 {
+        self.clint_base
+    }
+
+    pub fn spm_base(&self) -> u64 {
+        self.spm_base
+    }
+
+    /// Route a (possibly multicast) request through both XBAR levels to
+    /// the final set of cluster indices. Non-cluster endpoints are
+    /// returned separately.
+    pub fn route(&self, req: MaskedAddr) -> Result<(Vec<usize>, Vec<Endpoint>), String> {
+        let mut clusters = Vec::new();
+        let mut others = Vec::new();
+        match self.top.route(req) {
+            Route::DecodeError => return Err(format!("DECERR at top level: {req:?}")),
+            Route::Unsupported => {
+                return Err("masked request on baseline XBAR".to_string())
+            }
+            Route::To(ports) => {
+                for p in ports {
+                    match *self.top.endpoint(p) {
+                        Endpoint::Quadrant(q) => match self.quads[q].route(req) {
+                            Route::To(cports) => {
+                                for cp in cports {
+                                    if let Endpoint::Cluster(c) = *self.quads[q].endpoint(cp)
+                                    {
+                                        clusters.push(c);
+                                    }
+                                }
+                            }
+                            Route::DecodeError => {
+                                return Err(format!("DECERR in quadrant {q}"))
+                            }
+                            Route::Unsupported => {
+                                return Err("masked request on baseline quadrant XBAR"
+                                    .to_string())
+                            }
+                        },
+                        e => others.push(e),
+                    }
+                }
+            }
+        }
+        clusters.sort_unstable();
+        Ok((clusters, others))
+    }
+
+    /// Convenience: the set of clusters a multicast write to
+    /// `offset`-within-every-cluster reaches, for a masked cluster set.
+    pub fn route_clusters(&self, req: MaskedAddr) -> Result<Vec<usize>, String> {
+        let (clusters, others) = self.route(req)?;
+        if !others.is_empty() {
+            return Err(format!("request leaked outside clusters: {others:?}"));
+        }
+        Ok(clusters)
+    }
+
+    /// Encode a multicast write to the first `n` clusters at in-cluster
+    /// `offset`. Returns per-subcube masked addresses: a non-power-of-two
+    /// `n` needs popcount(n) transactions (each subcube one masked write).
+    pub fn encode_first_n(&self, n: usize, offset: u64) -> Vec<MaskedAddr> {
+        assert!(n >= 1 && n <= self.soc.n_clusters());
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        let mut rem = n;
+        // Greedy decomposition of [0, n) into aligned power-of-two blocks.
+        while rem > 0 {
+            let block = 1usize << (usize::BITS - 1 - rem.leading_zeros());
+            let idxs: Vec<usize> = (start..start + block).collect();
+            out.push(
+                MaskedAddr::for_clusters(
+                    self.soc.cluster_base,
+                    self.soc.cluster_stride,
+                    offset,
+                    &idxs,
+                )
+                .expect("aligned power-of-two range is a subcube"),
+            );
+            start += block;
+            rem -= block;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noc(multicast: bool) -> NarrowNoc {
+        NarrowNoc::new(&Config::default(), multicast)
+    }
+
+    #[test]
+    fn unicast_reaches_exactly_one_cluster() {
+        let n = noc(false);
+        for c in [0usize, 1, 7, 31] {
+            let req = MaskedAddr::unicast(c as u64 * 0x40000 + 0x10);
+            assert_eq!(n.route_clusters(req).unwrap(), vec![c]);
+        }
+    }
+
+    #[test]
+    fn broadcast_all_32_clusters() {
+        let n = noc(true);
+        let req = MaskedAddr {
+            addr: 0x20,
+            mask: 0b11111 << 18,
+        };
+        assert_eq!(n.route_clusters(req).unwrap(), (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn paper_fig5_routes_to_clusters_1_3_9_11() {
+        let n = noc(true);
+        let req = MaskedAddr {
+            addr: (2 << 20) | (1 << 18),
+            mask: (1 << 19) | (1 << 21),
+        };
+        assert_eq!(n.route_clusters(req).unwrap(), vec![1, 3, 9, 11]);
+    }
+
+    #[test]
+    fn masked_rejected_without_extension() {
+        let n = noc(false);
+        let req = MaskedAddr {
+            addr: 0x0,
+            mask: 1 << 18,
+        };
+        assert!(n.route_clusters(req).is_err());
+    }
+
+    #[test]
+    fn clint_is_reachable_and_disjoint_from_clusters() {
+        let n = noc(true);
+        let (clusters, others) = n.route(MaskedAddr::unicast(n.clint_base())).unwrap();
+        assert!(clusters.is_empty());
+        assert_eq!(others, vec![Endpoint::Clint]);
+        let (c2, o2) = n.route(MaskedAddr::unicast(n.spm_base())).unwrap();
+        assert!(c2.is_empty());
+        assert_eq!(o2, vec![Endpoint::NarrowSpm]);
+    }
+
+    #[test]
+    fn encode_first_n_power_of_two_is_single_transaction() {
+        let n = noc(true);
+        for k in [1usize, 2, 4, 8, 16, 32] {
+            let msgs = n.encode_first_n(k, 0x8);
+            assert_eq!(msgs.len(), 1, "k={k}");
+            let mut all = Vec::new();
+            for m in &msgs {
+                all.extend(n.route_clusters(*m).unwrap());
+            }
+            all.sort_unstable();
+            assert_eq!(all, (0..k).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn encode_first_n_general() {
+        let n = noc(true);
+        for k in 1..=32usize {
+            let msgs = n.encode_first_n(k, 0x8);
+            assert_eq!(msgs.len() as u32, k.count_ones(), "k={k}");
+            let mut all = Vec::new();
+            for m in &msgs {
+                all.extend(n.route_clusters(*m).unwrap());
+            }
+            all.sort_unstable();
+            assert_eq!(all, (0..k).collect::<Vec<_>>(), "k={k}");
+        }
+    }
+}

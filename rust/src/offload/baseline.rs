@@ -1,0 +1,104 @@
+//! Baseline offload routine details (§4.1).
+//!
+//! The pieces specific to the *unoptimized* implementation: the
+//! sequential IPI schedule CVA6 issues in phase B, and the
+//! central-counter software barrier of phase H.
+
+use crate::sim::Time;
+
+/// Phase-B IPI issue schedule: one store per target cluster, highest
+//  index first so cluster 0 — which hosts the barrier counter — wakes
+/// last and arrives at the barrier last, overlapping the remote clusters'
+/// longer counter-increment latencies with the wakeup offsets (§5.5.H).
+pub fn ipi_schedule(
+    n_clusters: usize,
+    start: Time,
+    first_issue: u64,
+    gap: u64,
+) -> Vec<(usize, Time)> {
+    (0..n_clusters)
+        .rev()
+        .enumerate()
+        .map(|(k, c)| (c, start + first_issue + k as u64 * gap))
+        .collect()
+}
+
+/// Central-counter software barrier (phase H): participants atomically
+/// increment a counter in cluster 0's TCDM; the participant that observes
+/// the full count notifies CVA6. This is the *functional* model (used by
+/// the coordinator); the cycle-level serialization happens in the
+/// executor's AMO FIFO.
+#[derive(Debug, Clone)]
+pub struct CentralCounterBarrier {
+    count: u32,
+    expected: u32,
+}
+
+impl CentralCounterBarrier {
+    pub fn new(expected: u32) -> Self {
+        assert!(expected >= 1);
+        Self { count: 0, expected }
+    }
+
+    /// Atomic increment; returns the post-increment value. The caller
+    /// that sees `== expected` is the releaser.
+    pub fn amo_increment(&mut self) -> u32 {
+        self.count += 1;
+        assert!(
+            self.count <= self.expected,
+            "barrier over-subscribed: {} > {}",
+            self.count,
+            self.expected
+        );
+        self.count
+    }
+
+    pub fn is_released(&self) -> bool {
+        self.count == self.expected
+    }
+
+    /// Reset for the next offload (done by the releaser).
+    pub fn reset(&mut self) {
+        assert!(self.is_released(), "reset before release");
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipi_schedule_is_reverse_order() {
+        let s = ipi_schedule(4, 100, 8, 28);
+        assert_eq!(s[0], (3, 108));
+        assert_eq!(s[1], (2, 136));
+        assert_eq!(s[3], (0, 192)); // cluster 0 last
+    }
+
+    #[test]
+    fn single_cluster_schedule() {
+        let s = ipi_schedule(1, 0, 8, 28);
+        assert_eq!(s, vec![(0, 8)]);
+    }
+
+    #[test]
+    fn barrier_release_and_reuse() {
+        let mut b = CentralCounterBarrier::new(3);
+        assert_eq!(b.amo_increment(), 1);
+        assert_eq!(b.amo_increment(), 2);
+        assert!(!b.is_released());
+        assert_eq!(b.amo_increment(), 3);
+        assert!(b.is_released());
+        b.reset();
+        assert!(!b.is_released());
+    }
+
+    #[test]
+    #[should_panic(expected = "over-subscribed")]
+    fn oversubscribed_barrier_panics() {
+        let mut b = CentralCounterBarrier::new(1);
+        b.amo_increment();
+        b.amo_increment();
+    }
+}

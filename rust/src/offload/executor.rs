@@ -1,0 +1,668 @@
+//! Event-driven execution of one offloaded job — the cycle-level heart of
+//! the reproduction.
+//!
+//! Implements the nine phases of §4.1 (Fig. 3) on the simulated SoC:
+//! host-side phase costs from `TimingConfig`, narrow-NoC hop latencies for
+//! IPIs and remote loads, a FIFO server for cluster 0's TCDM port (phases
+//! C/D and the software barrier's AMO serialization), and the fluid
+//! processor-sharing wide-SPM port shared by every cluster's phase E/G
+//! DMA traffic — the resource whose contention produces the paper's
+//! second-order effects (§5.2: offload-phase offsets are partially repaid
+//! as reduced interconnect stalls; §5.5.G: phase E/G overlap across
+//! clusters).
+
+use crate::config::Config;
+use crate::dma::{dma_timing, DmaTiming, DmaTransfer};
+use crate::kernels::JobSpec;
+use crate::noc::NarrowNoc;
+use crate::sim::{EventQueue, Phase, PhaseSpan, PsPort, RrPort, Time, Trace};
+
+use super::phases::RoutineKind;
+
+/// Cycles the DM core spends polling/observing a completed DMA.
+const DMA_POLL: u64 = 2;
+/// Cycles to issue a single uncached store on CVA6 (IPI or JCU program).
+const HOST_STORE_ISSUE: u64 = 8;
+/// Extra cycles per additional multicast transaction when the cluster set
+/// is not a single subcube (popcount(n) masked writes, see
+/// `NarrowNoc::encode_first_n`).
+const HOST_EXTRA_TXN: u64 = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    /// Wakeup write arrives at cluster `c` (cores leave WFI afterwards).
+    Wake { c: usize },
+    /// Job-pointer load response received by cluster `c`.
+    PtrDone { c: usize },
+    /// Job-arguments retrieval finished on cluster `c`.
+    ArgsDone { c: usize },
+    /// Cluster `c`'s coalesced operand DMA joins the wide-SPM port.
+    OperandJoin { c: usize, beats: u64 },
+    /// Periodic check of the fluid PS port (stale generations dropped).
+    PortCheck { generation: u64 },
+    /// An RR-port grant finished its beats.
+    PortDone { id: u64 },
+    /// Cluster `c` finished phase F.
+    ComputeDone { c: usize },
+    /// Cluster `c`'s writeback DMA joins the wide-SPM port.
+    WritebackJoin { c: usize, beats: u64 },
+    /// Cluster `c`'s barrier AMO arrives at cluster 0's TCDM port.
+    BarrierArrive { c: usize },
+    /// Cluster `c` observes its AMO response (software barrier) or has
+    /// sent its JCU arrival (fire-and-forget).
+    NotifyDone { c: usize },
+    /// Cluster `c`'s arrival write reaches the JCU.
+    JcuArrive { c: usize },
+    /// CVA6 wakes up from the completion interrupt.
+    HostWake,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PortJob {
+    cluster: usize,
+    writeback: bool,
+}
+
+/// Wide-SPM port arbitration (config-selected; RR is the Occamy model).
+enum WidePort {
+    Rr(RrPort),
+    Fluid(PsPort),
+}
+
+/// Per-cluster phase bookkeeping.
+#[derive(Debug, Clone, Default)]
+struct ClusterRun {
+    wake_at: Time,
+    e_start: Time,
+    e_end: Time,
+    g_start: Time,
+    done: bool,
+}
+
+pub struct Executor<'a> {
+    cfg: &'a Config,
+    spec: &'a JobSpec,
+    n_clusters: usize,
+    routine: RoutineKind,
+    q: EventQueue<Ev>,
+    trace: Trace,
+    /// Built lazily: only the multicast routine routes masked writes
+    /// (perf: baseline/ideal runs skip constructing the 9-XBAR tree).
+    noc: Option<NarrowNoc>,
+    port: WidePort,
+    /// Transfer bookkeeping, indexed by the ports' sequential ids
+    /// (perf: replaces a HashMap on the hot path).
+    port_jobs: Vec<Option<PortJob>>,
+    dma: DmaTiming,
+    clusters: Vec<ClusterRun>,
+    /// FIFO watermark of cluster 0's TCDM port (phases C/D).
+    tcdm0_free: Time,
+    /// FIFO watermark of the barrier counter's bank (AMO serialization).
+    amo_free: Time,
+    barrier_count: usize,
+    jcu_count: usize,
+    finished_clusters: usize,
+    a_end: Time,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        spec: &'a JobSpec,
+        n_clusters: usize,
+        routine: RoutineKind,
+    ) -> Self {
+        assert!(n_clusters >= 1 && n_clusters <= cfg.soc.n_clusters());
+        let multicast_noc = routine.uses_multicast();
+        Self {
+            cfg,
+            spec,
+            n_clusters,
+            routine,
+            q: EventQueue::new(),
+            trace: Trace::new(n_clusters),
+            noc: multicast_noc.then(|| NarrowNoc::new(cfg, true)),
+            port: if cfg.soc.wide_port_fluid {
+                WidePort::Fluid(PsPort::new())
+            } else {
+                WidePort::Rr(RrPort::new(n_clusters))
+            },
+            port_jobs: Vec::with_capacity(2 * n_clusters),
+            dma: dma_timing(&cfg.timing),
+            clusters: vec![ClusterRun::default(); n_clusters],
+            tcdm0_free: 0,
+            amo_free: 0,
+            barrier_count: 0,
+            jcu_count: 0,
+            finished_clusters: 0,
+            a_end: 0,
+        }
+    }
+
+    /// One-way narrow latency from cluster `c` to cluster 0 (or local).
+    fn to_cluster0(&self, c: usize) -> u64 {
+        let t = &self.cfg.timing;
+        if c == 0 {
+            // Local TCDM access path.
+            0
+        } else {
+            let same_quad = self.cfg.soc.quadrant_of(c) == self.cfg.soc.quadrant_of(0);
+            t.cluster_to_cluster_oneway(same_quad)
+        }
+    }
+
+    /// Run the job to completion and return the trace.
+    pub fn run(mut self) -> Trace {
+        match self.routine {
+            RoutineKind::Ideal => self.start_ideal(),
+            r => {
+                let mcast = r.uses_multicast();
+                self.start_offload(mcast)
+            }
+        }
+        while let Some((t, ev)) = self.q.pop() {
+            self.handle(t, ev);
+        }
+        assert_eq!(
+            self.finished_clusters, self.n_clusters,
+            "simulation drained with unfinished clusters"
+        );
+        self.trace.events = self.q.dispatched();
+        self.trace
+    }
+
+    // ------------------------------------------------------------- phase A/B
+
+    fn start_ideal(&mut self) {
+        for c in 0..self.n_clusters {
+            self.clusters[c].wake_at = 0;
+            self.q.schedule(0, Ev::ArgsDone { c }); // jump straight to E
+        }
+    }
+
+    fn start_offload(&mut self, multicast: bool) {
+        let t = &self.cfg.timing;
+        // Phase A: send job information.
+        let (a_dur, txns) = if multicast {
+            // One masked write per subcube of the selected cluster range;
+            // validate through the two-level XBAR decode that the writes
+            // reach exactly clusters [0, n).
+            let noc = self.noc.as_ref().expect("multicast routine builds the NoC");
+            let msgs = noc.encode_first_n(self.n_clusters, 0x0);
+            let mut reached = Vec::new();
+            for m in &msgs {
+                reached.extend(noc.route_clusters(*m).expect("multicast decodes"));
+            }
+            reached.sort_unstable();
+            assert_eq!(reached, (0..self.n_clusters).collect::<Vec<_>>());
+            (
+                t.host_send_info + t.host_mcast_csr + (msgs.len() as u64 - 1) * HOST_EXTRA_TXN,
+                msgs.len() as u64,
+            )
+        } else {
+            (t.host_send_info, 1)
+        };
+        self.a_end = a_dur;
+        self.trace.record_host(Phase::SendInfo, PhaseSpan::new(0, a_dur));
+
+        // Phase B: wakeup.
+        if multicast {
+            let issue = self.a_end + HOST_STORE_ISSUE + (txns - 1) * HOST_EXTRA_TXN;
+            let wake = issue + t.wakeup_hw();
+            for c in 0..self.n_clusters {
+                self.q.schedule(wake, Ev::Wake { c });
+            }
+        } else {
+            // Sequential IPIs, highest cluster index first so cluster 0
+            // (holding the barrier counter) arrives last (§5.5.H).
+            for (k, c) in (0..self.n_clusters).rev().enumerate() {
+                let issue =
+                    self.a_end + HOST_STORE_ISSUE + k as u64 * t.host_ipi_issue_gap;
+                let wake = issue + t.wakeup_hw();
+                self.q.schedule(wake, Ev::Wake { c });
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- event handler
+
+    fn handle(&mut self, now: Time, ev: Ev) {
+        // `self.cfg` is an &'a reference: copying the reference out lets
+        // the timing constants be read without re-borrowing self (perf:
+        // this used to clone the whole TimingConfig per event).
+        let t: &'a crate::config::TimingConfig = &self.cfg.timing;
+        match ev {
+            Ev::Wake { c } => {
+                let end = now + t.mcip_clear;
+                self.clusters[c].wake_at = end;
+                self.trace
+                    .record(c, Phase::Wakeup, PhaseSpan::new(self.a_end, end));
+                // Phase C: retrieve job pointer.
+                match self.routine.uses_multicast() {
+                    true => {
+                        // Job info was multicast into the local TCDM.
+                        let done = end + t.dispatch_load_ptr + t.tcdm_local_load;
+                        self.q.schedule(done, Ev::PtrDone { c });
+                    }
+                    false => {
+                        if c == 0 {
+                            let done = end + t.dispatch_load_ptr + t.tcdm_local_load;
+                            self.q.schedule(done, Ev::PtrDone { c });
+                        } else {
+                            // Remote load from cluster 0 through the
+                            // narrow NoC; serialized at its TCDM port.
+                            let arrive = end + t.dispatch_load_ptr + self.to_cluster0(c);
+                            let served =
+                                self.fifo_tcdm0(arrive, t.tcdm_service);
+                            let done = served + self.to_cluster0(c);
+                            self.q.schedule(done, Ev::PtrDone { c });
+                        }
+                    }
+                }
+            }
+            Ev::PtrDone { c } => {
+                let start = self.trace.cluster_spans[c][&Phase::Wakeup].end;
+                self.trace
+                    .record(c, Phase::RetrievePtr, PhaseSpan::new(start, now));
+                // Phase D: retrieve job arguments.
+                match self.routine.uses_multicast() {
+                    true => {
+                        // Arguments arrived with the multicast write:
+                        // zero-length phase (eliminated, §4.2).
+                        self.q.schedule(now, Ev::ArgsDone { c });
+                    }
+                    false => {
+                        if c == 0 {
+                            let done = now + t.dispatch_load_ptr;
+                            self.q.schedule(done, Ev::ArgsDone { c });
+                        } else {
+                            let beats = DmaTransfer {
+                                bytes: self.spec.args_bytes(),
+                                into_tcdm: true,
+                            }
+                            .beats(self.cfg.soc.wide_bus_bytes);
+                            let issue = now + t.dma_setup_per_transfer;
+                            let arrive = issue + self.to_cluster0(c);
+                            let served = self.fifo_tcdm0(arrive, beats.max(1));
+                            let done = served + self.to_cluster0(c) + DMA_POLL;
+                            self.q.schedule(done, Ev::ArgsDone { c });
+                        }
+                    }
+                }
+            }
+            Ev::ArgsDone { c } => {
+                if self.routine.is_offloaded() {
+                    let start = self.trace.cluster_spans[c][&Phase::RetrievePtr].end;
+                    self.trace
+                        .record(c, Phase::RetrieveArgs, PhaseSpan::new(start, now));
+                }
+                // Phase E: retrieve job operands.
+                self.clusters[c].e_start = now;
+                let transfers = self.spec.operand_transfers(self.n_clusters, c);
+                if transfers.is_empty() {
+                    self.clusters[c].e_end = now;
+                    self.trace
+                        .record(c, Phase::RetrieveOperands, PhaseSpan::new(now, now));
+                    self.schedule_compute(c, now);
+                } else {
+                    let beats: u64 = transfers
+                        .iter()
+                        .map(|&b| {
+                            DmaTransfer {
+                                bytes: b,
+                                into_tcdm: true,
+                            }
+                            .beats(self.cfg.soc.wide_bus_bytes)
+                        })
+                        .sum();
+                    let setup = t.dma_setup_phase_entry
+                        + transfers.len() as u64 * self.dma.setup;
+                    let join = now + setup + self.dma.request_latency;
+                    self.q.schedule(join, Ev::OperandJoin { c, beats });
+                }
+            }
+            Ev::OperandJoin { c, beats } => {
+                self.port_submit(now, c, beats, false);
+            }
+            Ev::PortCheck { generation } => {
+                let finished: Vec<u64> = match &mut self.port {
+                    WidePort::Fluid(p) => {
+                        if !p.is_current(generation) {
+                            return; // stale
+                        }
+                        p.collect_finished(now)
+                    }
+                    WidePort::Rr(_) => unreachable!("PortCheck on RR port"),
+                };
+                for id in finished {
+                    self.port_transfer_done(now, id);
+                }
+                self.reschedule_port_check(now);
+            }
+            Ev::PortDone { id } => {
+                match &mut self.port {
+                    WidePort::Rr(p) => p.complete(),
+                    WidePort::Fluid(_) => unreachable!("PortDone on fluid port"),
+                }
+                self.port_transfer_done(now, id);
+                self.rr_dispatch(now);
+            }
+            Ev::ComputeDone { c } => {
+                let e_end = self.clusters[c].e_end;
+                self.trace
+                    .record(c, Phase::Execute, PhaseSpan::new(e_end, now));
+                // Phase G: writeback.
+                let wb = self.spec.writeback_bytes(self.n_clusters, c);
+                self.clusters[c].g_start = now;
+                if wb == 0 {
+                    self.trace
+                        .record(c, Phase::Writeback, PhaseSpan::new(now, now));
+                    self.q.schedule(now, Ev::NotifyDone { c });
+                } else {
+                    let beats = DmaTransfer {
+                        bytes: wb,
+                        into_tcdm: false,
+                    }
+                    .beats(self.cfg.soc.wide_bus_bytes);
+                    let join = now
+                        + t.cluster_barrier
+                        + self.dma.setup
+                        + self.dma.request_latency;
+                    self.q.schedule(join, Ev::WritebackJoin { c, beats });
+                }
+            }
+            Ev::WritebackJoin { c, beats } => {
+                self.port_submit(now, c, beats, true);
+            }
+            Ev::NotifyDone { c } => {
+                // Phase H entry for this cluster (or terminal state for
+                // the ideal routine).
+                match self.routine {
+                    RoutineKind::Ideal => {
+                        self.cluster_finished(c);
+                        if self.finished_clusters == self.n_clusters {
+                            self.trace.total = now;
+                        }
+                    }
+                    r if !r.uses_jcu() => {
+                        let arrive = now + t.barrier_instr + self.to_cluster0(c).max(
+                            // local participants still traverse the TCDM
+                            // interconnect inside the cluster
+                            t.tcdm_local_load,
+                        );
+                        self.clusters[c].g_start = now; // reuse: H start
+                        self.q.schedule(arrive, Ev::BarrierArrive { c });
+                    }
+                    _ => {
+                        let arrive =
+                            now + t.jcu_notify_instr + t.cluster_to_clint_oneway();
+                        self.clusters[c].g_start = now; // H start
+                        self.trace.record(
+                            c,
+                            Phase::Notify,
+                            PhaseSpan::new(now, now + t.jcu_notify_instr),
+                        );
+                        self.q.schedule(arrive, Ev::JcuArrive { c });
+                        self.cluster_finished(c);
+                    }
+                }
+            }
+            Ev::BarrierArrive { c } => {
+                // AMO increment serialized at the counter's TCDM bank.
+                let served = self.fifo_amo(now, t.amo_service);
+                let back = served + self.to_cluster0(c).max(t.tcdm_local_load);
+                self.barrier_count += 1;
+                let h_start = self.clusters[c].g_start;
+                self.trace
+                    .record(c, Phase::Notify, PhaseSpan::new(h_start, back));
+                self.cluster_finished(c);
+                if self.barrier_count == self.n_clusters {
+                    // The releasing participant observes the full count
+                    // and fires the IPI to CVA6.
+                    let wake = back
+                        + t.barrier_notify_instr
+                        + t.cluster_to_clint_oneway()
+                        + t.host_wake;
+                    self.q.schedule(wake, Ev::HostWake);
+                }
+            }
+            Ev::JcuArrive { c } => {
+                let _ = c;
+                self.jcu_count += 1;
+                if self.jcu_count == self.n_clusters {
+                    let wake = now + t.jcu_fire + t.host_wake;
+                    self.q.schedule(wake, Ev::HostWake);
+                }
+            }
+            Ev::HostWake => {
+                let end = now + t.host_resume;
+                self.trace.record_host(Phase::Resume, PhaseSpan::new(now, end));
+                self.trace.total = end;
+            }
+        }
+    }
+
+    fn schedule_compute(&mut self, c: usize, at: Time) {
+        let t = &self.cfg.timing;
+        let cycles = self.spec.compute_cycles(self.n_clusters, c, t);
+        // DM core / compute cores handshake through the HW barrier on
+        // both sides of the computation (§4.1.F/G).
+        self.q
+            .schedule(at + t.cluster_barrier + cycles, Ev::ComputeDone { c });
+    }
+
+    /// Submit a coalesced DMA transfer to the wide-SPM port.
+    fn port_submit(&mut self, now: Time, cluster: usize, beats: u64, writeback: bool) {
+        let id = match &mut self.port {
+            WidePort::Rr(p) => p.submit(cluster, beats),
+            WidePort::Fluid(p) => p.join(now, beats).0,
+        } as usize;
+        if self.port_jobs.len() <= id {
+            self.port_jobs.resize(id + 1, None);
+        }
+        self.port_jobs[id] = Some(PortJob { cluster, writeback });
+        match &self.port {
+            WidePort::Rr(_) => self.rr_dispatch(now),
+            WidePort::Fluid(_) => self.reschedule_port_check(now),
+        }
+    }
+
+    /// A transfer's last beat left the port: completion becomes visible
+    /// at the owning cluster after the response latency.
+    fn port_transfer_done(&mut self, now: Time, id: u64) {
+        let job = self.port_jobs[id as usize]
+            .take()
+            .expect("unknown port job");
+        let visible = now + self.dma.response_latency + DMA_POLL;
+        if job.writeback {
+            let start = self.clusters[job.cluster].g_start;
+            self.trace
+                .record(job.cluster, Phase::Writeback, PhaseSpan::new(start, visible));
+            self.q.schedule(visible, Ev::NotifyDone { c: job.cluster });
+        } else {
+            self.clusters[job.cluster].e_end = visible;
+            let start = self.clusters[job.cluster].e_start;
+            self.trace.record(
+                job.cluster,
+                Phase::RetrieveOperands,
+                PhaseSpan::new(start, visible),
+            );
+            self.schedule_compute(job.cluster, visible);
+        }
+    }
+
+    fn rr_dispatch(&mut self, now: Time) {
+        if let WidePort::Rr(p) = &mut self.port {
+            if let Some((id, beats)) = p.try_grant() {
+                self.q.schedule(now + beats, Ev::PortDone { id });
+            }
+        }
+    }
+
+    fn reschedule_port_check(&mut self, now: Time) {
+        if let WidePort::Fluid(p) = &self.port {
+            if let Some((at, generation)) = p.next_completion(now) {
+                self.q.schedule(at, Ev::PortCheck { generation });
+            }
+        }
+    }
+
+    fn fifo_tcdm0(&mut self, arrive: Time, service: u64) -> Time {
+        let start = self.tcdm0_free.max(arrive);
+        self.tcdm0_free = start + service;
+        self.tcdm0_free
+    }
+
+    fn fifo_amo(&mut self, arrive: Time, service: u64) -> Time {
+        let start = self.amo_free.max(arrive);
+        self.amo_free = start + service;
+        self.amo_free
+    }
+
+    fn cluster_finished(&mut self, c: usize) {
+        assert!(!self.clusters[c].done, "cluster {c} finished twice");
+        self.clusters[c].done = true;
+        self.finished_clusters += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::run_offload;
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    #[test]
+    fn ideal_runs_only_efg() {
+        let c = cfg();
+        let spec = JobSpec::Axpy { n: 1024 };
+        let tr = run_offload(&c, &spec, 4, RoutineKind::Ideal);
+        assert!(tr.stats(Phase::Wakeup).is_none());
+        assert!(tr.stats(Phase::RetrieveOperands).is_some());
+        assert!(tr.stats(Phase::Execute).is_some());
+        assert!(tr.stats(Phase::Writeback).is_some());
+        assert!(tr.host_duration(Phase::Resume).is_none());
+        assert!(tr.total > 0);
+    }
+
+    #[test]
+    fn baseline_records_all_phases() {
+        let c = cfg();
+        let spec = JobSpec::Axpy { n: 1024 };
+        let tr = run_offload(&c, &spec, 8, RoutineKind::Baseline);
+        for p in Phase::ALL {
+            if p.is_host_phase() {
+                assert!(tr.host_duration(p).is_some(), "missing host {p:?}");
+            } else {
+                assert!(tr.stats(p).is_some(), "missing {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn multicast_wakeup_is_47_cycles() {
+        // §5.5.B: 47-cycle wakeup with multicast (8 issue + 39 hardware),
+        // plus the local MCIP clear.
+        let c = cfg();
+        let spec = JobSpec::Axpy { n: 256 };
+        let tr = run_offload(&c, &spec, 32, RoutineKind::Multicast);
+        let b = tr.stats(Phase::Wakeup).unwrap();
+        assert_eq!(b.min, b.max, "multicast wakeup is uniform");
+        assert_eq!(b.min, 47 + c.timing.mcip_clear);
+    }
+
+    #[test]
+    fn baseline_wakeup_grows_linearly() {
+        let c = cfg();
+        let spec = JobSpec::Axpy { n: 256 };
+        let tr = run_offload(&c, &spec, 32, RoutineKind::Baseline);
+        let b = tr.stats(Phase::Wakeup).unwrap();
+        assert!(b.max > b.min);
+        assert_eq!(
+            b.max - b.min,
+            31 * c.timing.host_ipi_issue_gap,
+            "spread = (n-1) issue gaps"
+        );
+    }
+
+    #[test]
+    fn baseline_ptr_retrieval_steps_with_distance() {
+        // §5.5.C: min (cluster 0, local) near-constant; max steps up when
+        // crossing cluster and quadrant boundaries.
+        let c = cfg();
+        let spec = JobSpec::Axpy { n: 256 };
+        let t1 = run_offload(&c, &spec, 1, RoutineKind::Baseline);
+        let t4 = run_offload(&c, &spec, 4, RoutineKind::Baseline);
+        let t8 = run_offload(&c, &spec, 8, RoutineKind::Baseline);
+        let c1 = t1.stats(Phase::RetrievePtr).unwrap();
+        let c4 = t4.stats(Phase::RetrievePtr).unwrap();
+        let c8 = t8.stats(Phase::RetrievePtr).unwrap();
+        assert_eq!(c1.min, c4.min, "cluster 0 is local in both");
+        assert!(c4.max > c4.min, "remote same-quadrant loads cost more");
+        assert!(c8.max > c4.max, "cross-quadrant loads cost more still");
+    }
+
+    #[test]
+    fn multicast_ptr_retrieval_is_local_everywhere() {
+        let c = cfg();
+        let spec = JobSpec::Axpy { n: 256 };
+        let tr = run_offload(&c, &spec, 32, RoutineKind::Multicast);
+        let s = tr.stats(Phase::RetrievePtr).unwrap();
+        assert_eq!(s.min, s.max);
+        assert_eq!(s.min, c.timing.dispatch_load_ptr + c.timing.tcdm_local_load);
+        // And phase D is eliminated (zero duration).
+        let d = tr.stats(Phase::RetrieveArgs).unwrap();
+        assert_eq!(d.max, 0);
+    }
+
+    #[test]
+    fn phase_e_eq1_multicast_axpy() {
+        // Eq. 1: max runtime of phase E = t_setup + t_latency + 2N*8/bw.
+        let c = cfg();
+        let n = 1024u64;
+        let spec = JobSpec::Axpy { n };
+        let tr = run_offload(&c, &spec, 8, RoutineKind::Multicast);
+        let e = tr.stats(Phase::RetrieveOperands).unwrap();
+        let expect = 53 + 55 + 2 * n * 8 / 64 + DMA_POLL;
+        // All clusters join the port within a cycle of each other, so the
+        // slowest one sees the full combined-length transfer.
+        assert!(
+            (e.max as i64 - expect as i64).abs() <= 2,
+            "e.max={} expect={}",
+            e.max,
+            expect
+        );
+    }
+
+    #[test]
+    fn total_runtime_ordering() {
+        // ideal <= multicast <= baseline for every config.
+        let c = cfg();
+        for spec in [
+            JobSpec::Axpy { n: 1024 },
+            JobSpec::Atax { m: 64, n: 64 },
+            JobSpec::MonteCarlo { samples: 2048 },
+        ] {
+            for n in [1usize, 2, 8, 32] {
+                let b = run_offload(&c, &spec, n, RoutineKind::Baseline).total;
+                let m = run_offload(&c, &spec, n, RoutineKind::Multicast).total;
+                let i = run_offload(&c, &spec, n, RoutineKind::Ideal).total;
+                assert!(i <= m, "{spec:?} n={n}: ideal {i} > improved {m}");
+                assert!(m <= b, "{spec:?} n={n}: improved {m} > base {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = cfg();
+        let spec = JobSpec::Covariance { m: 32, n: 64 };
+        let a = run_offload(&c, &spec, 16, RoutineKind::Baseline);
+        let b = run_offload(&c, &spec, 16, RoutineKind::Baseline);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.events, b.events);
+    }
+}

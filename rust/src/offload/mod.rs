@@ -1,0 +1,56 @@
+//! The host-centric offload framework (§4): phases A-I executed on the
+//! simulated SoC, in the baseline (§4.1) and multicast/JCU-optimized
+//! (§4.2/§4.3) variants, plus the "ideal" direct-on-device execution the
+//! paper compares against (§5.2).
+
+pub mod baseline;
+pub mod executor;
+pub mod multicast;
+pub mod phases;
+
+pub use executor::Executor;
+pub use phases::{RoutineKind, RunTriple, TraceTriple};
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::sim::Trace;
+
+/// Run one job with one routine; returns the full phase trace.
+pub fn run_offload(
+    cfg: &Config,
+    spec: &JobSpec,
+    n_clusters: usize,
+    routine: RoutineKind,
+) -> Trace {
+    Executor::new(cfg, spec, n_clusters, routine).run()
+}
+
+/// Run the base/ideal/improved triple for one configuration (the unit of
+/// every figure in §5).
+pub fn run_triple(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> TraceTriple {
+    TraceTriple {
+        base: run_offload(cfg, spec, n_clusters, RoutineKind::Baseline),
+        ideal: run_offload(cfg, spec, n_clusters, RoutineKind::Ideal),
+        improved: run_offload(cfg, spec, n_clusters, RoutineKind::Multicast),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_is_consistent() {
+        let cfg = Config::default();
+        let spec = JobSpec::Axpy { n: 1024 };
+        let t = run_triple(&cfg, &spec, 8);
+        let r = t.runtimes(8);
+        assert!(r.overhead() > 0);
+        assert!(r.residual_overhead() > 0);
+        assert!(r.residual_overhead() < r.overhead());
+        assert!(r.ideal_speedup() > 1.0);
+        assert!(r.achieved_speedup() > 1.0);
+        let f = r.restored_fraction();
+        assert!(f > 0.0 && f <= 1.0, "restored fraction {f}");
+    }
+}

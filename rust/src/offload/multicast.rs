@@ -1,0 +1,74 @@
+//! Multicast offload routine details (§4.2).
+//!
+//! With the multicast-capable narrow interconnect, phases A and B become
+//! one (set of) masked write(s) reaching all selected clusters
+//! simultaneously, and phases C/D collapse into local TCDM accesses. The
+//! plan below captures how many masked transactions a given cluster
+//! selection costs — 1 for any power-of-two prefix, popcount(n) in
+//! general — and verifies against the two-level XBAR decode that the
+//! writes reach exactly the intended clusters.
+
+use crate::config::Config;
+use crate::noc::{MaskedAddr, NarrowNoc};
+
+/// A validated multicast write plan for one offload.
+#[derive(Debug, Clone)]
+pub struct McastPlan {
+    /// The masked write transactions (one per subcube).
+    pub txns: Vec<MaskedAddr>,
+    /// Clusters reached (sorted, deduplicated) — always `0..n`.
+    pub clusters: Vec<usize>,
+}
+
+impl McastPlan {
+    /// Build and validate the plan for offloading to the first `n`
+    /// clusters, writing at in-cluster offset `offset` (job-info slot or
+    /// the MCIP register).
+    pub fn first_n(cfg: &Config, noc: &NarrowNoc, n: usize, offset: u64) -> Self {
+        let txns = noc.encode_first_n(n, offset);
+        let mut clusters = Vec::new();
+        for t in &txns {
+            clusters.extend(noc.route_clusters(*t).expect("multicast plan decodes"));
+        }
+        clusters.sort_unstable();
+        clusters.dedup();
+        assert_eq!(
+            clusters,
+            (0..n).collect::<Vec<_>>(),
+            "multicast plan must reach exactly the first {n} clusters"
+        );
+        debug_assert!(n <= cfg.soc.n_clusters());
+        Self { txns, clusters }
+    }
+
+    /// Number of narrow-network transactions this plan costs.
+    pub fn n_transactions(&self) -> usize {
+        self.txns.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_of_two_prefixes_are_single_transactions() {
+        let cfg = Config::default();
+        let noc = NarrowNoc::new(&cfg, true);
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            let p = McastPlan::first_n(&cfg, &noc, n, 0x8);
+            assert_eq!(p.n_transactions(), 1, "n={n}");
+            assert_eq!(p.clusters.len(), n);
+        }
+    }
+
+    #[test]
+    fn general_prefix_costs_popcount() {
+        let cfg = Config::default();
+        let noc = NarrowNoc::new(&cfg, true);
+        for n in 1..=32usize {
+            let p = McastPlan::first_n(&cfg, &noc, n, 0x0);
+            assert_eq!(p.n_transactions() as u32, n.count_ones(), "n={n}");
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Offload routine variants and run-level result types.
+
+
+use crate::sim::{Time, Trace};
+
+/// Which implementation of the offload process to execute (§4.1/§4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutineKind {
+    /// The bare-metal baseline: job info to cluster 0, sequential IPIs,
+    /// remote pointer/argument retrieval, central-counter software
+    /// barrier (§4.1).
+    Baseline,
+    /// The co-designed routines: multicast job-info + wakeup writes
+    /// (phases C/D collapse to local accesses) and JCU-based completion
+    /// notification (§4.2, §4.3).
+    Multicast,
+    /// Ablation: multicast interconnect only — completion notification
+    /// still uses the central-counter software barrier (§4.2 without
+    /// §4.3).
+    McastOnly,
+    /// Ablation: JCU only — job distribution and wakeup remain the
+    /// baseline's sequential writes (§4.3 without §4.2).
+    JcuOnly,
+    /// The paper's "ideal runtime": the application started directly on
+    /// the device — phases E/F/G only, all clusters starting at t=0
+    /// (§5.2).
+    Ideal,
+}
+
+impl RoutineKind {
+    pub const ALL: [RoutineKind; 5] = [
+        RoutineKind::Baseline,
+        RoutineKind::Multicast,
+        RoutineKind::McastOnly,
+        RoutineKind::JcuOnly,
+        RoutineKind::Ideal,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutineKind::Baseline => "baseline",
+            RoutineKind::Multicast => "multicast",
+            RoutineKind::McastOnly => "mcast-only",
+            RoutineKind::JcuOnly => "jcu-only",
+            RoutineKind::Ideal => "ideal",
+        }
+    }
+
+    /// True for routines that include the host-side phases (A, B, ..., I).
+    pub fn is_offloaded(&self) -> bool {
+        !matches!(self, RoutineKind::Ideal)
+    }
+
+    /// Whether job-info distribution and wakeup use the multicast
+    /// interconnect (§4.2).
+    pub fn uses_multicast(&self) -> bool {
+        matches!(self, RoutineKind::Multicast | RoutineKind::McastOnly)
+    }
+
+    /// Whether completion notification uses the job completion unit
+    /// (§4.3) instead of the software barrier.
+    pub fn uses_jcu(&self) -> bool {
+        matches!(self, RoutineKind::Multicast | RoutineKind::JcuOnly)
+    }
+}
+
+/// Base/ideal/improved runtimes of one (job, n_clusters) configuration —
+/// the triple behind Figs. 7-10.
+#[derive(Debug, Clone)]
+pub struct RunTriple {
+    pub n_clusters: usize,
+    pub base: Time,
+    pub ideal: Time,
+    pub improved: Time,
+}
+
+impl RunTriple {
+    /// Offload overhead as defined in §5.2: base − ideal.
+    pub fn overhead(&self) -> i64 {
+        self.base as i64 - self.ideal as i64
+    }
+
+    /// Residual overhead with the extensions: improved − ideal.
+    pub fn residual_overhead(&self) -> i64 {
+        self.improved as i64 - self.ideal as i64
+    }
+
+    /// Ideal speedup if overheads vanished (Fig. 8 white bars).
+    pub fn ideal_speedup(&self) -> f64 {
+        self.base as f64 / self.ideal as f64
+    }
+
+    /// Achieved speedup with the extensions (Fig. 8 fill levels).
+    pub fn achieved_speedup(&self) -> f64 {
+        self.base as f64 / self.improved as f64
+    }
+
+    /// Fraction of the ideally attainable speedup restored (§5.4: "we
+    /// measure speedups within 70% and 90% of the ideally attainable
+    /// speedups"): achieved_speedup / ideal_speedup.
+    pub fn restored_fraction(&self) -> f64 {
+        self.achieved_speedup() / self.ideal_speedup()
+    }
+}
+
+/// A full trace triple for the same configuration.
+#[derive(Debug, Clone)]
+pub struct TraceTriple {
+    pub base: Trace,
+    pub ideal: Trace,
+    pub improved: Trace,
+}
+
+impl TraceTriple {
+    pub fn runtimes(&self, n_clusters: usize) -> RunTriple {
+        RunTriple {
+            n_clusters,
+            base: self.base.total,
+            ideal: self.ideal.total,
+            improved: self.improved.total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_metrics() {
+        let t = RunTriple {
+            n_clusters: 8,
+            base: 1200,
+            ideal: 600,
+            improved: 750,
+        };
+        assert_eq!(t.overhead(), 600);
+        assert_eq!(t.residual_overhead(), 150);
+        assert!((t.ideal_speedup() - 2.0).abs() < 1e-12);
+        assert!((t.achieved_speedup() - 1.6).abs() < 1e-12);
+        // restored = 1.6 / 2.0
+        assert!((t.restored_fraction() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routine_names() {
+        assert_eq!(RoutineKind::Baseline.name(), "baseline");
+        assert!(RoutineKind::Ideal.name() == "ideal");
+        assert!(!RoutineKind::Ideal.is_offloaded());
+    }
+}

@@ -1,0 +1,232 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the Rust runtime (request path).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f64" => DType::F64,
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_u64().map(|u| u as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("non-integer shape"))?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?;
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One AOT-compiled kernel variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kernel: String,
+    pub id: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub params: HashMap<String, u64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    by_id: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != "hlo-text" {
+            bail!("unsupported manifest format {format:?} (want hlo-text)");
+        }
+        let mut entries = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let mut params = HashMap::new();
+            if let Some(Json::Obj(p)) = a.get("params") {
+                for (k, v) in p {
+                    params.insert(
+                        k.clone(),
+                        v.as_u64().ok_or_else(|| anyhow!("non-integer param {k}"))?,
+                    );
+                }
+            }
+            let parse_specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                a.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            entries.push(ArtifactEntry {
+                kernel: get_str("kernel")?,
+                id: get_str("id")?,
+                file: get_str("file")?,
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                params,
+            });
+        }
+        let mut by_id = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if by_id.insert(e.id.clone(), i).is_some() {
+                bail!("duplicate artifact id {:?}", e.id);
+            }
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            entries,
+            by_id,
+        })
+    }
+
+    pub fn get(&self, id: &str) -> Option<&ArtifactEntry> {
+        self.by_id.get(id).map(|&i| &self.entries[i])
+    }
+
+    /// Absolute path of an entry's HLO text file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    /// Ids of all variants of a kernel, sorted.
+    pub fn variants_of(&self, kernel: &str) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .entries
+            .iter()
+            .filter(|e| e.kernel == kernel)
+            .map(|e| e.id.as_str())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"kernel": "axpy", "id": "axpy_n256", "params": {"n": 256},
+         "inputs": [{"shape": [], "dtype": "f64"},
+                    {"shape": [256], "dtype": "f64"},
+                    {"shape": [256], "dtype": "f64"}],
+         "outputs": [{"shape": [256], "dtype": "f64"}],
+         "file": "axpy_n256.hlo.txt", "sha256": "x"},
+        {"kernel": "bfs", "id": "bfs_n64", "params": {"n": 64},
+         "inputs": [{"shape": [64, 64], "dtype": "f64"},
+                    {"shape": [], "dtype": "i32"}],
+         "outputs": [{"shape": [64], "dtype": "i32"}],
+         "file": "bfs_n64.hlo.txt", "sha256": "y"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("axpy_n256").unwrap();
+        assert_eq!(e.kernel, "axpy");
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, Vec::<usize>::new());
+        assert_eq!(e.inputs[1].element_count(), 256);
+        assert_eq!(e.params["n"], 256);
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/a/axpy_n256.hlo.txt"));
+    }
+
+    #[test]
+    fn bfs_entry_types() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let e = m.get("bfs_n64").unwrap();
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        assert_eq!(e.outputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn variants_lookup() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert_eq!(m.variants_of("axpy"), vec!["axpy_n256"]);
+        assert!(m.variants_of("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_ids() {
+        let dup = SAMPLE.replace("bfs_n64", "axpy_n256");
+        assert!(Manifest::parse(Path::new("."), &dup).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT execution of the AOT-compiled kernels — the functional half of the
+//! request path.
+//!
+//! Loads `artifacts/*.hlo.txt` (HLO *text*: the xla_extension 0.5.1 the
+//! `xla` crate embeds rejects jax>=0.5's 64-bit-id serialized protos; the
+//! text parser reassigns ids), compiles each once on the PJRT CPU client,
+//! caches the loaded executables, and runs jobs with concrete inputs.
+//! Python never runs here — the Rust binary is self-contained once
+//! `make artifacts` has produced the HLO files.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{ArtifactEntry, DType, Manifest};
+
+/// A typed host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F64 { data: Vec<f64>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+    U32 { data: Vec<u32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn scalar_f64(v: f64) -> Self {
+        Value::F64 {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Value::I32 {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        Value::U32 {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    pub fn vec_f64(data: Vec<f64>) -> Self {
+        let shape = vec![data.len()];
+        Value::F64 { data, shape }
+    }
+
+    pub fn mat_f64(data: Vec<f64>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Value::F64 {
+            data,
+            shape: vec![rows, cols],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F64 { shape, .. } | Value::I32 { shape, .. } | Value::U32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F64 { .. } => DType::F64,
+            Value::I32 { .. } => DType::I32,
+            Value::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Value::F64 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F64 { data, .. } => xla::Literal::vec1(data),
+            Value::I32 { data, .. } => xla::Literal::vec1(data),
+            Value::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.is_empty() {
+            // 0-d scalar: reshape from [1] to [].
+            Ok(lit.reshape(&[])?)
+        } else if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Value> {
+        Ok(match dtype {
+            DType::F64 => Value::F64 {
+                data: lit.to_vec::<f64>()?,
+                shape: shape.to_vec(),
+            },
+            DType::I32 => Value::I32 {
+                data: lit.to_vec::<i32>()?,
+                shape: shape.to_vec(),
+            },
+            DType::U32 => Value::U32 {
+                data: lit.to_vec::<u32>()?,
+                shape: shape.to_vec(),
+            },
+            DType::F32 => bail!("f32 outputs unused by this manifest"),
+        })
+    }
+}
+
+/// The PJRT runtime: client + manifest + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn entry(&self, id: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .get(id)
+            .ok_or_else(|| anyhow!("no artifact {id:?} in manifest"))
+    }
+
+    /// Compile (or fetch from cache) the executable of artifact `id`.
+    pub fn load(&self, id: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(id) {
+            return Ok(e.clone());
+        }
+        let entry = self.entry(id)?;
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {id}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(id.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute artifact `id` with `inputs`, validating shapes/dtypes
+    /// against the manifest. Returns the outputs in manifest order.
+    pub fn execute(&self, id: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let entry = self.entry(id)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{id}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (k, (v, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{id}: input {k} shape {:?} != manifest {:?}",
+                    v.shape(),
+                    spec.shape
+                );
+            }
+            if v.dtype() != spec.dtype {
+                bail!(
+                    "{id}: input {k} dtype {:?} != manifest {:?}",
+                    v.dtype(),
+                    spec.dtype
+                );
+            }
+        }
+        let exe = self.load(id)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let mut parts = result;
+        let elems = parts.decompose_tuple()?;
+        if elems.len() != entry.outputs.len() {
+            bail!(
+                "{id}: executable returned {} outputs, manifest says {}",
+                elems.len(),
+                entry.outputs.len()
+            );
+        }
+        elems
+            .iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec.dtype, &spec.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes_and_dtypes() {
+        let v = Value::mat_f64(vec![0.0; 6], 2, 3);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), DType::F64);
+        assert_eq!(Value::scalar_i32(7).shape(), &[] as &[usize]);
+        assert_eq!(Value::vec_f64(vec![1.0, 2.0]).as_f64().unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mat_validates_length() {
+        Value::mat_f64(vec![0.0; 5], 2, 3);
+    }
+}

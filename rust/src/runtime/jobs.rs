@@ -1,0 +1,107 @@
+//! Job-level bridge: `kernels::JobSpec` + generated inputs → PJRT
+//! execution → verification against the native references.
+//!
+//! This is what the coordinator calls on the request path: the DES
+//! provides the *cycle* cost of an offload, this module provides (and
+//! checks) its *numerics*.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::kernels::datagen::{self, JobExpected, JobInputs};
+use crate::kernels::JobSpec;
+
+use super::executor::{PjrtRuntime, Value};
+
+/// Build the PJRT input values of a job.
+pub fn values_for(spec: &JobSpec, inputs: &JobInputs) -> Result<Vec<Value>> {
+    Ok(match (spec, inputs) {
+        (JobSpec::Axpy { .. }, JobInputs::Axpy { alpha, x, y }) => vec![
+            Value::scalar_f64(*alpha),
+            Value::vec_f64(x.clone()),
+            Value::vec_f64(y.clone()),
+        ],
+        (JobSpec::MonteCarlo { .. }, JobInputs::MonteCarlo { seed }) => {
+            vec![Value::scalar_u32(*seed)]
+        }
+        (JobSpec::Matmul { m, n, k }, JobInputs::Matmul { a, b }) => vec![
+            Value::mat_f64(a.clone(), *m as usize, *k as usize),
+            Value::mat_f64(b.clone(), *k as usize, *n as usize),
+        ],
+        (JobSpec::Atax { m, n }, JobInputs::Atax { a, x }) => vec![
+            Value::mat_f64(a.clone(), *m as usize, *n as usize),
+            Value::vec_f64(x.clone()),
+        ],
+        (JobSpec::Covariance { m, n }, JobInputs::Covariance { data }) => {
+            vec![Value::mat_f64(data.clone(), *m as usize, *n as usize)]
+        }
+        (JobSpec::Bfs { nodes, .. }, JobInputs::Bfs { adj, src }) => vec![
+            Value::mat_f64(adj.clone(), *nodes as usize, *nodes as usize),
+            Value::scalar_i32(*src),
+        ],
+        _ => bail!("inputs do not match job spec {spec:?}"),
+    })
+}
+
+/// Execute `spec` on the runtime with `inputs`; returns the raw outputs.
+pub fn execute_job(rt: &PjrtRuntime, spec: &JobSpec, inputs: &JobInputs) -> Result<Vec<Value>> {
+    let id = spec.id();
+    let values = values_for(spec, inputs)?;
+    rt.execute(&id, &values)
+}
+
+/// Verify outputs against the expectation from `datagen::generate`.
+pub fn verify_job(spec: &JobSpec, expected: &JobExpected, outputs: &[Value]) -> Result<()> {
+    if outputs.len() != 1 {
+        bail!("expected single-output jobs, got {}", outputs.len());
+    }
+    match (spec.kind(), &outputs[0]) {
+        (crate::kernels::KernelKind::Bfs, Value::I32 { data, .. }) => {
+            datagen::verify_i32(expected, data).map_err(|e| anyhow!("{spec:?}: {e}"))
+        }
+        (_, Value::F64 { data, .. }) => {
+            datagen::verify_f64(expected, data, 1e-9, 1e-9).map_err(|e| anyhow!("{spec:?}: {e}"))
+        }
+        (k, v) => bail!("unexpected output dtype {:?} for {k:?}", v.dtype()),
+    }
+}
+
+/// Generate inputs, execute through PJRT, verify. The full functional
+/// round trip for one job; returns the outputs on success.
+pub fn run_and_verify(rt: &PjrtRuntime, spec: &JobSpec, seed: u64) -> Result<Vec<Value>> {
+    let (inputs, expected) = datagen::generate(spec, seed);
+    let outputs = execute_job(rt, spec, &inputs)?;
+    verify_job(spec, &expected, &outputs)?;
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_for_axpy_has_three_inputs() {
+        let spec = JobSpec::Axpy { n: 8 };
+        let (inputs, _) = datagen::generate(&spec, 1);
+        let v = values_for(&spec, &inputs).unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].shape(), &[] as &[usize]);
+        assert_eq!(v[1].shape(), &[8]);
+    }
+
+    #[test]
+    fn values_for_rejects_mismatched_inputs() {
+        let spec = JobSpec::Axpy { n: 8 };
+        let (inputs, _) = datagen::generate(&JobSpec::MonteCarlo { samples: 8 }, 1);
+        assert!(values_for(&spec, &inputs).is_err());
+    }
+
+    #[test]
+    fn verify_rejects_wrong_values() {
+        let spec = JobSpec::Axpy { n: 4 };
+        let expected = JobExpected::F64(vec![1.0, 2.0, 3.0, 4.0]);
+        let good = [Value::vec_f64(vec![1.0, 2.0, 3.0, 4.0])];
+        let bad = [Value::vec_f64(vec![1.0, 2.0, 3.0, 5.0])];
+        assert!(verify_job(&spec, &expected, &good).is_ok());
+        assert!(verify_job(&spec, &expected, &bad).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes the
+//! kernels' numerics on the request path. Python is never involved at
+//! runtime — see `/opt/xla-example/README.md` for the interchange
+//! gotchas this module encodes.
+
+pub mod artifact;
+pub mod executor;
+pub mod jobs;
+pub mod json;
+
+pub use artifact::{ArtifactEntry, DType, Manifest, TensorSpec};
+pub use executor::{PjrtRuntime, Value};
+pub use jobs::{execute_job, run_and_verify, values_for, verify_job};
+
+/// Default artifacts directory relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // Binaries run from the workspace root (cargo) or an arbitrary cwd;
+    // honor OCCAMY_ARTIFACTS when set.
+    if let Ok(dir) = std::env::var("OCCAMY_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::PathBuf::from("artifacts")
+}

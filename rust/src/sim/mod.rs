@@ -1,0 +1,12 @@
+//! Cycle-level simulation substrate: event engine, shared-resource
+//! contention models, and mcycle-style trace instrumentation. Together
+//! these replace the paper's QuestaSim RTL simulation (§5.1) — see
+//! DESIGN.md's substitution table.
+
+pub mod engine;
+pub mod server;
+pub mod trace;
+
+pub use engine::{EventQueue, Time};
+pub use server::{FifoServer, PsPort, RrPort, TransferId};
+pub use trace::{Phase, PhaseSpan, PhaseStats, Trace};

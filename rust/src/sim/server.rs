@@ -1,0 +1,401 @@
+//! Shared-resource contention models.
+//!
+//! Two arbitration disciplines cover every shared resource in the paper's
+//! analysis:
+//!
+//! * [`FifoServer`] — a single-ported resource serving one request at a
+//!   time in arrival order. Models the TCDM port of cluster 0 during the
+//!   *Retrieve job pointer/arguments* phases and the AMO serialization of
+//!   the software barrier counter (§5.5.C/D/H).
+//!
+//! * [`PsPort`] — a fluid processor-sharing server with a fixed aggregate
+//!   rate (1 beat/cycle at the 512-bit wide SPM interface). The paper
+//!   observes that "multiple short DMA transfers perfectly interleave,
+//!   thus taking the same amount of time as a single DMA transfer of
+//!   combined length at the SPM interface" (§5.5.E) — exactly
+//!   processor-sharing semantics. Models the wide SPM port shared by the
+//!   *Retrieve job operands* and *Writeback* DMA transfers of all clusters.
+
+use super::engine::Time;
+
+/// Single-server FIFO queue with deterministic service times.
+///
+/// Because service order equals arrival order and service times are known
+/// at arrival, completion times can be assigned eagerly: the server is a
+/// running "next free" watermark.
+#[derive(Debug, Clone, Default)]
+pub struct FifoServer {
+    next_free: Time,
+    served: u64,
+    busy_cycles: u64,
+}
+
+impl FifoServer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a request arriving at `at` needing `service` cycles.
+    /// Returns its completion time.
+    pub fn serve(&mut self, at: Time, service: Time) -> Time {
+        let start = self.next_free.max(at);
+        self.next_free = start + service;
+        self.served += 1;
+        self.busy_cycles += service;
+        self.next_free
+    }
+
+    /// Number of requests served.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Aggregate busy cycles (utilization numerator).
+    pub fn busy_cycles(&self) -> u64 {
+        self.busy_cycles
+    }
+
+    /// Time the server becomes idle given no further arrivals.
+    pub fn next_free(&self) -> Time {
+        self.next_free
+    }
+}
+
+/// Identifier of a transfer inside a [`PsPort`].
+pub type TransferId = u64;
+
+#[derive(Debug, Clone)]
+struct Active {
+    id: TransferId,
+    /// Remaining service in beats (fluid, fractional).
+    remaining: f64,
+}
+
+/// Fluid processor-sharing port: aggregate rate of 1 beat/cycle divided
+/// equally among active transfers.
+///
+/// Event-driven use: after any [`PsPort::join`], call
+/// [`PsPort::next_completion`] and schedule a check at that time carrying
+/// the returned generation stamp; on dispatch, drop stale generations and
+/// call [`PsPort::collect_finished`].
+#[derive(Debug, Clone, Default)]
+pub struct PsPort {
+    active: Vec<Active>,
+    last_update: Time,
+    generation: u64,
+    next_id: TransferId,
+    total_beats_served: f64,
+}
+
+impl PsPort {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn advance(&mut self, now: Time) {
+        debug_assert!(now >= self.last_update);
+        let elapsed = (now - self.last_update) as f64;
+        if elapsed > 0.0 && !self.active.is_empty() {
+            let share = elapsed / self.active.len() as f64;
+            for a in &mut self.active {
+                a.remaining -= share;
+            }
+            self.total_beats_served += elapsed.min(
+                self.active.len() as f64 * share, // == elapsed
+            );
+        }
+        self.last_update = now;
+    }
+
+    /// A transfer of `beats` joins the port at time `now`.
+    /// Returns its id and the new generation stamp.
+    pub fn join(&mut self, now: Time, beats: u64) -> (TransferId, u64) {
+        self.advance(now);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.active.push(Active {
+            id,
+            remaining: beats.max(1) as f64,
+        });
+        self.generation += 1;
+        (id, self.generation)
+    }
+
+    /// Earliest time any active transfer completes, with the generation
+    /// stamp that must still match when the event fires. `None` if idle.
+    pub fn next_completion(&self, now: Time) -> Option<(Time, u64)> {
+        let min = self
+            .active
+            .iter()
+            .map(|a| a.remaining)
+            .fold(f64::INFINITY, f64::min);
+        if min.is_finite() {
+            let k = self.active.len() as f64;
+            let dt = (min.max(0.0) * k).ceil() as Time;
+            Some((now + dt, self.generation))
+        } else {
+            None
+        }
+    }
+
+    /// True if `generation` is still the latest (the scheduled completion
+    /// check is not stale).
+    pub fn is_current(&self, generation: u64) -> bool {
+        self.generation == generation
+    }
+
+    /// Advance to `now` and remove every transfer with (numerically) zero
+    /// remaining service. Returns their ids. Bumps the generation if
+    /// anything finished (the sharing ratio changed).
+    pub fn collect_finished(&mut self, now: Time) -> Vec<TransferId> {
+        self.advance(now);
+        let mut done = Vec::new();
+        self.active.retain(|a| {
+            // f64 tolerance: a transfer is done when its fluid remainder
+            // is below half a beat-share of one cycle.
+            if a.remaining <= 1e-9 {
+                done.push(a.id);
+                false
+            } else {
+                true
+            }
+        });
+        if !done.is_empty() {
+            self.generation += 1;
+        }
+        done
+    }
+
+    /// Number of in-flight transfers.
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Total beats served so far (utilization accounting).
+    pub fn beats_served(&self) -> f64 {
+        self.total_beats_served
+    }
+}
+
+/// Transfer-granular round-robin port: the default model of the wide SPM
+/// interface.
+///
+/// One transfer occupies the port for its full beat count; pending
+/// transfers from different owners (clusters) are granted in round-robin
+/// order, transfers of the same owner in FIFO order. This reproduces both
+/// §5.5.E observations at once: the *last* completion equals the
+/// combined-length single transfer (perfect interleaving at the
+/// interface), while per-transfer grants stagger the per-cluster
+/// completion times — the offsets that make phase G effectively
+/// contention-free (§5.5.G) and that fair fluid sharing cannot produce.
+/// [`PsPort`] (fluid processor sharing) is retained as an ablation.
+#[derive(Debug, Clone)]
+pub struct RrPort {
+    queues: Vec<std::collections::VecDeque<(TransferId, u64)>>,
+    rr_cursor: usize,
+    busy: bool,
+    next_id: TransferId,
+    pending: usize,
+    busy_cycles: u64,
+}
+
+impl RrPort {
+    pub fn new(n_owners: usize) -> Self {
+        Self {
+            queues: vec![std::collections::VecDeque::new(); n_owners],
+            rr_cursor: 0,
+            busy: false,
+            next_id: 0,
+            pending: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// Queue a transfer of `beats` for `owner`. Returns its id.
+    pub fn submit(&mut self, owner: usize, beats: u64) -> TransferId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queues[owner].push_back((id, beats.max(1)));
+        self.pending += 1;
+        id
+    }
+
+    /// If the port is idle and work is pending, grant the next transfer
+    /// (round-robin over owners) and return `(id, beats)`. The caller
+    /// schedules the completion `beats` cycles later and then calls
+    /// [`RrPort::complete`].
+    pub fn try_grant(&mut self) -> Option<(TransferId, u64)> {
+        if self.busy || self.pending == 0 {
+            return None;
+        }
+        let n = self.queues.len();
+        for k in 0..n {
+            let owner = (self.rr_cursor + k) % n;
+            if let Some((id, beats)) = self.queues[owner].pop_front() {
+                self.rr_cursor = (owner + 1) % n;
+                self.busy = true;
+                self.pending -= 1;
+                self.busy_cycles += beats;
+                return Some((id, beats));
+            }
+        }
+        unreachable!("pending > 0 but no queued transfer found");
+    }
+
+    /// The granted transfer finished; the port is idle again.
+    pub fn complete(&mut self) {
+        assert!(self.busy, "complete on an idle port");
+        self.busy = false;
+    }
+
+    pub fn is_idle(&self) -> bool {
+        !self.busy
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn busy_cycles(&self) -> u64 {
+        self.busy_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_back_to_back() {
+        let mut s = FifoServer::new();
+        assert_eq!(s.serve(0, 2), 2);
+        assert_eq!(s.serve(0, 2), 4); // queued behind the first
+        assert_eq!(s.serve(10, 3), 13); // idle gap, starts at arrival
+        assert_eq!(s.served(), 3);
+        assert_eq!(s.busy_cycles(), 7);
+    }
+
+    #[test]
+    fn ps_single_transfer_runs_at_full_rate() {
+        let mut p = PsPort::new();
+        let (_, g) = p.join(0, 100);
+        let (t, g2) = p.next_completion(0).unwrap();
+        assert_eq!((t, g2), (100, g));
+        assert!(p.is_current(g));
+        let done = p.collect_finished(100);
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn ps_two_equal_transfers_share_fairly() {
+        // Two 100-beat transfers arriving together behave like one 200-beat
+        // transfer (§5.5.E: perfect interleaving), both finishing at 200.
+        let mut p = PsPort::new();
+        p.join(0, 100);
+        p.join(0, 100);
+        let (t, _) = p.next_completion(0).unwrap();
+        assert_eq!(t, 200);
+        assert_eq!(p.collect_finished(200).len(), 2);
+    }
+
+    #[test]
+    fn ps_staggered_arrival() {
+        // T1 (100 beats) at t=0; T2 (100 beats) at t=50. T1 has 50 left,
+        // shared rate 1/2 -> T1 done at 150. T2 then alone with 50 left ->
+        // done at 200. Total port busy = 200 = total beats. Work conserving.
+        let mut p = PsPort::new();
+        p.join(0, 100);
+        let (t1, _) = p.next_completion(0).unwrap();
+        assert_eq!(t1, 100);
+        p.join(50, 100);
+        let (t, g) = p.next_completion(50).unwrap();
+        assert_eq!(t, 150);
+        assert!(p.is_current(g));
+        assert_eq!(p.collect_finished(150).len(), 1);
+        let (t2, _) = p.next_completion(150).unwrap();
+        assert_eq!(t2, 200);
+        assert_eq!(p.collect_finished(200).len(), 1);
+    }
+
+    #[test]
+    fn ps_stale_generation_detected() {
+        let mut p = PsPort::new();
+        let (_, g1) = p.join(0, 100);
+        let (_, g2) = p.join(10, 100);
+        assert!(!p.is_current(g1));
+        assert!(p.is_current(g2));
+    }
+
+    #[test]
+    fn ps_zero_beat_transfer_counts_as_one() {
+        let mut p = PsPort::new();
+        p.join(0, 0);
+        let (t, _) = p.next_completion(0).unwrap();
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn rr_single_owner_fifo() {
+        let mut p = RrPort::new(2);
+        p.submit(0, 10);
+        p.submit(0, 20);
+        let (id1, b1) = p.try_grant().unwrap();
+        assert_eq!(b1, 10);
+        assert!(p.try_grant().is_none(), "port busy");
+        p.complete();
+        let (id2, b2) = p.try_grant().unwrap();
+        assert_eq!(b2, 20);
+        assert!(id2 > id1);
+        p.complete();
+        assert!(p.try_grant().is_none());
+    }
+
+    #[test]
+    fn rr_alternates_between_owners() {
+        // Two owners submit (x, y) pairs: grant order is x0 x1 y0 y1 —
+        // the §5.5.E multicast pattern where no cluster's second transfer
+        // runs back-to-back with its first.
+        let mut p = RrPort::new(2);
+        let x0 = p.submit(0, 4);
+        let x1 = p.submit(1, 4);
+        let y0 = p.submit(0, 4);
+        let y1 = p.submit(1, 4);
+        let mut order = Vec::new();
+        while let Some((id, _)) = p.try_grant() {
+            order.push(id);
+            p.complete();
+        }
+        assert_eq!(order, vec![x0, x1, y0, y1]);
+    }
+
+    #[test]
+    fn rr_last_completion_equals_combined_length() {
+        // Work conservation: total busy time == sum of beats.
+        let mut p = RrPort::new(4);
+        for o in 0..4 {
+            p.submit(o, 32);
+            p.submit(o, 32);
+        }
+        let mut t = 0u64;
+        while let Some((_, beats)) = p.try_grant() {
+            t += beats;
+            p.complete();
+        }
+        assert_eq!(t, 8 * 32);
+        assert_eq!(p.busy_cycles(), 256);
+    }
+
+    #[test]
+    fn rr_zero_beats_counts_as_one() {
+        let mut p = RrPort::new(1);
+        p.submit(0, 0);
+        assert_eq!(p.try_grant().unwrap().1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "idle port")]
+    fn rr_complete_when_idle_panics() {
+        let mut p = RrPort::new(1);
+        p.complete();
+    }
+}

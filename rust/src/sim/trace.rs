@@ -1,0 +1,236 @@
+//! Trace instrumentation — the mcycle-CSR equivalent (§5.1).
+//!
+//! The paper instruments program segments with single-cycle `mcycle` reads
+//! and reconstructs phase runtimes from simulation timestamps. Here the
+//! executor records a [`PhaseSpan`] per (cluster, phase) plus the
+//! host-side spans, and [`Trace`] computes the min/avg/max statistics that
+//! Fig. 11 plots.
+
+use std::collections::BTreeMap;
+
+
+use super::engine::Time;
+
+/// The nine phases of the offload process (§4.1, Fig. 3).
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash,
+)]
+pub enum Phase {
+    /// A) Send job information (host).
+    SendInfo,
+    /// B) Wakeup.
+    Wakeup,
+    /// C) Retrieve job pointer.
+    RetrievePtr,
+    /// D) Retrieve job arguments.
+    RetrieveArgs,
+    /// E) Retrieve job operands.
+    RetrieveOperands,
+    /// F) Job execution.
+    Execute,
+    /// G) Writeback job outputs.
+    Writeback,
+    /// H) Notify job completion.
+    Notify,
+    /// I) Resume operation on host.
+    Resume,
+}
+
+impl Phase {
+    /// All phases in pipeline order.
+    pub const ALL: [Phase; 9] = [
+        Phase::SendInfo,
+        Phase::Wakeup,
+        Phase::RetrievePtr,
+        Phase::RetrieveArgs,
+        Phase::RetrieveOperands,
+        Phase::Execute,
+        Phase::Writeback,
+        Phase::Notify,
+        Phase::Resume,
+    ];
+
+    /// Paper letter (A..I).
+    pub fn letter(&self) -> char {
+        match self {
+            Phase::SendInfo => 'A',
+            Phase::Wakeup => 'B',
+            Phase::RetrievePtr => 'C',
+            Phase::RetrieveArgs => 'D',
+            Phase::RetrieveOperands => 'E',
+            Phase::Execute => 'F',
+            Phase::Writeback => 'G',
+            Phase::Notify => 'H',
+            Phase::Resume => 'I',
+        }
+    }
+
+    /// Human-readable name as in Fig. 3.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::SendInfo => "Send job information",
+            Phase::Wakeup => "Wakeup",
+            Phase::RetrievePtr => "Retrieve job pointer",
+            Phase::RetrieveArgs => "Retrieve job arguments",
+            Phase::RetrieveOperands => "Retrieve job operands",
+            Phase::Execute => "Job execution",
+            Phase::Writeback => "Writeback job outputs",
+            Phase::Notify => "Notify job completion",
+            Phase::Resume => "Resume operation on host",
+        }
+    }
+
+    /// True for the phases that run on CVA6 only.
+    pub fn is_host_phase(&self) -> bool {
+        matches!(self, Phase::SendInfo | Phase::Resume)
+    }
+}
+
+/// A measured [start, end) interval, in cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseSpan {
+    pub start: Time,
+    pub end: Time,
+}
+
+impl PhaseSpan {
+    pub fn new(start: Time, end: Time) -> Self {
+        assert!(end >= start, "span ends before it starts: {start}..{end}");
+        Self { start, end }
+    }
+
+    pub fn duration(&self) -> Time {
+        self.end - self.start
+    }
+}
+
+/// min/avg/max of a phase duration across clusters (Fig. 11's bands).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseStats {
+    pub min: Time,
+    pub max: Time,
+    pub avg: f64,
+    pub n: usize,
+}
+
+/// Full execution trace of one offloaded job.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Per-cluster spans: `cluster_spans[c][phase]`.
+    pub cluster_spans: Vec<BTreeMap<Phase, PhaseSpan>>,
+    /// Host-side spans (A and I; B's host part is folded into B).
+    pub host_spans: BTreeMap<Phase, PhaseSpan>,
+    /// End-to-end runtime: 0 to host-resume end (offloaded runs) or to the
+    /// last cluster writeback (ideal runs).
+    pub total: Time,
+    /// Events the engine dispatched (perf accounting).
+    pub events: u64,
+}
+
+impl Trace {
+    pub fn new(n_clusters: usize) -> Self {
+        Self {
+            cluster_spans: vec![BTreeMap::new(); n_clusters],
+            ..Default::default()
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.cluster_spans.len()
+    }
+
+    /// Record a per-cluster phase span.
+    pub fn record(&mut self, cluster: usize, phase: Phase, span: PhaseSpan) {
+        let prev = self.cluster_spans[cluster].insert(phase, span);
+        debug_assert!(prev.is_none(), "phase {phase:?} recorded twice on {cluster}");
+    }
+
+    /// Record a host phase span.
+    pub fn record_host(&mut self, phase: Phase, span: PhaseSpan) {
+        self.host_spans.insert(phase, span);
+    }
+
+    /// min/avg/max duration of `phase` across clusters; `None` if no
+    /// cluster ran it.
+    pub fn stats(&self, phase: Phase) -> Option<PhaseStats> {
+        let durs: Vec<Time> = self
+            .cluster_spans
+            .iter()
+            .filter_map(|m| m.get(&phase))
+            .map(|s| s.duration())
+            .collect();
+        if durs.is_empty() {
+            return None;
+        }
+        Some(PhaseStats {
+            min: *durs.iter().min().unwrap(),
+            max: *durs.iter().max().unwrap(),
+            avg: durs.iter().sum::<Time>() as f64 / durs.len() as f64,
+            n: durs.len(),
+        })
+    }
+
+    /// Duration of a host phase.
+    pub fn host_duration(&self, phase: Phase) -> Option<Time> {
+        self.host_spans.get(&phase).map(|s| s.duration())
+    }
+
+    /// Start-time skew of a phase: latest start − earliest start across
+    /// clusters (the "offset" driving the paper's second-order effects).
+    pub fn start_skew(&self, phase: Phase) -> Option<Time> {
+        let starts: Vec<Time> = self
+            .cluster_spans
+            .iter()
+            .filter_map(|m| m.get(&phase))
+            .map(|s| s.start)
+            .collect();
+        if starts.is_empty() {
+            return None;
+        }
+        Some(starts.iter().max().unwrap() - starts.iter().min().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_letters_cover_a_to_i() {
+        let letters: Vec<char> = Phase::ALL.iter().map(|p| p.letter()).collect();
+        assert_eq!(letters, vec!['A', 'B', 'C', 'D', 'E', 'F', 'G', 'H', 'I']);
+    }
+
+    #[test]
+    fn stats_min_avg_max() {
+        let mut t = Trace::new(3);
+        t.record(0, Phase::Execute, PhaseSpan::new(10, 20)); // 10
+        t.record(1, Phase::Execute, PhaseSpan::new(10, 40)); // 30
+        t.record(2, Phase::Execute, PhaseSpan::new(12, 32)); // 20
+        let s = t.stats(Phase::Execute).unwrap();
+        assert_eq!((s.min, s.max), (10, 30));
+        assert!((s.avg - 20.0).abs() < 1e-12);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn start_skew() {
+        let mut t = Trace::new(2);
+        t.record(0, Phase::RetrieveOperands, PhaseSpan::new(100, 150));
+        t.record(1, Phase::RetrieveOperands, PhaseSpan::new(130, 180));
+        assert_eq!(t.start_skew(Phase::RetrieveOperands), Some(30));
+    }
+
+    #[test]
+    fn missing_phase_has_no_stats() {
+        let t = Trace::new(2);
+        assert!(t.stats(Phase::Wakeup).is_none());
+        assert!(t.start_skew(Phase::Wakeup).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "ends before")]
+    fn span_validates() {
+        PhaseSpan::new(5, 4);
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration tests of the coordinator service: queueing, planning, JCU
+//! bookkeeping, metrics — in timing-only mode and (when artifacts exist)
+//! against the real PJRT runtime.
+
+use std::path::PathBuf;
+
+use occamy_offload::config::Config;
+use occamy_offload::coordinator::{
+    Coordinator, CoordinatorConfig, JobRequest, Placement,
+};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::RoutineKind;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var("OCCAMY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn timing_coordinator() -> Coordinator {
+    Coordinator::start(
+        CoordinatorConfig {
+            cfg: Config::default(),
+            queue_depth: 8,
+            timing_only: true,
+        },
+        None,
+    )
+    .unwrap()
+}
+
+#[test]
+fn hundred_mixed_jobs_timing_only() {
+    let c = timing_coordinator();
+    let mix = [
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::Atax { m: 64, n: 64 },
+        JobSpec::MonteCarlo { samples: 8192 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+    ];
+    let submitter = c.submitter();
+    let h = std::thread::spawn(move || {
+        for i in 0..100u64 {
+            submitter
+                .submit(JobRequest::new(i, mix[i as usize % mix.len()]))
+                .unwrap();
+        }
+    });
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..100 {
+        let r = c.recv().unwrap();
+        assert!(seen.insert(r.id), "duplicate result id {}", r.id);
+        assert!(r.cycles > 0);
+    }
+    h.join().unwrap();
+    let m = c.shutdown();
+    assert_eq!(m.completed, 100);
+    assert_eq!(m.latency.count(), 100);
+    assert!(m.jobs_per_sim_second() > 0.0);
+}
+
+#[test]
+fn planner_places_mixed_sizes_sensibly() {
+    let c = timing_coordinator();
+    c.submit(JobRequest::new(0, JobSpec::Axpy { n: 8 })).unwrap();
+    c.submit(JobRequest::new(1, JobSpec::MonteCarlo { samples: 1 << 16 }))
+        .unwrap();
+    let mut host = 0;
+    let mut accel_wide = 0;
+    for _ in 0..2 {
+        let r = c.recv().unwrap();
+        match r.placement {
+            Placement::Host => host += 1,
+            Placement::Accelerator { n_clusters } => {
+                assert!(n_clusters >= 16);
+                accel_wide += 1;
+            }
+        }
+    }
+    c.shutdown();
+    assert_eq!((host, accel_wide), (1, 1));
+}
+
+#[test]
+fn routine_comparison_through_coordinator() {
+    // Baseline vs multicast through the service: multicast never slower.
+    let c = timing_coordinator();
+    let spec = JobSpec::Axpy { n: 1024 };
+    c.submit(
+        JobRequest::new(0, spec)
+            .with_clusters(16)
+            .with_routine(RoutineKind::Baseline),
+    )
+    .unwrap();
+    c.submit(
+        JobRequest::new(1, spec)
+            .with_clusters(16)
+            .with_routine(RoutineKind::Multicast),
+    )
+    .unwrap();
+    let a = c.recv().unwrap();
+    let b = c.recv().unwrap();
+    let (base, mcast) = if a.routine == RoutineKind::Baseline {
+        (a, b)
+    } else {
+        (b, a)
+    };
+    assert!(mcast.cycles < base.cycles);
+    c.shutdown();
+}
+
+#[test]
+fn model_estimates_accompany_results() {
+    let c = timing_coordinator();
+    c.submit(JobRequest::new(0, JobSpec::Axpy { n: 1024 }).with_clusters(8))
+        .unwrap();
+    let r = c.recv().unwrap();
+    // Estimate within the paper's 15% of the simulated cycles.
+    let err = (r.estimated_cycles as f64 - r.cycles as f64).abs() / r.cycles as f64;
+    assert!(err < 0.15, "estimate {} vs sim {}", r.estimated_cycles, r.cycles);
+    c.shutdown();
+}
+
+#[test]
+fn full_stack_with_pjrt_verification() {
+    let Some(dir) = artifacts() else { return };
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            cfg: Config::default(),
+            queue_depth: 8,
+            timing_only: false,
+        },
+        Some(&dir),
+    )
+    .unwrap();
+    let mix = [
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::Matmul { m: 32, n: 32, k: 32 },
+        JobSpec::Covariance { m: 32, n: 64 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+    ];
+    for i in 0..12u64 {
+        c.submit(JobRequest::new(i, mix[i as usize % mix.len()]))
+            .unwrap();
+    }
+    for _ in 0..12 {
+        let r = c.recv().unwrap();
+        assert!(r.verified, "job {} {:?} failed verification", r.id, r.spec);
+    }
+    let m = c.shutdown();
+    assert_eq!(m.verified, 12);
+    assert_eq!(m.verification_failures, 0);
+    assert!(m.pjrt_micros.mean() > 0.0);
+}
+
+#[test]
+fn shutdown_with_queued_jobs_drains() {
+    let c = timing_coordinator();
+    for i in 0..4u64 {
+        c.submit(JobRequest::new(i, JobSpec::Axpy { n: 256 })).unwrap();
+    }
+    // Shut down immediately: queued jobs still complete (close-then-drain).
+    let m = c.shutdown();
+    assert_eq!(m.completed, 4);
+}

@@ -1,0 +1,123 @@
+//! Integration tests of the analytical model against the simulator and
+//! the planner built on top of it (§5.6).
+
+use occamy_offload::config::Config;
+use occamy_offload::coordinator::{Placement, Planner};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::model::{max_rel_error, validate_grid, OffloadModel};
+use occamy_offload::offload::{run_offload, RoutineKind};
+
+#[test]
+fn model_error_below_15_percent_full_grid() {
+    // The paper's Fig. 12 claim over all six kernels at small sizes.
+    let cfg = Config::default();
+    let specs = [
+        JobSpec::Axpy { n: 256 },
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::MonteCarlo { samples: 1024 },
+        JobSpec::MonteCarlo { samples: 16384 },
+        JobSpec::Matmul { m: 16, n: 16, k: 16 },
+        JobSpec::Matmul { m: 64, n: 64, k: 64 },
+        JobSpec::Atax { m: 32, n: 32 },
+        JobSpec::Atax { m: 128, n: 128 },
+        JobSpec::Covariance { m: 32, n: 64 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+    ];
+    let pts = validate_grid(&cfg, &specs, &[1, 2, 4, 8, 16, 32]);
+    let max = max_rel_error(&pts);
+    assert!(max < 0.15, "max error {max:.3}");
+}
+
+#[test]
+fn model_is_calibration_aware() {
+    // Scaling a timing constant moves both model and simulation together:
+    // the error bound survives a +50% DMA latency ablation.
+    let mut cfg = Config::default();
+    cfg.timing.dma_roundtrip += 28;
+    let specs = [JobSpec::Axpy { n: 512 }, JobSpec::Atax { m: 64, n: 64 }];
+    let pts = validate_grid(&cfg, &specs, &[1, 4, 16, 32]);
+    assert!(max_rel_error(&pts) < 0.15);
+}
+
+#[test]
+fn model_upper_phases_match_trace() {
+    // Phase-level agreement, not just totals: B/C/H estimates must be
+    // within a few cycles of the simulated multicast phases.
+    let cfg = Config::default();
+    let spec = JobSpec::Axpy { n: 1024 };
+    let model = OffloadModel::new(&cfg);
+    let est = model.phases(&spec, 8);
+    let trace = run_offload(&cfg, &spec, 8, RoutineKind::Multicast);
+    use occamy_offload::sim::Phase;
+    let b_sim = trace.stats(Phase::Wakeup).unwrap().max;
+    let b_est = est.get(Phase::Wakeup);
+    assert!((b_sim as i64 - b_est as i64).abs() <= 3, "B: sim {b_sim} est {b_est}");
+    let c_sim = trace.stats(Phase::RetrievePtr).unwrap().max;
+    let c_est = est.get(Phase::RetrievePtr);
+    assert!((c_sim as i64 - c_est as i64).abs() <= 3, "C: sim {c_sim} est {c_est}");
+}
+
+#[test]
+fn planner_beats_naive_all_clusters_policy() {
+    // The paper's motivation: the offload decision is non-trivial. For a
+    // broadcast-class kernel the model-driven cluster count must beat
+    // always-use-32.
+    let cfg = Config::default();
+    let planner = Planner::new(&cfg);
+    let spec = JobSpec::Atax { m: 64, n: 64 };
+    let plan = planner.plan(&spec);
+    let naive = run_offload(&cfg, &spec, 32, RoutineKind::Multicast).total;
+    match plan.placement {
+        Placement::Accelerator { n_clusters } => {
+            let chosen = run_offload(&cfg, &spec, n_clusters, RoutineKind::Multicast).total;
+            assert!(
+                chosen < naive,
+                "planner's {n_clusters} clusters ({chosen}) should beat 32 ({naive})"
+            );
+        }
+        Placement::Host => {
+            assert!(plan.host_estimate < naive);
+        }
+    }
+}
+
+#[test]
+fn planner_monotone_in_problem_size() {
+    // Larger AXPYs never get *fewer* clusters.
+    let cfg = Config::default();
+    let planner = Planner::new(&cfg);
+    let mut prev = 0usize;
+    for n in [64u64, 256, 1024, 4096, 16384, 65536] {
+        let plan = planner.plan(&JobSpec::Axpy { n });
+        let c = match plan.placement {
+            Placement::Host => 0,
+            Placement::Accelerator { n_clusters } => n_clusters,
+        };
+        assert!(c >= prev, "axpy {n}: {prev} -> {c} clusters");
+        prev = c;
+    }
+    assert!(prev >= 16, "largest AXPY should use many clusters");
+}
+
+#[test]
+fn model_estimate_is_fast() {
+    // The model exists to make offload decisions cheap: three orders of
+    // magnitude faster than simulating (sanity check, not a benchmark).
+    let cfg = Config::default();
+    let model = OffloadModel::new(&cfg);
+    let spec = JobSpec::Axpy { n: 4096 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..1000 {
+        std::hint::black_box(model.estimate(&spec, 32));
+    }
+    let model_time = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..10 {
+        std::hint::black_box(run_offload(&cfg, &spec, 32, RoutineKind::Multicast));
+    }
+    let sim_time = t1.elapsed() * 100; // scale to 1000 runs
+    assert!(
+        model_time * 20 < sim_time,
+        "model {model_time:?} vs sim {sim_time:?}"
+    );
+}

@@ -1,0 +1,156 @@
+//! Integration tests of the offload framework across modules: the full
+//! phase pipeline on the simulated SoC, config ablations, and the
+//! paper's cross-cutting claims that involve more than one subsystem.
+
+use occamy_offload::config::Config;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::{run_offload, run_triple, RoutineKind};
+use occamy_offload::sim::Phase;
+
+#[test]
+fn full_sweep_all_kernels_all_routines() {
+    // Smoke the entire configuration space end to end.
+    let cfg = Config::default();
+    let specs = [
+        JobSpec::Axpy { n: 1024 },
+        JobSpec::MonteCarlo { samples: 4096 },
+        JobSpec::Matmul { m: 32, n: 32, k: 32 },
+        JobSpec::Atax { m: 64, n: 64 },
+        JobSpec::Covariance { m: 32, n: 64 },
+        JobSpec::Bfs { nodes: 64, levels: 4 },
+    ];
+    for spec in &specs {
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            for r in RoutineKind::ALL {
+                let t = run_offload(&cfg, spec, n, r);
+                assert!(t.total > 0, "{spec:?}@{n} {r:?}");
+                assert_eq!(t.n_clusters(), n);
+            }
+        }
+    }
+}
+
+#[test]
+fn second_order_effect_atax_overhead_saturates() {
+    // §5.2: for transfer-heavy kernels, part of the offload-phase time is
+    // repaid as reduced contention stalls ("up to as much time as the
+    // offset between Phase E on the first and last cluster"), so the
+    // effective ATAX overhead flattens while e.g. Monte Carlo's (no
+    // operand traffic to absorb anything) keeps growing.
+    let cfg = Config::default();
+    let atax = JobSpec::Atax { m: 64, n: 64 };
+    let mc = JobSpec::MonteCarlo { samples: 16384 };
+    let atax_8 = run_triple(&cfg, &atax, 8).runtimes(8).overhead();
+    let atax_32 = run_triple(&cfg, &atax, 32).runtimes(32).overhead();
+    let mc_8 = run_triple(&cfg, &mc, 8).runtimes(8).overhead();
+    let mc_32 = run_triple(&cfg, &mc, 32).runtimes(32).overhead();
+    assert!(
+        (atax_32 - atax_8) < (mc_32 - mc_8) / 4,
+        "ATAX grew {} vs MC {}",
+        atax_32 - atax_8,
+        mc_32 - mc_8
+    );
+}
+
+#[test]
+fn baseline_phase_e_start_skew_exceeds_multicast() {
+    // The baseline's sequential wakeup staggers phase E starts; multicast
+    // starts them (near-)simultaneously — the mechanism behind Fig. 11's
+    // min/max bands.
+    let cfg = Config::default();
+    let spec = JobSpec::Axpy { n: 1024 };
+    let base = run_offload(&cfg, &spec, 32, RoutineKind::Baseline);
+    let mcast = run_offload(&cfg, &spec, 32, RoutineKind::Multicast);
+    let skew_base = base.start_skew(Phase::RetrieveOperands).unwrap();
+    let skew_mcast = mcast.start_skew(Phase::RetrieveOperands).unwrap();
+    assert!(
+        skew_base > 10 * skew_mcast.max(1),
+        "baseline skew {skew_base} vs multicast {skew_mcast}"
+    );
+}
+
+#[test]
+fn wakeup_order_is_reversed_in_baseline() {
+    // §5.5.H: clusters wake highest-index-first so cluster 0 arrives at
+    // the barrier last.
+    let cfg = Config::default();
+    let spec = JobSpec::MonteCarlo { samples: 4096 };
+    let t = run_offload(&cfg, &spec, 8, RoutineKind::Baseline);
+    let wake_end = |c: usize| t.cluster_spans[c][&Phase::Wakeup].end;
+    for c in 1..8 {
+        assert!(
+            wake_end(c) < wake_end(c - 1),
+            "cluster {c} should wake before {}",
+            c - 1
+        );
+    }
+}
+
+#[test]
+fn config_ablation_smaller_soc() {
+    // The simulator honors non-default geometries: a 2-quadrant SoC.
+    let mut cfg = Config::default();
+    cfg.soc.n_quadrants = 2;
+    assert_eq!(cfg.soc.n_clusters(), 8);
+    let spec = JobSpec::Axpy { n: 1024 };
+    let t = run_triple(&cfg, &spec, 8).runtimes(8);
+    assert!(t.ideal <= t.improved && t.improved <= t.base);
+}
+
+#[test]
+fn config_roundtrip_preserves_results() {
+    // Serializing and re-parsing the config must not change timing.
+    let cfg = Config::default();
+    let cfg2 = Config::from_toml(&cfg.to_toml()).unwrap();
+    assert_eq!(cfg, cfg2);
+    let spec = JobSpec::Atax { m: 64, n: 64 };
+    assert_eq!(
+        run_offload(&cfg, &spec, 16, RoutineKind::Baseline).total,
+        run_offload(&cfg2, &spec, 16, RoutineKind::Baseline).total
+    );
+}
+
+#[test]
+fn faster_noc_reduces_residual_overhead() {
+    // Cutting the narrow-NoC hop latencies must reduce the multicast
+    // routine's residual overhead (it is dominated by interrupt travel,
+    // §5.4: "physical factors which cannot be trivially eliminated").
+    let cfg = Config::default();
+    let mut fast = cfg.clone();
+    fast.timing.narrow_host_to_top = 1;
+    fast.timing.narrow_top_to_quad = 1;
+    fast.timing.narrow_quad_to_cluster = 1;
+    fast.timing.cluster_wake = 8;
+    let spec = JobSpec::Axpy { n: 1024 };
+    let slow_res = run_triple(&cfg, &spec, 16).runtimes(16).residual_overhead();
+    let fast_res = run_triple(&fast, &spec, 16).runtimes(16).residual_overhead();
+    assert!(
+        fast_res < slow_res,
+        "residual should shrink: {slow_res} -> {fast_res}"
+    );
+}
+
+#[test]
+fn single_cluster_offload_has_no_remote_phases() {
+    let cfg = Config::default();
+    let spec = JobSpec::Axpy { n: 256 };
+    let t = run_offload(&cfg, &spec, 1, RoutineKind::Baseline);
+    // Phase C on cluster 0 is a local access: just a few cycles.
+    let c = t.stats(Phase::RetrievePtr).unwrap();
+    assert!(c.max <= 10, "local pointer load took {}", c.max);
+}
+
+#[test]
+fn empty_workload_clusters_still_synchronize() {
+    // AXPY with fewer elements than clusters: surplus clusters skip E/G
+    // but still participate in wakeup and completion notification.
+    let cfg = Config::default();
+    let spec = JobSpec::Axpy { n: 4 };
+    for r in [RoutineKind::Baseline, RoutineKind::Multicast] {
+        let t = run_offload(&cfg, &spec, 32, r);
+        assert!(t.total > 0);
+        let e = t.stats(Phase::RetrieveOperands).unwrap();
+        assert_eq!(e.n, 32, "every cluster records phase E (even zero-length)");
+        assert_eq!(e.min, 0, "surplus clusters have empty phase E");
+    }
+}

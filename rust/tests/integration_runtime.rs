@@ -1,0 +1,168 @@
+//! Integration tests of the PJRT runtime against the real AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (with a loud
+//! message) when the manifest is absent so `cargo test` works in a fresh
+//! checkout, and the Makefile's `test` target guarantees the full path.
+
+use std::path::PathBuf;
+
+use occamy_offload::kernels::datagen::{self, JobInputs};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::runtime::{
+    execute_job, run_and_verify, values_for, verify_job, PjrtRuntime, Value,
+};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var("OCCAMY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn every_manifest_artifact_loads_and_verifies() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    let entries = rt.manifest().entries.clone();
+    assert!(entries.len() >= 12, "expected the full variant set");
+    for e in &entries {
+        let spec = match e.kernel.as_str() {
+            "axpy" => JobSpec::Axpy { n: e.params["n"] },
+            "montecarlo" => JobSpec::MonteCarlo {
+                samples: e.params["n"],
+            },
+            "matmul" => JobSpec::Matmul {
+                m: e.params["m"],
+                n: e.params["n"],
+                k: e.params["k"],
+            },
+            "atax" => JobSpec::Atax {
+                m: e.params["m"],
+                n: e.params["n"],
+            },
+            "covariance" => JobSpec::Covariance {
+                m: e.params["m"],
+                n: e.params["n"],
+            },
+            "bfs" => JobSpec::Bfs {
+                nodes: e.params["n"],
+                levels: 4,
+            },
+            other => panic!("unknown kernel {other}"),
+        };
+        run_and_verify(&rt, &spec, 1234).unwrap_or_else(|err| {
+            panic!("{} failed: {err:#}", e.id);
+        });
+    }
+}
+
+#[test]
+fn executables_are_cached_across_calls() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let spec = JobSpec::Axpy { n: 256 };
+    run_and_verify(&rt, &spec, 1).unwrap();
+    let cached = rt.cached();
+    run_and_verify(&rt, &spec, 2).unwrap();
+    assert_eq!(rt.cached(), cached, "second run must reuse the executable");
+}
+
+#[test]
+fn shape_mismatch_is_rejected_before_execution() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    // axpy_n256 expects [256] vectors; feed [128].
+    let bad = vec![
+        Value::scalar_f64(1.0),
+        Value::vec_f64(vec![0.0; 128]),
+        Value::vec_f64(vec![0.0; 128]),
+    ];
+    let err = rt.execute("axpy_n256", &bad).unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "{err:#}");
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    assert!(rt.execute("axpy_n31337", &[]).is_err());
+}
+
+#[test]
+fn pjrt_results_match_reference_bitwise_shapes() {
+    // Cross-check a matmul end to end and inspect the output tensor.
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let spec = JobSpec::Matmul { m: 32, n: 32, k: 32 };
+    let (inputs, expected) = datagen::generate(&spec, 99);
+    let out = execute_job(&rt, &spec, &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[32, 32]);
+    verify_job(&spec, &expected, &out).unwrap();
+}
+
+#[test]
+fn tampered_result_fails_verification() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let spec = JobSpec::Axpy { n: 256 };
+    let (inputs, expected) = datagen::generate(&spec, 5);
+    let mut out = execute_job(&rt, &spec, &inputs).unwrap();
+    if let Value::F64 { data, .. } = &mut out[0] {
+        data[0] += 1.0;
+    }
+    assert!(verify_job(&spec, &expected, &out).is_err());
+}
+
+#[test]
+fn montecarlo_artifact_estimates_pi() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let spec = JobSpec::MonteCarlo { samples: 4096 };
+    let (inputs, _) = datagen::generate(&spec, 7);
+    let out = execute_job(&rt, &spec, &inputs).unwrap();
+    let pi = out[0].as_f64().unwrap()[0];
+    assert!((pi - std::f64::consts::PI).abs() < 0.2, "pi estimate {pi}");
+    // Deterministic per seed.
+    let out2 = execute_job(&rt, &spec, &inputs).unwrap();
+    assert_eq!(out[0], out2[0]);
+}
+
+#[test]
+fn bfs_artifact_returns_exact_distances() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let spec = JobSpec::Bfs {
+        nodes: 64,
+        levels: 4,
+    };
+    let (inputs, expected) = datagen::generate(&spec, 21);
+    let JobInputs::Bfs { .. } = &inputs else {
+        panic!()
+    };
+    let out = execute_job(&rt, &spec, &inputs).unwrap();
+    verify_job(&spec, &expected, &out).unwrap();
+    let dist = out[0].as_i32().unwrap();
+    assert_eq!(dist[0], 0, "source at distance 0");
+    assert!(dist.iter().all(|&d| d >= 0), "layered graphs are connected");
+}
+
+#[test]
+fn values_roundtrip_2d_layouts() {
+    // Row-major layout preserved through the Literal reshape path: build
+    // an asymmetric matmul and compare against the native reference.
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let spec = JobSpec::Covariance { m: 32, n: 64 };
+    let (inputs, expected) = datagen::generate(&spec, 3);
+    let v = values_for(&spec, &inputs).unwrap();
+    assert_eq!(v[0].shape(), &[32, 64]);
+    let out = rt.execute(&spec.id(), &v).unwrap();
+    verify_job(&spec, &expected, &out).unwrap();
+}

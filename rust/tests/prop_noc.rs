@@ -1,0 +1,148 @@
+//! Property tests of the multicast NoC (§4.2): the mask-encoded address
+//! sets, the paper's one-line match rule, and two-level XBAR routing.
+
+mod prop_util;
+
+use occamy_offload::config::Config;
+use occamy_offload::noc::{MaskedAddr, NarrowNoc};
+use occamy_offload::rng::Rng64;
+use prop_util::prop;
+
+const STRIDE: u64 = 0x40000;
+
+fn random_subcube(rng: &mut Rng64, max_bits: u32) -> Vec<usize> {
+    // A subcube of the 5-bit cluster index space: pick don't-care bits
+    // and a base agreeing on the fixed bits.
+    let n_dc = rng.gen_range_usize(0, max_bits as usize + 1);
+    let mut dc_bits: Vec<u32> = (0..5).collect();
+    // shuffle-ish: pick n_dc distinct bits
+    let mut mask = 0usize;
+    for _ in 0..n_dc {
+        loop {
+            let b = dc_bits[rng.gen_range_usize(0, dc_bits.len())];
+            if mask & (1 << b) == 0 {
+                mask |= 1 << b;
+                break;
+            }
+        }
+    }
+    let base = rng.gen_range_usize(0, 32) & !mask;
+    let mut out = Vec::new();
+    let bits: Vec<usize> = (0..5).filter(|b| mask >> b & 1 == 1).collect();
+    for combo in 0..(1usize << bits.len()) {
+        let mut v = base;
+        for (i, b) in bits.iter().enumerate() {
+            if combo >> i & 1 == 1 {
+                v |= 1 << b;
+            }
+        }
+        out.push(v);
+    }
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    // Any subcube of cluster indices encodes to a masked address that
+    // expands back to exactly those clusters' addresses.
+    prop(200, |rng| {
+        let clusters = random_subcube(rng, 5);
+        let offset = (rng.gen_range_usize(0, (STRIDE / 8) as usize) as u64) * 8;
+        let m = MaskedAddr::for_clusters(0, STRIDE, offset, &clusters)
+            .expect("subcube must encode");
+        assert_eq!(m.cardinality() as usize, clusters.len());
+        let got = m.expand();
+        let want: Vec<u64> = clusters
+            .iter()
+            .map(|&c| c as u64 * STRIDE + offset)
+            .collect();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn prop_match_rule_equals_set_intersection() {
+    // The paper's single-line match condition is exactly non-empty
+    // intersection of the two masked sets.
+    prop(500, |rng| {
+        let a = MaskedAddr {
+            addr: rng.next_u64() & 0xFFFF,
+            mask: rng.next_u64() & 0xFFF,
+        };
+        let b = MaskedAddr {
+            addr: rng.next_u64() & 0xFFFF,
+            mask: rng.next_u64() & 0xFFF,
+        };
+        let brute = a.expand().into_iter().any(|x| b.contains(x));
+        assert_eq!(a.matches(&b), brute, "a={a:?} b={b:?}");
+    });
+}
+
+#[test]
+fn prop_match_is_symmetric() {
+    prop(500, |rng| {
+        let a = MaskedAddr {
+            addr: rng.next_u64(),
+            mask: rng.next_u64() & 0xFFFF_FFFF,
+        };
+        let b = MaskedAddr {
+            addr: rng.next_u64(),
+            mask: rng.next_u64() & 0xFFFF_FFFF,
+        };
+        assert_eq!(a.matches(&b), b.matches(&a));
+    });
+}
+
+#[test]
+fn prop_unicast_routes_to_owning_cluster() {
+    // Every concrete address inside the cluster window routes to exactly
+    // the cluster that owns it, on both baseline and multicast NoCs.
+    let cfg = Config::default();
+    let base = NarrowNoc::new(&cfg, false);
+    let mcast = NarrowNoc::new(&cfg, true);
+    prop(300, |rng| {
+        let c = rng.gen_range_usize(0, 32);
+        let offset = rng.next_u64() % STRIDE;
+        let req = MaskedAddr::unicast(c as u64 * STRIDE + offset);
+        assert_eq!(base.route_clusters(req).unwrap(), vec![c]);
+        assert_eq!(mcast.route_clusters(req).unwrap(), vec![c]);
+    });
+}
+
+#[test]
+fn prop_two_level_decode_equals_expansion() {
+    // Routing a masked request through the two-level XBAR tree reaches
+    // exactly the clusters whose addresses the mask encodes.
+    let cfg = Config::default();
+    let noc = NarrowNoc::new(&cfg, true);
+    prop(300, |rng| {
+        let clusters = random_subcube(rng, 5);
+        let offset = (rng.gen_range_usize(0, (STRIDE / 8) as usize) as u64) * 8;
+        let m = MaskedAddr::for_clusters(0, STRIDE, offset, &clusters).unwrap();
+        let got = noc.route_clusters(m).unwrap();
+        assert_eq!(got, clusters);
+    });
+}
+
+#[test]
+fn prop_encode_first_n_minimal_and_exact() {
+    // The greedy prefix decomposition uses exactly popcount(n) masked
+    // writes and covers exactly [0, n) with no duplicates.
+    let cfg = Config::default();
+    let noc = NarrowNoc::new(&cfg, true);
+    prop(100, |rng| {
+        let n = rng.gen_range_usize(1, 33);
+        let msgs = noc.encode_first_n(n, 0x10);
+        assert_eq!(msgs.len() as u32, n.count_ones());
+        let mut all = Vec::new();
+        for m in &msgs {
+            all.extend(noc.route_clusters(*m).unwrap());
+        }
+        let len_before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), len_before, "no cluster hit twice");
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    });
+}

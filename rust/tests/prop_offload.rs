@@ -1,0 +1,205 @@
+//! Property tests of the offload executor: ordering, determinism and
+//! conservation invariants over randomized (kernel, size, clusters)
+//! configurations.
+
+mod prop_util;
+
+use occamy_offload::config::Config;
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::{run_offload, run_triple, RoutineKind};
+use occamy_offload::rng::Rng64;
+use occamy_offload::sim::Phase;
+use prop_util::{choose, prop};
+
+fn random_spec(rng: &mut Rng64) -> JobSpec {
+    match rng.gen_range_usize(0, 6) {
+        0 => JobSpec::Axpy {
+            n: *choose(rng, &[1, 7, 64, 255, 1024, 4096]),
+        },
+        1 => JobSpec::MonteCarlo {
+            samples: *choose(rng, &[8, 100, 4096, 65536]),
+        },
+        2 => {
+            let s = *choose(rng, &[4u64, 16, 33, 64]);
+            JobSpec::Matmul { m: s, n: s, k: s }
+        }
+        3 => {
+            let s = *choose(rng, &[4u64, 16, 63, 128]);
+            JobSpec::Atax { m: s, n: s }
+        }
+        4 => JobSpec::Covariance {
+            m: *choose(rng, &[2u64, 8, 32]),
+            n: *choose(rng, &[4u64, 64, 128]),
+        },
+        _ => JobSpec::Bfs {
+            nodes: *choose(rng, &[4u64, 16, 64, 100]),
+            levels: *choose(rng, &[1u64, 2, 5, 9]),
+        },
+    }
+}
+
+#[test]
+fn prop_runtime_ordering_ideal_improved_base() {
+    // For every configuration: ideal <= improved <= base (the extensions
+    // help, and nothing beats skipping the offload phases entirely).
+    let cfg = Config::default();
+    prop(60, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 2, 3, 4, 8, 12, 16, 32]);
+        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        assert!(t.ideal <= t.improved, "{spec:?}@{n}: {t:?}");
+        assert!(t.improved <= t.base, "{spec:?}@{n}: {t:?}");
+    });
+}
+
+#[test]
+fn prop_deterministic_replay() {
+    let cfg = Config::default();
+    prop(30, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 5, 8, 32]);
+        let routine = *choose(
+            rng,
+            &[
+                RoutineKind::Baseline,
+                RoutineKind::Multicast,
+                RoutineKind::Ideal,
+            ],
+        );
+        let a = run_offload(&cfg, &spec, n, routine);
+        let b = run_offload(&cfg, &spec, n, routine);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.events, b.events);
+        for c in 0..n {
+            assert_eq!(a.cluster_spans[c], b.cluster_spans[c]);
+        }
+    });
+}
+
+#[test]
+fn prop_phase_pipeline_order_per_cluster() {
+    // Per cluster, phases must not start before the previous one ended:
+    // B.end <= C.start <= C.end <= D.start ... (pipeline order, Fig. 3).
+    let cfg = Config::default();
+    let order = [
+        Phase::Wakeup,
+        Phase::RetrievePtr,
+        Phase::RetrieveArgs,
+        Phase::RetrieveOperands,
+        Phase::Execute,
+        Phase::Writeback,
+        Phase::Notify,
+    ];
+    prop(40, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 2, 8, 32]);
+        let routine = *choose(rng, &[RoutineKind::Baseline, RoutineKind::Multicast]);
+        let t = run_offload(&cfg, &spec, n, routine);
+        for c in 0..n {
+            let spans = &t.cluster_spans[c];
+            let mut prev_end = 0;
+            for p in order {
+                if let Some(s) = spans.get(&p) {
+                    assert!(
+                        s.start >= prev_end,
+                        "{spec:?}@{n} {} cluster {c}: {p:?} starts {} before {}",
+                        routine.name(),
+                        s.start,
+                        prev_end
+                    );
+                    assert!(s.end >= s.start);
+                    prev_end = s.end;
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_total_covers_all_spans() {
+    // The reported total is >= the end of every recorded span.
+    let cfg = Config::default();
+    prop(40, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 4, 16, 32]);
+        let routine = *choose(rng, &[RoutineKind::Baseline, RoutineKind::Multicast]);
+        let t = run_offload(&cfg, &spec, n, routine);
+        for c in 0..n {
+            for (p, s) in &t.cluster_spans[c] {
+                assert!(
+                    s.end <= t.total,
+                    "{spec:?}@{n}: {p:?} on {c} ends {} after total {}",
+                    s.end,
+                    t.total
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_overhead_positive_for_offloaded_runs() {
+    // base - ideal > 0 always: offloading can never be free.
+    let cfg = Config::default();
+    prop(40, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 2, 8, 16, 32]);
+        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        assert!(t.overhead() > 0, "{spec:?}@{n}: overhead {}", t.overhead());
+        assert!(t.residual_overhead() > 0);
+    });
+}
+
+#[test]
+fn prop_more_clusters_never_helps_broadcast_ideal() {
+    // For the broadcast class (ATAX/Cov/BFS) the *ideal* runtime is
+    // monotonically non-decreasing beyond the minimum, reflecting the
+    // n-linear operand term (Eq. 6) — checked on ATAX.
+    let cfg = Config::default();
+    prop(20, |rng| {
+        let s = *choose(rng, &[32u64, 64, 128]);
+        let spec = JobSpec::Atax { m: s, n: s };
+        let t8 = run_offload(&cfg, &spec, 8, RoutineKind::Ideal).total;
+        let t32 = run_offload(&cfg, &spec, 32, RoutineKind::Ideal).total;
+        assert!(t32 >= t8, "ATAX {s}: ideal {t8} -> {t32}");
+    });
+}
+
+#[test]
+fn prop_timing_config_scaling_sanity() {
+    // Doubling the baseline IPI gap can only increase baseline runtime
+    // and must not affect multicast runs.
+    let cfg = Config::default();
+    let mut slow = cfg.clone();
+    slow.timing.host_ipi_issue_gap *= 2;
+    prop(20, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[2usize, 8, 32]);
+        let b_fast = run_offload(&cfg, &spec, n, RoutineKind::Baseline).total;
+        let b_slow = run_offload(&slow, &spec, n, RoutineKind::Baseline).total;
+        // A few cycles of arbitration jitter are possible when shifted
+        // arrivals happen to dodge a port conflict; anything more than
+        // that would be a real inversion.
+        assert!(
+            b_slow + 8 >= b_fast,
+            "{spec:?}@{n}: {b_fast} -> {b_slow}"
+        );
+        let m_fast = run_offload(&cfg, &spec, n, RoutineKind::Multicast).total;
+        let m_slow = run_offload(&slow, &spec, n, RoutineKind::Multicast).total;
+        assert_eq!(m_fast, m_slow, "{spec:?}@{n}: multicast must not depend on the IPI gap");
+    });
+}
+
+#[test]
+fn prop_fluid_port_ablation_preserves_ordering() {
+    // With the fluid-PS ablation port, the ordering invariants still
+    // hold (only the skew structure changes).
+    let mut cfg = Config::default();
+    cfg.soc.wide_port_fluid = true;
+    prop(20, |rng| {
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 4, 16]);
+        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        assert!(t.ideal <= t.improved && t.improved <= t.base, "{spec:?}@{n}: {t:?}");
+    });
+}

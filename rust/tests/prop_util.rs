@@ -1,0 +1,26 @@
+//! Tiny property-testing helper shared by the prop_* integration tests
+//! (the vendored crate set has no proptest): runs a closure over many
+//! deterministically-seeded random cases and reports the failing seed.
+
+#![allow(dead_code)]
+
+use occamy_offload::rng::Rng64;
+
+/// Run `f` over `cases` seeded RNGs; panics with the failing case index.
+pub fn prop(cases: u64, mut f: impl FnMut(&mut Rng64)) {
+    for case in 0..cases {
+        let mut rng = Rng64::seed_from_u64(0xDEAD_0000 + case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {})", 0xDEAD_0000u64 + case);
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Pick one element of a slice.
+pub fn choose<'a, T>(rng: &mut Rng64, xs: &'a [T]) -> &'a T {
+    &xs[rng.gen_range_usize(0, xs.len())]
+}
