@@ -1,7 +1,8 @@
-//! Internal calibration probe (kept as an example of raw triple runs).
+//! Internal calibration probe (kept as an example of raw triple runs
+//! through the cached sweep API).
 use occamy_offload::config::Config;
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::run_triple;
+use occamy_offload::sweep;
 
 fn main() {
     let cfg = Config::default();
@@ -17,7 +18,7 @@ fn main() {
         "kernel", "n", "base", "ideal", "improved", "overhead", "residual", "idSp", "achSp", "rest");
     for (name, spec) in &specs {
         for n in [1usize, 2, 4, 8, 16, 32] {
-            let t = run_triple(&cfg, spec, n).runtimes(n);
+            let t = sweep::triple(&cfg, spec, n);
             println!("{:<10} {:>3} {:>8} {:>8} {:>8} {:>9} {:>9} {:>6.2} {:>6.2} {:>5.2}",
                 name, n, t.base, t.ideal, t.improved, t.overhead(), t.residual_overhead(),
                 t.ideal_speedup(), t.achieved_speedup(), t.restored_fraction());

@@ -12,7 +12,8 @@
 
 use occamy_offload::config::Config;
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::{run_offload, RoutineKind};
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::{self, OffloadRequest};
 
 /// Solve the 3x3 normal equations for y ~ K + a*x1 + b*x2.
 fn lstsq3(rows: &[(f64, f64, f64)]) -> (f64, f64, f64) {
@@ -51,7 +52,8 @@ fn lstsq3(rows: &[(f64, f64, f64)]) -> (f64, f64, f64) {
 fn main() {
     let cfg = Config::default();
     let sim = |n: usize, nn: u64| {
-        run_offload(&cfg, &JobSpec::Axpy { n: nn }, n, RoutineKind::Multicast).total as f64
+        let req = OffloadRequest::new(JobSpec::Axpy { n: nn }, n, RoutineKind::Multicast);
+        sweep::run_one(&cfg, req).total as f64
     };
 
     // Training grid.

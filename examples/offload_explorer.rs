@@ -13,7 +13,8 @@
 use occamy_offload::config::Config;
 use occamy_offload::coordinator::{Placement, Planner};
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::{run_offload, RoutineKind};
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::{self, OffloadRequest};
 
 fn main() {
     let cfg = Config::default();
@@ -68,7 +69,11 @@ fn main() {
                 Placement::Host => ("host".to_string(), plan.host_estimate),
                 Placement::Accelerator { n_clusters } => (
                     format!("{n_clusters} clusters"),
-                    run_offload(&cfg, &spec, n_clusters, RoutineKind::Multicast).total,
+                    sweep::run_one(
+                        &cfg,
+                        OffloadRequest::new(spec, n_clusters, RoutineKind::Multicast),
+                    )
+                    .total,
                 ),
             };
             println!(

@@ -1,5 +1,6 @@
-//! Quickstart: simulate one offloaded job in all three variants and print
-//! the paper's headline metrics for it.
+//! Quickstart: declare one sweep campaign over the paper's running
+//! example and print its headline metrics — the snippet mirrored in the
+//! `sweep` module docs.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,7 +9,7 @@
 use occamy_offload::config::Config;
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::OffloadModel;
-use occamy_offload::offload::run_triple;
+use occamy_offload::sweep::Sweep;
 
 fn main() {
     // The simulated SoC: Occamy's 8 quadrants x 4 clusters x (8+1) cores
@@ -26,21 +27,30 @@ fn main() {
     let spec = JobSpec::Axpy { n: 1024 };
     println!("job: {:?} ({} flops)\n", spec, spec.flops());
 
+    // One declarative campaign: the base/ideal/improved triple across
+    // the cluster sweep, executed in parallel with deterministic,
+    // input-ordered results.
+    let results = Sweep::new()
+        .kernel("axpy", spec)
+        .clusters([1, 2, 4, 8, 16, 32])
+        .triples()
+        .run(&cfg);
+
     println!(
         "{:>8}  {:>8}  {:>8}  {:>9}  {:>9}  {:>7}  {:>8}",
         "clusters", "base", "improved", "ideal", "overhead", "idealSp", "achieved"
     );
-    for n in [1usize, 2, 4, 8, 16, 32] {
-        let t = run_triple(&cfg, &spec, n).runtimes(n);
+    for t in results.triples() {
+        let r = &t.runtimes;
         println!(
             "{:>8}  {:>8}  {:>8}  {:>9}  {:>9}  {:>7.2}  {:>8.2}",
-            n,
-            t.base,
-            t.improved,
-            t.ideal,
-            t.overhead(),
-            t.ideal_speedup(),
-            t.achieved_speedup()
+            t.n_clusters,
+            r.base,
+            r.improved,
+            r.ideal,
+            r.overhead(),
+            r.ideal_speedup(),
+            r.achieved_speedup()
         );
     }
 

@@ -1,13 +1,23 @@
 //! Bench: the co-design ablation (multicast vs JCU contributions, port
-//! arbitration) — regenerates the tables and times the sweep.
+//! arbitration) — regenerates the tables and times the five-routine
+//! sweep uncached vs through the shared trace cache.
 use occamy_offload::bench::Bench;
 use occamy_offload::config::Config;
-use occamy_offload::exp::ablation;
+use occamy_offload::exp::{ablation, benchmark_set, CLUSTER_SWEEP};
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::Sweep;
 
 fn main() {
     let cfg = Config::default();
     let mut b = Bench::new();
-    b.run("ablation/full_sweep", 1, 5, || ablation::run(&cfg));
+    b.run("ablation/grid_uncached", 1, 3, || {
+        Sweep::over_kernels(benchmark_set())
+            .clusters(CLUSTER_SWEEP)
+            .routines(RoutineKind::ALL)
+            .uncached()
+            .run(&cfg)
+    });
+    b.run("ablation/full_sweep_cached", 1, 5, || ablation::run(&cfg));
     let a = ablation::run(&cfg);
     println!("\n{}", ablation::render(&a).render());
     println!("{}", ablation::render_port(&a).render());

@@ -1,4 +1,6 @@
 //! Bench: regenerate Fig. 10 (extension speedups across problem sizes).
+//! The first run populates the sweep cache; the cached re-run shows the
+//! memoization win.
 use occamy_offload::bench::Bench;
 use occamy_offload::config::Config;
 use occamy_offload::exp::fig10;
@@ -6,7 +8,7 @@ use occamy_offload::exp::fig10;
 fn main() {
     let cfg = Config::default();
     let mut b = Bench::new();
-    b.run("fig10/full_sweep", 1, 5, || fig10::run(&cfg));
+    b.run("fig10/full_sweep_cached", 1, 5, || fig10::run(&cfg));
     let fig = fig10::run(&cfg);
     println!("\n{}", fig10::render(&fig).render());
     println!("max speedup over baseline: {:.2} (paper: up to 2.3)", fig.max_speedup());

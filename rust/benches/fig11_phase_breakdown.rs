@@ -4,7 +4,8 @@ use occamy_offload::bench::{black_box, Bench};
 use occamy_offload::config::Config;
 use occamy_offload::exp::fig11;
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::{run_offload, RoutineKind};
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::OffloadRequest;
 
 fn main() {
     let cfg = Config::default();
@@ -13,11 +14,11 @@ fn main() {
     for routine in [RoutineKind::Baseline, RoutineKind::Multicast] {
         for n in [1usize, 32] {
             b.run(&format!("fig11/offload/{}/c{n}", routine.name()), 3, 20, || {
-                run_offload(&cfg, black_box(&spec), n, routine)
+                OffloadRequest::new(black_box(spec), n, routine).run(&cfg)
             });
         }
     }
-    b.run("fig11/full_breakdown", 1, 5, || fig11::run(&cfg));
+    b.run("fig11/full_breakdown_cached", 1, 5, || fig11::run(&cfg));
     println!("\n{}", fig11::render(&fig11::run(&cfg)).render());
     b.finish("fig11_phase_breakdown");
 }

@@ -14,7 +14,7 @@ fn main() {
     b.run("fig12/model_estimate", 10, 100, || {
         model.estimate(black_box(&spec), 32)
     });
-    b.run("fig12/validation_grid", 1, 5, || fig12::run(&cfg));
+    b.run("fig12/validation_grid_cached", 1, 5, || fig12::run(&cfg));
     let fig = fig12::run(&cfg);
     println!("\n{}", fig12::render(&fig).render());
     println!("max relative error: {:.1}% (paper: <15%)", fig.max_error() * 100.0);

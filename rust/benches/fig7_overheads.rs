@@ -1,22 +1,33 @@
 //! Bench: regenerate Fig. 7 (offload overhead vs clusters, 6 kernels)
-//! and time the full sweep plus its per-kernel slices.
+//! and time the grid through the sweep executor — parallel vs serial on
+//! a cold cache (the tentpole claim: parallelism alone speeds up the
+//! full grid), plus warm-cache re-runs and single triples.
 use occamy_offload::bench::{black_box, Bench};
 use occamy_offload::config::Config;
-use occamy_offload::exp::fig7;
+use occamy_offload::exp::{benchmark_set, fig7, CLUSTER_SWEEP};
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::run_triple;
+use occamy_offload::sweep::{OffloadRequest, Sweep};
 
 fn main() {
     let cfg = Config::default();
     let mut b = Bench::new();
-    b.run("fig7/full_sweep", 1, 5, || fig7::run(&cfg));
+    let grid = || {
+        Sweep::over_kernels(benchmark_set())
+            .clusters(CLUSTER_SWEEP)
+            .triples()
+            .uncached()
+    };
+    b.run("fig7/grid_parallel_uncached", 1, 5, || grid().run(&cfg));
+    b.run("fig7/grid_serial_uncached", 1, 5, || grid().serial().run(&cfg));
+    // Warm path: fig7::run shares its traces process-wide.
+    b.run("fig7/full_sweep_cached", 1, 5, || fig7::run(&cfg));
     for (name, spec) in [
         ("axpy1024", JobSpec::Axpy { n: 1024 }),
         ("atax64", JobSpec::Atax { m: 64, n: 64 }),
     ] {
         for n in [1usize, 32] {
             b.run(&format!("fig7/triple/{name}/c{n}"), 2, 10, || {
-                run_triple(&cfg, black_box(&spec), n)
+                OffloadRequest::triple(black_box(spec), n).map(|req| req.run(&cfg))
             });
         }
     }

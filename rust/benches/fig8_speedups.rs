@@ -1,12 +1,21 @@
-//! Bench: regenerate Fig. 8 (ideal vs achieved speedups) and time it.
+//! Bench: regenerate Fig. 8 (ideal vs achieved speedups) and time its
+//! grid uncached through the sweep executor.
 use occamy_offload::bench::Bench;
 use occamy_offload::config::Config;
-use occamy_offload::exp::fig8;
+use occamy_offload::exp::{benchmark_set, fig8, CLUSTER_SWEEP};
+use occamy_offload::sweep::Sweep;
 
 fn main() {
     let cfg = Config::default();
     let mut b = Bench::new();
-    b.run("fig8/full_sweep", 1, 5, || fig8::run(&cfg));
+    b.run("fig8/grid_uncached", 1, 5, || {
+        Sweep::over_kernels(benchmark_set())
+            .clusters(CLUSTER_SWEEP)
+            .triples()
+            .uncached()
+            .run(&cfg)
+    });
+    b.run("fig8/full_sweep_cached", 1, 5, || fig8::run(&cfg));
     let fig = fig8::run(&cfg);
     println!("\n{}", fig8::render(&fig).render());
     println!("max ideal speedup: {:.2} (paper: 3.02)", fig.max_ideal_speedup());

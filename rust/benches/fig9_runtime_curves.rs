@@ -1,12 +1,23 @@
 //! Bench: regenerate Fig. 9 (base/ideal/improved curves, AXPY & ATAX).
 use occamy_offload::bench::Bench;
 use occamy_offload::config::Config;
-use occamy_offload::exp::fig9;
+use occamy_offload::exp::{fig9, CLUSTER_SWEEP};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::sweep::Sweep;
 
 fn main() {
     let cfg = Config::default();
     let mut b = Bench::new();
-    b.run("fig9/both_curves", 1, 10, || fig9::run(&cfg));
+    b.run("fig9/both_curves_uncached", 1, 10, || {
+        Sweep::new()
+            .kernel("axpy", JobSpec::Axpy { n: 1024 })
+            .kernel("atax", JobSpec::Atax { m: 64, n: 64 })
+            .clusters(CLUSTER_SWEEP)
+            .triples()
+            .uncached()
+            .run(&cfg)
+    });
+    b.run("fig9/both_curves_cached", 1, 10, || fig9::run(&cfg));
     let fig = fig9::run(&cfg);
     println!("\n{}", fig9::render(&fig).render());
     println!(

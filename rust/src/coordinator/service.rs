@@ -20,8 +20,9 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::interrupt::{ArrivalOutcome, Jcu};
-use crate::offload::{run_offload, RoutineKind};
+use crate::offload::RoutineKind;
 use crate::runtime::{jobs, PjrtRuntime};
+use crate::sweep::OffloadRequest;
 
 use super::decision::Planner;
 use super::job::{JobRequest, JobResult, Placement};
@@ -158,12 +159,15 @@ fn dispatch_loop(
     let mut jcu = Jcu::new(JCU_SLOTS);
     let mut metrics = Metrics::default();
     // The DES is deterministic, so identical (spec, clusters, routine)
-    // configurations always cost the same cycles: memoize (perf, see
-    // EXPERIMENTS.md §Perf — repeated-job dispatch drops ~20x).
-    let mut sim_cache: std::collections::HashMap<
-        (crate::kernels::JobSpec, usize, RoutineKind),
-        crate::sim::Time,
-    > = std::collections::HashMap::new();
+    // configurations always cost the same cycles: memoize totals (perf,
+    // see EXPERIMENTS.md §Perf — repeated-job dispatch drops ~20x). The
+    // memo holds 8-byte totals and dies with the loop; full traces the
+    // experiment harness already computed are reused via a non-inserting
+    // peek of the sweep cache, so a long-lived service never grows the
+    // process-wide cache.
+    let sim_cache_key = crate::sweep::cache::config_key(&cfg);
+    let mut sim_totals: std::collections::HashMap<OffloadRequest, crate::sim::Time> =
+        std::collections::HashMap::new();
 
     while let Some(req) = queue.pop() {
         let routine = req.routine.unwrap_or(RoutineKind::Multicast);
@@ -186,11 +190,13 @@ fn dispatch_loop(
                 // Program the JCU slot like CVA6 would (§4.3).
                 let job_id = (req.id % JCU_SLOTS as u64) as u32;
                 jcu.program(job_id, n_clusters as u32);
-                let total = *sim_cache
-                    .entry((req.spec, n_clusters, routine))
-                    .or_insert_with(|| {
-                        run_offload(&cfg, &req.spec, n_clusters, routine).total
-                    });
+                let sim_req = OffloadRequest::new(req.spec, n_clusters, routine);
+                let total = *sim_totals.entry(sim_req).or_insert_with(|| {
+                    match crate::sweep::cache::peek(&sim_cache_key, sim_req) {
+                        Some(trace) => trace.total,
+                        None => sim_req.run(&cfg).total,
+                    }
+                });
                 // All clusters arrive; the last fires the interrupt.
                 for _ in 0..n_clusters - 1 {
                     assert!(matches!(

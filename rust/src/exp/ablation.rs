@@ -8,7 +8,8 @@
 //! sharing) — the design choices DESIGN.md calls out.
 
 use crate::config::Config;
-use crate::offload::{run_offload, RoutineKind};
+use crate::offload::RoutineKind;
+use crate::sweep::Sweep;
 
 use super::table::{f, Table};
 use super::{benchmark_set, CLUSTER_SWEEP};
@@ -54,27 +55,45 @@ impl Ablation {
 }
 
 pub fn run(cfg: &Config) -> Ablation {
+    // All five routines over the full grid; the Baseline/Ideal/Multicast
+    // traces are shared with Figs. 7-10 through the sweep cache.
+    let results = Sweep::over_kernels(benchmark_set())
+        .clusters(CLUSTER_SWEEP)
+        .routines(RoutineKind::ALL)
+        .run(cfg);
     let mut rows = Vec::new();
-    for (name, spec) in benchmark_set() {
+    for (name, _) in benchmark_set() {
         for &n in &CLUSTER_SWEEP {
+            let total =
+                |r: RoutineKind| results.total(name, n, r).expect("point in ablation grid");
             rows.push(Row {
                 kernel: name,
                 n_clusters: n,
-                base: run_offload(cfg, &spec, n, RoutineKind::Baseline).total,
-                mcast_only: run_offload(cfg, &spec, n, RoutineKind::McastOnly).total,
-                jcu_only: run_offload(cfg, &spec, n, RoutineKind::JcuOnly).total,
-                both: run_offload(cfg, &spec, n, RoutineKind::Multicast).total,
-                ideal: run_offload(cfg, &spec, n, RoutineKind::Ideal).total,
+                base: total(RoutineKind::Baseline),
+                mcast_only: total(RoutineKind::McastOnly),
+                jcu_only: total(RoutineKind::JcuOnly),
+                both: total(RoutineKind::Multicast),
+                ideal: total(RoutineKind::Ideal),
             });
         }
     }
+    // The port-arbitration study runs under a modified config — a second
+    // campaign, cached under its own config fingerprint.
     let mut fluid_cfg = cfg.clone();
     fluid_cfg.soc.wide_port_fluid = true;
+    let fluid = Sweep::over_kernels(benchmark_set())
+        .clusters([8, 32])
+        .routines([RoutineKind::Multicast])
+        .run(&fluid_cfg);
     let mut port_rows = Vec::new();
-    for (name, spec) in benchmark_set() {
+    for (name, _) in benchmark_set() {
         for &n in &[8usize, 32] {
-            let rr = run_offload(cfg, &spec, n, RoutineKind::Multicast).total;
-            let fl = run_offload(&fluid_cfg, &spec, n, RoutineKind::Multicast).total;
+            let rr = results
+                .total(name, n, RoutineKind::Multicast)
+                .expect("point in ablation grid");
+            let fl = fluid
+                .total(name, n, RoutineKind::Multicast)
+                .expect("point in fluid grid");
             port_rows.push((name, n, rr, fl));
         }
     }

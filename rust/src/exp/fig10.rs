@@ -3,7 +3,7 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
-use crate::offload::run_triple;
+use crate::sweep::Sweep;
 
 use super::table::{f, Table};
 
@@ -42,29 +42,30 @@ impl Fig10 {
 }
 
 pub fn run(cfg: &Config) -> Fig10 {
-    let mut points = Vec::new();
-    for &n in &CURVES {
-        for &size in &AXPY_SIZES {
-            let axpy = JobSpec::Axpy { n: size };
-            let t = run_triple(cfg, &axpy, n).runtimes(n);
-            points.push(Point {
-                kernel: "axpy",
-                n_clusters: n,
-                size,
-                speedup: t.base as f64 / t.improved as f64,
-            });
-        }
-        for &size in &ATAX_SIZES {
-            let atax = JobSpec::Atax { m: size, n: size };
-            let t = run_triple(cfg, &atax, n).runtimes(n);
-            points.push(Point {
-                kernel: "atax",
-                n_clusters: n,
-                size,
-                speedup: t.base as f64 / t.improved as f64,
-            });
-        }
+    // One label per kernel, several specs per label: the problem size
+    // rides along in the spec and is recovered from each triple.
+    let mut sweep = Sweep::new().clusters(CURVES).triples();
+    for &size in &AXPY_SIZES {
+        sweep = sweep.kernel("axpy", JobSpec::Axpy { n: size });
     }
+    for &size in &ATAX_SIZES {
+        sweep = sweep.kernel("atax", JobSpec::Atax { m: size, n: size });
+    }
+    let points = sweep
+        .run(cfg)
+        .triples()
+        .into_iter()
+        .map(|t| Point {
+            kernel: t.label,
+            n_clusters: t.n_clusters,
+            size: match t.spec {
+                JobSpec::Axpy { n } => n,
+                JobSpec::Atax { m, .. } => m,
+                _ => unreachable!("fig10 sweeps axpy and atax only"),
+            },
+            speedup: t.runtimes.achieved_speedup(),
+        })
+        .collect();
     Fig10 { points }
 }
 

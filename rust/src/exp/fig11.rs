@@ -3,8 +3,9 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
-use crate::offload::{run_offload, RoutineKind};
+use crate::offload::RoutineKind;
 use crate::sim::{Phase, Trace};
+use crate::sweep::Sweep;
 
 use super::table::{f, Table};
 use super::CLUSTER_SWEEP;
@@ -60,13 +61,14 @@ fn bands_of(trace: &Trace, routine: RoutineKind, n: usize, out: &mut Vec<Band>) 
 }
 
 pub fn run(cfg: &Config) -> Fig11 {
-    let spec = JobSpec::Axpy { n: 1024 };
+    let results = Sweep::new()
+        .kernel("axpy", JobSpec::Axpy { n: 1024 })
+        .clusters(CLUSTER_SWEEP)
+        .routines([RoutineKind::Baseline, RoutineKind::Multicast])
+        .run(cfg);
     let mut bands = Vec::new();
-    for &n in &CLUSTER_SWEEP {
-        for routine in [RoutineKind::Baseline, RoutineKind::Multicast] {
-            let trace = run_offload(cfg, &spec, n, routine);
-            bands_of(&trace, routine, n, &mut bands);
-        }
+    for rec in results.records() {
+        bands_of(&rec.trace, rec.req().routine, rec.req().n_clusters, &mut bands);
     }
     Fig11 { bands }
 }

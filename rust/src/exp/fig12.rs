@@ -1,5 +1,6 @@
 //! Fig. 12: relative error of the offloaded-application runtime models,
-//! |t − t̂| / t, across problem sizes and cluster counts (§5.6).
+//! |t − t̂| / t, across problem sizes and cluster counts (§5.6). The
+//! grids run through `model::validate_grid`, itself a `sweep` campaign.
 
 use crate::config::Config;
 use crate::kernels::JobSpec;

@@ -1,8 +1,10 @@
 //! Fig. 7: offload overhead (base − ideal runtime) per application, for a
-//! variable number of accelerator clusters (§5.2).
+//! variable number of accelerator clusters (§5.2). Declarative sweep over
+//! the benchmark set — the traces are shared with Figs. 8-10 through the
+//! sweep cache.
 
 use crate::config::Config;
-use crate::offload::run_triple;
+use crate::sweep::{mean_std, Sweep};
 
 use super::table::Table;
 use super::{benchmark_set, CLUSTER_SWEEP};
@@ -31,17 +33,15 @@ impl Fig7 {
 
     /// Mean and population std-dev of the overhead across applications at
     /// a fixed cluster count (the paper reports 242±65 at one cluster and
-    /// a 256-cycle std-dev at 32).
-    pub fn stats_at(&self, n: usize) -> (f64, f64) {
-        let vals: Vec<f64> = self
-            .points
-            .iter()
-            .filter(|p| p.n_clusters == n)
-            .map(|p| p.overhead as f64)
-            .collect();
-        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
-        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / vals.len() as f64;
-        (mean, var.sqrt())
+    /// a 256-cycle std-dev at 32). `None` when no point matches — a
+    /// cluster count outside the sweep must not surface as NaN.
+    pub fn stats_at(&self, n: usize) -> Option<(f64, f64)> {
+        mean_std(
+            self.points
+                .iter()
+                .filter(|p| p.n_clusters == n)
+                .map(|p| p.overhead as f64),
+        )
     }
 
     /// Maximum overhead across the sweep (paper: 1146 cycles).
@@ -51,17 +51,19 @@ impl Fig7 {
 }
 
 pub fn run(cfg: &Config) -> Fig7 {
-    let mut points = Vec::new();
-    for (name, spec) in benchmark_set() {
-        for &n in &CLUSTER_SWEEP {
-            let t = run_triple(cfg, &spec, n).runtimes(n);
-            points.push(Point {
-                kernel: name,
-                n_clusters: n,
-                overhead: t.overhead(),
-            });
-        }
-    }
+    let results = Sweep::over_kernels(benchmark_set())
+        .clusters(CLUSTER_SWEEP)
+        .triples()
+        .run(cfg);
+    let points = results
+        .overheads()
+        .into_iter()
+        .map(|(kernel, n_clusters, overhead)| Point {
+            kernel,
+            n_clusters,
+            overhead,
+        })
+        .collect();
     Fig7 { points }
 }
 
@@ -77,8 +79,8 @@ pub fn render(fig: &Fig7) -> Table {
         }
         t.row(row);
     }
-    let (m1, s1) = fig.stats_at(1);
-    let (m32, s32) = fig.stats_at(32);
+    let (m1, s1) = fig.stats_at(1).expect("cluster count 1 in sweep");
+    let (m32, s32) = fig.stats_at(32).expect("cluster count 32 in sweep");
     let mut stats = vec!["mean±std".to_string()];
     stats.push(format!("{m1:.0}±{s1:.0}"));
     for _ in 0..4 {
@@ -97,7 +99,7 @@ mod tests {
     fn reproduces_paper_aggregates() {
         let fig = run(&Config::default());
         // §5.2: single-cluster average 242 (σ=65); we accept the σ band.
-        let (mean1, _) = fig.stats_at(1);
+        let (mean1, _) = fig.stats_at(1).unwrap();
         assert!(
             (242.0 - mean1).abs() < 65.0,
             "single-cluster mean {mean1} vs paper 242±65"
@@ -114,6 +116,14 @@ mod tests {
             let o32 = fig.overhead(name, 32).unwrap();
             assert!(o32 > o1, "{name}: {o1} -> {o32}");
         }
+    }
+
+    #[test]
+    fn stats_at_unswept_cluster_count_is_none() {
+        // Regression: this used to divide by zero and return NaN.
+        let fig = run(&Config::default());
+        assert_eq!(fig.stats_at(3), None);
+        assert_eq!(Fig7 { points: vec![] }.stats_at(1), None);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! (§5.3, §5.4).
 
 use crate::config::Config;
-use crate::offload::run_triple;
+use crate::sweep::Sweep;
 
 use super::table::{f, Table};
 use super::{benchmark_set, CLUSTER_SWEEP};
@@ -38,19 +38,21 @@ impl Fig8 {
 }
 
 pub fn run(cfg: &Config) -> Fig8 {
-    let mut points = Vec::new();
-    for (name, spec) in benchmark_set() {
-        for &n in &CLUSTER_SWEEP {
-            let t = run_triple(cfg, &spec, n).runtimes(n);
-            points.push(Point {
-                kernel: name,
-                n_clusters: n,
-                ideal_speedup: t.ideal_speedup(),
-                achieved_speedup: t.achieved_speedup(),
-                restored: t.restored_fraction(),
-            });
-        }
-    }
+    let results = Sweep::over_kernels(benchmark_set())
+        .clusters(CLUSTER_SWEEP)
+        .triples()
+        .run(cfg);
+    let points = results
+        .triples()
+        .into_iter()
+        .map(|t| Point {
+            kernel: t.label,
+            n_clusters: t.n_clusters,
+            ideal_speedup: t.runtimes.ideal_speedup(),
+            achieved_speedup: t.runtimes.achieved_speedup(),
+            restored: t.runtimes.restored_fraction(),
+        })
+        .collect();
     Fig8 { points }
 }
 

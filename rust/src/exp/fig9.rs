@@ -3,7 +3,8 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
-use crate::offload::{run_triple, RunTriple};
+use crate::offload::RunTriple;
+use crate::sweep::Sweep;
 
 use super::table::Table;
 use super::CLUSTER_SWEEP;
@@ -48,16 +49,26 @@ pub struct Fig9 {
 }
 
 pub fn run(cfg: &Config) -> Fig9 {
-    let sweep = |spec: JobSpec, kernel: &'static str| Curve {
+    let results = Sweep::new()
+        .kernel("axpy", JobSpec::Axpy { n: 1024 })
+        .kernel("atax", JobSpec::Atax { m: 64, n: 64 })
+        .clusters(CLUSTER_SWEEP)
+        .triples()
+        .run(cfg);
+    // triples() preserves expansion order, so each curve's points come
+    // back in CLUSTER_SWEEP order.
+    let curve = |kernel: &'static str| Curve {
         kernel,
-        triples: CLUSTER_SWEEP
-            .iter()
-            .map(|&n| run_triple(cfg, &spec, n).runtimes(n))
+        triples: results
+            .triples()
+            .into_iter()
+            .filter(|t| t.label == kernel)
+            .map(|t| t.runtimes)
             .collect(),
     };
     Fig9 {
-        axpy: sweep(JobSpec::Axpy { n: 1024 }, "axpy"),
-        atax: sweep(JobSpec::Atax { m: 64, n: 64 }, "atax"),
+        axpy: curve("axpy"),
+        atax: curve("atax"),
     }
 }
 
@@ -114,13 +125,8 @@ mod tests {
             .chain(fig.atax.triples.iter())
             .map(|t| t.residual_overhead())
             .collect();
-        let mean = offsets.iter().sum::<i64>() as f64 / offsets.len() as f64;
-        let sd = (offsets
-            .iter()
-            .map(|&o| (o as f64 - mean).powi(2))
-            .sum::<f64>()
-            / offsets.len() as f64)
-            .sqrt();
+        let (mean, sd) = crate::sweep::mean_std(offsets.iter().map(|&o| o as f64))
+            .expect("both curves are non-empty");
         assert!(
             (140.0..=240.0).contains(&mean),
             "residual mean {mean} vs paper 185"

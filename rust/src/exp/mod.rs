@@ -1,8 +1,10 @@
 //! Experiment harness: one module per figure of the paper's evaluation
-//! (§5, Figs. 7-12). Each `run(cfg)` regenerates the figure's data from
-//! the DES + analytical model and renders it as a table; the benches
-//! under `rust/benches/` wrap these with wall-clock measurement. See
-//! DESIGN.md's experiment index.
+//! (§5, Figs. 7-12). Each `run(cfg)` declares its grid as a
+//! [`crate::sweep::Sweep`] campaign (parallel execution, shared trace
+//! cache) and renders the results as a table; the benches under
+//! `rust/benches/` wrap these with wall-clock measurement. Aggregations
+//! use `sweep::mean_std`, which guards the empty case instead of
+//! emitting NaN. See DESIGN.md's experiment index.
 
 pub mod ablation;
 pub mod fig10;

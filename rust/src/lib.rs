@@ -7,11 +7,23 @@
 //! * **L3 (this crate)** — a cycle-level discrete-event simulator of the
 //!   Occamy SoC, the baseline and multicast/JCU-optimized offload
 //!   routines (§4), the analytical runtime model (§5.6) and a
-//!   tokio-based coordinator that schedules jobs and executes their
-//!   numerics through PJRT.
+//!   coordinator that schedules jobs and executes their numerics through
+//!   PJRT (behind the `pjrt` feature).
 //! * **L2/L1 (python/, build-time only)** — the six workloads as JAX
 //!   graphs calling Pallas kernels, AOT-lowered to the HLO-text
 //!   artifacts the runtime loads. Python never runs on the request path.
+//!
+//! ## Running experiments: the `sweep` API
+//!
+//! All experiment campaigns go through [`sweep`]: a typed request
+//! ([`sweep::OffloadRequest`]), a cartesian grid builder
+//! ([`sweep::Sweep`]), a parallel executor with deterministic
+//! input-ordered results, result combinators (`group_by`, `triples`,
+//! `mean_std`, overhead/speedup projections) and a process-wide trace
+//! cache. The per-figure modules under [`exp`] are thin declarative
+//! descriptions on top of it; the positional free functions
+//! `offload::run_offload` / `offload::run_triple` remain as deprecated
+//! shims for one release.
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, EXPERIMENTS.md for paper-vs-measured results.
@@ -32,3 +44,4 @@ pub mod offload;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;

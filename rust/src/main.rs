@@ -20,9 +20,10 @@ use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Pl
 use occamy_offload::exp::{self, Table};
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::OffloadModel;
-use occamy_offload::offload::{run_offload, run_triple, RoutineKind};
+use occamy_offload::offload::RoutineKind;
 use occamy_offload::runtime::{default_artifacts_dir, run_and_verify, PjrtRuntime};
 use occamy_offload::sim::Phase;
+use occamy_offload::sweep::{self, OffloadRequest};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -205,7 +206,7 @@ fn cmd_sim(a: &Args) -> anyhow::Result<()> {
                 "ideal" => RoutineKind::Ideal,
                 other => anyhow::bail!("unknown routine {other:?}"),
             };
-            let trace = run_offload(&cfg, &spec, n, routine);
+            let trace = sweep::run_one(&cfg, OffloadRequest::new(spec, n, routine));
             println!("{} {} on {n} clusters ({}):", kernel, size, routine.name());
             println!("  total: {} cycles ({} events)", trace.total, trace.events);
             for p in Phase::ALL {
@@ -226,7 +227,7 @@ fn cmd_sim(a: &Args) -> anyhow::Result<()> {
             }
         }
         None => {
-            let t = run_triple(&cfg, &spec, n).runtimes(n);
+            let t = sweep::triple(&cfg, &spec, n);
             println!("{kernel} {size} on {n} clusters:");
             println!("  base     : {:>8} cycles", t.base);
             println!("  ideal    : {:>8} cycles", t.ideal);
@@ -375,7 +376,7 @@ fn cmd_model(a: &Args) -> anyhow::Result<()> {
     println!("{:>8}  {:>10}  {:>10}  {:>8}", "clusters", "model", "sim", "err%");
     for n in planner.candidates() {
         let est = model.estimate(&spec, n);
-        let sim = run_offload(&cfg, &spec, n, RoutineKind::Multicast).total;
+        let sim = sweep::run_one(&cfg, OffloadRequest::new(spec, n, RoutineKind::Multicast)).total;
         println!(
             "{n:>8}  {est:>10}  {sim:>10}  {:>8.1}",
             (est as f64 - sim as f64).abs() / sim as f64 * 100.0

@@ -7,7 +7,8 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
-use crate::offload::{run_offload, RoutineKind};
+use crate::offload::RoutineKind;
+use crate::sweep::{OffloadRequest, Sweep};
 
 use super::analytical::OffloadModel;
 
@@ -31,7 +32,11 @@ impl ValidationPoint {
 
 /// Validate the model on one configuration.
 pub fn validate_point(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> ValidationPoint {
-    let simulated = run_offload(cfg, spec, n_clusters, RoutineKind::Multicast).total;
+    let simulated = crate::sweep::run_one(
+        cfg,
+        OffloadRequest::new(*spec, n_clusters, RoutineKind::Multicast),
+    )
+    .total;
     let estimated = OffloadModel::new(cfg).estimate(spec, n_clusters);
     ValidationPoint {
         spec: *spec,
@@ -41,19 +46,35 @@ pub fn validate_point(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> Valida
     }
 }
 
-/// Validate over a grid of (spec, n) points; returns all points.
+/// Validate over a grid of (spec, n) points; returns all points in
+/// (specs outer, cluster_counts inner) order. The simulations run as one
+/// parallel sweep; the (cheap) model estimates are computed inline.
 pub fn validate_grid(
     cfg: &Config,
     specs: &[JobSpec],
     cluster_counts: &[usize],
 ) -> Vec<ValidationPoint> {
-    let mut out = Vec::new();
+    let mut sweep = Sweep::new()
+        .clusters(cluster_counts.iter().copied())
+        .routines([RoutineKind::Multicast]);
     for spec in specs {
-        for &n in cluster_counts {
-            out.push(validate_point(cfg, spec, n));
-        }
+        sweep = sweep.kernel(spec.kind().name(), *spec);
     }
-    out
+    let results = sweep.run(cfg);
+    let model = OffloadModel::new(cfg);
+    results
+        .records()
+        .iter()
+        .map(|r| {
+            let req = r.req();
+            ValidationPoint {
+                spec: req.spec,
+                n_clusters: req.n_clusters,
+                simulated: r.total(),
+                estimated: model.estimate(&req.spec, req.n_clusters),
+            }
+        })
+        .collect()
 }
 
 /// Maximum relative error over a set of points.

@@ -529,7 +529,12 @@ impl<'a> Executor<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::offload::run_offload;
+
+    /// Direct, uncached executor runs — these tests exercise the engine
+    /// itself, below the `sweep` layer.
+    fn run_offload(cfg: &Config, spec: &JobSpec, n: usize, routine: RoutineKind) -> Trace {
+        Executor::new(cfg, spec, n, routine).run()
+    }
 
     fn cfg() -> Config {
         Config::default()

@@ -2,6 +2,10 @@
 //! simulated SoC, in the baseline (§4.1) and multicast/JCU-optimized
 //! (§4.2/§4.3) variants, plus the "ideal" direct-on-device execution the
 //! paper compares against (§5.2).
+//!
+//! Experiment campaigns over these routines go through [`crate::sweep`];
+//! the positional free functions below are deprecated shims kept for one
+//! release.
 
 pub mod baseline;
 pub mod executor;
@@ -16,6 +20,10 @@ use crate::kernels::JobSpec;
 use crate::sim::Trace;
 
 /// Run one job with one routine; returns the full phase trace.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `sweep::run_one` with a typed `sweep::OffloadRequest` (cached, parallel-ready)"
+)]
 pub fn run_offload(
     cfg: &Config,
     spec: &JobSpec,
@@ -27,30 +35,34 @@ pub fn run_offload(
 
 /// Run the base/ideal/improved triple for one configuration (the unit of
 /// every figure in §5).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `sweep::triple` or a `sweep::Sweep` campaign"
+)]
 pub fn run_triple(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> TraceTriple {
     TraceTriple {
-        base: run_offload(cfg, spec, n_clusters, RoutineKind::Baseline),
-        ideal: run_offload(cfg, spec, n_clusters, RoutineKind::Ideal),
-        improved: run_offload(cfg, spec, n_clusters, RoutineKind::Multicast),
+        base: Executor::new(cfg, spec, n_clusters, RoutineKind::Baseline).run(),
+        ideal: Executor::new(cfg, spec, n_clusters, RoutineKind::Ideal).run(),
+        improved: Executor::new(cfg, spec, n_clusters, RoutineKind::Multicast).run(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sweep;
 
     #[test]
-    fn triple_is_consistent() {
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_sweep_api() {
         let cfg = Config::default();
-        let spec = JobSpec::Axpy { n: 1024 };
-        let t = run_triple(&cfg, &spec, 8);
-        let r = t.runtimes(8);
-        assert!(r.overhead() > 0);
-        assert!(r.residual_overhead() > 0);
-        assert!(r.residual_overhead() < r.overhead());
-        assert!(r.ideal_speedup() > 1.0);
-        assert!(r.achieved_speedup() > 1.0);
-        let f = r.restored_fraction();
-        assert!(f > 0.0 && f <= 1.0, "restored fraction {f}");
+        let spec = JobSpec::Axpy { n: 512 };
+        let legacy = run_triple(&cfg, &spec, 4).runtimes(4);
+        let new = sweep::triple(&cfg, &spec, 4);
+        assert_eq!(legacy.base, new.base);
+        assert_eq!(legacy.ideal, new.ideal);
+        assert_eq!(legacy.improved, new.improved);
+        let t = run_offload(&cfg, &spec, 4, RoutineKind::Baseline);
+        assert_eq!(t.total, new.base);
     }
 }

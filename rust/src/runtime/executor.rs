@@ -7,14 +7,26 @@
 //! caches the loaded executables, and runs jobs with concrete inputs.
 //! Python never runs here — the Rust binary is self-contained once
 //! `make artifacts` has produced the HLO files.
+//!
+//! The `xla` crate cannot be vendored into this workspace, so the whole
+//! PJRT path is gated behind the `pjrt` cargo feature. Without it,
+//! [`PjrtRuntime::new`] returns a clear error and every timing-only path
+//! (DES, sweep campaigns, `CoordinatorConfig::timing_only`) works
+//! unchanged.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+use anyhow::{bail, Result};
 
-use super::artifact::{ArtifactEntry, DType, Manifest};
+#[cfg(feature = "pjrt")]
+use super::artifact::ArtifactEntry;
+use super::artifact::{DType, Manifest};
 
 /// A typed host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone, PartialEq)]
@@ -89,6 +101,7 @@ impl Value {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -106,6 +119,7 @@ impl Value {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Value> {
         Ok(match dtype {
             DType::F64 => Value::F64 {
@@ -126,12 +140,52 @@ impl Value {
 }
 
 /// The PJRT runtime: client + manifest + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+/// Stub runtime for builds without the `pjrt` feature: construction
+/// fails with a clear message after validating the manifest, so callers
+/// degrade gracefully instead of failing to link.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        bail!(
+            "PJRT backend not compiled in: rebuild with `--features pjrt` \
+             (requires a vendored `xla` crate; timing-only paths are unaffected)"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        0
+    }
+
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn execute(&self, id: &str, _inputs: &[Value]) -> Result<Vec<Value>> {
+        bail!("PJRT backend not compiled in (cannot execute artifact {id:?})")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client and load the manifest from `dir`.
     pub fn new(dir: &Path) -> Result<Self> {

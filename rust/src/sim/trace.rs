@@ -113,8 +113,9 @@ pub struct PhaseStats {
     pub n: usize,
 }
 
-/// Full execution trace of one offloaded job.
-#[derive(Debug, Clone, Default)]
+/// Full execution trace of one offloaded job. `PartialEq` compares every
+/// span bit-for-bit — the sweep executor's determinism tests rely on it.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     /// Per-cluster spans: `cluster_spans[c][phase]`.
     pub cluster_spans: Vec<BTreeMap<Phase, PhaseSpan>>,

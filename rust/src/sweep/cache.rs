@@ -1,0 +1,130 @@
+//! Process-wide trace cache keyed by (config key, request).
+//!
+//! The DES is deterministic: identical (config, spec, n_clusters,
+//! routine) inputs always produce bit-identical traces. Figures 7-10 all
+//! sweep the same base/ideal triples, so caching at this boundary makes
+//! every shared trace a one-time cost per process. The config key is the
+//! complete flat-TOML serialization (`Config::to_toml` writes every
+//! field), so distinct configs can never alias — no hash-collision
+//! caveat. Entries live for the process lifetime (experiment grids are
+//! hundreds of traces, not millions); long-running embedders like the
+//! coordinator use [`peek`] + their own lightweight totals memo instead
+//! of inserting full traces here, and [`clear`] exists for tests.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::Config;
+use crate::sim::Trace;
+
+use super::request::OffloadRequest;
+
+type Shard = HashMap<OffloadRequest, Arc<Trace>>;
+
+fn cache() -> &'static Mutex<HashMap<String, Shard>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, Shard>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The cache key of a configuration: its complete, field-exhaustive
+/// flat-TOML serialization. Compute it once per campaign — serializing
+/// on every lookup is the expensive part, not the hash.
+pub fn config_key(cfg: &Config) -> String {
+    cfg.to_toml()
+}
+
+/// Look up a trace without simulating or inserting. `key` must come from
+/// [`config_key`] for the config the request targets.
+pub fn peek(key: &str, req: OffloadRequest) -> Option<Arc<Trace>> {
+    cache()
+        .lock()
+        .unwrap()
+        .get(key)
+        .and_then(|shard| shard.get(&req))
+        .map(Arc::clone)
+}
+
+/// Run a request through the cache with a precomputed [`config_key`]:
+/// a hit returns the shared trace, a miss simulates and stores it.
+pub fn run_cached_keyed(key: &str, cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
+    if let Some(t) = peek(key, req) {
+        return t;
+    }
+    // Simulate outside the lock: concurrent misses on the same key do
+    // redundant (deterministic, so harmless) work instead of serializing
+    // every sweep worker behind one mutex.
+    let trace = Arc::new(req.run(cfg));
+    let mut guard = cache().lock().unwrap();
+    Arc::clone(
+        guard
+            .entry(key.to_string())
+            .or_default()
+            .entry(req)
+            .or_insert(trace),
+    )
+}
+
+/// Run a request through the cache (one-off convenience; serializes the
+/// config per call — use [`run_cached_keyed`] inside loops).
+pub fn run_cached(cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
+    run_cached_keyed(&config_key(cfg), cfg, req)
+}
+
+/// Number of traces currently cached, across all configs (diagnostics).
+pub fn cached_runs() -> usize {
+    cache().lock().unwrap().values().map(Shard::len).sum()
+}
+
+/// Drop every cached trace.
+pub fn clear() {
+    cache().lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::JobSpec;
+    use crate::offload::RoutineKind;
+
+    #[test]
+    fn hit_returns_the_same_arc() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 128 }, 2, RoutineKind::Baseline);
+        let a = run_cached(&cfg, req);
+        let b = run_cached(&cfg, req);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.total, b.total);
+    }
+
+    #[test]
+    fn peek_never_inserts() {
+        let cfg = Config::default();
+        let key = config_key(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 80 }, 2, RoutineKind::Ideal);
+        if peek(&key, req).is_none() {
+            // Still absent after peeking.
+            assert!(peek(&key, req).is_none());
+        }
+        let inserted = run_cached_keyed(&key, &cfg, req);
+        let peeked = peek(&key, req).expect("present after run_cached");
+        assert!(Arc::ptr_eq(&inserted, &peeked));
+    }
+
+    #[test]
+    fn different_configs_do_not_alias() {
+        let cfg = Config::default();
+        let mut slow = cfg.clone();
+        slow.timing.host_ipi_issue_gap *= 2;
+        assert_ne!(config_key(&cfg), config_key(&slow));
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 128 }, 8, RoutineKind::Baseline);
+        let a = run_cached(&cfg, req);
+        let b = run_cached(&slow, req);
+        assert!(!Arc::ptr_eq(&a, &b), "distinct configs must not alias");
+    }
+
+    #[test]
+    fn config_key_is_stable_across_clones() {
+        let cfg = Config::default();
+        assert_eq!(config_key(&cfg), config_key(&cfg.clone()));
+    }
+}

@@ -1,0 +1,76 @@
+//! Parallel, deterministic execution of a sweep's point list.
+//!
+//! Every DES run is independent, so the grid is drained by a scoped
+//! worker pool (one std::thread per available core) pulling indices off a
+//! shared atomic counter. Results land in per-index slots, so the output
+//! order is the input (expansion) order regardless of scheduling — and
+//! because the DES itself is deterministic, parallel execution is
+//! bit-identical to serial execution (see tests/integration_sweep.rs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::config::Config;
+use crate::sim::Trace;
+
+use super::cache;
+use super::results::{SweepPoint, SweepRecord};
+
+pub(crate) fn execute(
+    cfg: &Config,
+    points: &[SweepPoint],
+    parallel: bool,
+    cached: bool,
+) -> Vec<SweepRecord> {
+    // Serialize the config once per campaign, not once per point.
+    let config_key = cached.then(|| cache::config_key(cfg));
+    let run_point = |p: &SweepPoint| -> Arc<Trace> {
+        match &config_key {
+            Some(key) => cache::run_cached_keyed(key, cfg, p.req),
+            None => Arc::new(p.req.run(cfg)),
+        }
+    };
+    let workers = if parallel {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(points.len())
+    } else {
+        1
+    };
+    if workers <= 1 {
+        return points
+            .iter()
+            .map(|p| SweepRecord {
+                point: *p,
+                trace: run_point(p),
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<Arc<Trace>>> = points.iter().map(|_| OnceLock::new()).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let trace = run_point(&points[i]);
+                slots[i]
+                    .set(trace)
+                    .expect("every index is claimed by exactly one worker");
+            });
+        }
+    });
+    points
+        .iter()
+        .zip(slots)
+        .map(|(p, slot)| SweepRecord {
+            point: *p,
+            trace: slot
+                .into_inner()
+                .expect("a worker filled every claimed slot"),
+        })
+        .collect()
+}

@@ -1,0 +1,218 @@
+//! The sweep builder: declarative cartesian experiment campaigns.
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::RoutineKind;
+
+use super::exec;
+use super::request::OffloadRequest;
+use super::results::{SweepPoint, SweepResults};
+
+/// The routines behind every figure's base/ideal/improved triple, in
+/// triple order.
+pub const TRIPLE_ROUTINES: [RoutineKind; 3] = [
+    RoutineKind::Baseline,
+    RoutineKind::Ideal,
+    RoutineKind::Multicast,
+];
+
+/// A typed experiment campaign: a (kernels × clusters × routines)
+/// cartesian grid plus optional custom points, executed in parallel with
+/// deterministic, input-ordered results.
+///
+/// Expansion order is kernels outermost, then clusters, then routines
+/// (innermost), followed by custom points in insertion order. If no
+/// routines are given the grid defaults to [`TRIPLE_ROUTINES`].
+#[derive(Debug, Clone, Default)]
+pub struct Sweep {
+    kernels: Vec<(&'static str, JobSpec)>,
+    clusters: Vec<usize>,
+    routines: Vec<RoutineKind>,
+    extra: Vec<SweepPoint>,
+    serial: bool,
+    uncached: bool,
+}
+
+impl Sweep {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from a labelled kernel set (e.g. `exp::benchmark_set()`).
+    pub fn over_kernels(kernels: impl IntoIterator<Item = (&'static str, JobSpec)>) -> Self {
+        Self {
+            kernels: kernels.into_iter().collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Add one labelled kernel. The same label may appear with several
+    /// specs (problem-size sweeps à la Fig. 10).
+    pub fn kernel(mut self, label: &'static str, spec: JobSpec) -> Self {
+        self.kernels.push((label, spec));
+        self
+    }
+
+    /// Add cluster counts to the grid.
+    pub fn clusters(mut self, counts: impl IntoIterator<Item = usize>) -> Self {
+        self.clusters.extend(counts);
+        self
+    }
+
+    /// Add routines to the grid (default when never called:
+    /// [`TRIPLE_ROUTINES`]).
+    pub fn routines(mut self, routines: impl IntoIterator<Item = RoutineKind>) -> Self {
+        self.routines.extend(routines);
+        self
+    }
+
+    /// Sweep the base/ideal/improved triple (explicit spelling of the
+    /// default).
+    pub fn triples(self) -> Self {
+        self.routines(TRIPLE_ROUTINES)
+    }
+
+    /// Append one custom point outside the cartesian grid.
+    pub fn point(mut self, label: &'static str, req: OffloadRequest) -> Self {
+        self.extra.push(SweepPoint { label, req });
+        self
+    }
+
+    /// Append custom points outside the cartesian grid.
+    pub fn points(
+        mut self,
+        points: impl IntoIterator<Item = (&'static str, OffloadRequest)>,
+    ) -> Self {
+        self.extra
+            .extend(points.into_iter().map(|(label, req)| SweepPoint { label, req }));
+        self
+    }
+
+    /// Run on the calling thread only (the executor parallelizes by
+    /// default; results are bit-identical either way).
+    pub fn serial(mut self) -> Self {
+        self.serial = true;
+        self
+    }
+
+    /// Bypass the process-wide trace cache (honest wall-clock benches).
+    pub fn uncached(mut self) -> Self {
+        self.uncached = true;
+        self
+    }
+
+    /// Expand to the ordered point list without running anything.
+    /// Cluster counts and routines are deduplicated (first occurrence
+    /// wins), so repeated `clusters`/`routines`/`triples` calls cannot
+    /// silently inflate the grid; custom points are taken verbatim.
+    pub fn expand(&self) -> Vec<SweepPoint> {
+        let routines: Vec<RoutineKind> = if self.routines.is_empty() {
+            TRIPLE_ROUTINES.to_vec()
+        } else {
+            dedup_preserving_order(&self.routines)
+        };
+        let clusters = dedup_preserving_order(&self.clusters);
+        let mut out = Vec::with_capacity(
+            self.kernels.len() * clusters.len() * routines.len() + self.extra.len(),
+        );
+        for &(label, spec) in &self.kernels {
+            for &n_clusters in &clusters {
+                for &routine in &routines {
+                    out.push(SweepPoint {
+                        label,
+                        req: OffloadRequest::new(spec, n_clusters, routine),
+                    });
+                }
+            }
+        }
+        out.extend(self.extra.iter().copied());
+        out
+    }
+
+    /// Execute the campaign and return input-ordered results.
+    pub fn run(&self, cfg: &Config) -> SweepResults {
+        let points = self.expand();
+        let records = exec::execute(cfg, &points, !self.serial, !self.uncached);
+        SweepResults::new(records)
+    }
+}
+
+fn dedup_preserving_order<T: Copy + PartialEq>(xs: &[T]) -> Vec<T> {
+    let mut out: Vec<T> = Vec::with_capacity(xs.len());
+    for &x in xs {
+        if !out.contains(&x) {
+            out.push(x);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_order_is_kernels_clusters_routines() {
+        let sweep = Sweep::new()
+            .kernel("a", JobSpec::Axpy { n: 64 })
+            .kernel("b", JobSpec::Atax { m: 16, n: 16 })
+            .clusters([1, 2])
+            .routines([RoutineKind::Baseline, RoutineKind::Ideal])
+            .point(
+                "custom",
+                OffloadRequest::new(JobSpec::Axpy { n: 32 }, 4, RoutineKind::Multicast),
+            );
+        let points = sweep.expand();
+        assert_eq!(points.len(), 2 * 2 * 2 + 1);
+        assert_eq!(points[0].label, "a");
+        assert_eq!(points[0].req.n_clusters, 1);
+        assert_eq!(points[0].req.routine, RoutineKind::Baseline);
+        assert_eq!(points[1].req.routine, RoutineKind::Ideal);
+        assert_eq!(points[2].req.n_clusters, 2);
+        assert_eq!(points[4].label, "b");
+        assert_eq!(points[8].label, "custom");
+        assert_eq!(points[8].req.n_clusters, 4);
+    }
+
+    #[test]
+    fn empty_routines_default_to_triple() {
+        let points = Sweep::new()
+            .kernel("a", JobSpec::Axpy { n: 64 })
+            .clusters([8])
+            .expand();
+        let routines: Vec<RoutineKind> = points.iter().map(|p| p.req.routine).collect();
+        assert_eq!(routines, TRIPLE_ROUTINES.to_vec());
+    }
+
+    #[test]
+    fn repeated_routines_and_clusters_do_not_inflate_the_grid() {
+        // `.routines([Baseline]).triples()` and duplicate cluster counts
+        // must not duplicate points.
+        let points = Sweep::new()
+            .kernel("a", JobSpec::Axpy { n: 64 })
+            .clusters([8, 8])
+            .clusters([8])
+            .routines([RoutineKind::Baseline])
+            .triples()
+            .expand();
+        let routines: Vec<RoutineKind> = points.iter().map(|p| p.req.routine).collect();
+        assert_eq!(routines, TRIPLE_ROUTINES.to_vec());
+        assert!(points.iter().all(|p| p.req.n_clusters == 8));
+    }
+
+    #[test]
+    fn run_produces_one_record_per_point() {
+        let cfg = Config::default();
+        let sweep = Sweep::new()
+            .kernel("axpy", JobSpec::Axpy { n: 64 })
+            .clusters([1, 2])
+            .routines([RoutineKind::Multicast]);
+        let results = sweep.run(&cfg);
+        assert_eq!(results.len(), 2);
+        let expanded = sweep.expand();
+        for (rec, p) in results.records().iter().zip(&expanded) {
+            assert_eq!(rec.point, *p);
+            assert!(rec.total() > 0);
+        }
+    }
+}

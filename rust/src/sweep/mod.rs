@@ -1,0 +1,119 @@
+//! # Typed experiment campaigns (`sweep`)
+//!
+//! Every figure in the paper's evaluation (§5.2–§5.6) is a sweep over
+//! (kernel × n_clusters × routine). This subsystem turns that shape into
+//! a first-class API so the figure modules, benches and examples are
+//! declarative descriptions instead of hand-rolled nested loops:
+//!
+//! * [`OffloadRequest`] — a typed request (spec, n_clusters, routine)
+//!   replacing the positional arguments of the deprecated
+//!   `offload::run_offload`.
+//! * [`Sweep`] — a builder expanding cartesian grids
+//!   (`Sweep::over_kernels(..).clusters(..).routines(..)`) plus custom
+//!   point lists, executed by a scoped worker pool (each DES run is
+//!   independent) with deterministic, input-ordered [`SweepResults`].
+//! * Result combinators — [`SweepResults::group_by`],
+//!   [`SweepResults::triples`], [`SweepResults::triple_of`],
+//!   overhead/speedup projections, and [`mean_std`].
+//! * A process-wide trace [`cache`] keyed by (config key, request), so
+//!   base/ideal traces shared between figures are computed once per
+//!   process.
+//!
+//! ## Quickstart
+//!
+//! Mirrors `examples/quickstart.rs`:
+//!
+//! ```
+//! use occamy_offload::config::Config;
+//! use occamy_offload::kernels::JobSpec;
+//! use occamy_offload::sweep::Sweep;
+//!
+//! let cfg = Config::default();
+//! let results = Sweep::new()
+//!     .kernel("axpy", JobSpec::Axpy { n: 256 })
+//!     .clusters([1, 8])
+//!     .triples() // base/ideal/improved, the unit of every figure
+//!     .run(&cfg);
+//! for t in results.triples() {
+//!     println!(
+//!         "{} @ {} clusters: overhead {} cycles, achieved speedup {:.2}",
+//!         t.label,
+//!         t.n_clusters,
+//!         t.runtimes.overhead(),
+//!         t.runtimes.achieved_speedup(),
+//!     );
+//! }
+//! assert_eq!(results.triples().len(), 2);
+//! ```
+//!
+//! Parallel execution never changes results: the grid expands in a fixed
+//! order, every record lands at its input index, and the DES itself is
+//! deterministic — `sweep.run(&cfg)` is bit-identical to
+//! `sweep.serial().run(&cfg)` (property-tested in
+//! `tests/integration_sweep.rs`).
+
+pub mod cache;
+mod exec;
+mod grid;
+mod request;
+mod results;
+
+pub use grid::{Sweep, TRIPLE_ROUTINES};
+pub use request::OffloadRequest;
+pub use results::{mean_std, SweepPoint, SweepRecord, SweepResults, TriplePoint};
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::RunTriple;
+use crate::sim::Trace;
+
+/// Run one request through the process-wide trace cache.
+pub fn run_one(cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
+    cache::run_cached(cfg, req)
+}
+
+/// The base/ideal/improved runtimes of one (spec, n) configuration,
+/// through the cache — the typed successor of
+/// `offload::run_triple(..).runtimes(n)`.
+pub fn triple(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> RunTriple {
+    let [base, ideal, improved] =
+        OffloadRequest::triple(*spec, n_clusters).map(|req| run_one(cfg, req).total);
+    RunTriple {
+        n_clusters,
+        base,
+        ideal,
+        improved,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::RoutineKind;
+
+    #[test]
+    fn triple_is_consistent() {
+        let cfg = Config::default();
+        let spec = JobSpec::Axpy { n: 1024 };
+        let t = triple(&cfg, &spec, 8);
+        assert!(t.overhead() > 0);
+        assert!(t.residual_overhead() > 0);
+        assert!(t.residual_overhead() < t.overhead());
+        assert!(t.ideal_speedup() > 1.0);
+        assert!(t.achieved_speedup() > 1.0);
+        let f = t.restored_fraction();
+        assert!(f > 0.0 && f <= 1.0, "restored fraction {f}");
+    }
+
+    #[test]
+    fn run_one_matches_uncached_run() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Atax { m: 16, n: 16 }, 4, RoutineKind::Baseline);
+        let cached = run_one(&cfg, req);
+        let direct = req.run(&cfg);
+        assert_eq!(cached.total, direct.total);
+        assert_eq!(cached.cluster_spans, direct.cluster_spans);
+    }
+}

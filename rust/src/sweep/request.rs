@@ -1,0 +1,69 @@
+//! Typed offload requests — the unit of work a sweep executes.
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::{Executor, RoutineKind};
+use crate::sim::Trace;
+
+/// One fully-specified DES run: which job, on how many clusters, with
+/// which offload routine. Replaces the positional argument list of the
+/// deprecated `offload::run_offload`, and doubles as the trace-cache key
+/// (it is `Copy + Eq + Hash`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OffloadRequest {
+    pub spec: JobSpec,
+    pub n_clusters: usize,
+    pub routine: RoutineKind,
+}
+
+impl OffloadRequest {
+    pub fn new(spec: JobSpec, n_clusters: usize, routine: RoutineKind) -> Self {
+        Self {
+            spec,
+            n_clusters,
+            routine,
+        }
+    }
+
+    /// The base/ideal/improved requests of one (spec, n) configuration —
+    /// the unit behind every figure of §5.
+    pub fn triple(spec: JobSpec, n_clusters: usize) -> [Self; 3] {
+        [
+            Self::new(spec, n_clusters, RoutineKind::Baseline),
+            Self::new(spec, n_clusters, RoutineKind::Ideal),
+            Self::new(spec, n_clusters, RoutineKind::Multicast),
+        ]
+    }
+
+    /// Execute the request on the DES, bypassing the trace cache. Panics
+    /// if `n_clusters` is zero or exceeds the SoC geometry (the same
+    /// contract as `offload::Executor::new`).
+    pub fn run(&self, cfg: &Config) -> Trace {
+        Executor::new(cfg, &self.spec, self.n_clusters, self.routine).run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_covers_base_ideal_improved() {
+        let spec = JobSpec::Axpy { n: 64 };
+        let [b, i, m] = OffloadRequest::triple(spec, 4);
+        assert_eq!(b.routine, RoutineKind::Baseline);
+        assert_eq!(i.routine, RoutineKind::Ideal);
+        assert_eq!(m.routine, RoutineKind::Multicast);
+        assert!([b, i, m].iter().all(|r| r.spec == spec && r.n_clusters == 4));
+    }
+
+    #[test]
+    fn run_matches_direct_executor() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 256 }, 4, RoutineKind::Multicast);
+        let a = req.run(&cfg);
+        let b = Executor::new(&cfg, &req.spec, 4, RoutineKind::Multicast).run();
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.events, b.events);
+    }
+}

@@ -1,0 +1,265 @@
+//! Sweep results: input-ordered records plus the combinators the figure
+//! modules are built from (`group_by`, `triples`, `mean_std`, overhead /
+//! speedup projections).
+
+use std::sync::Arc;
+
+use crate::kernels::JobSpec;
+use crate::offload::{RoutineKind, RunTriple};
+use crate::sim::{Time, Trace};
+
+use super::request::OffloadRequest;
+
+/// One labelled grid point: the label identifies the kernel (or custom
+/// point) in result lookups and tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SweepPoint {
+    pub label: &'static str,
+    pub req: OffloadRequest,
+}
+
+/// One executed point: the point plus its (possibly cache-shared) trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRecord {
+    pub point: SweepPoint,
+    pub trace: Arc<Trace>,
+}
+
+impl SweepRecord {
+    pub fn label(&self) -> &'static str {
+        self.point.label
+    }
+
+    pub fn req(&self) -> OffloadRequest {
+        self.point.req
+    }
+
+    /// End-to-end runtime of this run, in cycles.
+    pub fn total(&self) -> Time {
+        self.trace.total
+    }
+}
+
+type TripleKey = (&'static str, JobSpec, usize);
+
+/// A collapsed base/ideal/improved triple at one (label, spec, n) point.
+#[derive(Debug, Clone)]
+pub struct TriplePoint {
+    pub label: &'static str,
+    pub spec: JobSpec,
+    pub n_clusters: usize,
+    pub runtimes: RunTriple,
+}
+
+/// Results of one sweep, in expansion (input) order — deterministic and
+/// independent of the executor's parallelism.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SweepResults {
+    records: Vec<SweepRecord>,
+}
+
+impl SweepResults {
+    pub(crate) fn new(records: Vec<SweepRecord>) -> Self {
+        Self { records }
+    }
+
+    pub fn records(&self) -> &[SweepRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SweepRecord> {
+        self.records.iter()
+    }
+
+    /// First record matching (label, n_clusters, routine).
+    pub fn get(&self, label: &str, n_clusters: usize, routine: RoutineKind) -> Option<&SweepRecord> {
+        self.records.iter().find(|r| {
+            r.label() == label && r.req().n_clusters == n_clusters && r.req().routine == routine
+        })
+    }
+
+    /// Total runtime at (label, n_clusters, routine).
+    pub fn total(&self, label: &str, n_clusters: usize, routine: RoutineKind) -> Option<Time> {
+        self.get(label, n_clusters, routine).map(|r| r.total())
+    }
+
+    /// Full trace at (label, n_clusters, routine).
+    pub fn trace(&self, label: &str, n_clusters: usize, routine: RoutineKind) -> Option<&Trace> {
+        self.get(label, n_clusters, routine).map(|r| r.trace.as_ref())
+    }
+
+    /// Group records by an arbitrary key, preserving first-seen order
+    /// (deterministic, since records are input-ordered).
+    pub fn group_by<K, F>(&self, key: F) -> Vec<(K, Vec<&SweepRecord>)>
+    where
+        K: PartialEq,
+        F: Fn(&SweepRecord) -> K,
+    {
+        let mut groups: Vec<(K, Vec<&SweepRecord>)> = Vec::new();
+        for r in &self.records {
+            let k = key(r);
+            match groups.iter().position(|(g, _)| *g == k) {
+                Some(i) => groups[i].1.push(r),
+                None => groups.push((k, vec![r])),
+            }
+        }
+        groups
+    }
+
+    /// Collapse into base/ideal/improved [`TriplePoint`]s: one per
+    /// (label, spec, n_clusters) for which the sweep ran all three of
+    /// Baseline, Ideal and Multicast, in first-seen order. Other routines
+    /// (the ablation variants) are ignored here — look them up with
+    /// [`SweepResults::total`].
+    pub fn triples(&self) -> Vec<TriplePoint> {
+        let mut partial: Vec<(TripleKey, [Option<Time>; 3])> = Vec::new();
+        for r in &self.records {
+            let slot = match r.req().routine {
+                RoutineKind::Baseline => 0,
+                RoutineKind::Ideal => 1,
+                RoutineKind::Multicast => 2,
+                _ => continue,
+            };
+            let key = (r.label(), r.req().spec, r.req().n_clusters);
+            let i = match partial.iter().position(|(k, _)| *k == key) {
+                Some(i) => i,
+                None => {
+                    partial.push((key, [None; 3]));
+                    partial.len() - 1
+                }
+            };
+            partial[i].1[slot] = Some(r.total());
+        }
+        partial
+            .into_iter()
+            .filter_map(|((label, spec, n_clusters), [b, i, m])| {
+                let (base, ideal, improved) = (b?, i?, m?);
+                Some(TriplePoint {
+                    label,
+                    spec,
+                    n_clusters,
+                    runtimes: RunTriple {
+                        n_clusters,
+                        base,
+                        ideal,
+                        improved,
+                    },
+                })
+            })
+            .collect()
+    }
+
+    /// The triple at (label, n_clusters); ambiguous when one label sweeps
+    /// several specs at the same cluster count — the first wins.
+    pub fn triple_of(&self, label: &str, n_clusters: usize) -> Option<RunTriple> {
+        self.triples()
+            .into_iter()
+            .find(|t| t.label == label && t.n_clusters == n_clusters)
+            .map(|t| t.runtimes)
+    }
+
+    /// Offload-overhead projection (§5.2: base − ideal), one entry per
+    /// complete triple.
+    pub fn overheads(&self) -> Vec<(&'static str, usize, i64)> {
+        self.triples()
+            .iter()
+            .map(|t| (t.label, t.n_clusters, t.runtimes.overhead()))
+            .collect()
+    }
+
+    /// Ideal-speedup projection (Fig. 8 white bars).
+    pub fn ideal_speedups(&self) -> Vec<(&'static str, usize, f64)> {
+        self.triples()
+            .iter()
+            .map(|t| (t.label, t.n_clusters, t.runtimes.ideal_speedup()))
+            .collect()
+    }
+
+    /// Achieved-speedup projection (Fig. 8 fill levels / Fig. 10 curves).
+    pub fn achieved_speedups(&self) -> Vec<(&'static str, usize, f64)> {
+        self.triples()
+            .iter()
+            .map(|t| (t.label, t.n_clusters, t.runtimes.achieved_speedup()))
+            .collect()
+    }
+}
+
+/// Mean and population standard deviation; `None` when the input is
+/// empty (never NaN — see Fig7::stats_at).
+pub fn mean_std(vals: impl IntoIterator<Item = f64>) -> Option<(f64, f64)> {
+    let vals: Vec<f64> = vals.into_iter().collect();
+    if vals.is_empty() {
+        return None;
+    }
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / vals.len() as f64;
+    Some((mean, var.sqrt()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sweep::Sweep;
+
+    fn small_results() -> SweepResults {
+        Sweep::new()
+            .kernel("axpy", JobSpec::Axpy { n: 128 })
+            .clusters([1, 4])
+            .triples()
+            .run(&Config::default())
+    }
+
+    #[test]
+    fn triples_collapse_in_order() {
+        let r = small_results();
+        assert_eq!(r.len(), 6); // 2 clusters x 3 routines
+        let t = r.triples();
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].label, t[0].n_clusters), ("axpy", 1));
+        assert_eq!((t[1].label, t[1].n_clusters), ("axpy", 4));
+        assert!(t[0].runtimes.overhead() > 0);
+    }
+
+    #[test]
+    fn lookup_and_projections_agree() {
+        let r = small_results();
+        let base = r.total("axpy", 4, RoutineKind::Baseline).unwrap();
+        let ideal = r.total("axpy", 4, RoutineKind::Ideal).unwrap();
+        let triple = r.triple_of("axpy", 4).unwrap();
+        assert_eq!(triple.base, base);
+        assert_eq!(triple.ideal, ideal);
+        let overheads = r.overheads();
+        assert_eq!(overheads.len(), 2);
+        assert_eq!(overheads[1], ("axpy", 4, base as i64 - ideal as i64));
+        assert!(r.get("axpy", 2, RoutineKind::Baseline).is_none());
+    }
+
+    #[test]
+    fn group_by_preserves_first_seen_order() {
+        let r = small_results();
+        let by_n = r.group_by(|rec| rec.req().n_clusters);
+        assert_eq!(by_n.len(), 2);
+        assert_eq!(by_n[0].0, 1);
+        assert_eq!(by_n[0].1.len(), 3);
+        assert_eq!(by_n[1].0, 4);
+    }
+
+    #[test]
+    fn mean_std_guards_empty() {
+        assert_eq!(mean_std(std::iter::empty::<f64>()), None);
+        let (m, s) = mean_std([2.0, 4.0]).unwrap();
+        assert!((m - 3.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std([5.0]).unwrap();
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+}

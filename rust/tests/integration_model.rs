@@ -5,7 +5,8 @@ use occamy_offload::config::Config;
 use occamy_offload::coordinator::{Placement, Planner};
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::{max_rel_error, validate_grid, OffloadModel};
-use occamy_offload::offload::{run_offload, RoutineKind};
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::{self, OffloadRequest};
 
 #[test]
 fn model_error_below_15_percent_full_grid() {
@@ -47,7 +48,7 @@ fn model_upper_phases_match_trace() {
     let spec = JobSpec::Axpy { n: 1024 };
     let model = OffloadModel::new(&cfg);
     let est = model.phases(&spec, 8);
-    let trace = run_offload(&cfg, &spec, 8, RoutineKind::Multicast);
+    let trace = sweep::run_one(&cfg, OffloadRequest::new(spec, 8, RoutineKind::Multicast));
     use occamy_offload::sim::Phase;
     let b_sim = trace.stats(Phase::Wakeup).unwrap().max;
     let b_est = est.get(Phase::Wakeup);
@@ -66,10 +67,12 @@ fn planner_beats_naive_all_clusters_policy() {
     let planner = Planner::new(&cfg);
     let spec = JobSpec::Atax { m: 64, n: 64 };
     let plan = planner.plan(&spec);
-    let naive = run_offload(&cfg, &spec, 32, RoutineKind::Multicast).total;
+    let mcast =
+        |n: usize| sweep::run_one(&cfg, OffloadRequest::new(spec, n, RoutineKind::Multicast)).total;
+    let naive = mcast(32);
     match plan.placement {
         Placement::Accelerator { n_clusters } => {
-            let chosen = run_offload(&cfg, &spec, n_clusters, RoutineKind::Multicast).total;
+            let chosen = mcast(n_clusters);
             assert!(
                 chosen < naive,
                 "planner's {n_clusters} clusters ({chosen}) should beat 32 ({naive})"
@@ -112,8 +115,11 @@ fn model_estimate_is_fast() {
     }
     let model_time = t0.elapsed();
     let t1 = std::time::Instant::now();
+    // Uncached direct runs: the sweep cache would reduce this loop to
+    // ten hash lookups and invalidate the comparison.
+    let req = OffloadRequest::new(spec, 32, RoutineKind::Multicast);
     for _ in 0..10 {
-        std::hint::black_box(run_offload(&cfg, &spec, 32, RoutineKind::Multicast));
+        std::hint::black_box(req.run(&cfg));
     }
     let sim_time = t1.elapsed() * 100; // scale to 1000 runs
     assert!(

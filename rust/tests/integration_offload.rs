@@ -1,32 +1,39 @@
 //! Integration tests of the offload framework across modules: the full
 //! phase pipeline on the simulated SoC, config ablations, and the
 //! paper's cross-cutting claims that involve more than one subsystem.
+//! Runs go through the typed `sweep` API (cached where determinism is
+//! not itself under test).
+
+use std::sync::Arc;
 
 use occamy_offload::config::Config;
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::{run_offload, run_triple, RoutineKind};
-use occamy_offload::sim::Phase;
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sim::{Phase, Trace};
+use occamy_offload::sweep::{self, OffloadRequest, Sweep};
+
+fn run_one(cfg: &Config, spec: JobSpec, n: usize, routine: RoutineKind) -> Arc<Trace> {
+    sweep::run_one(cfg, OffloadRequest::new(spec, n, routine))
+}
 
 #[test]
 fn full_sweep_all_kernels_all_routines() {
-    // Smoke the entire configuration space end to end.
+    // Smoke the entire configuration space end to end, as one campaign.
     let cfg = Config::default();
-    let specs = [
-        JobSpec::Axpy { n: 1024 },
-        JobSpec::MonteCarlo { samples: 4096 },
-        JobSpec::Matmul { m: 32, n: 32, k: 32 },
-        JobSpec::Atax { m: 64, n: 64 },
-        JobSpec::Covariance { m: 32, n: 64 },
-        JobSpec::Bfs { nodes: 64, levels: 4 },
-    ];
-    for spec in &specs {
-        for n in [1usize, 2, 4, 8, 16, 32] {
-            for r in RoutineKind::ALL {
-                let t = run_offload(&cfg, spec, n, r);
-                assert!(t.total > 0, "{spec:?}@{n} {r:?}");
-                assert_eq!(t.n_clusters(), n);
-            }
-        }
+    let results = Sweep::new()
+        .kernel("axpy", JobSpec::Axpy { n: 1024 })
+        .kernel("montecarlo", JobSpec::MonteCarlo { samples: 4096 })
+        .kernel("matmul", JobSpec::Matmul { m: 32, n: 32, k: 32 })
+        .kernel("atax", JobSpec::Atax { m: 64, n: 64 })
+        .kernel("covariance", JobSpec::Covariance { m: 32, n: 64 })
+        .kernel("bfs", JobSpec::Bfs { nodes: 64, levels: 4 })
+        .clusters([1, 2, 4, 8, 16, 32])
+        .routines(RoutineKind::ALL)
+        .run(&cfg);
+    assert_eq!(results.len(), 6 * 6 * RoutineKind::ALL.len());
+    for r in results.iter() {
+        assert!(r.total() > 0, "{:?}", r.point);
+        assert_eq!(r.trace.n_clusters(), r.req().n_clusters);
     }
 }
 
@@ -40,10 +47,10 @@ fn second_order_effect_atax_overhead_saturates() {
     let cfg = Config::default();
     let atax = JobSpec::Atax { m: 64, n: 64 };
     let mc = JobSpec::MonteCarlo { samples: 16384 };
-    let atax_8 = run_triple(&cfg, &atax, 8).runtimes(8).overhead();
-    let atax_32 = run_triple(&cfg, &atax, 32).runtimes(32).overhead();
-    let mc_8 = run_triple(&cfg, &mc, 8).runtimes(8).overhead();
-    let mc_32 = run_triple(&cfg, &mc, 32).runtimes(32).overhead();
+    let atax_8 = sweep::triple(&cfg, &atax, 8).overhead();
+    let atax_32 = sweep::triple(&cfg, &atax, 32).overhead();
+    let mc_8 = sweep::triple(&cfg, &mc, 8).overhead();
+    let mc_32 = sweep::triple(&cfg, &mc, 32).overhead();
     assert!(
         (atax_32 - atax_8) < (mc_32 - mc_8) / 4,
         "ATAX grew {} vs MC {}",
@@ -59,8 +66,8 @@ fn baseline_phase_e_start_skew_exceeds_multicast() {
     // min/max bands.
     let cfg = Config::default();
     let spec = JobSpec::Axpy { n: 1024 };
-    let base = run_offload(&cfg, &spec, 32, RoutineKind::Baseline);
-    let mcast = run_offload(&cfg, &spec, 32, RoutineKind::Multicast);
+    let base = run_one(&cfg, spec, 32, RoutineKind::Baseline);
+    let mcast = run_one(&cfg, spec, 32, RoutineKind::Multicast);
     let skew_base = base.start_skew(Phase::RetrieveOperands).unwrap();
     let skew_mcast = mcast.start_skew(Phase::RetrieveOperands).unwrap();
     assert!(
@@ -75,7 +82,7 @@ fn wakeup_order_is_reversed_in_baseline() {
     // the barrier last.
     let cfg = Config::default();
     let spec = JobSpec::MonteCarlo { samples: 4096 };
-    let t = run_offload(&cfg, &spec, 8, RoutineKind::Baseline);
+    let t = run_one(&cfg, spec, 8, RoutineKind::Baseline);
     let wake_end = |c: usize| t.cluster_spans[c][&Phase::Wakeup].end;
     for c in 1..8 {
         assert!(
@@ -93,21 +100,21 @@ fn config_ablation_smaller_soc() {
     cfg.soc.n_quadrants = 2;
     assert_eq!(cfg.soc.n_clusters(), 8);
     let spec = JobSpec::Axpy { n: 1024 };
-    let t = run_triple(&cfg, &spec, 8).runtimes(8);
+    let t = sweep::triple(&cfg, &spec, 8);
     assert!(t.ideal <= t.improved && t.improved <= t.base);
 }
 
 #[test]
 fn config_roundtrip_preserves_results() {
     // Serializing and re-parsing the config must not change timing.
+    // Deliberately uncached direct runs: the cache would alias the two
+    // configs (equal fingerprints) and make this tautological.
     let cfg = Config::default();
     let cfg2 = Config::from_toml(&cfg.to_toml()).unwrap();
     assert_eq!(cfg, cfg2);
     let spec = JobSpec::Atax { m: 64, n: 64 };
-    assert_eq!(
-        run_offload(&cfg, &spec, 16, RoutineKind::Baseline).total,
-        run_offload(&cfg2, &spec, 16, RoutineKind::Baseline).total
-    );
+    let req = OffloadRequest::new(spec, 16, RoutineKind::Baseline);
+    assert_eq!(req.run(&cfg).total, req.run(&cfg2).total);
 }
 
 #[test]
@@ -122,8 +129,8 @@ fn faster_noc_reduces_residual_overhead() {
     fast.timing.narrow_quad_to_cluster = 1;
     fast.timing.cluster_wake = 8;
     let spec = JobSpec::Axpy { n: 1024 };
-    let slow_res = run_triple(&cfg, &spec, 16).runtimes(16).residual_overhead();
-    let fast_res = run_triple(&fast, &spec, 16).runtimes(16).residual_overhead();
+    let slow_res = sweep::triple(&cfg, &spec, 16).residual_overhead();
+    let fast_res = sweep::triple(&fast, &spec, 16).residual_overhead();
     assert!(
         fast_res < slow_res,
         "residual should shrink: {slow_res} -> {fast_res}"
@@ -134,7 +141,7 @@ fn faster_noc_reduces_residual_overhead() {
 fn single_cluster_offload_has_no_remote_phases() {
     let cfg = Config::default();
     let spec = JobSpec::Axpy { n: 256 };
-    let t = run_offload(&cfg, &spec, 1, RoutineKind::Baseline);
+    let t = run_one(&cfg, spec, 1, RoutineKind::Baseline);
     // Phase C on cluster 0 is a local access: just a few cycles.
     let c = t.stats(Phase::RetrievePtr).unwrap();
     assert!(c.max <= 10, "local pointer load took {}", c.max);
@@ -147,7 +154,7 @@ fn empty_workload_clusters_still_synchronize() {
     let cfg = Config::default();
     let spec = JobSpec::Axpy { n: 4 };
     for r in [RoutineKind::Baseline, RoutineKind::Multicast] {
-        let t = run_offload(&cfg, &spec, 32, r);
+        let t = run_one(&cfg, spec, 32, r);
         assert!(t.total > 0);
         let e = t.stats(Phase::RetrieveOperands).unwrap();
         assert_eq!(e.n, 32, "every cluster records phase E (even zero-length)");

@@ -1,0 +1,130 @@
+//! Integration and property tests of the `sweep` subsystem: parallel ==
+//! serial bit-identical results over randomized grids, equivalence of
+//! the migrated figure modules with the legacy hand-rolled loops, and
+//! trace-cache semantics.
+
+mod prop_util;
+
+use std::sync::Arc;
+
+use occamy_offload::config::Config;
+use occamy_offload::exp::{benchmark_set, fig7, CLUSTER_SWEEP};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::{self, OffloadRequest, Sweep};
+use prop_util::{choose, prop, random_spec};
+
+#[test]
+fn prop_parallel_matches_serial_bit_identical() {
+    // The tentpole determinism claim: over a randomized grid, the
+    // parallel executor returns results bit-identical (every phase span
+    // of every trace, in the same order) to serial execution.
+    let cfg = Config::default();
+    const LABELS: [&str; 3] = ["k0", "k1", "k2"];
+    prop(8, |rng| {
+        let mut sweep = Sweep::new();
+        for &label in LABELS.iter().take(rng.gen_range_usize(1, 4)) {
+            sweep = sweep.kernel(label, random_spec(rng));
+        }
+        for _ in 0..rng.gen_range_usize(1, 3) {
+            sweep = sweep.clusters([*choose(rng, &[1usize, 2, 5, 8, 16, 32])]);
+        }
+        let n_routines = rng.gen_range_usize(1, 4);
+        for _ in 0..n_routines {
+            sweep = sweep.routines([*choose(rng, &RoutineKind::ALL)]);
+        }
+        sweep = sweep.point(
+            "extra",
+            OffloadRequest::new(random_spec(rng), 3, RoutineKind::Multicast),
+        );
+        let serial = sweep.clone().serial().uncached().run(&cfg);
+        let parallel = sweep.uncached().run(&cfg);
+        assert_eq!(serial, parallel);
+    });
+}
+
+#[test]
+fn fig7_matches_legacy_per_loop_output() {
+    // The migrated figure must reproduce the seed's hand-rolled loop
+    // exactly (the deprecated shims are the legacy reference).
+    let cfg = Config::default();
+    let fig = fig7::run(&cfg);
+    assert_eq!(fig.points.len(), benchmark_set().len() * CLUSTER_SWEEP.len());
+    #[allow(deprecated)]
+    for (name, spec) in benchmark_set() {
+        for &n in &CLUSTER_SWEEP {
+            let legacy = occamy_offload::offload::run_triple(&cfg, &spec, n).runtimes(n);
+            assert_eq!(
+                fig.overhead(name, n),
+                Some(legacy.overhead()),
+                "{name}@{n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_shares_traces_within_and_across_sweeps() {
+    let cfg = Config::default();
+    let req = OffloadRequest::new(JobSpec::Axpy { n: 48 }, 2, RoutineKind::Ideal);
+    let a = sweep::run_one(&cfg, req);
+    let b = sweep::run_one(&cfg, req);
+    assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+    // A sweep containing the same request shares the same trace.
+    let results = Sweep::new()
+        .point("p", req)
+        .run(&cfg);
+    assert!(Arc::ptr_eq(&a, &results.records()[0].trace));
+    // A modified config must not alias.
+    let mut other = cfg.clone();
+    other.timing.host_ipi_issue_gap *= 2;
+    let c = sweep::run_one(&other, req);
+    assert!(!Arc::ptr_eq(&a, &c));
+}
+
+#[test]
+fn uncached_results_equal_cached_results_by_value() {
+    let cfg = Config::default();
+    let sweep = Sweep::new()
+        .kernel("axpy", JobSpec::Axpy { n: 96 })
+        .clusters([1, 8])
+        .triples();
+    let cached = sweep.clone().run(&cfg);
+    let uncached = sweep.uncached().run(&cfg);
+    assert_eq!(cached, uncached);
+}
+
+#[test]
+fn triple_helper_matches_grid_results() {
+    let cfg = Config::default();
+    let spec = JobSpec::Atax { m: 32, n: 32 };
+    let t = sweep::triple(&cfg, &spec, 8);
+    let results = Sweep::new()
+        .kernel("atax", spec)
+        .clusters([8])
+        .triples()
+        .run(&cfg);
+    let grid_t = results.triple_of("atax", 8).expect("triple in grid");
+    assert_eq!(t.base, grid_t.base);
+    assert_eq!(t.ideal, grid_t.ideal);
+    assert_eq!(t.improved, grid_t.improved);
+    assert!(t.ideal <= t.improved && t.improved <= t.base);
+}
+
+#[test]
+fn group_by_partitions_a_mixed_grid() {
+    let cfg = Config::default();
+    let results = Sweep::new()
+        .kernel("axpy", JobSpec::Axpy { n: 64 })
+        .kernel("atax", JobSpec::Atax { m: 16, n: 16 })
+        .clusters([1, 4])
+        .routines([RoutineKind::Multicast])
+        .run(&cfg);
+    let by_label = results.group_by(|r| r.label());
+    assert_eq!(by_label.len(), 2);
+    assert_eq!(by_label[0].0, "axpy");
+    assert_eq!(by_label[0].1.len(), 2);
+    let by_cluster = results.group_by(|r| r.req().n_clusters);
+    assert_eq!(by_cluster.len(), 2);
+    assert_eq!(by_cluster[0].0, 1);
+}

@@ -1,42 +1,14 @@
 //! Property tests of the offload executor: ordering, determinism and
 //! conservation invariants over randomized (kernel, size, clusters)
-//! configurations.
+//! configurations, exercised through the typed `sweep` API.
 
 mod prop_util;
 
 use occamy_offload::config::Config;
 use occamy_offload::kernels::JobSpec;
-use occamy_offload::offload::{run_offload, run_triple, RoutineKind};
-use occamy_offload::rng::Rng64;
-use occamy_offload::sim::Phase;
-use prop_util::{choose, prop};
-
-fn random_spec(rng: &mut Rng64) -> JobSpec {
-    match rng.gen_range_usize(0, 6) {
-        0 => JobSpec::Axpy {
-            n: *choose(rng, &[1, 7, 64, 255, 1024, 4096]),
-        },
-        1 => JobSpec::MonteCarlo {
-            samples: *choose(rng, &[8, 100, 4096, 65536]),
-        },
-        2 => {
-            let s = *choose(rng, &[4u64, 16, 33, 64]);
-            JobSpec::Matmul { m: s, n: s, k: s }
-        }
-        3 => {
-            let s = *choose(rng, &[4u64, 16, 63, 128]);
-            JobSpec::Atax { m: s, n: s }
-        }
-        4 => JobSpec::Covariance {
-            m: *choose(rng, &[2u64, 8, 32]),
-            n: *choose(rng, &[4u64, 64, 128]),
-        },
-        _ => JobSpec::Bfs {
-            nodes: *choose(rng, &[4u64, 16, 64, 100]),
-            levels: *choose(rng, &[1u64, 2, 5, 9]),
-        },
-    }
-}
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::{self, OffloadRequest};
+use prop_util::{choose, prop, random_spec};
 
 #[test]
 fn prop_runtime_ordering_ideal_improved_base() {
@@ -46,7 +18,7 @@ fn prop_runtime_ordering_ideal_improved_base() {
     prop(60, |rng| {
         let spec = random_spec(rng);
         let n = *choose(rng, &[1usize, 2, 3, 4, 8, 12, 16, 32]);
-        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        let t = sweep::triple(&cfg, &spec, n);
         assert!(t.ideal <= t.improved, "{spec:?}@{n}: {t:?}");
         assert!(t.improved <= t.base, "{spec:?}@{n}: {t:?}");
     });
@@ -54,6 +26,8 @@ fn prop_runtime_ordering_ideal_improved_base() {
 
 #[test]
 fn prop_deterministic_replay() {
+    // Two *uncached* runs of the same request are bit-identical (the
+    // cached path would make this trivially true).
     let cfg = Config::default();
     prop(30, |rng| {
         let spec = random_spec(rng);
@@ -66,8 +40,9 @@ fn prop_deterministic_replay() {
                 RoutineKind::Ideal,
             ],
         );
-        let a = run_offload(&cfg, &spec, n, routine);
-        let b = run_offload(&cfg, &spec, n, routine);
+        let req = OffloadRequest::new(spec, n, routine);
+        let a = req.run(&cfg);
+        let b = req.run(&cfg);
         assert_eq!(a.total, b.total);
         assert_eq!(a.events, b.events);
         for c in 0..n {
@@ -94,7 +69,7 @@ fn prop_phase_pipeline_order_per_cluster() {
         let spec = random_spec(rng);
         let n = *choose(rng, &[1usize, 2, 8, 32]);
         let routine = *choose(rng, &[RoutineKind::Baseline, RoutineKind::Multicast]);
-        let t = run_offload(&cfg, &spec, n, routine);
+        let t = sweep::run_one(&cfg, OffloadRequest::new(spec, n, routine));
         for c in 0..n {
             let spans = &t.cluster_spans[c];
             let mut prev_end = 0;
@@ -123,7 +98,7 @@ fn prop_total_covers_all_spans() {
         let spec = random_spec(rng);
         let n = *choose(rng, &[1usize, 4, 16, 32]);
         let routine = *choose(rng, &[RoutineKind::Baseline, RoutineKind::Multicast]);
-        let t = run_offload(&cfg, &spec, n, routine);
+        let t = sweep::run_one(&cfg, OffloadRequest::new(spec, n, routine));
         for c in 0..n {
             for (p, s) in &t.cluster_spans[c] {
                 assert!(
@@ -144,7 +119,7 @@ fn prop_overhead_positive_for_offloaded_runs() {
     prop(40, |rng| {
         let spec = random_spec(rng);
         let n = *choose(rng, &[1usize, 2, 8, 16, 32]);
-        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        let t = sweep::triple(&cfg, &spec, n);
         assert!(t.overhead() > 0, "{spec:?}@{n}: overhead {}", t.overhead());
         assert!(t.residual_overhead() > 0);
     });
@@ -159,8 +134,8 @@ fn prop_more_clusters_never_helps_broadcast_ideal() {
     prop(20, |rng| {
         let s = *choose(rng, &[32u64, 64, 128]);
         let spec = JobSpec::Atax { m: s, n: s };
-        let t8 = run_offload(&cfg, &spec, 8, RoutineKind::Ideal).total;
-        let t32 = run_offload(&cfg, &spec, 32, RoutineKind::Ideal).total;
+        let t8 = sweep::run_one(&cfg, OffloadRequest::new(spec, 8, RoutineKind::Ideal)).total;
+        let t32 = sweep::run_one(&cfg, OffloadRequest::new(spec, 32, RoutineKind::Ideal)).total;
         assert!(t32 >= t8, "ATAX {s}: ideal {t8} -> {t32}");
     });
 }
@@ -175,8 +150,11 @@ fn prop_timing_config_scaling_sanity() {
     prop(20, |rng| {
         let spec = random_spec(rng);
         let n = *choose(rng, &[2usize, 8, 32]);
-        let b_fast = run_offload(&cfg, &spec, n, RoutineKind::Baseline).total;
-        let b_slow = run_offload(&slow, &spec, n, RoutineKind::Baseline).total;
+        let base = |c: &Config| {
+            sweep::run_one(c, OffloadRequest::new(spec, n, RoutineKind::Baseline)).total
+        };
+        let b_fast = base(&cfg);
+        let b_slow = base(&slow);
         // A few cycles of arbitration jitter are possible when shifted
         // arrivals happen to dodge a port conflict; anything more than
         // that would be a real inversion.
@@ -184,9 +162,14 @@ fn prop_timing_config_scaling_sanity() {
             b_slow + 8 >= b_fast,
             "{spec:?}@{n}: {b_fast} -> {b_slow}"
         );
-        let m_fast = run_offload(&cfg, &spec, n, RoutineKind::Multicast).total;
-        let m_slow = run_offload(&slow, &spec, n, RoutineKind::Multicast).total;
-        assert_eq!(m_fast, m_slow, "{spec:?}@{n}: multicast must not depend on the IPI gap");
+        let mcast = |c: &Config| {
+            sweep::run_one(c, OffloadRequest::new(spec, n, RoutineKind::Multicast)).total
+        };
+        assert_eq!(
+            mcast(&cfg),
+            mcast(&slow),
+            "{spec:?}@{n}: multicast must not depend on the IPI gap"
+        );
     });
 }
 
@@ -199,7 +182,7 @@ fn prop_fluid_port_ablation_preserves_ordering() {
     prop(20, |rng| {
         let spec = random_spec(rng);
         let n = *choose(rng, &[1usize, 4, 16]);
-        let t = run_triple(&cfg, &spec, n).runtimes(n);
+        let t = sweep::triple(&cfg, &spec, n);
         assert!(t.ideal <= t.improved && t.improved <= t.base, "{spec:?}@{n}: {t:?}");
     });
 }

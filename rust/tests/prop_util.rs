@@ -4,6 +4,7 @@
 
 #![allow(dead_code)]
 
+use occamy_offload::kernels::JobSpec;
 use occamy_offload::rng::Rng64;
 
 /// Run `f` over `cases` seeded RNGs; panics with the failing case index.
@@ -23,4 +24,34 @@ pub fn prop(cases: u64, mut f: impl FnMut(&mut Rng64)) {
 /// Pick one element of a slice.
 pub fn choose<'a, T>(rng: &mut Rng64, xs: &'a [T]) -> &'a T {
     &xs[rng.gen_range_usize(0, xs.len())]
+}
+
+/// A random job over all six kernel families and a spread of sizes —
+/// the shared generator of every offload/sweep property test (keep it
+/// in one place so new `JobSpec` variants widen every suite at once).
+pub fn random_spec(rng: &mut Rng64) -> JobSpec {
+    match rng.gen_range_usize(0, 6) {
+        0 => JobSpec::Axpy {
+            n: *choose(rng, &[1, 7, 64, 255, 1024, 4096]),
+        },
+        1 => JobSpec::MonteCarlo {
+            samples: *choose(rng, &[8, 100, 4096, 65536]),
+        },
+        2 => {
+            let s = *choose(rng, &[4u64, 16, 33, 64]);
+            JobSpec::Matmul { m: s, n: s, k: s }
+        }
+        3 => {
+            let s = *choose(rng, &[4u64, 16, 63, 128]);
+            JobSpec::Atax { m: s, n: s }
+        }
+        4 => JobSpec::Covariance {
+            m: *choose(rng, &[2u64, 8, 32]),
+            n: *choose(rng, &[4u64, 64, 128]),
+        },
+        _ => JobSpec::Bfs {
+            nodes: *choose(rng, &[4u64, 16, 64, 100]),
+            levels: *choose(rng, &[1u64, 2, 5, 9]),
+        },
+    }
 }
