@@ -1,0 +1,67 @@
+//! Campaign quickstart: parse `examples/campaign.toml`, execute it as
+//! two cooperating shards with a persistent trace store, merge the
+//! streamed results, and prove the merge is bit-identical to a
+//! single-process run — then render the triples.
+//!
+//! ```bash
+//! cargo run --release --example campaign_demo
+//! ```
+//!
+//! The same flow is available from the CLI (and across real processes)
+//! as `occamy campaign <run|merge|status|validate>`; see the spec file
+//! for the command lines.
+
+use occamy_offload::campaign::{self, CampaignSpec, Shard, TraceStore};
+
+fn main() -> anyhow::Result<()> {
+    let spec = CampaignSpec::parse(include_str!("campaign.toml"))?;
+
+    // Dry-run diagnostics: what would this campaign execute?
+    println!("{}\n", spec.report());
+
+    let out = std::env::temp_dir().join(format!("occamy-campaign-demo-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    let store = TraceStore::open(out.join("store"))?;
+
+    // Two shards, deterministically partitioned — in production these
+    // are separate `occamy campaign run --shard i/N` processes (the
+    // store then shares traces across them on disk).
+    for i in 0..2 {
+        let report = campaign::run_shard(&spec, Shard::new(i, 2)?, &out, Some(&store))?;
+        println!("{report}");
+    }
+    println!("status:\n{}", campaign::status(&spec, 2, &out)?);
+
+    // Merge the streamed JSONL back into input-ordered SweepResults and
+    // verify the tentpole guarantee.
+    let merged = campaign::merge(&spec, 2, &out)?;
+    let single = campaign::run_single(&spec);
+    assert_eq!(merged, single, "merge must be bit-identical to one process");
+    println!(
+        "merged {} points; bit-identical to single-process execution",
+        merged.len()
+    );
+    let stats = store.stats();
+    println!(
+        "store: {} memory hit(s), {} disk hit(s), {} simulation(s)\n",
+        stats.memory_hits, stats.disk_hits, stats.simulations
+    );
+
+    println!(
+        "{:>12} {:>9} {:>9} {:>10} {:>9}",
+        "kernel", "clusters", "overhead", "idealSp", "achieved"
+    );
+    for t in merged.triples() {
+        println!(
+            "{:>12} {:>9} {:>9} {:>10.2} {:>9.2}",
+            t.spec.id(),
+            t.n_clusters,
+            t.runtimes.overhead(),
+            t.runtimes.ideal_speedup(),
+            t.runtimes.achieved_speedup()
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&out);
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! JSON codecs for the campaign's persistent formats: job specs,
+//! requests and full traces. Round-tripping is exact for every cycle
+//! count the DES can produce (`runtime::json` writes integers up to
+//! 2^53 losslessly), which is what makes shard merge and store reuse
+//! bit-identical to in-process execution.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::kernels::JobSpec;
+use crate::offload::RoutineKind;
+use crate::runtime::json::{Json, EXACT_INT};
+use crate::sim::{Phase, PhaseSpan, Trace};
+use crate::sweep::OffloadRequest;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Strict u64 extraction: unlike `Json::as_u64` (which truncates
+/// fractions and saturates negatives for the lenient manifest path),
+/// corrupted values must be *rejected* so the caller re-simulates.
+pub(crate) fn exact_u64(j: &Json) -> Option<u64> {
+    let n = j.as_f64()?;
+    (n >= 0.0 && n.fract() == 0.0 && n <= EXACT_INT).then_some(n as u64)
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(exact_u64)
+        .ok_or_else(|| format!("missing or invalid integer {key:?}"))
+}
+
+/// Serialize a job spec with its full parameter set (unlike
+/// `JobSpec::id`, which omits the BFS level count).
+pub fn spec_to_json(spec: &JobSpec) -> Json {
+    match *spec {
+        JobSpec::Axpy { n } => obj(vec![("kernel", Json::Str("axpy".into())), ("n", num(n))]),
+        JobSpec::MonteCarlo { samples } => obj(vec![
+            ("kernel", Json::Str("montecarlo".into())),
+            ("samples", num(samples)),
+        ]),
+        JobSpec::Matmul { m, n, k } => obj(vec![
+            ("kernel", Json::Str("matmul".into())),
+            ("m", num(m)),
+            ("n", num(n)),
+            ("k", num(k)),
+        ]),
+        JobSpec::Atax { m, n } => obj(vec![
+            ("kernel", Json::Str("atax".into())),
+            ("m", num(m)),
+            ("n", num(n)),
+        ]),
+        JobSpec::Covariance { m, n } => obj(vec![
+            ("kernel", Json::Str("covariance".into())),
+            ("m", num(m)),
+            ("n", num(n)),
+        ]),
+        JobSpec::Bfs { nodes, levels } => obj(vec![
+            ("kernel", Json::Str("bfs".into())),
+            ("nodes", num(nodes)),
+            ("levels", num(levels)),
+        ]),
+    }
+}
+
+pub fn spec_from_json(j: &Json) -> Result<JobSpec, String> {
+    let kernel = j
+        .get("kernel")
+        .and_then(Json::as_str)
+        .ok_or("missing \"kernel\"")?;
+    Ok(match kernel {
+        "axpy" => JobSpec::Axpy { n: get_u64(j, "n")? },
+        "montecarlo" => JobSpec::MonteCarlo {
+            samples: get_u64(j, "samples")?,
+        },
+        "matmul" => JobSpec::Matmul {
+            m: get_u64(j, "m")?,
+            n: get_u64(j, "n")?,
+            k: get_u64(j, "k")?,
+        },
+        "atax" => JobSpec::Atax {
+            m: get_u64(j, "m")?,
+            n: get_u64(j, "n")?,
+        },
+        "covariance" => JobSpec::Covariance {
+            m: get_u64(j, "m")?,
+            n: get_u64(j, "n")?,
+        },
+        "bfs" => JobSpec::Bfs {
+            nodes: get_u64(j, "nodes")?,
+            levels: get_u64(j, "levels")?,
+        },
+        other => return Err(format!("unknown kernel {other:?}")),
+    })
+}
+
+pub fn request_to_json(req: &OffloadRequest) -> Json {
+    obj(vec![
+        ("spec", spec_to_json(&req.spec)),
+        ("clusters", num(req.n_clusters as u64)),
+        ("routine", Json::Str(req.routine.name().into())),
+    ])
+}
+
+pub fn request_from_json(j: &Json) -> Result<OffloadRequest, String> {
+    let spec = spec_from_json(j.get("spec").ok_or("missing \"spec\"")?)?;
+    let n_clusters = get_u64(j, "clusters")? as usize;
+    let routine = j
+        .get("routine")
+        .and_then(Json::as_str)
+        .ok_or("missing \"routine\"")?;
+    let routine =
+        RoutineKind::parse(routine).ok_or_else(|| format!("unknown routine {routine:?}"))?;
+    Ok(OffloadRequest::new(spec, n_clusters, routine))
+}
+
+fn spans_to_json(spans: &BTreeMap<Phase, PhaseSpan>) -> Json {
+    Json::Obj(
+        spans
+            .iter()
+            .map(|(p, s)| {
+                (
+                    p.letter().to_string(),
+                    Json::Arr(vec![num(s.start), num(s.end)]),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn spans_from_json(j: &Json) -> Result<BTreeMap<Phase, PhaseSpan>, String> {
+    let m = match j {
+        Json::Obj(m) => m,
+        _ => return Err("phase map is not an object".into()),
+    };
+    let mut out = BTreeMap::new();
+    for (k, v) in m {
+        let mut chars = k.chars();
+        let phase = chars
+            .next()
+            .filter(|_| chars.next().is_none())
+            .and_then(Phase::from_letter)
+            .ok_or_else(|| format!("unknown phase {k:?}"))?;
+        let arr = v.as_arr().filter(|a| a.len() == 2).ok_or("span is not [start, end]")?;
+        let (start, end) = (
+            exact_u64(&arr[0]).ok_or("invalid span start")?,
+            exact_u64(&arr[1]).ok_or("invalid span end")?,
+        );
+        if end < start {
+            return Err(format!("span ends before it starts: {start}..{end}"));
+        }
+        out.insert(phase, PhaseSpan::new(start, end));
+    }
+    Ok(out)
+}
+
+/// Serialize a full trace (all per-cluster and host phase spans).
+pub fn trace_to_json(trace: &Trace) -> Json {
+    obj(vec![
+        ("total", num(trace.total)),
+        ("events", num(trace.events)),
+        ("host", spans_to_json(&trace.host_spans)),
+        (
+            "clusters",
+            Json::Arr(trace.cluster_spans.iter().map(spans_to_json).collect()),
+        ),
+    ])
+}
+
+pub fn trace_from_json(j: &Json) -> Result<Trace, String> {
+    let clusters = j
+        .get("clusters")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"clusters\"")?;
+    Ok(Trace {
+        cluster_spans: clusters
+            .iter()
+            .map(spans_from_json)
+            .collect::<Result<_, _>>()?,
+        host_spans: spans_from_json(j.get("host").ok_or("missing \"host\"")?)?,
+        total: get_u64(j, "total")?,
+        events: get_u64(j, "events")?,
+    })
+}
+
+/// Parse a trace from raw file contents (corruption-tolerant callers
+/// map `Err` to a re-simulation).
+pub fn trace_from_str(text: &str) -> Result<Arc<Trace>, String> {
+    Json::parse(text).and_then(|j| trace_from_json(&j)).map(Arc::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn spec_round_trips_all_families() {
+        let specs = [
+            JobSpec::Axpy { n: 1024 },
+            JobSpec::MonteCarlo { samples: 1 << 20 },
+            JobSpec::Matmul { m: 8, n: 16, k: 32 },
+            JobSpec::Atax { m: 64, n: 63 },
+            JobSpec::Covariance { m: 32, n: 64 },
+            JobSpec::Bfs { nodes: 64, levels: 9 },
+        ];
+        for s in specs {
+            let j = Json::parse(&spec_to_json(&s).to_string()).unwrap();
+            assert_eq!(spec_from_json(&j).unwrap(), s, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn request_round_trips() {
+        for routine in RoutineKind::ALL {
+            let req = OffloadRequest::new(JobSpec::Atax { m: 16, n: 16 }, 8, routine);
+            let j = Json::parse(&request_to_json(&req).to_string()).unwrap();
+            assert_eq!(request_from_json(&j).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_bit_identical() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 1024 }, 8, RoutineKind::Baseline);
+        let trace = req.run(&cfg);
+        let line = trace_to_json(&trace).to_string();
+        assert!(!line.contains('\n'));
+        let back = trace_from_str(&line).unwrap();
+        assert_eq!(*back, trace);
+    }
+
+    #[test]
+    fn corrupted_traces_are_rejected_not_panicked() {
+        for bad in [
+            "",
+            "{",
+            "null",
+            "{\"total\": 1}",
+            "{\"total\":1,\"events\":1,\"host\":{},\"clusters\":[{\"Z\":[0,1]}]}",
+            "{\"total\":1,\"events\":1,\"host\":{\"A\":[5,2]},\"clusters\":[]}",
+            "{\"total\":1,\"events\":1,\"host\":{\"A\":[0]},\"clusters\":[]}",
+            // Strictness: negative and fractional cycle counts are
+            // corruption, not values to coerce.
+            "{\"total\":-1,\"events\":1,\"host\":{},\"clusters\":[]}",
+            "{\"total\":1.5,\"events\":1,\"host\":{},\"clusters\":[]}",
+            "{\"total\":1,\"events\":1,\"host\":{\"A\":[0,1.25]},\"clusters\":[]}",
+        ] {
+            assert!(trace_from_str(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,419 @@
+//! # Sharded, resumable experiment campaigns (`campaign`)
+//!
+//! [`crate::sweep`] made experiment grids typed and parallel within one
+//! process; this subsystem scales the same grids across processes and
+//! makes them survive kills. A campaign is a TOML spec
+//! ([`CampaignSpec`]) — kernels × sizes × clusters × routines plus
+//! `[soc]`/`[timing]` config overrides — that any number of independent
+//! shard processes execute cooperatively:
+//!
+//! * [`Shard`] — a deterministic round-robin partition of the campaign's
+//!   global point list (`--shard i/N`); shards agree on the split
+//!   without coordination.
+//! * [`run_shard`] — executes one shard on a scoped worker pool (the
+//!   same drain-an-atomic-counter shape as `sweep`'s executor, hand-held
+//!   here because it additionally **streams** each finished point as a
+//!   self-contained JSONL line the moment it completes), **resuming** by
+//!   skipping points already present in the shard's output file (torn
+//!   tails from a kill are dropped and re-run).
+//! * [`TraceStore`] — a persistent, content-addressed on-disk trace
+//!   store keyed by `(config fingerprint, request)`, layered under the
+//!   process-wide `sweep::cache`, so repeated runs and sibling shards
+//!   reuse traces across processes; corrupt files re-simulate.
+//! * [`merge`] — recombines shard outputs into a [`SweepResults`]
+//!   **bit-identical** to single-process execution
+//!   (property-tested in `tests/integration_campaign.rs`), ready for the
+//!   `exp::fig*::from_results` constructors.
+//!
+//! CLI: `occamy campaign <run|merge|status|validate>`; quickstart:
+//! `examples/campaign_demo.rs` + `examples/campaign.toml`.
+
+mod codec;
+pub mod shard;
+pub mod spec;
+pub mod store;
+pub mod stream;
+
+pub use shard::Shard;
+pub use spec::{CampaignSpec, SpecReport};
+pub use store::{StoreStats, TraceStore};
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sweep::{cache, SweepPoint, SweepRecord, SweepResults};
+
+/// Outcome of one [`run_shard`] invocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardReport {
+    pub shard: Shard,
+    /// Global campaign size.
+    pub total_points: usize,
+    /// Points this shard owns.
+    pub owned: usize,
+    /// Owned points already complete in the output file (resume).
+    pub resumed: usize,
+    /// Points executed by this invocation.
+    pub executed: usize,
+    /// Corrupt lines dropped from a previous (killed) run.
+    pub dropped: usize,
+    /// The shard's output file.
+    pub output: PathBuf,
+}
+
+impl std::fmt::Display for ShardReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard {}: {} of {} points owned, {} resumed, {} executed{} -> {}",
+            self.shard,
+            self.owned,
+            self.total_points,
+            self.resumed,
+            self.executed,
+            if self.dropped > 0 {
+                format!(", {} corrupt line(s) dropped", self.dropped)
+            } else {
+                String::new()
+            },
+            self.output.display()
+        )
+    }
+}
+
+/// Completion state of one shard (for [`status`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardStatus {
+    pub shard: Shard,
+    pub owned: usize,
+    pub done: usize,
+    pub dropped: usize,
+}
+
+/// Completion state of a whole campaign's shard set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CampaignStatus {
+    pub total_points: usize,
+    pub shards: Vec<ShardStatus>,
+}
+
+impl CampaignStatus {
+    pub fn done(&self) -> usize {
+        self.shards.iter().map(|s| s.done).sum()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done() == self.total_points
+    }
+}
+
+impl std::fmt::Display for CampaignStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{} of {} points complete{}",
+            self.done(),
+            self.total_points,
+            if self.is_complete() { " — ready to merge" } else { "" }
+        )?;
+        for s in &self.shards {
+            write!(f, "  shard {}: {}/{} done", s.shard, s.done, s.owned)?;
+            if s.dropped > 0 {
+                write!(f, " ({} corrupt line(s))", s.dropped)?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Execute the whole campaign in-process — the single-process reference
+/// shard-merge must match bit-identically.
+pub fn run_single(spec: &CampaignSpec) -> SweepResults {
+    spec.to_sweep().run(&spec.config)
+}
+
+/// Check a restored record against the campaign's expansion; a mismatch
+/// means the output file belongs to a different spec.
+fn check_point(points: &[SweepPoint], index: usize, rec: &SweepRecord, path: &Path) -> anyhow::Result<()> {
+    let expected = points.get(index).ok_or_else(|| {
+        anyhow::anyhow!(
+            "{}: point index {index} out of range ({} points) — output from a different spec?",
+            path.display(),
+            points.len()
+        )
+    })?;
+    anyhow::ensure!(
+        rec.point == *expected,
+        "{}: point {index} is {:?}, spec expands to {:?} — output from a different spec?",
+        path.display(),
+        rec.point,
+        expected
+    );
+    Ok(())
+}
+
+/// Execute one shard of a campaign, streaming results to
+/// `<out_dir>/<name>.shard-<i>-of-<N>.jsonl` and resuming from any
+/// points already in that file. `store` layers the persistent trace
+/// store under the in-process cache (pass `None` for cache-only runs).
+pub fn run_shard(
+    spec: &CampaignSpec,
+    shard: Shard,
+    out_dir: &Path,
+    store: Option<&TraceStore>,
+) -> anyhow::Result<ShardReport> {
+    let cfg = &spec.config;
+    let mem_key = cache::config_key(cfg);
+    let fp = store::fingerprint(cfg);
+    let points = spec.expand();
+    let owned = shard.indices(points.len());
+    std::fs::create_dir_all(out_dir)
+        .map_err(|e| anyhow::anyhow!("create {}: {e}", out_dir.display()))?;
+    let output = out_dir.join(stream::shard_file_name(&spec.name, shard));
+
+    // Resume: collect completed points (written under the same config
+    // fingerprint — read_records rejects stale files), drop torn tails,
+    // and rewrite the file to contain exactly the valid records before
+    // appending.
+    let (done, dropped) = stream::read_records(&output, &fp)?;
+    for (&index, rec) in &done {
+        anyhow::ensure!(
+            shard.owns(index),
+            "{}: contains point {index} owned by another shard — output from a different split?",
+            output.display()
+        );
+        check_point(&points, index, rec, &output)?;
+    }
+    if dropped > 0 {
+        let tmp = output.with_extension("jsonl.tmp");
+        let mut text = String::new();
+        for (&index, rec) in &done {
+            text.push_str(&stream::line_of(&fp, index, rec));
+            text.push('\n');
+        }
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, &output)?;
+    }
+    let todo: Vec<usize> = owned.iter().copied().filter(|i| !done.contains_key(i)).collect();
+
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&output)?;
+    let writer = Mutex::new(std::io::BufWriter::new(file));
+    let failure: Mutex<Option<String>> = Mutex::new(None);
+
+    let run_point = |req| match store {
+        Some(s) => s.run(&fp, &mem_key, cfg, req),
+        None => cache::run_cached_keyed(&mem_key, cfg, req),
+    };
+    let record_one = |i: usize| -> Result<(), String> {
+        let point = points[i];
+        let trace = run_point(point.req);
+        let line = stream::line_of(&fp, i, &SweepRecord { point, trace });
+        let mut w = writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        // Flush per line so a killed shard keeps every finished point.
+        writeln!(w, "{line}").and_then(|_| w.flush()).map_err(|e| e.to_string())
+    };
+
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(todo.len());
+    if workers <= 1 {
+        for &i in &todo {
+            record_one(i).map_err(|e| anyhow::anyhow!("write {}: {e}", output.display()))?;
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= todo.len() {
+                        break;
+                    }
+                    let mut fail = failure.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                    if fail.is_some() {
+                        break;
+                    }
+                    drop(fail);
+                    if let Err(e) = record_one(todo[t]) {
+                        fail = failure.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                        fail.get_or_insert(e);
+                        break;
+                    }
+                });
+            }
+        });
+        if let Some(e) = failure.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner) {
+            anyhow::bail!("write {}: {e}", output.display());
+        }
+    }
+
+    Ok(ShardReport {
+        shard,
+        total_points: points.len(),
+        owned: owned.len(),
+        resumed: done.len(),
+        executed: todo.len(),
+        dropped,
+        output,
+    })
+}
+
+/// Read every shard's output and report completion without executing
+/// anything. Applies the same spec checks as [`run_shard`]/[`merge`],
+/// so stale files from a different grid error out instead of being
+/// counted as done.
+pub fn status(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow::Result<CampaignStatus> {
+    anyhow::ensure!(shard_count > 0, "shard count must be positive");
+    let fp = store::fingerprint(&spec.config);
+    let points = spec.expand();
+    let total = points.len();
+    let shards = (0..shard_count)
+        .map(|i| {
+            let shard = Shard::new(i, shard_count)?;
+            let path = out_dir.join(stream::shard_file_name(&spec.name, shard));
+            let (done, dropped) = stream::read_records(&path, &fp)?;
+            for (&index, rec) in &done {
+                check_point(&points, index, rec, &path)?;
+            }
+            Ok(ShardStatus {
+                shard,
+                owned: shard.indices(total).len(),
+                done: done.len(),
+                dropped,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(CampaignStatus {
+        total_points: total,
+        shards,
+    })
+}
+
+/// Recombine the outputs of an N-way shard split into input-ordered
+/// [`SweepResults`] bit-identical to [`run_single`], writing the merged
+/// stream to `<out_dir>/<name>.merged.jsonl`. Fails (naming the missing
+/// counts per shard) unless every point is present.
+pub fn merge(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow::Result<SweepResults> {
+    anyhow::ensure!(shard_count > 0, "shard count must be positive");
+    let fp = store::fingerprint(&spec.config);
+    let points = spec.expand();
+    let mut collected: BTreeMap<usize, SweepRecord> = BTreeMap::new();
+    for i in 0..shard_count {
+        let shard = Shard::new(i, shard_count)?;
+        let path = out_dir.join(stream::shard_file_name(&spec.name, shard));
+        let (records, _dropped) = stream::read_records(&path, &fp)?;
+        for (index, rec) in records {
+            check_point(&points, index, &rec, &path)?;
+            collected.entry(index).or_insert(rec);
+        }
+    }
+    if collected.len() != points.len() {
+        let st = status(spec, shard_count, out_dir)?;
+        let missing: Vec<String> = st
+            .shards
+            .iter()
+            .filter(|s| s.done < s.owned)
+            .map(|s| format!("shard {} has {}/{}", s.shard, s.done, s.owned))
+            .collect();
+        anyhow::bail!(
+            "campaign incomplete: {}/{} points present ({}); re-run the missing shards",
+            collected.len(),
+            points.len(),
+            missing.join(", ")
+        );
+    }
+    let merged_path = out_dir.join(stream::merged_file_name(&spec.name));
+    let mut text = String::new();
+    for (&index, rec) in &collected {
+        text.push_str(&stream::line_of(&fp, index, rec));
+        text.push('\n');
+    }
+    std::fs::write(&merged_path, text)?;
+    Ok(SweepResults::new(collected.into_values().collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec(name: &str, gap: u64) -> CampaignSpec {
+        // A unique timing override per test keeps the process-wide cache
+        // and store namespaces disjoint across parallel tests.
+        CampaignSpec::parse(&format!(
+            "[campaign]\nname = \"{name}\"\n[grid]\nkernels = [\"axpy:96\", \"atax:16\"]\nclusters = [1, 4]\n\
+             routines = [\"baseline\", \"ideal\"]\n[timing]\nhost_ipi_issue_gap = {gap}\n"
+        ))
+        .unwrap()
+    }
+
+    fn temp_out(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("occamy-campaign-mod-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn two_shards_merge_to_the_single_process_results() {
+        let spec = demo_spec("unit-two-shards", 31);
+        let out = temp_out("two-shards");
+        for i in 0..2 {
+            let report = run_shard(&spec, Shard::new(i, 2).unwrap(), &out, None).unwrap();
+            assert_eq!(report.executed, report.owned);
+            assert_eq!(report.resumed, 0);
+        }
+        let merged = merge(&spec, 2, &out).unwrap();
+        assert_eq!(merged, run_single(&spec));
+        assert!(out.join(stream::merged_file_name(&spec.name)).exists());
+    }
+
+    #[test]
+    fn merge_refuses_incomplete_campaigns() {
+        let spec = demo_spec("unit-incomplete", 32);
+        let out = temp_out("incomplete");
+        run_shard(&spec, Shard::new(0, 2).unwrap(), &out, None).unwrap();
+        let err = merge(&spec, 2, &out).unwrap_err().to_string();
+        assert!(err.contains("incomplete"), "{err}");
+        assert!(err.contains("shard 1/2"), "{err}");
+        let st = status(&spec, 2, &out).unwrap();
+        assert!(!st.is_complete());
+        assert_eq!(st.done(), st.shards[0].owned);
+    }
+
+    #[test]
+    fn rerunning_a_complete_shard_resumes_everything() {
+        let spec = demo_spec("unit-resume", 33);
+        let out = temp_out("resume");
+        let shard = Shard::SINGLE;
+        let first = run_shard(&spec, shard, &out, None).unwrap();
+        assert_eq!(first.executed, first.owned);
+        let second = run_shard(&spec, shard, &out, None).unwrap();
+        assert_eq!(second.executed, 0);
+        assert_eq!(second.resumed, second.owned);
+        let merged = merge(&spec, 1, &out).unwrap();
+        assert_eq!(merged, run_single(&spec));
+    }
+
+    #[test]
+    fn foreign_output_files_are_detected() {
+        let a = demo_spec("unit-foreign", 34);
+        let out = temp_out("foreign");
+        run_shard(&a, Shard::SINGLE, &out, None).unwrap();
+        // Same config, different grid: caught by the point check.
+        let mut b = demo_spec("unit-foreign", 34);
+        b.kernels.reverse();
+        let err = run_shard(&b, Shard::SINGLE, &out, None).unwrap_err().to_string();
+        assert!(err.contains("different spec"), "{err}");
+        // Same grid, different [timing]: caught by the fingerprint check.
+        let c = demo_spec("unit-foreign", 35);
+        let err = run_shard(&c, Shard::SINGLE, &out, None).unwrap_err().to_string();
+        assert!(err.contains("[soc]/[timing]"), "{err}");
+    }
+}

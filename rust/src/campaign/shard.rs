@@ -1,0 +1,100 @@
+//! Deterministic shard planning: partition a campaign's global point
+//! list across N independent processes.
+//!
+//! Points are dealt round-robin by global index (`index % count ==
+//! shard`), so every shard sees a balanced mix of cheap and expensive
+//! points even when cost correlates with grid position (e.g. cluster
+//! counts expanding innermost). The partition depends only on
+//! `(index, count)` — shards planned on different hosts agree without
+//! coordination.
+
+/// One shard of an N-way campaign split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// This shard's index, `0 <= index < count`.
+    pub index: usize,
+    /// Total number of shards.
+    pub count: usize,
+}
+
+impl Shard {
+    /// The whole campaign as a single shard.
+    pub const SINGLE: Shard = Shard { index: 0, count: 1 };
+
+    pub fn new(index: usize, count: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(count > 0, "shard count must be positive");
+        anyhow::ensure!(
+            index < count,
+            "shard index {index} out of range (0..{count})"
+        );
+        Ok(Self { index, count })
+    }
+
+    /// Parse the CLI syntax `i/N` (e.g. `--shard 0/2`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow::anyhow!("expected i/N (e.g. 0/2), found {s:?}"))?;
+        Self::new(
+            i.trim().parse().map_err(|e| anyhow::anyhow!("bad shard index {i:?}: {e}"))?,
+            n.trim().parse().map_err(|e| anyhow::anyhow!("bad shard count {n:?}: {e}"))?,
+        )
+    }
+
+    /// Whether this shard owns the point at `global_index`.
+    pub fn owns(&self, global_index: usize) -> bool {
+        global_index % self.count == self.index
+    }
+
+    /// The global indices this shard owns, out of `total` points.
+    pub fn indices(&self, total: usize) -> Vec<usize> {
+        (self.index..total).step_by(self.count).collect()
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_exactly() {
+        for total in [0usize, 1, 7, 18, 100] {
+            for count in [1usize, 2, 3, 5] {
+                let mut seen = vec![0u32; total];
+                for index in 0..count {
+                    let shard = Shard::new(index, count).unwrap();
+                    for i in shard.indices(total) {
+                        seen[i] += 1;
+                        assert!(shard.owns(i));
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "total={total} count={count}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_balances_within_one() {
+        let sizes: Vec<usize> = (0..3)
+            .map(|i| Shard::new(i, 3).unwrap().indices(20).len())
+            .collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 20);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let s = Shard::parse("1/4").unwrap();
+        assert_eq!((s.index, s.count), (1, 4));
+        assert_eq!(Shard::parse(&s.to_string()).unwrap(), s);
+        for bad in ["", "2", "2/2", "3/2", "a/b", "1/0", "-1/2"] {
+            assert!(Shard::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+}

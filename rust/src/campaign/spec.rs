@@ -1,0 +1,527 @@
+//! Declarative TOML campaign specs.
+//!
+//! A campaign is the on-disk form of a [`crate::sweep::Sweep`]: a
+//! cartesian grid of kernels × cluster counts × routines, plus the
+//! config the grid runs on — including non-default SoC geometries and
+//! timing ablations as first-class `[soc]`/`[timing]` override sections
+//! (reusing `Config::set_field`, the same vendored-parser approach as
+//! `Config::from_toml`). Every parse error names the offending line so
+//! malformed specs fail fast (`occamy campaign validate`).
+//!
+//! ```toml
+//! [campaign]
+//! name = "fig7-small"
+//!
+//! [grid]
+//! kernels = ["axpy:1024", "atax:64x64"]
+//! clusters = [1, 8, 32]
+//! routines = ["baseline", "ideal", "multicast"]  # optional: triple default
+//!
+//! [soc]                      # optional geometry overrides
+//! n_quadrants = 2
+//!
+//! [timing]                   # optional timing overrides
+//! host_ipi_issue_gap = 20
+//! ```
+
+use std::collections::HashSet;
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::offload::RoutineKind;
+use crate::sweep::{Sweep, SweepPoint};
+
+/// A parsed campaign: grid axes plus the fully-resolved config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    /// Campaign name (`[campaign] name`); names output files.
+    pub name: String,
+    /// Kernel grid axis, in spec order. Labels are the kernel family
+    /// names (`KernelKind::name`), so one family may appear at several
+    /// problem sizes (Fig. 10 style).
+    pub kernels: Vec<JobSpec>,
+    /// Cluster-count axis.
+    pub clusters: Vec<usize>,
+    /// Routine axis; empty means the base/ideal/improved triple.
+    pub routines: Vec<RoutineKind>,
+    /// The config the whole grid runs on (defaults + `[soc]`/`[timing]`
+    /// overrides).
+    pub config: Config,
+}
+
+/// Dry-run diagnostics of a spec (`occamy campaign validate`).
+#[derive(Debug, Clone)]
+pub struct SpecReport {
+    pub name: String,
+    pub points: usize,
+    /// Distinct (spec, clusters, routine) requests — the number of
+    /// simulations a cold run performs and of traces the store will hold.
+    pub unique_traces: usize,
+    pub kernels: Vec<String>,
+    pub clusters: Vec<usize>,
+    pub routines: Vec<&'static str>,
+    /// Content fingerprint of the resolved config (store directory name).
+    pub config_fingerprint: String,
+}
+
+impl std::fmt::Display for SpecReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "campaign {:?}", self.name)?;
+        writeln!(f, "  kernels  ({}): {}", self.kernels.len(), self.kernels.join(", "))?;
+        let clusters: Vec<String> = self.clusters.iter().map(|c| c.to_string()).collect();
+        writeln!(f, "  clusters ({}): {}", clusters.len(), clusters.join(", "))?;
+        writeln!(f, "  routines ({}): {}", self.routines.len(), self.routines.join(", "))?;
+        writeln!(f, "  points: {} ({} unique traces)", self.points, self.unique_traces)?;
+        write!(f, "  config fingerprint: {}", self.config_fingerprint)
+    }
+}
+
+impl CampaignSpec {
+    /// Parse a campaign spec; errors carry 1-based line numbers.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut name = None;
+        let mut kernels: Vec<JobSpec> = Vec::new();
+        let mut clusters: Vec<usize> = Vec::new();
+        let mut routines: Vec<RoutineKind> = Vec::new();
+        let mut config = Config::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(s) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = s.trim().to_string();
+                if !matches!(section.as_str(), "campaign" | "grid" | "soc" | "timing") {
+                    anyhow::bail!(
+                        "line {lineno}: unknown section [{section}] (expected [campaign], [grid], [soc] or [timing])"
+                    );
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: expected key = value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match (section.as_str(), key) {
+                ("campaign", "name") => {
+                    name = Some(parse_string(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?);
+                }
+                ("campaign", other) => {
+                    anyhow::bail!("line {lineno}: unknown [campaign] key {other:?} (expected name)")
+                }
+                ("grid", "kernels") => {
+                    for tok in parse_string_array(value)
+                        .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?
+                    {
+                        kernels.push(
+                            parse_kernel(&tok)
+                                .map_err(|e| anyhow::anyhow!("line {lineno}: kernel {tok:?}: {e}"))?,
+                        );
+                    }
+                }
+                ("grid", "clusters") => {
+                    for v in parse_int_array(value)
+                        .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?
+                    {
+                        anyhow::ensure!(v > 0, "line {lineno}: cluster count must be positive");
+                        clusters.push(v as usize);
+                    }
+                }
+                ("grid", "routines") => {
+                    for tok in parse_string_array(value)
+                        .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?
+                    {
+                        routines.push(RoutineKind::parse(&tok).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "line {lineno}: unknown routine {tok:?} (expected one of {})",
+                                RoutineKind::ALL.map(|r| r.name()).join(", ")
+                            )
+                        })?);
+                    }
+                }
+                ("grid", other) => anyhow::bail!(
+                    "line {lineno}: unknown [grid] key {other:?} (expected kernels, clusters or routines)"
+                ),
+                ("soc", key) | ("timing", key) => {
+                    let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    let r = if section == "soc" {
+                        config.soc.set_field(key, v)
+                    } else {
+                        config.timing.set_field(key, v)
+                    };
+                    r.map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                }
+                ("", _) => anyhow::bail!("line {lineno}: key outside a section"),
+                _ => unreachable!("sections are validated on entry"),
+            }
+        }
+        let name = name.ok_or_else(|| anyhow::anyhow!("missing [campaign] name"))?;
+        // The name becomes shard/merged file names and the default
+        // output directory — keep it from escaping that directory.
+        anyhow::ensure!(
+            !name.is_empty()
+                && !name.contains(['/', '\\'])
+                && !name.contains("..")
+                && !name.starts_with('.'),
+            "campaign name {name:?} must be non-empty and free of path separators, '..' and a leading '.' (it names output files)"
+        );
+        anyhow::ensure!(!kernels.is_empty(), "missing or empty [grid] kernels");
+        anyhow::ensure!(!clusters.is_empty(), "missing or empty [grid] clusters");
+        let max = config.soc.n_clusters();
+        for &c in &clusters {
+            anyhow::ensure!(
+                c <= max,
+                "cluster count {c} exceeds the SoC geometry ({max} clusters)"
+            );
+        }
+        Ok(Self {
+            name,
+            kernels,
+            clusters,
+            routines,
+            config,
+        })
+    }
+
+    /// Load from a file path.
+    pub fn from_path(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// The equivalent single-process sweep.
+    pub fn to_sweep(&self) -> Sweep {
+        let mut sweep = Sweep::new()
+            .clusters(self.clusters.iter().copied())
+            .routines(self.routines.iter().copied());
+        for spec in &self.kernels {
+            sweep = sweep.kernel(spec.kind().name(), *spec);
+        }
+        sweep
+    }
+
+    /// The campaign's ordered point list (global point indices are
+    /// offsets into this).
+    pub fn expand(&self) -> Vec<SweepPoint> {
+        self.to_sweep().expand()
+    }
+
+    /// Dry-run diagnostics: point count, estimated trace count, axes
+    /// summary, config fingerprint. The axes are read back from the
+    /// expansion (the single source of dedup/default semantics), so the
+    /// printed counts always multiply out to the printed point count.
+    pub fn report(&self) -> SpecReport {
+        let points = self.expand();
+        let unique: HashSet<_> = points.iter().map(|p| p.req).collect();
+        let mut clusters: Vec<usize> = Vec::new();
+        let mut routines: Vec<&'static str> = Vec::new();
+        for p in &points {
+            if !clusters.contains(&p.req.n_clusters) {
+                clusters.push(p.req.n_clusters);
+            }
+            let r = p.req.routine.name();
+            if !routines.contains(&r) {
+                routines.push(r);
+            }
+        }
+        SpecReport {
+            name: self.name.clone(),
+            points: points.len(),
+            unique_traces: unique.len(),
+            kernels: self.kernels.iter().map(|s| s.id()).collect(),
+            clusters,
+            routines,
+            config_fingerprint: super::store::fingerprint(&self.config),
+        }
+    }
+}
+
+/// Strip a `#` comment, ignoring `#` inside double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(v: &str) -> Result<String, String> {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(str::to_string)
+        .ok_or_else(|| format!("expected a double-quoted string, found {v:?}"))
+}
+
+fn parse_int(v: &str) -> Result<u64, String> {
+    if let Some(hex) = v.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)
+    } else {
+        v.parse()
+    }
+    .map_err(|e| format!("bad integer {v:?}: {e}"))
+}
+
+/// Split a `[a, b, c]` array body into element tokens.
+fn array_elems(v: &str) -> Result<Vec<&str>, String> {
+    let body = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("expected an array [..], found {v:?}"))?;
+    let body = body.trim();
+    if body.is_empty() {
+        return Ok(Vec::new());
+    }
+    Ok(body.split(',').map(str::trim).collect())
+}
+
+fn parse_string_array(v: &str) -> Result<Vec<String>, String> {
+    array_elems(v)?.into_iter().map(parse_string).collect()
+}
+
+fn parse_int_array(v: &str) -> Result<Vec<u64>, String> {
+    array_elems(v)?.into_iter().map(parse_int).collect()
+}
+
+/// Parse a kernel token: `family:dims` with `x`-separated dimensions.
+///
+/// * `axpy:N`, `montecarlo:SAMPLES`
+/// * `matmul:MxNxK` or `matmul:S` (cube)
+/// * `atax:MxN` or `atax:S` (square)
+/// * `covariance:MxN` or `covariance:S` (m=S, n=2S, as the CLI)
+/// * `bfs:NODESxLEVELS` or `bfs:NODES` (levels=4)
+pub fn parse_kernel(tok: &str) -> Result<JobSpec, String> {
+    let (family, dims) = tok
+        .split_once(':')
+        .ok_or_else(|| "expected family:size, e.g. \"axpy:1024\"".to_string())?;
+    let dims: Vec<u64> = dims
+        .split('x')
+        .map(|d| parse_int(d.trim()))
+        .collect::<Result<_, _>>()?;
+    let arity = |want: &[usize]| -> Result<(), String> {
+        if want.contains(&dims.len()) {
+            Ok(())
+        } else {
+            Err(format!(
+                "{family} takes {} dimension(s), got {}",
+                want.iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" or "),
+                dims.len()
+            ))
+        }
+    };
+    Ok(match family {
+        "axpy" => {
+            arity(&[1])?;
+            JobSpec::Axpy { n: dims[0] }
+        }
+        "montecarlo" | "mc" => {
+            arity(&[1])?;
+            JobSpec::MonteCarlo { samples: dims[0] }
+        }
+        "matmul" => {
+            arity(&[1, 3])?;
+            if dims.len() == 3 {
+                JobSpec::Matmul {
+                    m: dims[0],
+                    n: dims[1],
+                    k: dims[2],
+                }
+            } else {
+                JobSpec::Matmul {
+                    m: dims[0],
+                    n: dims[0],
+                    k: dims[0],
+                }
+            }
+        }
+        "atax" => {
+            arity(&[1, 2])?;
+            if dims.len() == 2 {
+                JobSpec::Atax {
+                    m: dims[0],
+                    n: dims[1],
+                }
+            } else {
+                JobSpec::Atax {
+                    m: dims[0],
+                    n: dims[0],
+                }
+            }
+        }
+        "covariance" | "cov" => {
+            arity(&[1, 2])?;
+            if dims.len() == 2 {
+                JobSpec::Covariance {
+                    m: dims[0],
+                    n: dims[1],
+                }
+            } else {
+                JobSpec::Covariance {
+                    m: dims[0],
+                    n: 2 * dims[0],
+                }
+            }
+        }
+        "bfs" => {
+            arity(&[1, 2])?;
+            JobSpec::Bfs {
+                nodes: dims[0],
+                levels: if dims.len() == 2 { dims[1] } else { 4 },
+            }
+        }
+        other => return Err(format!("unknown kernel family {other:?}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::TRIPLE_ROUTINES;
+
+    const DEMO: &str = r#"
+        # A small demo campaign.
+        [campaign]
+        name = "demo"
+
+        [grid]
+        kernels = ["axpy:1024", "atax:64x64", "matmul:16"]
+        clusters = [1, 8]
+        routines = ["baseline", "ideal", "multicast"]
+    "#;
+
+    #[test]
+    fn parses_a_spec_and_expands_the_grid() {
+        let spec = CampaignSpec::parse(DEMO).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.kernels.len(), 3);
+        assert_eq!(spec.kernels[2], JobSpec::Matmul { m: 16, n: 16, k: 16 });
+        assert_eq!(spec.clusters, vec![1, 8]);
+        assert_eq!(spec.config, Config::default());
+        let points = spec.expand();
+        assert_eq!(points.len(), 3 * 2 * 3);
+        assert_eq!(points[0].label, "axpy");
+        let report = spec.report();
+        assert_eq!(report.points, 18);
+        assert_eq!(report.unique_traces, 18);
+    }
+
+    #[test]
+    fn routines_default_to_the_triple() {
+        // The empty-routines default lives in Sweep::expand; the spec
+        // inherits it rather than re-implementing it.
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"t\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n",
+        )
+        .unwrap();
+        let routines: Vec<_> = spec.expand().iter().map(|p| p.req.routine).collect();
+        assert_eq!(routines, TRIPLE_ROUTINES.to_vec());
+    }
+
+    #[test]
+    fn geometry_overrides_are_first_class_axes() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"geo\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [8]\n\
+             [soc]\nn_quadrants = 2\n[timing]\nhost_ipi_issue_gap = 21\n",
+        )
+        .unwrap();
+        assert_eq!(spec.config.soc.n_quadrants, 2);
+        assert_eq!(spec.config.soc.n_clusters(), 8);
+        assert_eq!(spec.config.timing.host_ipi_issue_gap, 21);
+        assert_ne!(spec.config, Config::default());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = |text: &str| CampaignSpec::parse(text).unwrap_err().to_string();
+        assert!(err("[grid]\nkernels = 7\n").contains("line 2"), "{}", err("[grid]\nkernels = 7\n"));
+        assert!(err("[campaign]\nname = \"x\"\n[grid]\nkernels = [\"warp:9\"]\n").contains("line 4"));
+        assert!(err("[nope]\n").contains("line 1"));
+        assert!(err("[grid]\nclusters = [0]\n").contains("line 2"));
+        assert!(err("key = 1\n").contains("outside a section"));
+        assert!(err("[soc]\nwarp_factor = 9\n").contains("line 2"));
+        assert!(err("[grid]\nroutines = [\"warp\"]\n").contains("line 2"));
+    }
+
+    #[test]
+    fn missing_axes_are_rejected() {
+        assert!(CampaignSpec::parse("[campaign]\nname = \"x\"\n")
+            .unwrap_err()
+            .to_string()
+            .contains("kernels"));
+        assert!(CampaignSpec::parse("[grid]\nkernels = [\"axpy:1\"]\nclusters = [1]\n")
+            .unwrap_err()
+            .to_string()
+            .contains("name"));
+        // Cluster axis beyond the (overridden) geometry fails fast.
+        let err = CampaignSpec::parse(
+            "[campaign]\nname = \"x\"\n[grid]\nkernels = [\"axpy:1\"]\nclusters = [32]\n[soc]\nn_quadrants = 2\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn kernel_tokens_cover_all_families() {
+        for (tok, id) in [
+            ("axpy:256", "axpy_n256"),
+            ("montecarlo:4096", "montecarlo_n4096"),
+            ("matmul:8x16x32", "matmul_k32_m8_n16"),
+            ("atax:64", "atax_m64_n64"),
+            ("covariance:32", "covariance_m32_n64"),
+            ("bfs:64x2", "bfs_n64"),
+        ] {
+            assert_eq!(parse_kernel(tok).unwrap().id(), id, "{tok}");
+        }
+        assert_eq!(
+            parse_kernel("bfs:64x2").unwrap(),
+            JobSpec::Bfs { nodes: 64, levels: 2 }
+        );
+        assert!(parse_kernel("axpy").is_err());
+        assert!(parse_kernel("matmul:1x2").is_err());
+    }
+
+    #[test]
+    fn report_axes_match_the_deduplicated_expansion() {
+        // Duplicate clusters/routines must not make the report's axes
+        // disagree with its point count.
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"dup\"\n[grid]\nkernels = [\"axpy:8\"]\nclusters = [4, 4]\n\
+             routines = [\"baseline\", \"baseline\"]\n",
+        )
+        .unwrap();
+        let r = spec.report();
+        assert_eq!(r.points, 1);
+        assert_eq!(r.clusters, vec![4]);
+        assert_eq!(r.routines, vec!["baseline"]);
+    }
+
+    #[test]
+    fn path_escaping_names_are_rejected() {
+        for bad in ["a/b", "a\\b", "..", "x/../y", ".hidden", ""] {
+            let err = CampaignSpec::parse(&format!(
+                "[campaign]\nname = \"{bad}\"\n[grid]\nkernels = [\"axpy:8\"]\nclusters = [1]\n"
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("name"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn comments_and_strings_interact_correctly() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"a#b\" # trailing comment\n[grid]\nkernels = [\"axpy:8\"]\nclusters = [1]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "a#b");
+    }
+}

@@ -1,0 +1,264 @@
+//! Persistent, content-addressed on-disk trace store.
+//!
+//! Spills `sweep::cache` entries to disk so traces survive the process:
+//! repeated figure runs and cross-process campaign shards reuse each
+//! other's simulations. Layout, keyed by `(config fingerprint, request)`:
+//!
+//! ```text
+//! <root>/<fingerprint>/config.toml        # the full config, for humans
+//! <root>/<fingerprint>/<request-key>.json # one trace per request
+//! ```
+//!
+//! The fingerprint is an FNV-1a hash of the complete flat-TOML config
+//! serialization (the same exhaustive key `sweep::cache` uses, so
+//! distinct configs can never share a directory in practice), and the
+//! request key spells out every spec parameter. Loading is
+//! corruption-tolerant: a truncated or garbled file is treated as a
+//! miss and re-simulated (then rewritten atomically via a temp file +
+//! rename, so a killed shard can never publish a half-written trace).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::kernels::JobSpec;
+use crate::sim::Trace;
+use crate::sweep::{cache, OffloadRequest};
+
+use super::codec;
+
+/// FNV-1a 64-bit — stable across builds, unlike `DefaultHasher`.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content fingerprint of a config: 16 hex digits over its complete
+/// flat-TOML serialization.
+pub fn fingerprint(cfg: &Config) -> String {
+    format!("{:016x}", fnv1a64(cfg.to_toml().as_bytes()))
+}
+
+/// On-disk file stem of a request: every parameter spelled out
+/// (`JobSpec::id` omits the BFS level count, so it is not unique).
+pub fn request_key(req: &OffloadRequest) -> String {
+    let spec = match req.spec {
+        JobSpec::Axpy { n } => format!("axpy_n{n}"),
+        JobSpec::MonteCarlo { samples } => format!("montecarlo_s{samples}"),
+        JobSpec::Matmul { m, n, k } => format!("matmul_m{m}_n{n}_k{k}"),
+        JobSpec::Atax { m, n } => format!("atax_m{m}_n{n}"),
+        JobSpec::Covariance { m, n } => format!("covariance_m{m}_n{n}"),
+        JobSpec::Bfs { nodes, levels } => format!("bfs_n{nodes}_l{levels}"),
+    };
+    format!("{spec}-c{}-{}", req.n_clusters, req.routine.name())
+}
+
+/// Hit/miss counters of one store handle (diagnostics and the warm-store
+/// test assertions).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Served from the process-wide memory cache.
+    pub memory_hits: u64,
+    /// Served from disk (and promoted into the memory cache).
+    pub disk_hits: u64,
+    /// Simulated fresh (then persisted).
+    pub simulations: u64,
+}
+
+/// A persistent trace store rooted at one directory.
+#[derive(Debug)]
+pub struct TraceStore {
+    root: PathBuf,
+    memory_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    simulations: AtomicU64,
+}
+
+impl TraceStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .map_err(|e| anyhow::anyhow!("create store {}: {e}", root.display()))?;
+        Ok(Self {
+            root,
+            memory_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            simulations: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Directory of one config's traces.
+    pub fn config_dir(&self, fp: &str) -> PathBuf {
+        self.root.join(fp)
+    }
+
+    fn trace_path(&self, fp: &str, req: &OffloadRequest) -> PathBuf {
+        self.config_dir(fp).join(format!("{}.json", request_key(req)))
+    }
+
+    /// Load one trace from disk; `None` on absent, truncated or
+    /// corrupted files (the caller re-simulates).
+    pub fn load(&self, fp: &str, req: &OffloadRequest) -> Option<Arc<Trace>> {
+        let path = self.trace_path(fp, req);
+        let text = std::fs::read_to_string(&path).ok()?;
+        match codec::trace_from_str(&text) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!(
+                    "campaign store: discarding corrupt {} ({e}); re-simulating",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Persist one trace. Atomic: writes a temp file in the same
+    /// directory, then renames over the target, so readers never observe
+    /// a partial trace. Also drops the human-readable `config.toml`
+    /// alongside on first write.
+    pub fn save(&self, fp: &str, cfg: &Config, req: &OffloadRequest, trace: &Trace) -> anyhow::Result<()> {
+        let dir = self.config_dir(fp);
+        std::fs::create_dir_all(&dir)?;
+        let manifest = dir.join("config.toml");
+        if !manifest.exists() {
+            std::fs::write(&manifest, cfg.to_toml())?;
+        }
+        let target = self.trace_path(fp, req);
+        // Process id + sequence number: two workers of one shard saving
+        // the same request (a spec listing a kernel twice) must not
+        // interleave on one temp path.
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = dir.join(format!(
+            ".{}.tmp-{}-{}",
+            request_key(req),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, codec::trace_to_json(trace).to_string())?;
+        std::fs::rename(&tmp, &target)?;
+        Ok(())
+    }
+
+    /// Run one request through all three layers: process memory cache →
+    /// disk → simulation. Every simulation is persisted; every disk hit
+    /// is promoted into the memory cache so in-process reuse stays
+    /// `Arc`-shared. `fp`/`mem_key` must come from [`fingerprint`] and
+    /// `sweep::cache::config_key` for the same `cfg`.
+    pub fn run(&self, fp: &str, mem_key: &str, cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
+        if let Some(t) = cache::peek(mem_key, req) {
+            self.memory_hits.fetch_add(1, Ordering::Relaxed);
+            return t;
+        }
+        if let Some(t) = self.load(fp, &req) {
+            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+            return cache::insert(mem_key, req, t);
+        }
+        let trace = Arc::new(req.run(cfg));
+        self.simulations.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = self.save(fp, cfg, &req, &trace) {
+            // A read-only or full disk degrades to uncached execution.
+            eprintln!("campaign store: failed to persist {}: {e}", request_key(&req));
+        }
+        cache::insert(mem_key, req, trace)
+    }
+
+    /// Counters since this handle was opened.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            memory_hits: self.memory_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            simulations: self.simulations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Traces currently persisted for one config fingerprint.
+    pub fn traces_on_disk(&self, fp: &str) -> usize {
+        match std::fs::read_dir(self.config_dir(fp)) {
+            Err(_) => 0,
+            Ok(entries) => entries
+                .filter_map(Result::ok)
+                .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                .count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::RoutineKind;
+
+    fn temp_store(tag: &str) -> TraceStore {
+        let dir = std::env::temp_dir().join(format!(
+            "occamy-store-test-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        TraceStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let store = temp_store("roundtrip");
+        let cfg = Config::default();
+        let fp = fingerprint(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 192 }, 4, RoutineKind::Baseline);
+        assert!(store.load(&fp, &req).is_none());
+        let trace = req.run(&cfg);
+        store.save(&fp, &cfg, &req, &trace).unwrap();
+        assert_eq!(*store.load(&fp, &req).unwrap(), trace);
+        assert_eq!(store.traces_on_disk(&fp), 1);
+        // The human-readable manifest rides along.
+        let manifest = store.config_dir(&fp).join("config.toml");
+        assert_eq!(
+            Config::from_path(&manifest).unwrap(),
+            cfg,
+            "config.toml round-trips"
+        );
+    }
+
+    #[test]
+    fn corrupt_files_load_as_none() {
+        let store = temp_store("corrupt");
+        let cfg = Config::default();
+        let fp = fingerprint(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 224 }, 2, RoutineKind::Ideal);
+        let trace = req.run(&cfg);
+        store.save(&fp, &cfg, &req, &trace).unwrap();
+        let path = store.config_dir(&fp).join(format!("{}.json", request_key(&req)));
+        // Truncate mid-file (a killed writer without the atomic rename).
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(store.load(&fp, &req).is_none());
+        // Re-saving heals it.
+        store.save(&fp, &cfg, &req, &trace).unwrap();
+        assert_eq!(*store.load(&fp, &req).unwrap(), trace);
+    }
+
+    #[test]
+    fn request_keys_distinguish_bfs_levels() {
+        let a = OffloadRequest::new(JobSpec::Bfs { nodes: 64, levels: 2 }, 4, RoutineKind::Ideal);
+        let b = OffloadRequest::new(JobSpec::Bfs { nodes: 64, levels: 4 }, 4, RoutineKind::Ideal);
+        assert_ne!(request_key(&a), request_key(&b));
+    }
+
+    #[test]
+    fn fingerprints_differ_across_configs() {
+        let cfg = Config::default();
+        let mut other = cfg.clone();
+        other.timing.host_ipi_issue_gap += 1;
+        assert_ne!(fingerprint(&cfg), fingerprint(&other));
+        assert_eq!(fingerprint(&cfg).len(), 16);
+    }
+}

@@ -1,0 +1,195 @@
+//! Streaming JSONL result files.
+//!
+//! Each executed point becomes one self-contained line — global point
+//! index, label, request and the full trace — appended (and flushed) as
+//! soon as the point completes, so a killed shard keeps everything it
+//! finished. Lines are self-describing and order-independent: workers
+//! write in completion order, and merge/resume sort by index. Reading is
+//! corruption-tolerant — an unparsable line (the torn tail of a killed
+//! writer) is dropped and its point re-executed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::json::Json;
+use crate::sweep::{SweepPoint, SweepRecord};
+
+use super::codec;
+use super::shard::Shard;
+
+/// Shard output file name: `<name>.shard-<i>-of-<N>.jsonl`.
+pub fn shard_file_name(campaign: &str, shard: Shard) -> String {
+    format!("{campaign}.shard-{}-of-{}.jsonl", shard.index, shard.count)
+}
+
+/// Merged output file name: `<name>.merged.jsonl`.
+pub fn merged_file_name(campaign: &str) -> String {
+    format!("{campaign}.merged.jsonl")
+}
+
+/// Serialize one executed point as a JSONL line (no trailing newline).
+/// Every line carries the config fingerprint, so stale files from a
+/// spec whose `[soc]`/`[timing]` changed cannot be silently resumed.
+pub fn line_of(config_fp: &str, index: usize, record: &SweepRecord) -> String {
+    Json::Obj(
+        [
+            ("config".to_string(), Json::Str(config_fp.to_string())),
+            ("index".to_string(), Json::Num(index as f64)),
+            ("label".to_string(), Json::Str(record.label().to_string())),
+            ("req".to_string(), codec::request_to_json(&record.req())),
+            ("trace".to_string(), codec::trace_to_json(&record.trace)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+    .to_string()
+}
+
+/// Parse one JSONL line back into `(config fingerprint, global index,
+/// record)`.
+pub fn record_from_line(line: &str) -> Result<(String, usize, SweepRecord), String> {
+    let j = Json::parse(line)?;
+    let config = j
+        .get("config")
+        .and_then(Json::as_str)
+        .ok_or("missing \"config\"")?
+        .to_string();
+    let index = j
+        .get("index")
+        .and_then(codec::exact_u64)
+        .ok_or("missing or invalid \"index\"")? as usize;
+    let req = codec::request_from_json(j.get("req").ok_or("missing \"req\"")?)?;
+    let label = j
+        .get("label")
+        .and_then(Json::as_str)
+        .ok_or("missing \"label\"")?;
+    // Campaign grids label points by kernel family, which gives back the
+    // 'static name the in-memory SweepPoint carries.
+    let family = req.spec.kind().name();
+    if label != family {
+        return Err(format!(
+            "label {label:?} does not match the kernel family {family:?}"
+        ));
+    }
+    let trace = codec::trace_from_json(j.get("trace").ok_or("missing \"trace\"")?)?;
+    Ok((
+        config,
+        index,
+        SweepRecord {
+            point: SweepPoint { label: family, req },
+            trace: Arc::new(trace),
+        },
+    ))
+}
+
+/// Read a shard file tolerantly: unparsable lines (torn tails of killed
+/// writers, manual edits) are dropped and counted; duplicate indices
+/// keep the first occurrence (the DES is deterministic, so any
+/// duplicates are equal). A missing file is an empty shard. A parsable
+/// record written under a *different* config fingerprint is a hard
+/// error, not a drop — silently re-simulating would hide that the
+/// spec's `[soc]`/`[timing]` changed under an existing output dir.
+pub fn read_records(
+    path: &Path,
+    expected_fp: &str,
+) -> anyhow::Result<(BTreeMap<usize, SweepRecord>, usize)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        // Only an absent file is an empty shard; a permission or I/O
+        // error must not masquerade as "nothing done yet" (resume would
+        // silently re-simulate finished work).
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((BTreeMap::new(), 0)),
+        Err(e) => return Err(anyhow::anyhow!("read {}: {e}", path.display())),
+    };
+    let mut out = BTreeMap::new();
+    let mut dropped = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match record_from_line(line) {
+            Ok((fp, index, rec)) => {
+                anyhow::ensure!(
+                    fp == expected_fp,
+                    "{}: written under config fingerprint {fp}, the spec now resolves to {expected_fp} — \
+                     its [soc]/[timing] changed; delete the file or use a fresh --out",
+                    path.display()
+                );
+                out.entry(index).or_insert(rec);
+            }
+            Err(_) => dropped += 1,
+        }
+    }
+    Ok((out, dropped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::kernels::JobSpec;
+    use crate::offload::RoutineKind;
+    use crate::sweep::OffloadRequest;
+
+    fn sample_record() -> SweepRecord {
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 160 }, 4, RoutineKind::Multicast);
+        SweepRecord {
+            point: SweepPoint { label: "axpy", req },
+            trace: Arc::new(req.run(&Config::default())),
+        }
+    }
+
+    #[test]
+    fn line_round_trips_bit_identical() {
+        let rec = sample_record();
+        let line = line_of("fp16chars", 7, &rec);
+        assert!(!line.contains('\n'));
+        let (fp, index, back) = record_from_line(&line).unwrap();
+        assert_eq!(fp, "fp16chars");
+        assert_eq!(index, 7);
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn mismatched_label_is_rejected() {
+        let rec = sample_record();
+        let line = line_of("fp", 0, &rec).replace("\"axpy\"", "\"warp\"");
+        // Replaces both the label and the kernel name; corrupt either way.
+        assert!(record_from_line(&line).is_err());
+    }
+
+    #[test]
+    fn read_records_drops_torn_tails_and_dedups() {
+        let rec = sample_record();
+        let dir = std::env::temp_dir().join(format!("occamy-stream-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        let full = line_of("fp", 0, &rec);
+        let torn = &full[..full.len() - 10];
+        let text = format!("{full}\n{}\n\n{torn}", line_of("fp", 0, &rec));
+        std::fs::write(&path, text).unwrap();
+        let (records, dropped) = read_records(&path, "fp").unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(dropped, 1);
+        assert_eq!(records[&0], rec);
+        let (empty, dropped) = read_records(&dir.join("absent.jsonl"), "fp").unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn foreign_config_fingerprints_are_a_hard_error() {
+        let rec = sample_record();
+        let dir = std::env::temp_dir().join(format!(
+            "occamy-stream-fp-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stale.jsonl");
+        std::fs::write(&path, line_of("old-config", 0, &rec)).unwrap();
+        let err = read_records(&path, "new-config").unwrap_err().to_string();
+        assert!(err.contains("old-config"), "{err}");
+        assert!(err.contains("[soc]/[timing]"), "{err}");
+    }
+}

@@ -3,7 +3,7 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
-use crate::sweep::Sweep;
+use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
 
@@ -41,9 +41,10 @@ impl Fig10 {
     }
 }
 
-pub fn run(cfg: &Config) -> Fig10 {
-    // One label per kernel, several specs per label: the problem size
-    // rides along in the spec and is recovered from each triple.
+/// The sweep this figure needs. One label per kernel, several specs per
+/// label: the problem size rides along in the spec and is recovered
+/// from each triple.
+pub fn sweep() -> Sweep {
     let mut sweep = Sweep::new().clusters(CURVES).triples();
     for &size in &AXPY_SIZES {
         sweep = sweep.kernel("axpy", JobSpec::Axpy { n: size });
@@ -51,22 +52,39 @@ pub fn run(cfg: &Config) -> Fig10 {
     for &size in &ATAX_SIZES {
         sweep = sweep.kernel("atax", JobSpec::Atax { m: size, n: size });
     }
-    let points = sweep
-        .run(cfg)
+    sweep
+}
+
+/// Build the figure from pre-computed results (e.g. merged campaign
+/// output). Only triples on the figure's own grid (its sizes at the
+/// curve cluster counts) are taken, so a superset campaign renders
+/// correctly.
+pub fn from_results(results: &SweepResults) -> Fig10 {
+    let points = results
         .triples()
         .into_iter()
-        .map(|t| Point {
-            kernel: t.label,
-            n_clusters: t.n_clusters,
-            size: match t.spec {
-                JobSpec::Axpy { n } => n,
-                JobSpec::Atax { m, .. } => m,
-                _ => unreachable!("fig10 sweeps axpy and atax only"),
-            },
-            speedup: t.runtimes.achieved_speedup(),
+        .filter_map(|t| {
+            if !CURVES.contains(&t.n_clusters) {
+                return None;
+            }
+            let size = match t.spec {
+                JobSpec::Axpy { n } if AXPY_SIZES.contains(&n) => n,
+                JobSpec::Atax { m, n } if m == n && ATAX_SIZES.contains(&m) => m,
+                _ => return None,
+            };
+            Some(Point {
+                kernel: t.label,
+                n_clusters: t.n_clusters,
+                size,
+                speedup: t.runtimes.achieved_speedup(),
+            })
         })
         .collect();
     Fig10 { points }
+}
+
+pub fn run(cfg: &Config) -> Fig10 {
+    from_results(&sweep().run(cfg))
 }
 
 pub fn render(fig: &Fig10) -> Table {

@@ -5,7 +5,7 @@ use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
 use crate::sim::{Phase, Trace};
-use crate::sweep::Sweep;
+use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
 use super::CLUSTER_SWEEP;
@@ -60,17 +60,38 @@ fn bands_of(trace: &Trace, routine: RoutineKind, n: usize, out: &mut Vec<Band>) 
     }
 }
 
-pub fn run(cfg: &Config) -> Fig11 {
-    let results = Sweep::new()
+/// The sweep this figure needs. Unlike Figs. 7-10 it consumes full
+/// traces, not just totals — campaign streams carry every phase span,
+/// so merged output renders it just the same.
+pub fn sweep() -> Sweep {
+    Sweep::new()
         .kernel("axpy", JobSpec::Axpy { n: 1024 })
         .clusters(CLUSTER_SWEEP)
         .routines([RoutineKind::Baseline, RoutineKind::Multicast])
-        .run(cfg);
+}
+
+/// Build the figure from pre-computed results (e.g. merged campaign
+/// output). Records outside the figure's grid — other specs, the
+/// ideal/ablation routines — are ignored, so a superset campaign
+/// renders correctly.
+pub fn from_results(results: &SweepResults) -> Fig11 {
     let mut bands = Vec::new();
     for rec in results.records() {
+        if rec.req().spec != (JobSpec::Axpy { n: 1024 })
+            || !matches!(
+                rec.req().routine,
+                RoutineKind::Baseline | RoutineKind::Multicast
+            )
+        {
+            continue;
+        }
         bands_of(&rec.trace, rec.req().routine, rec.req().n_clusters, &mut bands);
     }
     Fig11 { bands }
+}
+
+pub fn run(cfg: &Config) -> Fig11 {
+    from_results(&sweep().run(cfg))
 }
 
 pub fn render(fig: &Fig11) -> Table {

@@ -4,7 +4,9 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
-use crate::model::{validate_grid, ValidationPoint};
+use crate::model::{validate_grid, validate_results, ValidationPoint};
+use crate::offload::RoutineKind;
+use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
 use super::CLUSTER_SWEEP;
@@ -39,6 +41,46 @@ pub fn run(cfg: &Config) -> Fig12 {
     Fig12 {
         axpy: validate_grid(cfg, &axpy_specs, &CLUSTER_SWEEP),
         atax: validate_grid(cfg, &atax_specs, &CLUSTER_SWEEP),
+    }
+}
+
+/// The sweep covering this figure's validation grid (Multicast only —
+/// the model estimates are closed-form, recomputed at render time, not
+/// simulated).
+pub fn sweep() -> Sweep {
+    let mut sweep = Sweep::new()
+        .clusters(CLUSTER_SWEEP)
+        .routines([RoutineKind::Multicast]);
+    for &n in &AXPY_SIZES {
+        sweep = sweep.kernel("axpy", JobSpec::Axpy { n });
+    }
+    for &m in &ATAX_SIZES {
+        sweep = sweep.kernel("atax", JobSpec::Atax { m, n: m });
+    }
+    sweep
+}
+
+/// Build the figure from pre-computed results (e.g. merged campaign
+/// output): the simulated runtimes come from the results' Multicast
+/// records, the model estimates are recomputed inline from `cfg` (they
+/// are closed-form, not simulations). Only points on the figure's
+/// validation grid are taken, so a superset campaign renders correctly.
+pub fn from_results(cfg: &Config, results: &SweepResults) -> Fig12 {
+    let points = validate_results(cfg, results);
+    let on_grid = |p: &&ValidationPoint| CLUSTER_SWEEP.contains(&p.n_clusters);
+    Fig12 {
+        axpy: points
+            .iter()
+            .filter(on_grid)
+            .filter(|p| matches!(p.spec, JobSpec::Axpy { n } if AXPY_SIZES.contains(&n)))
+            .cloned()
+            .collect(),
+        atax: points
+            .iter()
+            .filter(on_grid)
+            .filter(|p| matches!(p.spec, JobSpec::Atax { m, n } if m == n && ATAX_SIZES.contains(&m)))
+            .cloned()
+            .collect(),
     }
 }
 

@@ -4,7 +4,7 @@
 //! sweep cache.
 
 use crate::config::Config;
-use crate::sweep::{mean_std, Sweep};
+use crate::sweep::{mean_std, Sweep, SweepResults};
 
 use super::table::Table;
 use super::{benchmark_set, CLUSTER_SWEEP};
@@ -50,21 +50,39 @@ impl Fig7 {
     }
 }
 
-pub fn run(cfg: &Config) -> Fig7 {
-    let results = Sweep::over_kernels(benchmark_set())
+/// The sweep this figure needs — also the grid a campaign spec must
+/// cover to render it from merged output.
+pub fn sweep() -> Sweep {
+    Sweep::over_kernels(benchmark_set())
         .clusters(CLUSTER_SWEEP)
         .triples()
-        .run(cfg);
+}
+
+/// Build the figure from pre-computed results (e.g. merged campaign
+/// output). Only triples on the figure's own grid (the benchmark set at
+/// the cluster sweep) are taken — a superset campaign must not skew the
+/// mean/std aggregates; triples absent from the results are simply
+/// absent points.
+pub fn from_results(results: &SweepResults) -> Fig7 {
+    let set = benchmark_set();
     let points = results
-        .overheads()
+        .triples()
         .into_iter()
-        .map(|(kernel, n_clusters, overhead)| Point {
-            kernel,
-            n_clusters,
-            overhead,
+        .filter(|t| {
+            CLUSTER_SWEEP.contains(&t.n_clusters)
+                && set.iter().any(|(l, s)| *l == t.label && *s == t.spec)
+        })
+        .map(|t| Point {
+            kernel: t.label,
+            n_clusters: t.n_clusters,
+            overhead: t.runtimes.overhead(),
         })
         .collect();
     Fig7 { points }
+}
+
+pub fn run(cfg: &Config) -> Fig7 {
+    from_results(&sweep().run(cfg))
 }
 
 pub fn render(fig: &Fig7) -> Table {

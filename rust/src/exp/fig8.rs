@@ -3,7 +3,7 @@
 //! (§5.3, §5.4).
 
 use crate::config::Config;
-use crate::sweep::Sweep;
+use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
 use super::{benchmark_set, CLUSTER_SWEEP};
@@ -37,14 +37,25 @@ impl Fig8 {
     }
 }
 
-pub fn run(cfg: &Config) -> Fig8 {
-    let results = Sweep::over_kernels(benchmark_set())
+/// The sweep this figure needs.
+pub fn sweep() -> Sweep {
+    Sweep::over_kernels(benchmark_set())
         .clusters(CLUSTER_SWEEP)
         .triples()
-        .run(cfg);
+}
+
+/// Build the figure from pre-computed results (e.g. merged campaign
+/// output). Only triples on the figure's own grid are taken, so a
+/// superset campaign renders correctly.
+pub fn from_results(results: &SweepResults) -> Fig8 {
+    let set = benchmark_set();
     let points = results
         .triples()
         .into_iter()
+        .filter(|t| {
+            CLUSTER_SWEEP.contains(&t.n_clusters)
+                && set.iter().any(|(l, s)| *l == t.label && *s == t.spec)
+        })
         .map(|t| Point {
             kernel: t.label,
             n_clusters: t.n_clusters,
@@ -54,6 +65,10 @@ pub fn run(cfg: &Config) -> Fig8 {
         })
         .collect();
     Fig8 { points }
+}
+
+pub fn run(cfg: &Config) -> Fig8 {
+    from_results(&sweep().run(cfg))
 }
 
 pub fn render(fig: &Fig8) -> Table {

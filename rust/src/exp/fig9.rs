@@ -4,7 +4,7 @@
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RunTriple;
-use crate::sweep::Sweep;
+use crate::sweep::{Sweep, SweepResults};
 
 use super::table::Table;
 use super::CLUSTER_SWEEP;
@@ -48,28 +48,38 @@ pub struct Fig9 {
     pub atax: Curve,
 }
 
-pub fn run(cfg: &Config) -> Fig9 {
-    let results = Sweep::new()
+/// The sweep this figure needs.
+pub fn sweep() -> Sweep {
+    Sweep::new()
         .kernel("axpy", JobSpec::Axpy { n: 1024 })
         .kernel("atax", JobSpec::Atax { m: 64, n: 64 })
         .clusters(CLUSTER_SWEEP)
         .triples()
-        .run(cfg);
-    // triples() preserves expansion order, so each curve's points come
-    // back in CLUSTER_SWEEP order.
-    let curve = |kernel: &'static str| Curve {
+}
+
+/// Build the figure from pre-computed results (e.g. merged campaign
+/// output). Each curve selects its exact spec (not just the kernel
+/// label), so a campaign sweeping several problem sizes per family
+/// still yields the figure's two curves; `triples()` preserves
+/// expansion order, so points come back in cluster-sweep order.
+pub fn from_results(results: &SweepResults) -> Fig9 {
+    let curve = |kernel: &'static str, spec: JobSpec| Curve {
         kernel,
         triples: results
             .triples()
             .into_iter()
-            .filter(|t| t.label == kernel)
+            .filter(|t| t.label == kernel && t.spec == spec)
             .map(|t| t.runtimes)
             .collect(),
     };
     Fig9 {
-        axpy: curve("axpy"),
-        atax: curve("atax"),
+        axpy: curve("axpy", JobSpec::Axpy { n: 1024 }),
+        atax: curve("atax", JobSpec::Atax { m: 64, n: 64 }),
     }
+}
+
+pub fn run(cfg: &Config) -> Fig9 {
+    from_results(&sweep().run(cfg))
 }
 
 pub fn render(fig: &Fig9) -> Table {

@@ -13,22 +13,40 @@
 //!   graphs calling Pallas kernels, AOT-lowered to the HLO-text
 //!   artifacts the runtime loads. Python never runs on the request path.
 //!
-//! ## Running experiments: the `sweep` API
+//! ## Running experiments: `sweep` and `campaign`
 //!
-//! All experiment campaigns go through [`sweep`]: a typed request
+//! All experiment grids go through [`sweep`]: a typed request
 //! ([`sweep::OffloadRequest`]), a cartesian grid builder
 //! ([`sweep::Sweep`]), a parallel executor with deterministic
 //! input-ordered results, result combinators (`group_by`, `triples`,
 //! `mean_std`, overhead/speedup projections) and a process-wide trace
 //! cache. The per-figure modules under [`exp`] are thin declarative
-//! descriptions on top of it; the positional free functions
-//! `offload::run_offload` / `offload::run_triple` remain as deprecated
-//! shims for one release.
+//! descriptions on top of it, each reconstructible from pre-computed
+//! results via `from_results`.
+//!
+//! [`campaign`] scales sweeps beyond one process: declarative TOML
+//! campaign specs ([`campaign::CampaignSpec`]), a persistent
+//! content-addressed trace store ([`campaign::TraceStore`]),
+//! deterministic sharding (`--shard i/N`) with streamed JSONL results,
+//! and a merge/resume step whose output is bit-identical to a
+//! single-process run (`occamy campaign <run|merge|status|validate>`).
+//!
+//! ## Module map
+//!
+//! | layer | modules |
+//! |---|---|
+//! | SoC model | [`config`], [`cluster`], [`host`], [`mem`], [`noc`], [`dma`], [`interrupt`] |
+//! | simulation | [`sim`] (DES engine, traces), [`offload`] (routines §4), [`kernels`] (workloads §5.1) |
+//! | experiments | [`sweep`] (in-process grids), [`campaign`] (sharded + persistent), [`exp`] (Figs. 7-12), [`bench`] |
+//! | modeling | [`model`] (analytical runtime model §5.6) |
+//! | serving | [`coordinator`] (job scheduling), [`runtime`] (PJRT numerics, JSON) |
+//! | support | [`rng`] |
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod bench;
+pub mod campaign;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|all> [--csv] [--config F]
+//!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
 //!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S]
 //!   validate-artifacts [--artifacts DIR]
@@ -15,6 +16,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use occamy_offload::campaign::{self, CampaignSpec, Shard, TraceStore};
 use occamy_offload::config::Config;
 use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Planner};
 use occamy_offload::exp::{self, Table};
@@ -23,7 +25,7 @@ use occamy_offload::model::OffloadModel;
 use occamy_offload::offload::RoutineKind;
 use occamy_offload::runtime::{default_artifacts_dir, run_and_verify, PjrtRuntime};
 use occamy_offload::sim::Phase;
-use occamy_offload::sweep::{self, OffloadRequest};
+use occamy_offload::sweep::{self, OffloadRequest, SweepResults};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -94,26 +96,12 @@ fn artifacts_dir(a: &Args) -> PathBuf {
         .unwrap_or_else(default_artifacts_dir)
 }
 
+/// Kernel family + single size, via the campaign token grammar (one
+/// mapping for the CLI and campaign specs; `matmul:S` is a cube,
+/// `atax:S` square, `covariance:S` is m=S n=2S, `bfs:S` 4 levels).
 fn job_spec(kernel: &str, size: u64) -> anyhow::Result<JobSpec> {
-    Ok(match kernel {
-        "axpy" => JobSpec::Axpy { n: size },
-        "montecarlo" | "mc" => JobSpec::MonteCarlo { samples: size },
-        "matmul" => JobSpec::Matmul {
-            m: size,
-            n: size,
-            k: size,
-        },
-        "atax" => JobSpec::Atax { m: size, n: size },
-        "covariance" | "cov" => JobSpec::Covariance {
-            m: size,
-            n: 2 * size,
-        },
-        "bfs" => JobSpec::Bfs {
-            nodes: size,
-            levels: 4,
-        },
-        other => anyhow::bail!("unknown kernel {other:?}"),
-    })
+    occamy_offload::campaign::spec::parse_kernel(&format!("{kernel}:{size}"))
+        .map_err(|e| anyhow::anyhow!("{e}"))
 }
 
 fn emit(table: Table, csv: bool) {
@@ -124,8 +112,12 @@ fn emit(table: Table, csv: bool) {
     }
 }
 
-const USAGE: &str = "usage: occamy <experiment|sim|serve|validate-artifacts|model|config-dump> [options]
+const USAGE: &str = "usage: occamy <experiment|campaign|sim|serve|validate-artifacts|model|config-dump> [options]
   experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|all> [--csv] [--config F]
+  campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store]
+  campaign merge    --spec F [--shards N] [--out DIR] [--verify] [--render FIG] [--csv]
+  campaign status   --spec F [--shards N] [--out DIR]
+  campaign validate --spec F
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C]
   validate-artifacts [--artifacts DIR]
@@ -141,6 +133,7 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
     let a = Args::parse(&raw[1..]);
     match cmd {
         "experiment" => cmd_experiment(&a),
+        "campaign" => cmd_campaign(&a),
         "sim" => cmd_sim(&a),
         "serve" => cmd_serve(&a),
         "validate-artifacts" => cmd_validate(&a),
@@ -190,6 +183,116 @@ fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Render one figure from merged campaign results. The campaign must
+/// cover the figure's grid (`exp::figN::sweep`) — checked up front so a
+/// partial spec yields an error naming the missing points, not a panic
+/// inside the render's lookups.
+fn render_fig(which: &str, cfg: &Config, results: &SweepResults) -> anyhow::Result<Table> {
+    let required = match which {
+        "fig7" => exp::fig7::sweep(),
+        "fig8" => exp::fig8::sweep(),
+        "fig9" => exp::fig9::sweep(),
+        "fig10" => exp::fig10::sweep(),
+        "fig11" => exp::fig11::sweep(),
+        "fig12" => exp::fig12::sweep(),
+        other => anyhow::bail!("unknown figure {other:?} (fig7..fig12)"),
+    }
+    .expand();
+    let missing = required
+        .iter()
+        .filter(|p| results.records().iter().all(|r| r.point != **p))
+        .count();
+    anyhow::ensure!(
+        missing == 0,
+        "campaign does not cover {which}: {missing} of its {} grid points are absent \
+         (the spec must be a superset of exp::{which}::sweep)",
+        required.len()
+    );
+    Ok(match which {
+        "fig7" => exp::fig7::render(&exp::fig7::from_results(results)),
+        "fig8" => exp::fig8::render(&exp::fig8::from_results(results)),
+        "fig9" => exp::fig9::render(&exp::fig9::from_results(results)),
+        "fig10" => exp::fig10::render(&exp::fig10::from_results(results)),
+        "fig11" => exp::fig11::render(&exp::fig11::from_results(results)),
+        "fig12" => exp::fig12::render(&exp::fig12::from_results(cfg, results)),
+        _ => unreachable!("figure names validated above"),
+    })
+}
+
+fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
+    let action = a
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("usage: occamy campaign <run|merge|status|validate> --spec FILE"))?;
+    let spec_path = a
+        .flag("spec")
+        .ok_or_else(|| anyhow::anyhow!("campaign {action} requires --spec FILE"))?;
+    let spec = CampaignSpec::from_path(&PathBuf::from(spec_path))?;
+    let out_dir = a
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("campaign-out").join(&spec.name));
+    match action {
+        "validate" => {
+            println!("{}", spec.report());
+            println!("spec OK");
+        }
+        "run" => {
+            let shard = match a.flag("shard") {
+                Some(s) => Shard::parse(s)?,
+                None => Shard::SINGLE,
+            };
+            let store = if a.has("no-store") {
+                None
+            } else {
+                let root = a
+                    .flag("store")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| out_dir.join("store"));
+                Some(TraceStore::open(root)?)
+            };
+            let report = campaign::run_shard(&spec, shard, &out_dir, store.as_ref())?;
+            println!("{report}");
+            if let Some(s) = &store {
+                let st = s.stats();
+                println!(
+                    "store: {} memory hit(s), {} disk hit(s), {} simulation(s)",
+                    st.memory_hits, st.disk_hits, st.simulations
+                );
+            }
+        }
+        "status" => {
+            let shards = a.u64_flag("shards", 1)? as usize;
+            print!("{}", campaign::status(&spec, shards, &out_dir)?);
+        }
+        "merge" => {
+            let shards = a.u64_flag("shards", 1)? as usize;
+            let results = campaign::merge(&spec, shards, &out_dir)?;
+            println!(
+                "merged {} points -> {}",
+                results.len(),
+                out_dir
+                    .join(campaign::stream::merged_file_name(&spec.name))
+                    .display()
+            );
+            if a.has("verify") {
+                let reference = campaign::run_single(&spec);
+                anyhow::ensure!(
+                    results == reference,
+                    "merged results differ from single-process execution"
+                );
+                println!("verified: bit-identical to single-process execution");
+            }
+            if let Some(which) = a.flag("render") {
+                emit(render_fig(which, &spec.config, &results)?, a.has("csv"));
+            }
+        }
+        other => anyhow::bail!("unknown campaign action {other:?} (run, merge, status or validate)"),
+    }
+    Ok(())
+}
+
 fn cmd_sim(a: &Args) -> anyhow::Result<()> {
     let cfg = load_config(a)?;
     let kernel = a.flag("kernel").unwrap_or("axpy");
@@ -198,14 +301,8 @@ fn cmd_sim(a: &Args) -> anyhow::Result<()> {
     let n = a.u64_flag("clusters", 8)? as usize;
     match a.flag("routine") {
         Some(r) => {
-            let routine = match r {
-                "baseline" => RoutineKind::Baseline,
-                "multicast" => RoutineKind::Multicast,
-                "mcast-only" => RoutineKind::McastOnly,
-                "jcu-only" => RoutineKind::JcuOnly,
-                "ideal" => RoutineKind::Ideal,
-                other => anyhow::bail!("unknown routine {other:?}"),
-            };
+            let routine = RoutineKind::parse(r)
+                .ok_or_else(|| anyhow::anyhow!("unknown routine {r:?}"))?;
             let trace = sweep::run_one(&cfg, OffloadRequest::new(spec, n, routine));
             println!("{} {} on {n} clusters ({}):", kernel, size, routine.name());
             println!("  total: {} cycles ({} events)", trace.total, trace.events);

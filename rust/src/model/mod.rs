@@ -5,4 +5,6 @@ pub mod analytical;
 pub mod validate;
 
 pub use analytical::{OffloadModel, PhaseEstimates};
-pub use validate::{max_rel_error, validate_grid, validate_point, ValidationPoint};
+pub use validate::{
+    max_rel_error, validate_grid, validate_point, validate_results, ValidationPoint,
+};

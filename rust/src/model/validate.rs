@@ -8,7 +8,7 @@
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
-use crate::sweep::{OffloadRequest, Sweep};
+use crate::sweep::{OffloadRequest, Sweep, SweepResults};
 
 use super::analytical::OffloadModel;
 
@@ -60,11 +60,19 @@ pub fn validate_grid(
     for spec in specs {
         sweep = sweep.kernel(spec.kind().name(), *spec);
     }
-    let results = sweep.run(cfg);
+    validate_results(cfg, &sweep.run(cfg))
+}
+
+/// Build validation points from pre-computed results (e.g. merged
+/// campaign output): every Multicast record is compared against the
+/// (cheap, inline) model estimate. `cfg` must be the config the results
+/// were simulated with.
+pub fn validate_results(cfg: &Config, results: &SweepResults) -> Vec<ValidationPoint> {
     let model = OffloadModel::new(cfg);
     results
         .records()
         .iter()
+        .filter(|r| r.req().routine == RoutineKind::Multicast)
         .map(|r| {
             let req = r.req();
             ValidationPoint {

@@ -3,9 +3,11 @@
 //! (§4.2/§4.3) variants, plus the "ideal" direct-on-device execution the
 //! paper compares against (§5.2).
 //!
-//! Experiment campaigns over these routines go through [`crate::sweep`];
-//! the positional free functions below are deprecated shims kept for one
-//! release.
+//! Experiment campaigns over these routines go through [`crate::sweep`]
+//! (single process) and [`crate::campaign`] (sharded, resumable); the
+//! raw uncached entry point is [`Executor`] via
+//! `sweep::OffloadRequest::run`. The deprecated positional free
+//! functions `run_offload`/`run_triple` were removed in 0.3.0.
 
 pub mod baseline;
 pub mod executor;
@@ -13,56 +15,28 @@ pub mod multicast;
 pub mod phases;
 
 pub use executor::Executor;
-pub use phases::{RoutineKind, RunTriple, TraceTriple};
-
-use crate::config::Config;
-use crate::kernels::JobSpec;
-use crate::sim::Trace;
-
-/// Run one job with one routine; returns the full phase trace.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `sweep::run_one` with a typed `sweep::OffloadRequest` (cached, parallel-ready)"
-)]
-pub fn run_offload(
-    cfg: &Config,
-    spec: &JobSpec,
-    n_clusters: usize,
-    routine: RoutineKind,
-) -> Trace {
-    Executor::new(cfg, spec, n_clusters, routine).run()
-}
-
-/// Run the base/ideal/improved triple for one configuration (the unit of
-/// every figure in §5).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `sweep::triple` or a `sweep::Sweep` campaign"
-)]
-pub fn run_triple(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> TraceTriple {
-    TraceTriple {
-        base: Executor::new(cfg, spec, n_clusters, RoutineKind::Baseline).run(),
-        ideal: Executor::new(cfg, spec, n_clusters, RoutineKind::Ideal).run(),
-        improved: Executor::new(cfg, spec, n_clusters, RoutineKind::Multicast).run(),
-    }
-}
+pub use phases::{RoutineKind, RunTriple};
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::config::Config;
+    use crate::kernels::JobSpec;
     use crate::sweep;
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_the_sweep_api() {
+    fn executor_matches_the_sweep_api() {
+        // The raw executor is the uncached reference implementation the
+        // sweep layer must agree with.
         let cfg = Config::default();
         let spec = JobSpec::Axpy { n: 512 };
-        let legacy = run_triple(&cfg, &spec, 4).runtimes(4);
         let new = sweep::triple(&cfg, &spec, 4);
-        assert_eq!(legacy.base, new.base);
-        assert_eq!(legacy.ideal, new.ideal);
-        assert_eq!(legacy.improved, new.improved);
-        let t = run_offload(&cfg, &spec, 4, RoutineKind::Baseline);
-        assert_eq!(t.total, new.base);
+        let direct = |routine| {
+            super::Executor::new(&cfg, &spec, 4, routine)
+                .run()
+                .total
+        };
+        assert_eq!(direct(super::RoutineKind::Baseline), new.base);
+        assert_eq!(direct(super::RoutineKind::Ideal), new.ideal);
+        assert_eq!(direct(super::RoutineKind::Multicast), new.improved);
     }
 }

@@ -1,7 +1,7 @@
 //! Offload routine variants and run-level result types.
 
 
-use crate::sim::{Time, Trace};
+use crate::sim::Time;
 
 /// Which implementation of the offload process to execute (§4.1/§4.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -44,6 +44,12 @@ impl RoutineKind {
             RoutineKind::JcuOnly => "jcu-only",
             RoutineKind::Ideal => "ideal",
         }
+    }
+
+    /// Inverse of [`RoutineKind::name`] — used by the CLI and the
+    /// campaign spec/stream codecs.
+    pub fn parse(name: &str) -> Option<RoutineKind> {
+        RoutineKind::ALL.iter().copied().find(|r| r.name() == name)
     }
 
     /// True for routines that include the host-side phases (A, B, ..., I).
@@ -103,25 +109,6 @@ impl RunTriple {
     }
 }
 
-/// A full trace triple for the same configuration.
-#[derive(Debug, Clone)]
-pub struct TraceTriple {
-    pub base: Trace,
-    pub ideal: Trace,
-    pub improved: Trace,
-}
-
-impl TraceTriple {
-    pub fn runtimes(&self, n_clusters: usize) -> RunTriple {
-        RunTriple {
-            n_clusters,
-            base: self.base.total,
-            ideal: self.ideal.total,
-            improved: self.improved.total,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +134,13 @@ mod tests {
         assert_eq!(RoutineKind::Baseline.name(), "baseline");
         assert!(RoutineKind::Ideal.name() == "ideal");
         assert!(!RoutineKind::Ideal.is_offloaded());
+    }
+
+    #[test]
+    fn parse_inverts_name() {
+        for r in RoutineKind::ALL {
+            assert_eq!(RoutineKind::parse(r.name()), Some(r));
+        }
+        assert_eq!(RoutineKind::parse("warp-drive"), None);
     }
 }

@@ -1,10 +1,16 @@
-//! Minimal JSON parser for the AOT artifact manifest.
+//! Minimal JSON parser and serializer for the AOT artifact manifest and
+//! the campaign result stream.
 //!
 //! The build environment vendors only the crate set the xla bridge needs
-//! (no serde_json), and the manifest is machine-generated by
-//! `python/compile/aot.py`, so a small strict parser suffices. Supports
-//! the full JSON value grammar (objects, arrays, strings with escapes,
-//! numbers, booleans, null); errors carry byte offsets.
+//! (no serde_json), and both producers are machine-generated
+//! (`python/compile/aot.py` manifests, `campaign::stream` JSONL), so a
+//! small strict implementation suffices. Supports the full JSON value
+//! grammar (objects, arrays, strings with escapes, numbers, booleans,
+//! null); parse errors carry byte offsets. [`Json::to_string`] is
+//! deterministic — object keys are stored in a `BTreeMap`, so they
+//! serialize in sorted order, and integral numbers within the exact-f64
+//! range print without a fractional part, making parse/serialize a
+//! round trip for the integer cycle counts the campaign store persists.
 
 use std::collections::BTreeMap;
 
@@ -65,6 +71,81 @@ impl Json {
             _ => None,
         }
     }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(*n, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Serialize to a single-line JSON string (no insignificant whitespace).
+/// Deterministic: object keys come out in `BTreeMap` order, and numbers
+/// that are exactly-representable integers are written without a
+/// fractional part, so `Json::parse(v.to_string()) == v` for the
+/// documents this crate produces.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
+/// Exact-integer range of f64: |n| <= 2^53 round-trips losslessly. The
+/// serializer's integer-formatting cutoff and the campaign codec's
+/// strict-integer acceptance bound (`campaign::codec`) must agree, so
+/// both use this constant.
+pub const EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
+fn write_num(n: f64, out: &mut String) {
+    if n.fract() == 0.0 && n.abs() <= EXACT_INT {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // `{:?}` is Rust's shortest round-trip float formatting.
+        out.push_str(&format!("{n:?}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -281,6 +362,37 @@ mod tests {
     fn string_escapes() {
         let v = Json::parse(r#""a\"b\\c\nd""#).unwrap();
         assert_eq!(v.as_str(), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn serializer_round_trips() {
+        let doc = r#"{"a": [1, 2.5, -3], "b": {"nested": true, "s": "x\"y\\z"}, "c": null}"#;
+        let v = Json::parse(doc).unwrap();
+        let line = v.to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), v);
+        // Deterministic: serializing twice gives the same bytes.
+        assert_eq!(line, v.to_string());
+    }
+
+    #[test]
+    fn serializer_preserves_large_cycle_counts() {
+        // u64 cycle counts up to 2^53 must survive the f64 round trip
+        // without a fractional suffix (the campaign store relies on it).
+        let big = (1u64 << 53) - 1;
+        let v = Json::Num(big as f64);
+        assert_eq!(v.to_string(), format!("{big}"));
+        assert_eq!(Json::parse(&v.to_string()).unwrap().as_u64(), Some(big));
+        assert_eq!(Json::Num(1.5).to_string(), "1.5");
+        assert_eq!(Json::Num(-0.25).to_string(), "-0.25");
+    }
+
+    #[test]
+    fn serializer_escapes_control_characters() {
+        let v = Json::Str("a\nb\t\"q\"\\ \u{1}".into());
+        let line = v.to_string();
+        assert_eq!(Json::parse(&line).unwrap(), v);
+        assert!(line.contains("\\u0001"));
     }
 
     #[test]

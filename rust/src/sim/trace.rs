@@ -65,6 +65,11 @@ impl Phase {
         }
     }
 
+    /// Inverse of [`Phase::letter`] — used by the campaign trace codec.
+    pub fn from_letter(c: char) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.letter() == c)
+    }
+
     /// Human-readable name as in Fig. 3.
     pub fn name(&self) -> &'static str {
         match self {
@@ -200,6 +205,14 @@ mod tests {
     fn phase_letters_cover_a_to_i() {
         let letters: Vec<char> = Phase::ALL.iter().map(|p| p.letter()).collect();
         assert_eq!(letters, vec!['A', 'B', 'C', 'D', 'E', 'F', 'G', 'H', 'I']);
+    }
+
+    #[test]
+    fn from_letter_inverts_letter() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_letter(p.letter()), Some(p));
+        }
+        assert_eq!(Phase::from_letter('Z'), None);
     }
 
     #[test]

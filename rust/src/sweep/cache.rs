@@ -12,7 +12,7 @@
 //! of inserting full traces here, and [`clear`] exists for tests.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 use crate::config::Config;
 use crate::sim::Trace;
@@ -26,6 +26,15 @@ fn cache() -> &'static Mutex<HashMap<String, Shard>> {
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+/// Lock the cache, recovering from poisoning. A worker that panics while
+/// holding the lock only ever leaves the map in a consistent state (plain
+/// inserts of immutable `Arc<Trace>`s), so the poison flag carries no
+/// information — and propagating it would wedge every remaining worker of
+/// a campaign shard behind one panicking sweep.
+fn lock() -> MutexGuard<'static, HashMap<String, Shard>> {
+    cache().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// The cache key of a configuration: its complete, field-exhaustive
 /// flat-TOML serialization. Compute it once per campaign — serializing
 /// on every lookup is the expensive part, not the hash.
@@ -36,12 +45,25 @@ pub fn config_key(cfg: &Config) -> String {
 /// Look up a trace without simulating or inserting. `key` must come from
 /// [`config_key`] for the config the request targets.
 pub fn peek(key: &str, req: OffloadRequest) -> Option<Arc<Trace>> {
-    cache()
-        .lock()
-        .unwrap()
+    lock()
         .get(key)
         .and_then(|shard| shard.get(&req))
         .map(Arc::clone)
+}
+
+/// Insert an externally-produced trace (e.g. one loaded from the
+/// campaign's on-disk store) so later in-process lookups share it. An
+/// existing entry wins — the DES is deterministic, so both are equal,
+/// and keeping the first preserves `Arc` sharing with earlier results.
+pub fn insert(key: &str, req: OffloadRequest, trace: Arc<Trace>) -> Arc<Trace> {
+    let mut guard = lock();
+    Arc::clone(
+        guard
+            .entry(key.to_string())
+            .or_default()
+            .entry(req)
+            .or_insert(trace),
+    )
 }
 
 /// Run a request through the cache with a precomputed [`config_key`]:
@@ -53,15 +75,7 @@ pub fn run_cached_keyed(key: &str, cfg: &Config, req: OffloadRequest) -> Arc<Tra
     // Simulate outside the lock: concurrent misses on the same key do
     // redundant (deterministic, so harmless) work instead of serializing
     // every sweep worker behind one mutex.
-    let trace = Arc::new(req.run(cfg));
-    let mut guard = cache().lock().unwrap();
-    Arc::clone(
-        guard
-            .entry(key.to_string())
-            .or_default()
-            .entry(req)
-            .or_insert(trace),
-    )
+    insert(key, req, Arc::new(req.run(cfg)))
 }
 
 /// Run a request through the cache (one-off convenience; serializes the
@@ -72,12 +86,12 @@ pub fn run_cached(cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
 
 /// Number of traces currently cached, across all configs (diagnostics).
 pub fn cached_runs() -> usize {
-    cache().lock().unwrap().values().map(Shard::len).sum()
+    lock().values().map(Shard::len).sum()
 }
 
 /// Drop every cached trace.
 pub fn clear() {
-    cache().lock().unwrap().clear();
+    lock().clear();
 }
 
 #[cfg(test)]
@@ -126,5 +140,34 @@ mod tests {
     fn config_key_is_stable_across_clones() {
         let cfg = Config::default();
         assert_eq!(config_key(&cfg), config_key(&cfg.clone()));
+    }
+
+    #[test]
+    fn insert_keeps_the_first_entry() {
+        let cfg = Config::default();
+        let key = config_key(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 96 }, 2, RoutineKind::Multicast);
+        let first = run_cached_keyed(&key, &cfg, req);
+        // Re-inserting an equal (deterministic) trace returns the
+        // original Arc, preserving sharing.
+        let other = Arc::new(req.run(&cfg));
+        let kept = insert(&key, req, other);
+        assert!(Arc::ptr_eq(&first, &kept));
+    }
+
+    #[test]
+    fn lock_recovers_from_poisoning() {
+        // A worker panicking while holding the cache lock must not wedge
+        // the rest of the campaign shard.
+        let _ = std::panic::catch_unwind(|| {
+            let _guard = super::cache().lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            panic!("poison the cache lock");
+        });
+        // Any accessor still works afterwards.
+        let _ = cached_runs();
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 112 }, 2, RoutineKind::Ideal);
+        let t = run_cached(&cfg, req);
+        assert!(t.total > 0);
     }
 }

@@ -5,9 +5,8 @@
 //! a first-class API so the figure modules, benches and examples are
 //! declarative descriptions instead of hand-rolled nested loops:
 //!
-//! * [`OffloadRequest`] — a typed request (spec, n_clusters, routine)
-//!   replacing the positional arguments of the deprecated
-//!   `offload::run_offload`.
+//! * [`OffloadRequest`] — a typed request (spec, n_clusters, routine),
+//!   the unit of work a sweep executes and the trace-cache key.
 //! * [`Sweep`] — a builder expanding cartesian grids
 //!   (`Sweep::over_kernels(..).clusters(..).routines(..)`) plus custom
 //!   point lists, executed by a scoped worker pool (each DES run is
@@ -75,8 +74,7 @@ pub fn run_one(cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
 }
 
 /// The base/ideal/improved runtimes of one (spec, n) configuration,
-/// through the cache — the typed successor of
-/// `offload::run_triple(..).runtimes(n)`.
+/// through the cache — the unit behind every figure of §5.
 pub fn triple(cfg: &Config, spec: &JobSpec, n_clusters: usize) -> RunTriple {
     let [base, ideal, improved] =
         OffloadRequest::triple(*spec, n_clusters).map(|req| run_one(cfg, req).total);

@@ -6,9 +6,9 @@ use crate::offload::{Executor, RoutineKind};
 use crate::sim::Trace;
 
 /// One fully-specified DES run: which job, on how many clusters, with
-/// which offload routine. Replaces the positional argument list of the
-/// deprecated `offload::run_offload`, and doubles as the trace-cache key
-/// (it is `Copy + Eq + Hash`).
+/// which offload routine. Doubles as the trace-cache key (it is
+/// `Copy + Eq + Hash`) and as the point identity of the campaign
+/// store's on-disk layout.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct OffloadRequest {
     pub spec: JobSpec,

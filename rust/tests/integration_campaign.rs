@@ -1,0 +1,222 @@
+//! Integration and property tests of the `campaign` subsystem: sharded
+//! execution merging bit-identical to a single process, resume after a
+//! kill, persistent-store reuse across (simulated) processes, corruption
+//! tolerance, and figure reconstruction from merged output.
+
+mod prop_util;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use occamy_offload::campaign::{self, CampaignSpec, Shard, TraceStore};
+use occamy_offload::config::Config;
+use occamy_offload::exp::fig7;
+use occamy_offload::sweep::cache;
+use prop_util::{choose, prop};
+
+/// Unique scratch directory per call (tests run in parallel).
+fn temp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "occamy-campaign-it-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small campaign spec with a per-test timing override, so the
+/// process-wide trace cache and the store fingerprints of parallel
+/// tests never alias.
+fn small_spec(name: &str, gap: u64, kernels: &str, clusters: &str) -> CampaignSpec {
+    CampaignSpec::parse(&format!(
+        "[campaign]\nname = \"{name}\"\n\n[grid]\nkernels = [{kernels}]\nclusters = [{clusters}]\n\
+         routines = [\"baseline\", \"ideal\", \"multicast\"]\n\n[timing]\nhost_ipi_issue_gap = {gap}\n"
+    ))
+    .unwrap()
+}
+
+#[test]
+fn prop_shard_merge_is_bit_identical_to_single_process() {
+    // The tentpole claim: for any campaign and any shard count, running
+    // the shards independently and merging their streamed output equals
+    // single-process execution bit-for-bit (every phase span of every
+    // trace, in expansion order).
+    const KERNELS: [&str; 5] = [
+        "\"axpy:64\"",
+        "\"atax:16\"",
+        "\"montecarlo:256\"",
+        "\"bfs:16x2\"",
+        "\"covariance:8x16\"",
+    ];
+    prop(5, |rng| {
+        let n_kernels = rng.gen_range_usize(1, 4);
+        let kernels: Vec<&str> = (0..n_kernels).map(|_| *choose(rng, &KERNELS)).collect();
+        let clusters = ["1", "1, 4", "2, 8"][rng.gen_range_usize(0, 3)];
+        // Unique gap per case: disjoint cache/store namespaces.
+        let gap = 1000 + rng.gen_range_usize(0, 10_000) as u64;
+        let spec = small_spec("prop", gap, &kernels.join(", "), clusters);
+        let shard_count = rng.gen_range_usize(2, 5);
+        let out = temp_dir("prop");
+        for i in 0..shard_count {
+            let report =
+                campaign::run_shard(&spec, Shard::new(i, shard_count).unwrap(), &out, None)
+                    .unwrap();
+            assert_eq!(report.executed + report.resumed, report.owned);
+        }
+        let merged = campaign::merge(&spec, shard_count, &out).unwrap();
+        let single = campaign::run_single(&spec);
+        assert_eq!(merged, single, "shard count {shard_count}");
+        let _ = std::fs::remove_dir_all(&out);
+    });
+}
+
+#[test]
+fn resume_after_kill_skips_completed_points() {
+    let spec = small_spec("resume-kill", 41, "\"axpy:96\", \"atax:16\"", "1, 4");
+    let out = temp_dir("resume-kill");
+    let shard = Shard::new(0, 2).unwrap();
+    let full = campaign::run_shard(&spec, shard, &out, None).unwrap();
+    assert!(full.owned >= 3);
+    assert_eq!(full.executed, full.owned);
+
+    // Simulate a kill mid-write: keep two complete lines plus a torn
+    // third line.
+    let text = std::fs::read_to_string(&full.output).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let torn = format!("{}\n{}\n{}", lines[0], lines[1], &lines[2][..lines[2].len() / 2]);
+    std::fs::write(&full.output, torn).unwrap();
+
+    let resumed = campaign::run_shard(&spec, shard, &out, None).unwrap();
+    assert_eq!(resumed.resumed, 2, "both intact lines are reused");
+    assert_eq!(resumed.dropped, 1, "the torn tail is dropped");
+    assert_eq!(resumed.executed, full.owned - 2, "only the rest re-runs");
+
+    // The other shard plus a merge still reproduces the single-process
+    // results exactly.
+    campaign::run_shard(&spec, Shard::new(1, 2).unwrap(), &out, None).unwrap();
+    let merged = campaign::merge(&spec, 2, &out).unwrap();
+    assert_eq!(merged, campaign::run_single(&spec));
+}
+
+#[test]
+fn warm_store_performs_zero_new_simulations() {
+    // Acceptance criterion: a second campaign run against a warm on-disk
+    // trace store simulates nothing, even from a cold process (emulated
+    // by clearing the process-wide cache; this test's config is unique
+    // to it, so parallel tests are unaffected).
+    let spec = small_spec("warm-store", 42, "\"axpy:80\", \"bfs:16x2\"", "1, 2");
+    let store = TraceStore::open(temp_dir("warm-store-root")).unwrap();
+    let total = spec.expand().len();
+
+    let cold_out = temp_dir("warm-store-cold");
+    for i in 0..2 {
+        campaign::run_shard(&spec, Shard::new(i, 2).unwrap(), &cold_out, Some(&store)).unwrap();
+    }
+    let cold = store.stats();
+    assert_eq!(cold.simulations as usize, total, "cold run simulates everything");
+    assert_eq!(cold.disk_hits, 0);
+
+    // "New process": cold memory cache, warm disk store, fresh handle
+    // (fresh counters), fresh output dir.
+    cache::clear();
+    let store = TraceStore::open(store.root()).unwrap();
+    let warm_out = temp_dir("warm-store-warm");
+    for i in 0..2 {
+        campaign::run_shard(&spec, Shard::new(i, 2).unwrap(), &warm_out, Some(&store)).unwrap();
+    }
+    let warm = store.stats();
+    assert_eq!(warm.simulations, 0, "warm store: zero new simulations ({warm:?})");
+    assert_eq!(warm.disk_hits as usize, total, "every point served from disk");
+
+    let merged = campaign::merge(&spec, 2, &warm_out).unwrap();
+    assert_eq!(merged, campaign::run_single(&spec));
+}
+
+#[test]
+fn store_tolerates_corrupted_files_by_resimulating() {
+    let spec = small_spec("corrupt-store", 43, "\"axpy:72\"", "1");
+    let store = TraceStore::open(temp_dir("corrupt-store-root")).unwrap();
+    let out = temp_dir("corrupt-store-cold");
+    campaign::run_shard(&spec, Shard::SINGLE, &out, Some(&store)).unwrap();
+    let fp = campaign::store::fingerprint(&spec.config);
+    let n_traces = store.traces_on_disk(&fp);
+    assert_eq!(n_traces, spec.expand().len());
+
+    // Corrupt every stored trace (truncation and garbage).
+    let dir = store.config_dir(&fp);
+    for (i, entry) in std::fs::read_dir(&dir).unwrap().enumerate() {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|x| x == "json") {
+            if i % 2 == 0 {
+                std::fs::write(&path, "{\"tot").unwrap();
+            } else {
+                std::fs::write(&path, "not json at all").unwrap();
+            }
+        }
+    }
+
+    cache::clear();
+    let store = TraceStore::open(store.root()).unwrap();
+    let out2 = temp_dir("corrupt-store-warm");
+    campaign::run_shard(&spec, Shard::SINGLE, &out2, Some(&store)).unwrap();
+    let stats = store.stats();
+    assert_eq!(stats.disk_hits, 0, "all corrupt files rejected");
+    assert_eq!(stats.simulations as usize, n_traces, "everything re-simulated");
+    // The store healed: the files parse again.
+    cache::clear();
+    let store = TraceStore::open(store.root()).unwrap();
+    let out3 = temp_dir("corrupt-store-healed");
+    campaign::run_shard(&spec, Shard::SINGLE, &out3, Some(&store)).unwrap();
+    assert_eq!(store.stats().simulations, 0);
+    assert_eq!(campaign::merge(&spec, 1, &out3).unwrap(), campaign::run_single(&spec));
+}
+
+#[test]
+fn figures_render_from_precomputed_results() {
+    // `from_results` on the figure's own sweep output must match `run`.
+    let cfg = Config::default();
+    let direct = fig7::run(&cfg);
+    let rebuilt = fig7::from_results(&fig7::sweep().run(&cfg));
+    assert_eq!(direct.points.len(), rebuilt.points.len());
+    for (a, b) in direct.points.iter().zip(&rebuilt.points) {
+        assert_eq!((a.kernel, a.n_clusters, a.overhead), (b.kernel, b.n_clusters, b.overhead));
+    }
+}
+
+#[test]
+fn campaign_covers_non_default_geometries() {
+    // Non-default SoC geometry as a first-class campaign axis: the whole
+    // shard/merge path works on a 2-quadrant SoC.
+    let spec = CampaignSpec::parse(
+        "[campaign]\nname = \"small-soc\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [1, 8]\n\
+         [soc]\nn_quadrants = 2\n[timing]\nhost_ipi_issue_gap = 44\n",
+    )
+    .unwrap();
+    assert_eq!(spec.config.soc.n_clusters(), 8);
+    let out = temp_dir("small-soc");
+    for i in 0..2 {
+        campaign::run_shard(&spec, Shard::new(i, 2).unwrap(), &out, None).unwrap();
+    }
+    let merged = campaign::merge(&spec, 2, &out).unwrap();
+    assert_eq!(merged, campaign::run_single(&spec));
+    // The geometry override reached the DES: at 8 clusters, every
+    // cluster recorded spans.
+    let rec = &merged.records()[3];
+    assert_eq!(rec.req().n_clusters, 8);
+    assert_eq!(rec.trace.n_clusters(), 8);
+}
+
+#[test]
+fn validate_reports_the_grid_shape() {
+    let spec = small_spec("report", 45, "\"axpy:64\", \"axpy:128\", \"atax:16\"", "1, 2");
+    let report = spec.report();
+    assert_eq!(report.points, 3 * 2 * 3);
+    assert_eq!(report.unique_traces, 3 * 2 * 3);
+    assert_eq!(report.kernels.len(), 3);
+    assert_eq!(report.config_fingerprint.len(), 16);
+    let text = report.to_string();
+    assert!(text.contains("18"), "{text}");
+    assert!(text.contains("axpy_n128"), "{text}");
+}

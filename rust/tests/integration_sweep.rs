@@ -46,19 +46,19 @@ fn prop_parallel_matches_serial_bit_identical() {
 #[test]
 fn fig7_matches_legacy_per_loop_output() {
     // The migrated figure must reproduce the seed's hand-rolled loop
-    // exactly (the deprecated shims are the legacy reference).
+    // exactly (the raw uncached Executor is the legacy reference).
     let cfg = Config::default();
     let fig = fig7::run(&cfg);
     assert_eq!(fig.points.len(), benchmark_set().len() * CLUSTER_SWEEP.len());
-    #[allow(deprecated)]
     for (name, spec) in benchmark_set() {
         for &n in &CLUSTER_SWEEP {
-            let legacy = occamy_offload::offload::run_triple(&cfg, &spec, n).runtimes(n);
-            assert_eq!(
-                fig.overhead(name, n),
-                Some(legacy.overhead()),
-                "{name}@{n}"
-            );
+            let run = |routine| {
+                occamy_offload::offload::Executor::new(&cfg, &spec, n, routine)
+                    .run()
+                    .total as i64
+            };
+            let overhead = run(RoutineKind::Baseline) - run(RoutineKind::Ideal);
+            assert_eq!(fig.overhead(name, n), Some(overhead), "{name}@{n}");
         }
     }
 }
