@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             cfg: Config::default(),
             queue_depth: 32,
             timing_only: false,
+            ..Default::default()
         },
         Some(&artifacts),
     )?;

@@ -60,5 +60,27 @@ fn main() {
         "\nmodel estimate at 8 clusters: {} cycles (Eq. 4 composition)",
         model.estimate(&spec, 8)
     );
-    println!("run `occamy experiment all` for the full figure suite");
+
+    // Contention as an axis: the same job replayed with several in
+    // flight, contending for the 32-cluster fabric and the JCU's slots.
+    // Latency decomposes as isolated cycles + queueing delay; the
+    // inflight = 1 row is the serial coordinator (zero delay).
+    println!("\n{:>8}  {:>9}  {:>10}  {:>9}", "inflight", "service", "queue_mean", "latency");
+    for s in Sweep::new()
+        .kernel("axpy", spec)
+        .clusters([16])
+        .routines([occamy_offload::offload::RoutineKind::Multicast])
+        .inflight([1, 2, 4, 8])
+        .run_interference(&cfg, 16, 0)
+    {
+        println!(
+            "{:>8}  {:>9}  {:>10.0}  {:>9.0}",
+            s.point.ireq.inflight,
+            s.outcome.isolated,
+            s.outcome.mean_queue_delay(),
+            s.outcome.mean_latency()
+        );
+    }
+    println!("\nrun `occamy experiment all` for the full figure suite");
+    println!("run `occamy interfere --kernel axpy --size 1024` for contention curves");
 }

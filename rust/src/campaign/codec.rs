@@ -199,6 +199,65 @@ pub fn trace_from_str(text: &str) -> Result<Arc<Trace>, String> {
     Json::parse(text).and_then(|j| trace_from_json(&j)).map(Arc::new)
 }
 
+/// Serialize one interference point + its schedule: the request, the
+/// window parameters, the isolated service time and every per-job
+/// queueing delay (all exact integers, so round-tripping is
+/// bit-identical like the trace codec).
+pub fn interference_to_json(
+    point: &crate::sweep::InterferencePoint,
+    outcome: &crate::sweep::InterferenceOutcome,
+) -> Json {
+    obj(vec![
+        ("req", request_to_json(&point.ireq.req)),
+        ("inflight", num(point.ireq.inflight as u64)),
+        ("jobs", num(point.ireq.n_jobs as u64)),
+        ("arrival_gap", num(point.ireq.arrival_gap)),
+        ("isolated", num(outcome.isolated)),
+        (
+            "queue_delays",
+            Json::Arr(outcome.queue_delays.iter().map(|&d| num(d)).collect()),
+        ),
+        ("makespan", num(outcome.makespan)),
+    ])
+}
+
+pub fn interference_from_json(
+    j: &Json,
+) -> Result<(crate::sweep::InterferencePoint, crate::sweep::InterferenceOutcome), String> {
+    let req = request_from_json(j.get("req").ok_or("missing \"req\"")?)?;
+    let inflight = get_u64(j, "inflight")? as usize;
+    let n_jobs = get_u64(j, "jobs")? as usize;
+    let arrival_gap = get_u64(j, "arrival_gap")?;
+    if inflight == 0 {
+        return Err("inflight must be >= 1".into());
+    }
+    let delays = j
+        .get("queue_delays")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"queue_delays\"")?;
+    let queue_delays = delays
+        .iter()
+        .map(|d| exact_u64(d).ok_or_else(|| "invalid queue delay".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    if queue_delays.len() != n_jobs {
+        return Err(format!(
+            "queue_delays has {} entries for {n_jobs} jobs",
+            queue_delays.len()
+        ));
+    }
+    Ok((
+        crate::sweep::InterferencePoint {
+            label: req.spec.kind().name(),
+            ireq: crate::sweep::InterferenceRequest::new(req, inflight, n_jobs, arrival_gap),
+        },
+        crate::sweep::InterferenceOutcome {
+            isolated: get_u64(j, "isolated")?,
+            queue_delays,
+            makespan: get_u64(j, "makespan")?,
+        },
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +297,36 @@ mod tests {
         assert!(!line.contains('\n'));
         let back = trace_from_str(&line).unwrap();
         assert_eq!(*back, trace);
+    }
+
+    #[test]
+    fn interference_round_trips_bit_identical() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 512 }, 16, RoutineKind::Multicast);
+        let ireq = crate::sweep::InterferenceRequest::new(req, 4, 8, 25);
+        let point = crate::sweep::InterferencePoint {
+            label: "axpy",
+            ireq,
+        };
+        let outcome = ireq.run(&cfg);
+        let line = interference_to_json(&point, &outcome).to_string();
+        assert!(!line.contains('\n'));
+        let (p2, o2) = interference_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(p2, point);
+        assert_eq!(o2, outcome);
+        // Corruption is rejected, not coerced.
+        for bad in [
+            "{}",
+            "{\"req\":{\"spec\":{\"kernel\":\"axpy\",\"n\":1},\"clusters\":1,\"routine\":\"multicast\"},\
+             \"inflight\":0,\"jobs\":1,\"arrival_gap\":0,\"isolated\":1,\"queue_delays\":[0],\"makespan\":1}",
+            "{\"req\":{\"spec\":{\"kernel\":\"axpy\",\"n\":1},\"clusters\":1,\"routine\":\"multicast\"},\
+             \"inflight\":1,\"jobs\":2,\"arrival_gap\":0,\"isolated\":1,\"queue_delays\":[0],\"makespan\":1}",
+        ] {
+            assert!(
+                interference_from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
     }
 
     #[test]

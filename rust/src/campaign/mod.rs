@@ -24,6 +24,13 @@
 //!   **bit-identical** to single-process execution
 //!   (property-tested in `tests/integration_campaign.rs`), ready for the
 //!   `exp::fig*::from_results` constructors.
+//! * `[interference]` — an optional contention axis: merge derives
+//!   latency-vs-jobs-in-flight curves ([`interference_records`]) from
+//!   the merged traces through the coordinator's occupancy model and
+//!   writes them to `<name>.interference.jsonl`. The trace grid — and
+//!   so sharding, resume and merge — is untouched: isolated traces are
+//!   contention-independent, and the schedule on top of them is
+//!   deterministic.
 //!
 //! CLI: `occamy campaign <run|merge|status|validate>`; quickstart:
 //! `examples/campaign_demo.rs` + `examples/campaign.toml`.
@@ -35,7 +42,7 @@ pub mod store;
 pub mod stream;
 
 pub use shard::Shard;
-pub use spec::{CampaignSpec, SpecReport};
+pub use spec::{CampaignSpec, InterferenceSpec, SpecReport};
 pub use store::{StoreStats, TraceStore};
 
 use std::collections::BTreeMap;
@@ -44,7 +51,9 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::sweep::{cache, SweepPoint, SweepRecord, SweepResults};
+use crate::sweep::{
+    cache, InterferenceOutcome, InterferencePoint, SweepPoint, SweepRecord, SweepResults,
+};
 
 /// Outcome of one [`run_shard`] invocation.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -337,7 +346,46 @@ pub fn merge(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow:
         text.push('\n');
     }
     std::fs::write(&merged_path, text)?;
-    Ok(SweepResults::new(collected.into_values().collect()))
+    let results = SweepResults::new(collected.into_values().collect());
+    // Contention axis: derived deterministically from the merged traces
+    // (no extra simulation, no extra sharding), one JSONL line per
+    // (point, inflight).
+    if spec.interference.is_some() {
+        let records = interference_records(spec, &results)?;
+        let mut text = String::new();
+        for (point, outcome) in &records {
+            text.push_str(&stream::interference_line_of(&fp, point, outcome));
+            text.push('\n');
+        }
+        std::fs::write(out_dir.join(stream::interference_file_name(&spec.name)), text)?;
+    }
+    Ok(results)
+}
+
+/// Schedule the campaign's `[interference]` axis over already-merged
+/// trace results: each interference point replays its request through
+/// the coordinator's occupancy model using the merged isolated runtime.
+/// Deterministic given the results; fails if a point's trace is absent
+/// (merge guarantees completeness, so this only trips on foreign
+/// results).
+pub fn interference_records(
+    spec: &CampaignSpec,
+    results: &SweepResults,
+) -> anyhow::Result<Vec<(InterferencePoint, InterferenceOutcome)>> {
+    spec.interference_points()
+        .into_iter()
+        .map(|point| {
+            let isolated = results
+                .isolated_total(point.label, point.ireq.req)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no merged trace for interference point {:?} — results from a different spec?",
+                        point.ireq.req
+                    )
+                })?;
+            Ok((point, point.ireq.run_on(&spec.config, isolated)))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -399,6 +447,40 @@ mod tests {
         assert_eq!(second.resumed, second.owned);
         let merged = merge(&spec, 1, &out).unwrap();
         assert_eq!(merged, run_single(&spec));
+    }
+
+    #[test]
+    fn interference_campaigns_shard_and_merge_like_any_other() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"unit-interfere\"\n[grid]\nkernels = [\"axpy:512\"]\nclusters = [16]\n\
+             routines = [\"multicast\"]\n[timing]\nhost_ipi_issue_gap = 36\n\
+             [interference]\njobs_in_flight = [1, 4]\njobs = 8\n",
+        )
+        .unwrap();
+        let out = temp_out("interfere");
+        for i in 0..2 {
+            run_shard(&spec, Shard::new(i, 2).unwrap(), &out, None).unwrap();
+        }
+        let merged = merge(&spec, 2, &out).unwrap();
+        assert_eq!(merged, run_single(&spec));
+        // Merge wrote the derived contention curves next to the traces.
+        let ipath = out.join(stream::interference_file_name(&spec.name));
+        let fp = store::fingerprint(&spec.config);
+        let records = stream::read_interference(&ipath, &fp).unwrap();
+        assert_eq!(records.len(), 2);
+        let serial = &records[0];
+        assert_eq!(serial.0.ireq.inflight, 1);
+        assert_eq!(serial.1.total_queue_delay(), 0, "serial reference");
+        assert_eq!(
+            serial.1.isolated,
+            merged.records()[0].total(),
+            "service time is the merged isolated trace"
+        );
+        let contended = &records[1];
+        assert_eq!(contended.0.ireq.inflight, 4);
+        assert!(contended.1.total_queue_delay() > 0);
+        // And the records match an in-process derivation exactly.
+        assert_eq!(records, interference_records(&spec, &merged).unwrap());
     }
 
     #[test]

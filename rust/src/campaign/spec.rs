@@ -22,6 +22,11 @@
 //!
 //! [timing]                   # optional timing overrides
 //! host_ipi_issue_gap = 20
+//!
+//! [interference]             # optional contention axis
+//! jobs_in_flight = [1, 2, 4] # windows to sweep (1 = serial reference)
+//! jobs = 16                  # jobs replayed per point (default 16)
+//! arrival_gap = 0            # cycles between arrivals (default 0)
 //! ```
 
 use std::collections::HashSet;
@@ -29,7 +34,7 @@ use std::collections::HashSet;
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
-use crate::sweep::{Sweep, SweepPoint};
+use crate::sweep::{InterferencePoint, Sweep, SweepPoint};
 
 /// A parsed campaign: grid axes plus the fully-resolved config.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +52,23 @@ pub struct CampaignSpec {
     /// The config the whole grid runs on (defaults + `[soc]`/`[timing]`
     /// overrides).
     pub config: Config,
+    /// Contention axis (`[interference]`): when present, merge
+    /// additionally derives latency-vs-inflight curves from the merged
+    /// traces. The trace grid itself — and therefore sharding, resume
+    /// and merge — is unaffected: isolated traces are
+    /// contention-independent.
+    pub interference: Option<InterferenceSpec>,
+}
+
+/// The `[interference]` section of a campaign spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InterferenceSpec {
+    /// Jobs-in-flight windows to sweep (1 = the serial reference).
+    pub jobs_in_flight: Vec<usize>,
+    /// Jobs replayed per (point, inflight).
+    pub n_jobs: usize,
+    /// Virtual cycles between consecutive arrivals.
+    pub arrival_gap: u64,
 }
 
 /// Dry-run diagnostics of a spec (`occamy campaign validate`).
@@ -60,6 +82,8 @@ pub struct SpecReport {
     pub kernels: Vec<String>,
     pub clusters: Vec<usize>,
     pub routines: Vec<&'static str>,
+    /// Interference points derived at merge (0 without `[interference]`).
+    pub interference_points: usize,
     /// Content fingerprint of the resolved config (store directory name).
     pub config_fingerprint: String,
 }
@@ -72,6 +96,9 @@ impl std::fmt::Display for SpecReport {
         writeln!(f, "  clusters ({}): {}", clusters.len(), clusters.join(", "))?;
         writeln!(f, "  routines ({}): {}", self.routines.len(), self.routines.join(", "))?;
         writeln!(f, "  points: {} ({} unique traces)", self.points, self.unique_traces)?;
+        if self.interference_points > 0 {
+            writeln!(f, "  interference points: {}", self.interference_points)?;
+        }
         write!(f, "  config fingerprint: {}", self.config_fingerprint)
     }
 }
@@ -84,6 +111,10 @@ impl CampaignSpec {
         let mut clusters: Vec<usize> = Vec::new();
         let mut routines: Vec<RoutineKind> = Vec::new();
         let mut config = Config::default();
+        let mut interference_section = false;
+        let mut jobs_in_flight: Vec<usize> = Vec::new();
+        let mut interference_jobs: usize = 16;
+        let mut interference_gap: u64 = 0;
         let mut section = String::new();
         for (i, raw) in text.lines().enumerate() {
             let lineno = i + 1;
@@ -93,10 +124,16 @@ impl CampaignSpec {
             }
             if let Some(s) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
                 section = s.trim().to_string();
-                if !matches!(section.as_str(), "campaign" | "grid" | "soc" | "timing") {
+                if !matches!(
+                    section.as_str(),
+                    "campaign" | "grid" | "soc" | "timing" | "interference"
+                ) {
                     anyhow::bail!(
-                        "line {lineno}: unknown section [{section}] (expected [campaign], [grid], [soc] or [timing])"
+                        "line {lineno}: unknown section [{section}] (expected [campaign], [grid], [soc], [timing] or [interference])"
                     );
+                }
+                if section == "interference" {
+                    interference_section = true;
                 }
                 continue;
             }
@@ -144,6 +181,26 @@ impl CampaignSpec {
                 ("grid", other) => anyhow::bail!(
                     "line {lineno}: unknown [grid] key {other:?} (expected kernels, clusters or routines)"
                 ),
+                ("interference", "jobs_in_flight") => {
+                    for v in parse_int_array(value)
+                        .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?
+                    {
+                        anyhow::ensure!(v > 0, "line {lineno}: jobs_in_flight must be positive");
+                        jobs_in_flight.push(v as usize);
+                    }
+                }
+                ("interference", "jobs") => {
+                    let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    anyhow::ensure!(v > 0, "line {lineno}: jobs must be positive");
+                    interference_jobs = v as usize;
+                }
+                ("interference", "arrival_gap") => {
+                    interference_gap =
+                        parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                }
+                ("interference", other) => anyhow::bail!(
+                    "line {lineno}: unknown [interference] key {other:?} (expected jobs_in_flight, jobs or arrival_gap)"
+                ),
                 ("soc", key) | ("timing", key) => {
                     let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
                     let r = if section == "soc" {
@@ -176,12 +233,26 @@ impl CampaignSpec {
                 "cluster count {c} exceeds the SoC geometry ({max} clusters)"
             );
         }
+        let interference = if interference_section {
+            anyhow::ensure!(
+                !jobs_in_flight.is_empty(),
+                "[interference] requires a non-empty jobs_in_flight axis"
+            );
+            Some(InterferenceSpec {
+                jobs_in_flight,
+                n_jobs: interference_jobs,
+                arrival_gap: interference_gap,
+            })
+        } else {
+            None
+        };
         Ok(Self {
             name,
             kernels,
             clusters,
             routines,
             config,
+            interference,
         })
     }
 
@@ -206,6 +277,19 @@ impl CampaignSpec {
     /// offsets into this).
     pub fn expand(&self) -> Vec<SweepPoint> {
         self.to_sweep().expand()
+    }
+
+    /// The campaign's interference points (empty without an
+    /// `[interference]` section): the trace grid crossed with the
+    /// jobs-in-flight axis.
+    pub fn interference_points(&self) -> Vec<InterferencePoint> {
+        match &self.interference {
+            None => Vec::new(),
+            Some(i) => self
+                .to_sweep()
+                .inflight(i.jobs_in_flight.iter().copied())
+                .expand_interference(i.n_jobs, i.arrival_gap),
+        }
     }
 
     /// Dry-run diagnostics: point count, estimated trace count, axes
@@ -233,6 +317,7 @@ impl CampaignSpec {
             kernels: self.kernels.iter().map(|s| s.id()).collect(),
             clusters,
             routines,
+            interference_points: self.interference_points().len(),
             config_fingerprint: super::store::fingerprint(&self.config),
         }
     }
@@ -514,6 +599,54 @@ mod tests {
             .to_string();
             assert!(err.contains("name"), "{bad:?}: {err}");
         }
+    }
+
+    #[test]
+    fn interference_section_round_trips() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"contend\"\n[grid]\nkernels = [\"axpy:512\"]\nclusters = [16]\n\
+             routines = [\"multicast\"]\n[interference]\njobs_in_flight = [1, 4]\njobs = 8\narrival_gap = 50\n",
+        )
+        .unwrap();
+        let i = spec.interference.as_ref().unwrap();
+        assert_eq!(i.jobs_in_flight, vec![1, 4]);
+        assert_eq!(i.n_jobs, 8);
+        assert_eq!(i.arrival_gap, 50);
+        let ipoints = spec.interference_points();
+        assert_eq!(ipoints.len(), 2, "1 trace point x 2 windows");
+        assert_eq!(ipoints[0].ireq.inflight, 1);
+        assert_eq!(ipoints[1].ireq.inflight, 4);
+        assert!(ipoints.iter().all(|p| p.ireq.n_jobs == 8 && p.ireq.arrival_gap == 50));
+        let report = spec.report();
+        assert_eq!(report.interference_points, 2);
+        assert!(report.to_string().contains("interference points: 2"));
+    }
+
+    #[test]
+    fn interference_defaults_and_errors() {
+        // Defaults: 16 jobs, gap 0.
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"d\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n\
+             [interference]\njobs_in_flight = [2]\n",
+        )
+        .unwrap();
+        let i = spec.interference.unwrap();
+        assert_eq!((i.n_jobs, i.arrival_gap), (16, 0));
+        // Without the section there is no interference axis.
+        let plain = CampaignSpec::parse(
+            "[campaign]\nname = \"p\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n",
+        )
+        .unwrap();
+        assert_eq!(plain.interference, None);
+        assert!(plain.interference_points().is_empty());
+        assert_eq!(plain.report().interference_points, 0);
+        // Errors: empty axis, zero window, unknown key.
+        let err = |text: &str| CampaignSpec::parse(text).unwrap_err().to_string();
+        let base = "[campaign]\nname = \"e\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n";
+        assert!(err(&format!("{base}[interference]\n")).contains("jobs_in_flight"));
+        assert!(err(&format!("{base}[interference]\njobs_in_flight = [0]\n")).contains("positive"));
+        assert!(err(&format!("{base}[interference]\nwarp = 1\n")).contains("unknown [interference] key"));
+        assert!(err(&format!("{base}[interference]\njobs_in_flight = [1]\njobs = 0\n")).contains("positive"));
     }
 
     #[test]

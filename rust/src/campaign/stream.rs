@@ -28,6 +28,62 @@ pub fn merged_file_name(campaign: &str) -> String {
     format!("{campaign}.merged.jsonl")
 }
 
+/// Interference output file name: `<name>.interference.jsonl`. Written
+/// by merge when the spec has an `[interference]` section — derived
+/// deterministically from the merged traces, so it needs no sharding of
+/// its own.
+pub fn interference_file_name(campaign: &str) -> String {
+    format!("{campaign}.interference.jsonl")
+}
+
+/// Serialize one interference point as a JSONL line (no trailing
+/// newline), fingerprint-stamped like trace lines.
+pub fn interference_line_of(
+    config_fp: &str,
+    point: &crate::sweep::InterferencePoint,
+    outcome: &crate::sweep::InterferenceOutcome,
+) -> String {
+    let mut j = codec::interference_to_json(point, outcome);
+    if let Json::Obj(entries) = &mut j {
+        entries.insert("config".to_string(), Json::Str(config_fp.to_string()));
+    }
+    j.to_string()
+}
+
+/// Read an interference file back. Strict, unlike [`read_records`]:
+/// these lines are cheap to rewrite from a merged campaign, so any
+/// unparsable line or foreign fingerprint is an error rather than a
+/// silent drop.
+pub fn read_interference(
+    path: &Path,
+    expected_fp: &str,
+) -> anyhow::Result<Vec<(crate::sweep::InterferencePoint, crate::sweep::InterferenceOutcome)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        let fp = j
+            .get("config")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{}:{}: missing \"config\"", path.display(), i + 1))?;
+        anyhow::ensure!(
+            fp == expected_fp,
+            "{}: written under config fingerprint {fp}, the spec now resolves to {expected_fp}",
+            path.display()
+        );
+        out.push(
+            codec::interference_from_json(&j)
+                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
 /// Serialize one executed point as a JSONL line (no trailing newline).
 /// Every line carries the config fingerprint, so stale files from a
 /// spec whose `[soc]`/`[timing]` changed cannot be silently resumed.

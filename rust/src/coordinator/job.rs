@@ -57,14 +57,40 @@ pub struct JobResult {
     pub spec: JobSpec,
     pub placement: Placement,
     pub routine: RoutineKind,
-    /// Simulated cycles of the offloaded execution (DES).
+    /// Isolated service time: simulated cycles of the offloaded
+    /// execution (DES), independent of contention.
     pub cycles: Time,
+    /// Queueing delay under contention: virtual cycles spent waiting for
+    /// free clusters and a free JCU slot. 0 with `inflight = 1` (serial
+    /// dispatch) and for host placements; end-to-end latency is
+    /// `cycles + queue_delay`.
+    pub queue_delay: Time,
+    /// Virtual dispatch time on the coordinator's shared timeline
+    /// (accelerator placements only; 0 for host placements).
+    pub start: Time,
+    /// Virtual completion time (`start + cycles`; 0 for host placements).
+    pub completion: Time,
     /// Model estimate the planner used (cycles).
     pub estimated_cycles: Time,
     /// Whether the PJRT outputs matched the native reference.
     pub verified: bool,
     /// Wall-clock microseconds spent on the PJRT execution.
     pub pjrt_micros: u128,
+    /// Set when the request was rejected (e.g. a cluster count outside
+    /// the SoC geometry): no simulation ran, all timing fields are 0.
+    pub error: Option<String>,
+}
+
+impl JobResult {
+    /// End-to-end latency under contention: isolated service time plus
+    /// the nonnegative queueing delay.
+    pub fn latency(&self) -> Time {
+        self.cycles + self.queue_delay
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        self.error.is_some()
+    }
 }
 
 #[cfg(test)]

@@ -42,13 +42,24 @@ impl Dist {
 
     /// q in [0, 1]; nearest-rank on the sorted samples.
     pub fn quantile(&self, q: f64) -> u64 {
+        self.quantiles(&[q])[0]
+    }
+
+    /// Several quantiles from one sort — `summary` asks for p50 and p99
+    /// of every distribution, and cloning + sorting the sample vec per
+    /// quantile made that quadratic-ish in practice.
+    pub fn quantiles(&self, qs: &[f64]) -> Vec<u64> {
         if self.samples.is_empty() {
-            return 0;
+            return vec![0; qs.len()];
         }
         let mut s = self.samples.clone();
         s.sort_unstable();
-        let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
-        s[idx.min(s.len() - 1)]
+        qs.iter()
+            .map(|q| {
+                let idx = ((s.len() as f64 - 1.0) * q).round() as usize;
+                s[idx.min(s.len() - 1)]
+            })
+            .collect()
     }
 }
 
@@ -60,9 +71,15 @@ pub struct Metrics {
     pub verification_failures: u64,
     pub host_placements: u64,
     pub accel_placements: u64,
-    /// Simulated offload cycles per kernel kind.
+    /// Requests rejected at validation (no simulation ran).
+    pub rejected: u64,
+    /// Simulated offload cycles per kernel kind (isolated service time).
     pub cycles_by_kernel: HashMap<&'static str, Dist>,
-    /// End-to-end simulated latency of every job.
+    /// Isolated service time of every job (DES cycles, no contention).
+    pub service: Dist,
+    /// Queueing delay of every job (wait for clusters + JCU slot).
+    pub queueing: Dist,
+    /// End-to-end simulated latency of every job: service + queueing.
     pub latency: Dist,
     /// PJRT wall-clock micros.
     pub pjrt_micros: Dist,
@@ -73,6 +90,7 @@ impl Metrics {
         &mut self,
         kind: KernelKind,
         cycles: u64,
+        queue_delay: u64,
         pjrt_micros: u128,
         verified: bool,
         on_host: bool,
@@ -92,38 +110,63 @@ impl Metrics {
             .entry(kind.name())
             .or_default()
             .record(cycles);
-        self.latency.record(cycles);
+        self.service.record(cycles);
+        self.queueing.record(queue_delay);
+        self.latency.record(cycles + queue_delay);
         self.pjrt_micros.record(pjrt_micros as u64);
     }
 
+    /// A request rejected at validation (counted, not simulated).
+    pub fn record_rejection(&mut self) {
+        self.rejected += 1;
+    }
+
     /// Aggregate throughput in jobs per simulated second (1 GHz clock).
+    /// Completed jobs with zero total cycles (all-host tiny jobs) are
+    /// infinitely fast by this measure, not idle — reporting 0.0 used to
+    /// make a busy all-host coordinator look stalled.
     pub fn jobs_per_sim_second(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
         let total_cycles = self.latency.sum();
         if total_cycles == 0 {
-            return 0.0;
+            return f64::INFINITY;
         }
         self.completed as f64 / (total_cycles as f64 / 1e9)
     }
 
-    /// Human-readable summary table.
+    /// Human-readable summary table. Quantiles come from one sort per
+    /// distribution ([`Dist::quantiles`]).
     pub fn summary(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "jobs: {} completed, {} verified, {} failed, {} host / {} accel\n",
+            "jobs: {} completed, {} verified, {} failed, {} host / {} accel{}\n",
             self.completed,
             self.verified,
             self.verification_failures,
             self.host_placements,
-            self.accel_placements
+            self.accel_placements,
+            if self.rejected > 0 {
+                format!(", {} rejected", self.rejected)
+            } else {
+                String::new()
+            }
         ));
-        out.push_str(&format!(
-            "latency (cycles): min {} mean {:.0} p50 {} p99 {} max {}\n",
-            self.latency.min(),
-            self.latency.mean(),
-            self.latency.quantile(0.5),
-            self.latency.quantile(0.99),
-            self.latency.max()
-        ));
+        let dist_line = |name: &str, d: &Dist| -> String {
+            let q = d.quantiles(&[0.5, 0.99]);
+            format!(
+                "{name} (cycles): min {} mean {:.0} p50 {} p99 {} max {}\n",
+                d.min(),
+                d.mean(),
+                q[0],
+                q[1],
+                d.max()
+            )
+        };
+        out.push_str(&dist_line("latency", &self.latency));
+        out.push_str(&dist_line("service", &self.service));
+        out.push_str(&dist_line("queueing", &self.queueing));
         out.push_str(&format!(
             "pjrt (us): mean {:.0} max {}\n",
             self.pjrt_micros.mean(),
@@ -172,9 +215,9 @@ mod tests {
     #[test]
     fn metrics_aggregate() {
         let mut m = Metrics::default();
-        m.record_completion(KernelKind::Axpy, 1000, 50, true, false);
-        m.record_completion(KernelKind::Axpy, 2000, 60, true, false);
-        m.record_completion(KernelKind::Bfs, 500, 70, false, true);
+        m.record_completion(KernelKind::Axpy, 1000, 0, 50, true, false);
+        m.record_completion(KernelKind::Axpy, 2000, 300, 60, true, false);
+        m.record_completion(KernelKind::Bfs, 500, 0, 70, false, true);
         assert_eq!(m.completed, 3);
         assert_eq!(m.verified, 2);
         assert_eq!(m.verification_failures, 1);
@@ -184,5 +227,61 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("3 completed"));
         assert!(s.contains("axpy"));
+    }
+
+    #[test]
+    fn latency_decomposes_into_service_plus_queueing() {
+        let mut m = Metrics::default();
+        m.record_completion(KernelKind::Axpy, 1000, 250, 0, true, false);
+        m.record_completion(KernelKind::Axpy, 2000, 0, 0, true, false);
+        assert_eq!(m.service.sum(), 3000);
+        assert_eq!(m.queueing.sum(), 250);
+        assert_eq!(m.latency.sum(), 3250);
+        let s = m.summary();
+        assert!(s.contains("service"), "{s}");
+        assert!(s.contains("queueing"), "{s}");
+    }
+
+    #[test]
+    fn zero_cycle_throughput_is_infinite_not_zero() {
+        // Regression: all-host tiny jobs complete in 0 recorded cycles;
+        // the coordinator used to report 0.0 jobs/sim-s, as if stalled.
+        let mut m = Metrics::default();
+        assert_eq!(m.jobs_per_sim_second(), 0.0, "no jobs yet: truly idle");
+        m.record_completion(KernelKind::Axpy, 0, 0, 10, true, true);
+        m.record_completion(KernelKind::Axpy, 0, 0, 10, true, true);
+        assert_eq!(m.completed, 2);
+        assert!(m.jobs_per_sim_second().is_infinite());
+        m.record_completion(KernelKind::Axpy, 1000, 0, 10, true, false);
+        assert!((m.jobs_per_sim_second() - 3.0e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_match_single_quantile_calls() {
+        let mut d = Dist::default();
+        for v in [5u64, 1, 9, 3, 7] {
+            d.record(v);
+        }
+        let qs = d.quantiles(&[0.0, 0.5, 0.99, 1.0]);
+        assert_eq!(
+            qs,
+            vec![
+                d.quantile(0.0),
+                d.quantile(0.5),
+                d.quantile(0.99),
+                d.quantile(1.0)
+            ]
+        );
+        assert_eq!(Dist::default().quantiles(&[0.5, 0.9]), vec![0, 0]);
+    }
+
+    #[test]
+    fn rejections_are_counted_and_reported() {
+        let mut m = Metrics::default();
+        m.record_rejection();
+        m.record_rejection();
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.completed, 0);
+        assert!(m.summary().contains("2 rejected"));
     }
 }

@@ -1,15 +1,21 @@
 //! The L3 coordinator: host-centric job dispatch over the simulated SoC
 //! (timing) and the PJRT runtime (numerics), with a model-driven offload
-//! planner (§5.6) and JCU-tracked completions (§4.3).
+//! planner (§5.6), JCU-tracked completions (§4.3), and overlapped
+//! dispatch: up to `inflight` jobs share the fabric on a deterministic
+//! virtual timeline ([`occupancy`]), so offload overheads can be
+//! measured under contention, with every latency decomposed into
+//! isolated service time plus queueing delay.
 
 pub mod decision;
 pub mod job;
 pub mod metrics;
+pub mod occupancy;
 pub mod queue;
 pub mod service;
 
 pub use decision::{Plan, Planner, HOST_CYCLES_PER_FLOP};
 pub use job::{JobRequest, JobResult, Placement};
 pub use metrics::{Dist, Metrics};
+pub use occupancy::{Admission, OccupancyModel, OccupancyParams};
 pub use queue::JobQueue;
 pub use service::{Coordinator, CoordinatorConfig, Submitter, JCU_SLOTS};

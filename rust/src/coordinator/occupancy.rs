@@ -1,0 +1,417 @@
+//! The shared-fabric occupancy model behind overlapped dispatch.
+//!
+//! The DES simulates one offload in isolation; the JCU (§4.3) exists so
+//! CVA6 can keep *several* offloads outstanding. This model composes the
+//! two: jobs are admitted in submission order into a virtual timeline
+//! where up to `inflight` jobs are outstanding, each occupying a JCU
+//! slot and `n_clusters` of the fabric's clusters for its isolated DES
+//! runtime. What a job cannot get immediately it waits for, and that
+//! wait — for free clusters plus for a free JCU slot — is its *queueing
+//! delay*, reported separately from the isolated service time so
+//! contention is observable (`latency = service + queueing`).
+//!
+//! Completion bookkeeping runs through the real [`Jcu`]: slots are
+//! programmed at dispatch (lowest free slot, never clobbering a busy
+//! one), every cluster's arrival is written at completion, and
+//! simultaneous completions are delivered through the deferred-interrupt
+//! chain ([`Jcu::host_clear`]) in completion order.
+//!
+//! The model is single-threaded and purely deterministic: a job's whole
+//! schedule (arrival, start, completion) is fixed at admission by the
+//! admission sequence alone, so identical submission orders always
+//! produce identical schedules regardless of wall-clock timing. With
+//! `inflight = 1` every job arrives exactly when its predecessor
+//! completes — the serial coordinator — and every queueing delay is 0.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::interrupt::{ArrivalOutcome, Jcu, JobId};
+use crate::sim::Time;
+
+/// Parameters of the occupancy model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OccupancyParams {
+    /// Total clusters in the fabric (`cfg.soc.n_clusters()`).
+    pub capacity: usize,
+    /// JCU slots — the hardware bound on concurrently dispatched jobs.
+    pub jcu_slots: usize,
+    /// Closed-loop window: how many jobs the clients keep outstanding.
+    /// May exceed `jcu_slots`, in which case admitted jobs queue for a
+    /// slot and that wait shows up as queueing delay.
+    pub inflight: usize,
+    /// Minimum virtual cycles between consecutive arrivals (0 = jobs
+    /// arrive back-to-back as the window allows).
+    pub arrival_gap: Time,
+}
+
+/// The virtual-time schedule of one admitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    /// Admission sequence number (submission order).
+    pub seq: u64,
+    /// When the job entered the dispatch window.
+    pub arrival: Time,
+    /// When its JCU slot was programmed and its clusters granted.
+    pub start: Time,
+    /// `start + service` — when the last cluster writes its arrival.
+    pub completion: Time,
+    /// The JCU slot the job was tracked by.
+    pub slot: JobId,
+    /// `start - arrival`: wait for clusters + wait for a JCU slot.
+    pub queue_delay: Time,
+}
+
+/// One job currently holding a slot and clusters.
+#[derive(Debug, Clone, Copy)]
+struct Flight {
+    seq: u64,
+    slot: JobId,
+    n_clusters: usize,
+    completion: Time,
+}
+
+/// Deterministic virtual-time occupancy model over a [`Jcu`].
+#[derive(Debug)]
+pub struct OccupancyModel {
+    params: OccupancyParams,
+    jcu: Jcu,
+    flights: Vec<Flight>,
+    busy_clusters: usize,
+    /// The `inflight` *largest* completion times admitted so far, as a
+    /// min-heap. A closed-loop client pool of size `inflight` frees its
+    /// next slot at the smallest of these (with k jobs admitted, the
+    /// (k − inflight + 1)-th completion — the moment outstanding drops
+    /// below `inflight`), which is all the window floor ever reads; the
+    /// engine stays O(inflight) in memory over an unbounded job stream.
+    window: BinaryHeap<Reverse<Time>>,
+    /// Jobs admitted so far (the next admission's `seq`).
+    admitted: u64,
+    last_arrival: Time,
+    last_start: Time,
+    /// Interrupts delivered to the host so far (fired + deferred chain).
+    delivered: u64,
+}
+
+impl OccupancyModel {
+    pub fn new(params: OccupancyParams) -> Self {
+        assert!(params.capacity >= 1, "fabric needs at least one cluster");
+        assert!(params.jcu_slots >= 1, "JCU needs at least one slot");
+        assert!(params.inflight >= 1, "inflight window must be >= 1");
+        Self {
+            params,
+            jcu: Jcu::new(params.jcu_slots),
+            flights: Vec::new(),
+            busy_clusters: 0,
+            window: BinaryHeap::with_capacity(params.inflight + 1),
+            admitted: 0,
+            last_arrival: 0,
+            last_start: 0,
+            delivered: 0,
+        }
+    }
+
+    pub fn params(&self) -> OccupancyParams {
+        self.params
+    }
+
+    /// Jobs currently holding a slot (not yet retired).
+    pub fn in_flight(&self) -> usize {
+        self.flights.len()
+    }
+
+    /// Interrupts delivered to the host so far.
+    pub fn interrupts_delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    /// Admit the next job in submission order: `n_clusters` of the
+    /// fabric for `service` cycles (its isolated DES runtime). Returns
+    /// the job's complete virtual-time schedule.
+    pub fn admit(&mut self, n_clusters: usize, service: Time) -> Admission {
+        assert!(n_clusters >= 1, "a job occupies at least one cluster");
+        assert!(
+            n_clusters <= self.params.capacity,
+            "job wants {n_clusters} clusters, fabric has {}",
+            self.params.capacity
+        );
+        let seq = self.admitted;
+        self.admitted += 1;
+
+        // Arrival: the later of the arrival-gap spacing and the window
+        // floor — the earliest time a client slot frees, i.e. the
+        // smallest of the `inflight` largest completions so far (a
+        // closed-loop client pool submits the next job the moment *any*
+        // of its outstanding jobs completes, not a fixed round-robin
+        // member's).
+        let mut arrival = if seq == 0 {
+            0
+        } else {
+            self.last_arrival + self.params.arrival_gap
+        };
+        if self.window.len() == self.params.inflight {
+            arrival = arrival.max(self.window.peek().expect("window is non-empty").0);
+        }
+        self.last_arrival = arrival;
+
+        // Start: FIFO (no overtaking), then wait until both a JCU slot
+        // and enough clusters are free, retiring completions as virtual
+        // time advances.
+        let mut t = arrival.max(self.last_start);
+        loop {
+            self.retire_up_to(t);
+            if self.flights.len() < self.params.jcu_slots
+                && self.busy_clusters + n_clusters <= self.params.capacity
+            {
+                break;
+            }
+            t = self
+                .flights
+                .iter()
+                .map(|f| f.completion)
+                .min()
+                .expect("blocked admission implies jobs in flight");
+        }
+        let start = t;
+        self.last_start = start;
+
+        // Dispatch: lowest free JCU slot (held jobs wait above instead
+        // of clobbering a busy slot — `Jcu::program` enforces it).
+        let slot = (0..self.params.jcu_slots as u32)
+            .find(|&s| !self.jcu.slot_busy(s))
+            .expect("a free slot was just checked for");
+        self.jcu.program(slot, n_clusters as u32);
+        self.busy_clusters += n_clusters;
+        let completion = start + service;
+        self.flights.push(Flight {
+            seq,
+            slot,
+            n_clusters,
+            completion,
+        });
+        self.window.push(Reverse(completion));
+        if self.window.len() > self.params.inflight {
+            // Drop the smallest: only the `inflight` largest completions
+            // can ever be a future window floor.
+            self.window.pop();
+        }
+
+        Admission {
+            seq,
+            arrival,
+            start,
+            completion,
+            slot,
+            queue_delay: start - arrival,
+        }
+    }
+
+    /// Retire every in-flight job whose completion is at or before `t`:
+    /// write its clusters' arrivals to the JCU, then play the host's
+    /// interrupt handling — the first completion fires immediately, the
+    /// rest ride the deferred chain and are delivered by `host_clear` in
+    /// completion order.
+    fn retire_up_to(&mut self, t: Time) {
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < self.flights.len() {
+            if self.flights[i].completion <= t {
+                due.push(self.flights.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        if due.is_empty() {
+            return;
+        }
+        due.sort_unstable_by_key(|f| (f.completion, f.seq));
+
+        debug_assert!(!self.jcu.irq_pending(), "previous batch fully drained");
+        let mut expected: VecDeque<JobId> = VecDeque::new();
+        for (k, f) in due.iter().enumerate() {
+            for _ in 0..f.n_clusters - 1 {
+                let outcome = self.jcu.arrive(f.slot);
+                debug_assert!(matches!(outcome, ArrivalOutcome::Pending { .. }));
+            }
+            match self.jcu.arrive(f.slot) {
+                ArrivalOutcome::CompleteFired { cause } if k == 0 => {
+                    debug_assert_eq!(cause, f.slot);
+                    expected.push_back(cause);
+                }
+                ArrivalOutcome::CompleteDeferred { cause } if k > 0 => {
+                    debug_assert_eq!(cause, f.slot);
+                    expected.push_back(cause);
+                }
+                other => panic!("unexpected JCU outcome {other:?}"),
+            }
+            self.busy_clusters -= f.n_clusters;
+        }
+        // Host side: handle the fired interrupt, then clear; each clear
+        // hands over the next deferred cause in completion order.
+        self.delivered += 1;
+        let mut handled = expected.pop_front();
+        while let Some(cause) = self.jcu.host_clear() {
+            handled = expected.pop_front();
+            debug_assert_eq!(handled, Some(cause), "delivery in completion order");
+            self.delivered += 1;
+        }
+        debug_assert!(handled.is_some() || due.is_empty());
+        debug_assert!(expected.is_empty());
+        debug_assert!(!self.jcu.irq_pending());
+    }
+
+    /// Retire everything still in flight (shutdown). Afterwards the
+    /// model is idle: no flights, no busy clusters, no pending IRQ.
+    pub fn finish(&mut self) {
+        self.retire_up_to(Time::MAX);
+        debug_assert_eq!(self.flights.len(), 0);
+        debug_assert_eq!(self.busy_clusters, 0);
+        debug_assert!(!self.jcu.irq_pending());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(inflight: usize, gap: Time) -> OccupancyModel {
+        OccupancyModel::new(OccupancyParams {
+            capacity: 32,
+            jcu_slots: 4,
+            inflight,
+            arrival_gap: gap,
+        })
+    }
+
+    #[test]
+    fn serial_window_has_zero_queue_delay() {
+        let mut m = model(1, 0);
+        let mut prev_completion = 0;
+        for _ in 0..5 {
+            let a = m.admit(16, 1000);
+            assert_eq!(a.queue_delay, 0);
+            assert_eq!(a.arrival, prev_completion);
+            assert_eq!(a.start, a.arrival);
+            assert_eq!(a.completion, a.start + 1000);
+            prev_completion = a.completion;
+        }
+        m.finish();
+        assert_eq!(m.interrupts_delivered(), 5);
+    }
+
+    #[test]
+    fn two_wide_jobs_fit_four_contend() {
+        // 16-cluster jobs on a 32-cluster fabric: two overlap freely, a
+        // window of four queues on clusters.
+        let mut m = model(2, 0);
+        let a0 = m.admit(16, 1000);
+        let a1 = m.admit(16, 1000);
+        assert_eq!((a0.start, a1.start), (0, 0));
+        assert_eq!(a1.queue_delay, 0);
+
+        let mut m = model(4, 0);
+        let admissions: Vec<Admission> = (0..4).map(|_| m.admit(16, 1000)).collect();
+        assert_eq!(admissions[0].start, 0);
+        assert_eq!(admissions[1].start, 0);
+        // Jobs 2 and 3 arrive at 0 (window open) but wait for clusters.
+        assert_eq!(admissions[2].arrival, 0);
+        assert_eq!(admissions[2].start, 1000);
+        assert_eq!(admissions[2].queue_delay, 1000);
+        assert_eq!(admissions[3].queue_delay, 1000);
+        m.finish();
+    }
+
+    #[test]
+    fn window_beyond_jcu_slots_queues_on_slots() {
+        // Narrow jobs (clusters never the bottleneck) with a window of 8
+        // over 4 slots: the fifth job waits for a slot.
+        let mut m = model(8, 0);
+        let admissions: Vec<Admission> = (0..8).map(|_| m.admit(1, 100)).collect();
+        for a in &admissions[..4] {
+            assert_eq!(a.queue_delay, 0);
+        }
+        assert_eq!(admissions[4].arrival, 0);
+        assert_eq!(admissions[4].start, 100, "waited for a JCU slot");
+        assert_eq!(admissions[4].queue_delay, 100);
+        m.finish();
+        assert_eq!(m.interrupts_delivered(), 8);
+    }
+
+    #[test]
+    fn window_slot_frees_at_the_earliest_completion() {
+        // Closed-loop pool of 2 with one long and one short job
+        // outstanding: the third job enters when the *short* one
+        // completes — the pool's next free slot — not when a fixed
+        // round-robin predecessor would have.
+        let mut m = model(2, 0);
+        let a = m.admit(1, 1_000_000);
+        let b = m.admit(1, 10);
+        assert_eq!((a.start, b.start), (0, 0));
+        let c = m.admit(1, 10);
+        assert_eq!(c.arrival, 10, "slot freed by the short job");
+        assert_eq!(c.start, 10);
+        assert_eq!(c.queue_delay, 0);
+        let d = m.admit(1, 10);
+        assert_eq!(d.arrival, 20, "then by the next-earliest completion");
+        m.finish();
+    }
+
+    #[test]
+    fn arrival_gap_spaces_the_open_window() {
+        let mut m = model(4, 250);
+        let a0 = m.admit(4, 1000);
+        let a1 = m.admit(4, 1000);
+        let a2 = m.admit(4, 1000);
+        assert_eq!((a0.arrival, a1.arrival, a2.arrival), (0, 250, 500));
+        assert_eq!(a2.queue_delay, 0, "no contention at this width");
+        m.finish();
+    }
+
+    #[test]
+    fn fifo_no_overtaking() {
+        // A narrow job submitted behind a blocked wide job must not
+        // start before it.
+        let mut m = model(4, 0);
+        m.admit(20, 1000); // holds 20 clusters until t=1000
+        let wide = m.admit(20, 1000); // blocked on clusters until t=1000
+        let narrow = m.admit(1, 10); // plenty of room, but FIFO
+        assert_eq!(wide.start, 1000);
+        assert!(narrow.start >= wide.start, "no overtaking");
+        m.finish();
+    }
+
+    #[test]
+    fn simultaneous_completions_deliver_in_completion_order() {
+        let mut m = model(4, 0);
+        let a = m.admit(8, 500);
+        let b = m.admit(8, 500);
+        let c = m.admit(8, 300);
+        assert_eq!((a.slot, b.slot, c.slot), (0, 1, 2));
+        // c completes first (t=300), then a and b tie at t=500; the tie
+        // breaks by admission order through the deferred chain.
+        m.finish();
+        assert_eq!(m.interrupts_delivered(), 3);
+    }
+
+    #[test]
+    fn slots_are_reused_after_retirement() {
+        let mut m = model(1, 0);
+        for _ in 0..10 {
+            let a = m.admit(32, 100);
+            assert_eq!(a.slot, 0, "serial dispatch always reuses slot 0");
+        }
+        m.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one cluster")]
+    fn zero_cluster_admission_is_rejected() {
+        model(1, 0).admit(0, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "fabric has")]
+    fn over_capacity_admission_is_rejected() {
+        model(1, 0).admit(33, 100);
+    }
+}

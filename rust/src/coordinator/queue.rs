@@ -1,9 +1,10 @@
 //! Bounded job queue with blocking backpressure.
 //!
-//! The host-centric execution model serializes offloads on CVA6, but the
-//! JCU's multiple slots allow outstanding jobs (§4.3); the coordinator
-//! models that with a small bounded queue between submitters and the
-//! dispatch loop. Closing the queue drains it gracefully.
+//! A single CVA6 core issues every offload, but the JCU's multiple slots
+//! allow outstanding jobs (§4.3); the coordinator feeds its overlapped
+//! dispatch loop (up to `inflight` jobs on the shared virtual timeline)
+//! from this small bounded queue between submitters and the dispatch
+//! thread. Closing the queue drains it gracefully.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

@@ -3,14 +3,25 @@
 //!
 //! For every job it (1) plans the offload with the analytical model
 //! (§5.6), (2) executes the offload on the cycle-level DES to obtain its
-//! cost in cycles, (3) runs the job's numerics through the PJRT runtime
-//! and verifies them against the native reference, and (4) tracks
-//! completion through the JCU slots (§4.3) exactly as CVA6 would.
+//! isolated cost in cycles, (3) runs the job's numerics through the PJRT
+//! runtime and verifies them against the native reference, and (4)
+//! schedules it on the shared virtual timeline of the
+//! [`super::occupancy::OccupancyModel`], where up to
+//! [`CoordinatorConfig::inflight`] jobs are outstanding and contend for
+//! the JCU's slots (§4.3) and the fabric's clusters. Each result
+//! therefore decomposes as isolated service time plus a nonnegative
+//! queueing delay; with `inflight = 1` the schedule degenerates to the
+//! serial coordinator (zero queueing, bit-identical cycles).
 //!
 //! Submission happens through a bounded queue (backpressure); a dispatch
 //! thread drains it. The PJRT client is not Sync-shareable across
 //! threads, so the dispatch thread owns the runtime — matching the
 //! hardware, where a single CVA6 core issues every offload.
+//!
+//! Bad requests (a cluster count outside the SoC geometry) surface as a
+//! per-job error [`JobResult`] instead of panicking the dispatch thread:
+//! one malformed job must not poison the coordinator for every job
+//! behind it.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -19,7 +30,6 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::config::Config;
-use crate::interrupt::{ArrivalOutcome, Jcu};
 use crate::offload::RoutineKind;
 use crate::runtime::{jobs, PjrtRuntime};
 use crate::sweep::OffloadRequest;
@@ -27,6 +37,7 @@ use crate::sweep::OffloadRequest;
 use super::decision::Planner;
 use super::job::{JobRequest, JobResult, Placement};
 use super::metrics::Metrics;
+use super::occupancy::{OccupancyModel, OccupancyParams};
 use super::queue::JobQueue;
 
 /// Number of JCU slots (outstanding jobs) the coordinator programs.
@@ -39,6 +50,13 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// Skip PJRT numerics (timing-only runs, e.g. benches).
     pub timing_only: bool,
+    /// Jobs kept outstanding on the virtual timeline (closed-loop
+    /// window). 1 = serial dispatch, bit-identical to the pre-overlap
+    /// coordinator; larger windows overlap offload phases and queue on
+    /// JCU slots and clusters.
+    pub inflight: usize,
+    /// Minimum virtual cycles between consecutive job arrivals.
+    pub arrival_gap: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -47,6 +65,8 @@ impl Default for CoordinatorConfig {
             cfg: Config::default(),
             queue_depth: 16,
             timing_only: false,
+            inflight: 1,
+            arrival_gap: 0,
         }
     }
 }
@@ -58,12 +78,24 @@ pub struct Coordinator {
     worker: Option<JoinHandle<Metrics>>,
 }
 
+/// Reject obviously malformed requests before they enter the queue: a
+/// forced cluster count of zero can never dispatch (the JCU's offload
+/// register is >= 1), and used to underflow inside the dispatch thread,
+/// poisoning the whole coordinator.
+fn validate_submit(req: &JobRequest) -> Result<()> {
+    if req.n_clusters == Some(0) {
+        anyhow::bail!("job {}: n_clusters must be >= 1 (got 0)", req.id);
+    }
+    Ok(())
+}
+
 impl Coordinator {
     /// Start the dispatch loop. `artifacts` is required unless
     /// `timing_only` is set. The PJRT client is `!Send`, so the runtime
     /// is constructed *inside* the dispatch thread; construction errors
     /// are reported back through a readiness channel.
     pub fn start(ccfg: CoordinatorConfig, artifacts: Option<&Path>) -> Result<Self> {
+        anyhow::ensure!(ccfg.inflight >= 1, "inflight window must be >= 1");
         let queue: JobQueue<JobRequest> = JobQueue::new(ccfg.queue_depth);
         let (tx, rx) = mpsc::channel::<JobResult>();
         let artifacts: Option<PathBuf> = match (ccfg.timing_only, artifacts) {
@@ -110,8 +142,11 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job (blocks on backpressure).
+    /// Submit a job (blocks on backpressure). Rejects `n_clusters == 0`
+    /// up front; geometry violations are checked in the dispatch loop
+    /// (they need the config) and surface as an error [`JobResult`].
     pub fn submit(&self, req: JobRequest) -> Result<()> {
+        validate_submit(&req)?;
         self.queue
             .push(req)
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
@@ -142,6 +177,7 @@ pub struct Submitter {
 impl Submitter {
     /// Submit a job (blocks on backpressure).
     pub fn submit(&self, req: JobRequest) -> Result<()> {
+        validate_submit(&req)?;
         self.queue
             .push(req)
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
@@ -156,7 +192,13 @@ fn dispatch_loop(
 ) -> Metrics {
     let cfg = ccfg.cfg;
     let planner = Planner::new(&cfg);
-    let mut jcu = Jcu::new(JCU_SLOTS);
+    let capacity = cfg.soc.n_clusters();
+    let mut engine = OccupancyModel::new(OccupancyParams {
+        capacity,
+        jcu_slots: JCU_SLOTS,
+        inflight: ccfg.inflight,
+        arrival_gap: ccfg.arrival_gap,
+    });
     let mut metrics = Metrics::default();
     // The DES is deterministic, so identical (spec, clusters, routine)
     // configurations always cost the same cycles: memoize totals (perf,
@@ -172,6 +214,30 @@ fn dispatch_loop(
     while let Some(req) = queue.pop() {
         let routine = req.routine.unwrap_or(RoutineKind::Multicast);
 
+        // 0) Validate: a bad job yields an error result, not a dead loop.
+        if let Some(n) = req.n_clusters {
+            if n == 0 || n > capacity {
+                metrics.record_rejection();
+                let _ = tx.send(JobResult {
+                    id: req.id,
+                    spec: req.spec,
+                    placement: Placement::Host,
+                    routine,
+                    cycles: 0,
+                    queue_delay: 0,
+                    start: 0,
+                    completion: 0,
+                    estimated_cycles: 0,
+                    verified: false,
+                    pjrt_micros: 0,
+                    error: Some(format!(
+                        "n_clusters must be in 1..={capacity}, got {n}"
+                    )),
+                });
+                continue;
+            }
+        }
+
         // 1) Plan: model-optimal cluster count / host fallback.
         let (placement, estimate) = match req.n_clusters {
             Some(n) => (
@@ -184,36 +250,25 @@ fn dispatch_loop(
             }
         };
 
-        // 2) Timing: DES of the offload (or the host estimate).
-        let cycles = match placement {
+        // 2) Timing: DES of the offload (or the host estimate), then the
+        // shared-timeline schedule. Jobs the planner keeps on the host
+        // run on CVA6 itself and do not contend for slots or clusters.
+        let (cycles, queue_delay, start, completion) = match placement {
             Placement::Accelerator { n_clusters } => {
-                // Program the JCU slot like CVA6 would (§4.3).
-                let job_id = (req.id % JCU_SLOTS as u64) as u32;
-                jcu.program(job_id, n_clusters as u32);
                 let sim_req = OffloadRequest::new(req.spec, n_clusters, routine);
-                let total = *sim_totals.entry(sim_req).or_insert_with(|| {
+                let service = *sim_totals.entry(sim_req).or_insert_with(|| {
                     match crate::sweep::cache::peek(&sim_cache_key, sim_req) {
                         Some(trace) => trace.total,
                         None => sim_req.run(&cfg).total,
                     }
                 });
-                // All clusters arrive; the last fires the interrupt.
-                for _ in 0..n_clusters - 1 {
-                    assert!(matches!(
-                        jcu.arrive(job_id),
-                        ArrivalOutcome::Pending { .. }
-                    ));
-                }
-                match jcu.arrive(job_id) {
-                    ArrivalOutcome::CompleteFired { cause } => {
-                        debug_assert_eq!(cause, job_id);
-                        jcu.host_clear();
-                    }
-                    other => panic!("unexpected JCU outcome {other:?}"),
-                }
-                total
+                // Program a free JCU slot, occupy clusters, retire
+                // earlier completions through the deferred-interrupt
+                // chain (§4.3) — all on the virtual timeline.
+                let adm = engine.admit(n_clusters, service);
+                (service, adm.queue_delay, adm.start, adm.completion)
             }
-            Placement::Host => planner.host_estimate(&req.spec),
+            Placement::Host => (planner.host_estimate(&req.spec), 0, 0, 0),
         };
 
         // 3) Numerics: PJRT execution + verification.
@@ -229,6 +284,7 @@ fn dispatch_loop(
         metrics.record_completion(
             req.spec.kind(),
             cycles,
+            queue_delay,
             pjrt_micros,
             verified,
             placement == Placement::Host,
@@ -239,11 +295,18 @@ fn dispatch_loop(
             placement,
             routine,
             cycles,
+            queue_delay,
+            start,
+            completion,
             estimated_cycles: estimate,
             verified,
             pjrt_micros,
+            error: None,
         });
     }
+    // Retire everything still in flight: every admitted job's interrupt
+    // is delivered before the loop reports its final metrics.
+    engine.finish();
     metrics
 }
 
@@ -252,16 +315,17 @@ mod tests {
     use super::*;
     use crate::kernels::JobSpec;
 
+    fn timing_config(inflight: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            timing_only: true,
+            inflight,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn timing_only_coordinator_round_trip() {
-        let c = Coordinator::start(
-            CoordinatorConfig {
-                timing_only: true,
-                ..Default::default()
-            },
-            None,
-        )
-        .unwrap();
+        let c = Coordinator::start(timing_config(1), None).unwrap();
         for i in 0..8u64 {
             c.submit(JobRequest::new(i, JobSpec::Axpy { n: 1024 })).unwrap();
         }
@@ -270,24 +334,19 @@ mod tests {
             let r = c.recv().expect("result");
             assert!(r.cycles > 0);
             assert!(r.verified);
+            assert_eq!(r.queue_delay, 0, "serial dispatch never queues");
             got += 1;
         }
         let m = c.shutdown();
         assert_eq!(got, 8);
         assert_eq!(m.completed, 8);
         assert_eq!(m.verification_failures, 0);
+        assert_eq!(m.queueing.sum(), 0);
     }
 
     #[test]
     fn forced_clusters_and_routine_respected() {
-        let c = Coordinator::start(
-            CoordinatorConfig {
-                timing_only: true,
-                ..Default::default()
-            },
-            None,
-        )
-        .unwrap();
+        let c = Coordinator::start(timing_config(1), None).unwrap();
         c.submit(
             JobRequest::new(0, JobSpec::Axpy { n: 1024 })
                 .with_clusters(4)
@@ -302,18 +361,83 @@ mod tests {
 
     #[test]
     fn tiny_jobs_placed_on_host() {
-        let c = Coordinator::start(
-            CoordinatorConfig {
-                timing_only: true,
-                ..Default::default()
-            },
-            None,
-        )
-        .unwrap();
+        let c = Coordinator::start(timing_config(1), None).unwrap();
         c.submit(JobRequest::new(0, JobSpec::Axpy { n: 16 })).unwrap();
         let r = c.recv().unwrap();
         assert_eq!(r.placement, Placement::Host);
         let m = c.shutdown();
         assert_eq!(m.host_placements, 1);
+    }
+
+    #[test]
+    fn zero_cluster_submit_is_rejected_up_front() {
+        // Regression: `with_clusters(0)` used to underflow inside the
+        // dispatch thread, poisoning the coordinator and hanging
+        // shutdown.
+        let c = Coordinator::start(timing_config(1), None).unwrap();
+        let err = c
+            .submit(JobRequest::new(0, JobSpec::Axpy { n: 1024 }).with_clusters(0))
+            .unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        let err = c
+            .submitter()
+            .submit(JobRequest::new(1, JobSpec::Axpy { n: 1024 }).with_clusters(0))
+            .unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        // The coordinator is still alive and serves good jobs.
+        c.submit(JobRequest::new(2, JobSpec::Axpy { n: 1024 })).unwrap();
+        let r = c.recv().unwrap();
+        assert_eq!(r.id, 2);
+        assert!(r.error.is_none());
+        let m = c.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn geometry_violations_yield_error_results_not_a_dead_loop() {
+        let c = Coordinator::start(timing_config(1), None).unwrap();
+        let capacity = Config::default().soc.n_clusters();
+        c.submit(JobRequest::new(0, JobSpec::Axpy { n: 1024 }).with_clusters(capacity + 1))
+            .unwrap();
+        c.submit(JobRequest::new(1, JobSpec::Axpy { n: 1024 }).with_clusters(8))
+            .unwrap();
+        let bad = c.recv().unwrap();
+        assert_eq!(bad.id, 0);
+        assert!(bad.is_rejected());
+        assert!(bad.error.as_deref().unwrap().contains("n_clusters"));
+        assert_eq!(bad.cycles, 0);
+        let good = c.recv().unwrap();
+        assert_eq!(good.id, 1);
+        assert!(good.error.is_none());
+        assert!(good.cycles > 0);
+        let m = c.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.rejected, 1);
+    }
+
+    #[test]
+    fn overlapped_dispatch_decomposes_latency() {
+        // Four 16-cluster jobs on the 32-cluster fabric: two overlap,
+        // two queue. Service times stay the isolated DES cycles.
+        let c = Coordinator::start(timing_config(4), None).unwrap();
+        let spec = JobSpec::Axpy { n: 1024 };
+        for i in 0..4u64 {
+            c.submit(JobRequest::new(i, spec).with_clusters(16)).unwrap();
+        }
+        let mut results: Vec<JobResult> = (0..4).map(|_| c.recv().unwrap()).collect();
+        results.sort_by_key(|r| r.id);
+        let isolated = results[0].cycles;
+        for r in &results {
+            assert_eq!(r.cycles, isolated, "service time is contention-free");
+            assert_eq!(r.latency(), r.cycles + r.queue_delay);
+            assert_eq!(r.completion, r.start + r.cycles);
+        }
+        assert_eq!(results[0].queue_delay, 0);
+        assert_eq!(results[1].queue_delay, 0);
+        assert!(results[2].queue_delay > 0, "third 16-wide job must wait");
+        assert!(results[3].queue_delay > 0);
+        let m = c.shutdown();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.latency.sum(), m.service.sum() + m.queueing.sum());
     }
 }

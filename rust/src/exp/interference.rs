@@ -1,0 +1,141 @@
+//! Interference sweeps: latency vs. jobs-in-flight per kernel.
+//!
+//! The paper measures offload overheads one job at a time; the JCU
+//! (§4.3) exists so several can be outstanding. This experiment puts
+//! every kernel of the benchmark set under contention: [`JOBS_PER_POINT`]
+//! identical jobs at [`CLUSTERS_PER_JOB`] clusters each, with the
+//! jobs-in-flight window swept over [`INFLIGHT_SWEEP`]. Two 16-wide jobs
+//! fit the 32-cluster fabric, so windows of 4 and 8 queue on clusters
+//! with progressively deeper backlogs (narrow jobs would instead queue
+//! on the JCU's 4 slots — both waits land in the same queueing-delay
+//! component). Reported latency decomposes as
+//! isolated DES cycles + mean queueing delay; the `inflight = 1` row is
+//! the serial coordinator and always shows zero delay.
+
+use crate::config::Config;
+use crate::sweep::{InterferenceSample, Sweep};
+
+use super::benchmark_set;
+use super::table::{f, Table};
+use crate::offload::RoutineKind;
+
+/// Jobs-in-flight sweep: serial, cluster-fitting, then two contended
+/// window depths.
+pub const INFLIGHT_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Jobs replayed per (kernel, inflight) point.
+pub const JOBS_PER_POINT: usize = 16;
+
+/// Clusters per job: half the fabric, so contention starts at a window
+/// of 3.
+pub const CLUSTERS_PER_JOB: usize = 16;
+
+/// The sweep this experiment needs — also the grid a campaign spec must
+/// cover to derive it from merged output.
+pub fn sweep() -> Sweep {
+    Sweep::over_kernels(benchmark_set())
+        .clusters([CLUSTERS_PER_JOB])
+        .routines([RoutineKind::Multicast])
+        .inflight(INFLIGHT_SWEEP)
+}
+
+pub fn run(cfg: &Config) -> Vec<InterferenceSample> {
+    sweep().run_interference(cfg, JOBS_PER_POINT, 0)
+}
+
+pub fn render(samples: &[InterferenceSample]) -> Table {
+    // Jobs-per-point and arrival gap are uniform across one expansion;
+    // title from the data, not from this module's defaults (the same
+    // renderer serves `occamy interfere` and campaign --render).
+    let title = match samples.first() {
+        None => "Interference — latency vs jobs in flight (cycles)".to_string(),
+        Some(s) => format!(
+            "Interference — latency vs jobs in flight ({} jobs{}, cycles)",
+            s.point.ireq.n_jobs,
+            if s.point.ireq.arrival_gap > 0 {
+                format!(", arrival gap {}", s.point.ireq.arrival_gap)
+            } else {
+                String::new()
+            }
+        ),
+    };
+    let mut t = Table::new(
+        &title,
+        &[
+            "kernel", "clusters", "inflight", "service", "queue_mean", "queue_max", "latency",
+            "makespan",
+        ],
+    );
+    for s in samples {
+        let o = &s.outcome;
+        t.row(vec![
+            s.point.label.to_string(),
+            s.point.ireq.req.n_clusters.to_string(),
+            s.point.ireq.inflight.to_string(),
+            o.isolated.to_string(),
+            f(o.mean_queue_delay(), 0),
+            o.max_queue_delay().to_string(),
+            f(o.mean_latency(), 0),
+            o.makespan.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_rows_show_zero_delay_and_contended_rows_do_not() {
+        let samples = run(&Config::default());
+        assert_eq!(samples.len(), benchmark_set().len() * INFLIGHT_SWEEP.len());
+        for s in &samples {
+            let o = &s.outcome;
+            assert_eq!(o.n_jobs(), JOBS_PER_POINT);
+            // Decomposition: latency = isolated + nonnegative delay.
+            assert!(o.mean_latency() >= o.isolated as f64);
+            match s.point.ireq.inflight {
+                1 => assert_eq!(o.total_queue_delay(), 0, "{}", s.point.label),
+                4 | 8 => assert!(o.total_queue_delay() > 0, "{}", s.point.label),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn queueing_delay_is_monotone_in_the_window() {
+        let samples = run(&Config::default());
+        for (label, _) in benchmark_set() {
+            let delays: Vec<u64> = INFLIGHT_SWEEP
+                .iter()
+                .map(|&w| {
+                    samples
+                        .iter()
+                        .find(|s| s.point.label == label && s.point.ireq.inflight == w)
+                        .unwrap()
+                        .outcome
+                        .total_queue_delay()
+                })
+                .collect();
+            for pair in delays.windows(2) {
+                assert!(pair[1] >= pair[0], "{label}: {delays:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn renders_every_row_with_the_actual_parameters() {
+        let samples = run(&Config::default());
+        let table = render(&samples);
+        assert_eq!(table.rows.len(), samples.len());
+        assert!(table.to_csv().contains("axpy,16,1,"));
+        assert!(table.title.contains("16 jobs"), "{}", table.title);
+        // The title reflects the samples, not this module's defaults.
+        let small = sweep().run_interference(&Config::default(), 3, 7);
+        let t = render(&small);
+        assert!(t.title.contains("3 jobs"), "{}", t.title);
+        assert!(t.title.contains("arrival gap 7"), "{}", t.title);
+        assert!(render(&[]).title.contains("Interference"));
+    }
+}

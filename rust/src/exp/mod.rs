@@ -1,10 +1,12 @@
 //! Experiment harness: one module per figure of the paper's evaluation
-//! (§5, Figs. 7-12). Each `run(cfg)` declares its grid as a
-//! [`crate::sweep::Sweep`] campaign (parallel execution, shared trace
-//! cache) and renders the results as a table; the benches under
-//! `rust/benches/` wrap these with wall-clock measurement. Aggregations
-//! use `sweep::mean_std`, which guards the empty case instead of
-//! emitting NaN. See DESIGN.md's experiment index.
+//! (§5, Figs. 7-12), plus the [`interference`] experiment measuring
+//! offload latency under contention (latency vs. jobs in flight). Each
+//! `run(cfg)` declares its grid as a [`crate::sweep::Sweep`] campaign
+//! (parallel execution, shared trace cache) and renders the results as
+//! a table; the benches under `rust/benches/` wrap these with
+//! wall-clock measurement. Aggregations use `sweep::mean_std`, which
+//! guards the empty case instead of emitting NaN. See DESIGN.md's
+//! experiment index.
 
 pub mod ablation;
 pub mod fig10;
@@ -13,6 +15,7 @@ pub mod fig12;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod interference;
 pub mod table;
 
 pub use table::Table;

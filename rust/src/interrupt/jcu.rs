@@ -11,6 +11,8 @@
 //! overlapping, §4.3).
 
 
+use std::collections::VecDeque;
+
 /// Job identifier used to address a JCU slot.
 pub type JobId = u32;
 
@@ -37,7 +39,10 @@ pub enum ArrivalOutcome {
 pub struct Jcu {
     slots: Vec<Slot>,
     /// Completed-but-undelivered job causes, in completion order.
-    deferred: Vec<JobId>,
+    /// A deque: causes pop from the front on every `host_clear`, and a
+    /// long chain of deferred completions must not turn each delivery
+    /// into an O(n) shift.
+    deferred: VecDeque<JobId>,
     /// Whether a software interrupt to the host is currently pending.
     irq_pending: bool,
     fired: u64,
@@ -48,7 +53,7 @@ impl Jcu {
         assert!(n_slots >= 1);
         Self {
             slots: vec![Slot::default(); n_slots],
-            deferred: Vec::new(),
+            deferred: VecDeque::new(),
             irq_pending: false,
             fired: 0,
         }
@@ -64,8 +69,13 @@ impl Jcu {
         assert!(n_clusters >= 1, "offload register must be >= 1");
         let idx = job as usize % self.slots.len();
         let s = &mut self.slots[idx];
+        // Guard on the offload register, not the arrivals counter: a slot
+        // programmed for a job whose clusters have not arrived yet has
+        // `arrivals == 0` but is still in flight, and reprogramming it
+        // would silently clobber the outstanding job — exactly the state
+        // overlapped dispatch creates between program and first arrival.
         assert_eq!(
-            s.arrivals, 0,
+            s.offload, 0,
             "JCU slot reprogrammed while a job is in flight"
         );
         s.offload = n_clusters;
@@ -87,7 +97,7 @@ impl Jcu {
         s.arrivals = 0;
         s.offload = 0;
         if self.irq_pending {
-            self.deferred.push(job);
+            self.deferred.push_back(job);
             ArrivalOutcome::CompleteDeferred { cause: job }
         } else {
             self.irq_pending = true;
@@ -101,13 +111,21 @@ impl Jcu {
     /// cleared (§4.3) and its cause is returned.
     pub fn host_clear(&mut self) -> Option<JobId> {
         assert!(self.irq_pending, "host cleared a non-pending interrupt");
-        if self.deferred.is_empty() {
-            self.irq_pending = false;
-            None
-        } else {
-            self.fired += 1;
-            Some(self.deferred.remove(0))
+        match self.deferred.pop_front() {
+            None => {
+                self.irq_pending = false;
+                None
+            }
+            Some(cause) => {
+                self.fired += 1;
+                Some(cause)
+            }
         }
+    }
+
+    /// Whether a slot currently has a programmed (uncompleted) offload.
+    pub fn slot_busy(&self, job: JobId) -> bool {
+        self.slots[job as usize % self.slots.len()].offload > 0
     }
 
     pub fn irq_pending(&self) -> bool {
@@ -198,5 +216,56 @@ mod tests {
         j.program(0, 2);
         j.arrive(0);
         j.program(0, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "in flight")]
+    fn reprogram_before_first_arrival_panics() {
+        // Regression: the guard used to check `arrivals == 0`, so a slot
+        // programmed for a job whose clusters had not arrived yet was
+        // silently clobbered — the exact state overlapped dispatch
+        // creates between program and first arrival.
+        let mut j = Jcu::new(1);
+        j.program(0, 2);
+        j.program(0, 3);
+    }
+
+    #[test]
+    fn slot_busy_tracks_program_and_completion() {
+        let mut j = Jcu::new(2);
+        assert!(!j.slot_busy(0));
+        j.program(0, 2);
+        assert!(j.slot_busy(0));
+        assert!(!j.slot_busy(1));
+        j.arrive(0);
+        assert!(j.slot_busy(0), "busy until the last arrival");
+        j.arrive(0);
+        assert!(!j.slot_busy(0), "auto-reset frees the slot");
+    }
+
+    #[test]
+    fn deferred_chain_fires_n_interrupts_in_completion_order() {
+        // Regression: `interrupts_fired` was only ever covered at
+        // deferral depth 1. A chain of N deferred completions must
+        // deliver N interrupts, in completion order.
+        const N: u32 = 8;
+        let mut j = Jcu::new(N as usize);
+        for slot in 0..N {
+            j.program(slot, 1);
+        }
+        // All N complete while the first interrupt stays pending.
+        assert_eq!(j.arrive(0), ArrivalOutcome::CompleteFired { cause: 0 });
+        for slot in 1..N {
+            assert_eq!(j.arrive(slot), ArrivalOutcome::CompleteDeferred { cause: slot });
+        }
+        // Host clears one at a time: each clear delivers the next cause
+        // in completion order.
+        let mut delivered = Vec::new();
+        while let Some(cause) = j.host_clear() {
+            delivered.push(cause);
+        }
+        assert_eq!(delivered, (1..N).collect::<Vec<_>>());
+        assert!(!j.irq_pending());
+        assert_eq!(j.interrupts_fired(), u64::from(N));
     }
 }

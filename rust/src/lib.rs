@@ -31,15 +31,27 @@
 //! and a merge/resume step whose output is bit-identical to a
 //! single-process run (`occamy campaign <run|merge|status|validate>`).
 //!
+//! Contention is a first-class axis: the coordinator dispatches up to
+//! `inflight` jobs concurrently on a deterministic virtual timeline
+//! ([`coordinator::OccupancyModel`] — free JCU-slot allocation, shared
+//! cluster occupancy, deferred-interrupt completion ordering), sweeps
+//! cross their grids with jobs-in-flight counts
+//! ([`sweep::Sweep::inflight`], [`sweep::InterferenceRequest`]), and
+//! campaigns carry an `[interference]` table whose latency-vs-inflight
+//! curves are derived at merge (`occamy interfere`,
+//! `occamy experiment interference`). Every latency decomposes as
+//! isolated DES cycles + nonnegative queueing delay; `inflight = 1`
+//! reproduces the serial coordinator bit-identically.
+//!
 //! ## Module map
 //!
 //! | layer | modules |
 //! |---|---|
 //! | SoC model | [`config`], [`cluster`], [`host`], [`mem`], [`noc`], [`dma`], [`interrupt`] |
 //! | simulation | [`sim`] (DES engine, traces), [`offload`] (routines §4), [`kernels`] (workloads §5.1) |
-//! | experiments | [`sweep`] (in-process grids), [`campaign`] (sharded + persistent), [`exp`] (Figs. 7-12), [`bench`] |
+//! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`exp`] (Figs. 7-12, interference), [`bench`] |
 //! | modeling | [`model`] (analytical runtime model §5.6) |
-//! | serving | [`coordinator`] (job scheduling), [`runtime`] (PJRT numerics, JSON) |
+//! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`runtime`] (PJRT numerics, JSON) |
 //! | support | [`rng`] |
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment

@@ -1,10 +1,11 @@
 //! `occamy` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|all> [--csv] [--config F]
+//!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F]
 //!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
-//!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S]
+//!   interfere --kernel K --size N [--clusters C] [--inflight LIST] [--jobs N] [--gap G]
+//!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
 //!   validate-artifacts [--artifacts DIR]
 //!   model --kernel K --size N [--config F]
 //!   config-dump
@@ -112,14 +113,15 @@ fn emit(table: Table, csv: bool) {
     }
 }
 
-const USAGE: &str = "usage: occamy <experiment|campaign|sim|serve|validate-artifacts|model|config-dump> [options]
-  experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|all> [--csv] [--config F]
+const USAGE: &str = "usage: occamy <experiment|campaign|sim|interfere|serve|validate-artifacts|model|config-dump> [options]
+  experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|interference|all> [--csv] [--config F]
   campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store]
-  campaign merge    --spec F [--shards N] [--out DIR] [--verify] [--render FIG] [--csv]
+  campaign merge    --spec F [--shards N] [--out DIR] [--verify] [--render FIG|interference] [--csv]
   campaign status   --spec F [--shards N] [--out DIR]
   campaign validate --spec F
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
-  serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C]
+  interfere --kernel K --size N [--clusters C] [--routine R] [--inflight 1,2,4,8] [--jobs 16] [--gap 0] [--csv]
+  serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
   validate-artifacts [--artifacts DIR]
   model --kernel K --size N [--config F]
   config-dump";
@@ -135,6 +137,7 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         "experiment" => cmd_experiment(&a),
         "campaign" => cmd_campaign(&a),
         "sim" => cmd_sim(&a),
+        "interfere" => cmd_interfere(&a),
         "serve" => cmd_serve(&a),
         "validate-artifacts" => cmd_validate(&a),
         "model" => cmd_model(&a),
@@ -161,6 +164,10 @@ fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
         emit(exp::ablation::render(&a), csv);
         emit(exp::ablation::render_port(&a), csv);
     }
+    if which == "interference" || which == "all" {
+        ran = true;
+        emit(exp::interference::render(&exp::interference::run(&cfg)), csv);
+    }
     for fig in ["fig7", "fig8", "fig9", "fig10", "fig11", "fig12"] {
         if which != "all" && which != fig {
             continue;
@@ -178,7 +185,7 @@ fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
         emit(table, csv);
     }
     if !ran {
-        anyhow::bail!("unknown experiment {which:?} (fig7..fig12, ablation, or all)");
+        anyhow::bail!("unknown experiment {which:?} (fig7..fig12, ablation, interference, or all)");
     }
     Ok(())
 }
@@ -276,6 +283,15 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                     .join(campaign::stream::merged_file_name(&spec.name))
                     .display()
             );
+            if spec.interference.is_some() {
+                println!(
+                    "derived {} interference point(s) -> {}",
+                    spec.interference_points().len(),
+                    out_dir
+                        .join(campaign::stream::interference_file_name(&spec.name))
+                        .display()
+                );
+            }
             if a.has("verify") {
                 let reference = campaign::run_single(&spec);
                 anyhow::ensure!(
@@ -285,7 +301,20 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                 println!("verified: bit-identical to single-process execution");
             }
             if let Some(which) = a.flag("render") {
-                emit(render_fig(which, &spec.config, &results)?, a.has("csv"));
+                if which == "interference" {
+                    anyhow::ensure!(
+                        spec.interference.is_some(),
+                        "the spec has no [interference] section to render"
+                    );
+                    let samples: Vec<sweep::InterferenceSample> =
+                        campaign::interference_records(&spec, &results)?
+                            .into_iter()
+                            .map(|(point, outcome)| sweep::InterferenceSample { point, outcome })
+                            .collect();
+                    emit(exp::interference::render(&samples), a.has("csv"));
+                } else {
+                    emit(render_fig(which, &spec.config, &results)?, a.has("csv"));
+                }
             }
         }
         other => anyhow::bail!("unknown campaign action {other:?} (run, merge, status or validate)"),
@@ -342,6 +371,56 @@ fn cmd_sim(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One kernel under contention: replay `--jobs` copies with the
+/// jobs-in-flight window swept over `--inflight` (comma-separated), and
+/// print the latency decomposition per window.
+fn cmd_interfere(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a)?;
+    let kernel = a.flag("kernel").unwrap_or("axpy");
+    let size = a.u64_flag("size", 1024)?;
+    let spec = job_spec(kernel, size)?;
+    let n = a.u64_flag("clusters", 16)? as usize;
+    let capacity = cfg.soc.n_clusters();
+    anyhow::ensure!(
+        (1..=capacity).contains(&n),
+        "--clusters must be in 1..={capacity} (the SoC geometry), got {n}"
+    );
+    let routine = match a.flag("routine") {
+        None => RoutineKind::Multicast,
+        Some(r) => {
+            RoutineKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown routine {r:?}"))?
+        }
+    };
+    let n_jobs = a.u64_flag("jobs", 16)? as usize;
+    anyhow::ensure!(n_jobs >= 1, "--jobs must be >= 1");
+    let gap = a.u64_flag("gap", 0)?;
+    let windows: Vec<usize> = match a.flag("inflight") {
+        None => vec![1, 2, 4, 8],
+        Some(list) => list
+            .split(',')
+            .map(|w| {
+                let w: usize = w
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad inflight {w:?}: {e}"))?;
+                anyhow::ensure!(w >= 1, "inflight windows must be >= 1");
+                Ok(w)
+            })
+            .collect::<anyhow::Result<_>>()?,
+    };
+    anyhow::ensure!(!windows.is_empty(), "--inflight must name at least one window");
+    let grid = sweep::Sweep::new()
+        .kernel(spec.kind().name(), spec)
+        .clusters([n])
+        .routines([routine])
+        .inflight(windows);
+    emit(
+        exp::interference::render(&grid.run_interference(&cfg, n_jobs, gap)),
+        a.has("csv"),
+    );
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     let cfg = load_config(a)?;
     let n_jobs = a.u64_flag("jobs", 64)?;
@@ -349,11 +428,15 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     let timing_only = a.has("timing-only");
     let dir = artifacts_dir(a);
     let forced_clusters = a.flag("clusters").map(|v| v.parse::<usize>()).transpose()?;
+    let inflight = a.u64_flag("inflight", 1)? as usize;
+    let arrival_gap = a.u64_flag("gap", 0)?;
 
     let coord = Coordinator::start(
         CoordinatorConfig {
             cfg,
             timing_only,
+            inflight,
+            arrival_gap,
             ..Default::default()
         },
         if timing_only { None } else { Some(dir.as_path()) },
@@ -382,11 +465,15 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         coord.submit(req)?;
     }
     let mut failures = 0u64;
+    let mut rejected = 0u64;
     for _ in 0..n_jobs {
         let r = coord
             .recv()
             .ok_or_else(|| anyhow::anyhow!("coordinator died"))?;
-        if !r.verified {
+        if let Some(err) = &r.error {
+            rejected += 1;
+            eprintln!("job {} ({:?}) REJECTED: {err}", r.id, r.spec);
+        } else if !r.verified {
             failures += 1;
             eprintln!("job {} ({:?}) FAILED verification", r.id, r.spec);
         }
@@ -400,7 +487,10 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         n_jobs as f64 / wall.as_secs_f64(),
         metrics.jobs_per_sim_second()
     );
-    anyhow::ensure!(failures == 0, "{failures} verification failures");
+    anyhow::ensure!(
+        failures == 0 && rejected == 0,
+        "{failures} verification failure(s), {rejected} rejected job(s)"
+    );
     Ok(())
 }
 

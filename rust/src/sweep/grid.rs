@@ -5,7 +5,9 @@ use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
 
 use super::exec;
-use super::request::OffloadRequest;
+use super::request::{
+    InterferencePoint, InterferenceRequest, InterferenceSample, OffloadRequest,
+};
 use super::results::{SweepPoint, SweepResults};
 
 /// The routines behind every figure's base/ideal/improved triple, in
@@ -28,6 +30,7 @@ pub struct Sweep {
     kernels: Vec<(&'static str, JobSpec)>,
     clusters: Vec<usize>,
     routines: Vec<RoutineKind>,
+    inflight: Vec<usize>,
     extra: Vec<SweepPoint>,
     serial: bool,
     uncached: bool,
@@ -70,6 +73,17 @@ impl Sweep {
     /// default).
     pub fn triples(self) -> Self {
         self.routines(TRIPLE_ROUTINES)
+    }
+
+    /// Add jobs-in-flight counts to the contention axis. The axis only
+    /// affects the interference expansion
+    /// ([`Sweep::expand_interference`] / [`Sweep::run_interference`]):
+    /// isolated traces are contention-independent, so [`Sweep::expand`]
+    /// and [`Sweep::run`] ignore it. Default when never called: `[1]`
+    /// (the serial coordinator).
+    pub fn inflight(mut self, counts: impl IntoIterator<Item = usize>) -> Self {
+        self.inflight.extend(counts);
+        self
     }
 
     /// Append one custom point outside the cartesian grid.
@@ -135,6 +149,58 @@ impl Sweep {
         let records = exec::execute(cfg, &points, !self.serial, !self.uncached);
         SweepResults::new(records)
     }
+
+    /// Expand the interference grid: every trace point crossed with the
+    /// `inflight` axis (innermost, deduplicated; `[1]` when the axis was
+    /// never set), each replaying `n_jobs` jobs spaced `arrival_gap`
+    /// cycles apart.
+    pub fn expand_interference(
+        &self,
+        n_jobs: usize,
+        arrival_gap: crate::sim::Time,
+    ) -> Vec<InterferencePoint> {
+        let counts: Vec<usize> = if self.inflight.is_empty() {
+            vec![1]
+        } else {
+            dedup_preserving_order(&self.inflight)
+        };
+        let points = self.expand();
+        let mut out = Vec::with_capacity(points.len() * counts.len());
+        for p in &points {
+            for &inflight in &counts {
+                out.push(InterferencePoint {
+                    label: p.label,
+                    ireq: InterferenceRequest::new(p.req, inflight, n_jobs, arrival_gap),
+                });
+            }
+        }
+        out
+    }
+
+    /// Execute the interference grid: the isolated traces run through
+    /// the ordinary (parallel, cached) sweep executor first, then each
+    /// (point, inflight) gets its deterministic occupancy schedule on
+    /// top of its isolated total. Results are input-ordered.
+    pub fn run_interference(
+        &self,
+        cfg: &Config,
+        n_jobs: usize,
+        arrival_gap: crate::sim::Time,
+    ) -> Vec<InterferenceSample> {
+        let traces = self.run(cfg);
+        self.expand_interference(n_jobs, arrival_gap)
+            .into_iter()
+            .map(|point| {
+                let isolated = traces
+                    .isolated_total(point.label, point.ireq.req)
+                    .expect("the interference grid is the trace grid crossed with inflight");
+                InterferenceSample {
+                    point,
+                    outcome: point.ireq.run_on(cfg, isolated),
+                }
+            })
+            .collect()
+    }
 }
 
 fn dedup_preserving_order<T: Copy + PartialEq>(xs: &[T]) -> Vec<T> {
@@ -198,6 +264,49 @@ mod tests {
         let routines: Vec<RoutineKind> = points.iter().map(|p| p.req.routine).collect();
         assert_eq!(routines, TRIPLE_ROUTINES.to_vec());
         assert!(points.iter().all(|p| p.req.n_clusters == 8));
+    }
+
+    #[test]
+    fn inflight_axis_only_affects_the_interference_expansion() {
+        let sweep = Sweep::new()
+            .kernel("a", JobSpec::Axpy { n: 64 })
+            .clusters([8])
+            .routines([RoutineKind::Multicast])
+            .inflight([1, 4, 4, 2]);
+        // Trace expansion unchanged by the contention axis.
+        assert_eq!(sweep.expand().len(), 1);
+        let ipoints = sweep.expand_interference(16, 0);
+        let counts: Vec<usize> = ipoints.iter().map(|p| p.ireq.inflight).collect();
+        assert_eq!(counts, vec![1, 4, 2], "deduplicated, first occurrence wins");
+        assert!(ipoints
+            .iter()
+            .all(|p| p.ireq.n_jobs == 16 && p.ireq.arrival_gap == 0));
+        // Default axis: the serial coordinator.
+        let serial = Sweep::new()
+            .kernel("a", JobSpec::Axpy { n: 64 })
+            .clusters([8])
+            .routines([RoutineKind::Multicast])
+            .expand_interference(4, 0);
+        assert_eq!(serial.len(), 1);
+        assert_eq!(serial[0].ireq.inflight, 1);
+    }
+
+    #[test]
+    fn run_interference_is_ordered_and_decomposes() {
+        let cfg = Config::default();
+        let samples = Sweep::new()
+            .kernel("axpy", JobSpec::Axpy { n: 512 })
+            .clusters([16])
+            .routines([RoutineKind::Multicast])
+            .inflight([1, 4])
+            .run_interference(&cfg, 8, 0);
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].point.ireq.inflight, 1);
+        assert_eq!(samples[0].outcome.total_queue_delay(), 0);
+        assert_eq!(samples[1].point.ireq.inflight, 4);
+        assert!(samples[1].outcome.total_queue_delay() > 0);
+        // Same isolated service time on both rows.
+        assert_eq!(samples[0].outcome.isolated, samples[1].outcome.isolated);
     }
 
     #[test]

@@ -17,6 +17,12 @@
 //! * A process-wide trace [`cache`] keyed by (config key, request), so
 //!   base/ideal traces shared between figures are computed once per
 //!   process.
+//! * Contention as a first-class axis — [`Sweep::inflight`] crosses the
+//!   grid with jobs-in-flight counts, and [`InterferenceRequest`]
+//!   replays a request through the coordinator's shared-fabric
+//!   occupancy model, decomposing latency into the isolated service
+//!   time plus a nonnegative queueing delay (`inflight = 1` is the
+//!   serial coordinator: zero delay, bit-identical cycles).
 //!
 //! ## Quickstart
 //!
@@ -58,7 +64,10 @@ mod request;
 mod results;
 
 pub use grid::{Sweep, TRIPLE_ROUTINES};
-pub use request::OffloadRequest;
+pub use request::{
+    InterferenceOutcome, InterferencePoint, InterferenceRequest, InterferenceSample,
+    OffloadRequest,
+};
 pub use results::{mean_std, SweepPoint, SweepRecord, SweepResults, TriplePoint};
 
 use std::sync::Arc;

@@ -1,9 +1,13 @@
-//! Typed offload requests — the unit of work a sweep executes.
+//! Typed offload requests — the unit of work a sweep executes — and
+//! their interference-level counterparts, which replay one request
+//! `n_jobs` times through the coordinator's occupancy model so offload
+//! overheads are measured under contention, not just in isolation.
 
 use crate::config::Config;
+use crate::coordinator::{OccupancyModel, OccupancyParams, JCU_SLOTS};
 use crate::kernels::JobSpec;
 use crate::offload::{Executor, RoutineKind};
-use crate::sim::Trace;
+use crate::sim::{Time, Trace};
 
 /// One fully-specified DES run: which job, on how many clusters, with
 /// which offload routine. Doubles as the trace-cache key (it is
@@ -43,6 +47,125 @@ impl OffloadRequest {
     }
 }
 
+/// One interference point: `n_jobs` copies of an [`OffloadRequest`]
+/// pushed through the shared fabric with `inflight` of them kept
+/// outstanding. The isolated DES trace is computed once (it is
+/// contention-independent); contention is modeled by the coordinator's
+/// occupancy engine on top of it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct InterferenceRequest {
+    pub req: OffloadRequest,
+    /// Jobs kept outstanding (closed-loop window). 1 = the serial
+    /// coordinator: zero queueing delay by construction.
+    pub inflight: usize,
+    /// Jobs replayed through the window.
+    pub n_jobs: usize,
+    /// Minimum virtual cycles between consecutive arrivals.
+    pub arrival_gap: Time,
+}
+
+impl InterferenceRequest {
+    pub fn new(req: OffloadRequest, inflight: usize, n_jobs: usize, arrival_gap: Time) -> Self {
+        Self {
+            req,
+            inflight,
+            n_jobs,
+            arrival_gap,
+        }
+    }
+
+    /// The occupancy-model parameters this request schedules under.
+    pub fn params(&self, cfg: &Config) -> OccupancyParams {
+        OccupancyParams {
+            capacity: cfg.soc.n_clusters(),
+            jcu_slots: JCU_SLOTS,
+            inflight: self.inflight,
+            arrival_gap: self.arrival_gap,
+        }
+    }
+
+    /// Schedule the request given an already-known isolated runtime
+    /// (e.g. a trace restored from merged campaign output) — no
+    /// simulation runs, only the deterministic occupancy model.
+    pub fn run_on(&self, cfg: &Config, isolated: Time) -> InterferenceOutcome {
+        let mut model = OccupancyModel::new(self.params(cfg));
+        let mut queue_delays = Vec::with_capacity(self.n_jobs);
+        let mut makespan = 0;
+        for _ in 0..self.n_jobs {
+            let adm = model.admit(self.req.n_clusters, isolated);
+            queue_delays.push(adm.queue_delay);
+            makespan = makespan.max(adm.completion);
+        }
+        model.finish();
+        InterferenceOutcome {
+            isolated,
+            queue_delays,
+            makespan,
+        }
+    }
+
+    /// Simulate the isolated request through the trace cache, then
+    /// schedule it under contention.
+    pub fn run(&self, cfg: &Config) -> InterferenceOutcome {
+        let isolated = super::cache::run_cached(cfg, self.req).total;
+        self.run_on(cfg, isolated)
+    }
+}
+
+/// The deterministic schedule of one interference point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InterferenceOutcome {
+    /// Isolated DES runtime of one job (the service time).
+    pub isolated: Time,
+    /// Per-job queueing delay, in admission order. All zero when
+    /// `inflight = 1`.
+    pub queue_delays: Vec<Time>,
+    /// Completion time of the last job on the virtual timeline.
+    pub makespan: Time,
+}
+
+impl InterferenceOutcome {
+    pub fn n_jobs(&self) -> usize {
+        self.queue_delays.len()
+    }
+
+    pub fn total_queue_delay(&self) -> Time {
+        self.queue_delays.iter().sum()
+    }
+
+    pub fn max_queue_delay(&self) -> Time {
+        self.queue_delays.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_queue_delay(&self) -> f64 {
+        if self.queue_delays.is_empty() {
+            0.0
+        } else {
+            self.total_queue_delay() as f64 / self.queue_delays.len() as f64
+        }
+    }
+
+    /// Mean end-to-end latency: isolated service time + mean queueing
+    /// delay (the decomposition the acceptance criteria pin down).
+    pub fn mean_latency(&self) -> f64 {
+        self.isolated as f64 + self.mean_queue_delay()
+    }
+}
+
+/// One labelled interference grid point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct InterferencePoint {
+    pub label: &'static str,
+    pub ireq: InterferenceRequest,
+}
+
+/// One executed interference point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InterferenceSample {
+    pub point: InterferencePoint,
+    pub outcome: InterferenceOutcome,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +188,33 @@ mod tests {
         let b = Executor::new(&cfg, &req.spec, 4, RoutineKind::Multicast).run();
         assert_eq!(a.total, b.total);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn serial_interference_matches_isolated_runs() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 512 }, 8, RoutineKind::Multicast);
+        let out = InterferenceRequest::new(req, 1, 6, 0).run(&cfg);
+        assert_eq!(out.isolated, super::super::run_one(&cfg, req).total);
+        assert_eq!(out.n_jobs(), 6);
+        assert!(out.queue_delays.iter().all(|&d| d == 0));
+        assert_eq!(out.makespan, out.isolated * 6, "back-to-back serial jobs");
+        assert_eq!(out.mean_latency(), out.isolated as f64);
+    }
+
+    #[test]
+    fn contended_interference_adds_nonnegative_delay() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 512 }, 16, RoutineKind::Multicast);
+        let ireq = InterferenceRequest::new(req, 4, 8, 0);
+        let out = ireq.run(&cfg);
+        // Two 16-wide jobs fit the 32-cluster fabric; the rest queue.
+        assert_eq!(out.queue_delays[0], 0);
+        assert_eq!(out.queue_delays[1], 0);
+        assert!(out.queue_delays[2] > 0);
+        assert!(out.total_queue_delay() > 0);
+        assert!(out.mean_latency() > out.isolated as f64);
+        // run_on with the same isolated runtime is the same schedule.
+        assert_eq!(ireq.run_on(&cfg, out.isolated), out);
     }
 }

@@ -96,6 +96,18 @@ impl SweepResults {
         self.get(label, n_clusters, routine).map(|r| r.trace.as_ref())
     }
 
+    /// Isolated total of a labelled request (exact request match) — the
+    /// service time an interference schedule runs on. One matcher for
+    /// the in-process path (`Sweep::run_interference`) and the campaign
+    /// merge path (`campaign::interference_records`), so the two can
+    /// never silently diverge.
+    pub fn isolated_total(&self, label: &str, req: OffloadRequest) -> Option<Time> {
+        self.records
+            .iter()
+            .find(|r| r.label() == label && r.req() == req)
+            .map(|r| r.total())
+    }
+
     /// Group records by an arbitrary key, preserving first-seen order
     /// (deterministic, since records are input-ordered).
     pub fn group_by<K, F>(&self, key: F) -> Vec<(K, Vec<&SweepRecord>)>

@@ -29,6 +29,7 @@ fn timing_coordinator() -> Coordinator {
             cfg: Config::default(),
             queue_depth: 8,
             timing_only: true,
+            ..Default::default()
         },
         None,
     )
@@ -135,6 +136,7 @@ fn full_stack_with_pjrt_verification() {
             cfg: Config::default(),
             queue_depth: 8,
             timing_only: false,
+            ..Default::default()
         },
         Some(&dir),
     )

@@ -1,0 +1,241 @@
+//! Integration tests of overlapped dispatch and interference sweeps:
+//! the `inflight = 1` serial reference must be bit-identical to the
+//! isolated DES (what the pre-overlap serial coordinator reported),
+//! contention must surface as a nonnegative, monotone queueing delay on
+//! top of it, and `[interference]` campaigns must shard/merge like any
+//! other.
+
+use std::path::PathBuf;
+
+use occamy_offload::campaign::{self, CampaignSpec, Shard};
+use occamy_offload::config::Config;
+use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, JobResult};
+use occamy_offload::kernels::JobSpec;
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sweep::{self, InterferenceRequest, OffloadRequest, Sweep};
+
+fn coordinator(inflight: usize) -> Coordinator {
+    Coordinator::start(
+        CoordinatorConfig {
+            cfg: Config::default(),
+            timing_only: true,
+            inflight,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap()
+}
+
+/// The mixed workload used across these tests: forced cluster counts so
+/// the isolated reference is directly computable.
+fn workload() -> Vec<JobRequest> {
+    let mix = [
+        (JobSpec::Axpy { n: 1024 }, 16),
+        (JobSpec::Atax { m: 64, n: 64 }, 8),
+        (JobSpec::MonteCarlo { samples: 8192 }, 16),
+        (JobSpec::Matmul { m: 16, n: 16, k: 16 }, 4),
+    ];
+    (0..24u64)
+        .map(|i| {
+            let (spec, n) = mix[i as usize % mix.len()];
+            JobRequest::new(i, spec).with_clusters(n)
+        })
+        .collect()
+}
+
+fn run_workload(inflight: usize) -> Vec<JobResult> {
+    let c = coordinator(inflight);
+    let jobs = workload();
+    let n = jobs.len();
+    for req in jobs {
+        c.submit(req).unwrap();
+    }
+    let mut results: Vec<JobResult> = (0..n).map(|_| c.recv().unwrap()).collect();
+    c.shutdown();
+    results.sort_by_key(|r| r.id);
+    results
+}
+
+#[test]
+fn inflight_one_is_bit_identical_to_the_serial_coordinator() {
+    // The serial coordinator reported, per job, exactly the isolated DES
+    // cycles with no queueing. inflight = 1 must reproduce that
+    // bit-for-bit against the DES reference.
+    let cfg = Config::default();
+    let results = run_workload(1);
+    assert_eq!(results.len(), workload().len());
+    for (r, req) in results.iter().zip(workload()) {
+        assert_eq!(r.id, req.id);
+        let isolated = sweep::run_one(
+            &cfg,
+            OffloadRequest::new(req.spec, req.n_clusters.unwrap(), RoutineKind::Multicast),
+        )
+        .total;
+        assert_eq!(r.cycles, isolated, "job {}: serial cycles must be the DES's", r.id);
+        assert_eq!(r.queue_delay, 0, "job {}: serial dispatch never queues", r.id);
+        assert_eq!(r.latency(), isolated);
+        assert!(r.error.is_none());
+    }
+    // And the whole schedule is deterministic: a second run agrees.
+    let again = run_workload(1);
+    for (a, b) in results.iter().zip(&again) {
+        assert_eq!((a.cycles, a.queue_delay, a.start, a.completion), (b.cycles, b.queue_delay, b.start, b.completion));
+    }
+}
+
+#[test]
+fn overlapped_runs_decompose_and_stay_deterministic() {
+    let serial = run_workload(1);
+    let overlapped = run_workload(4);
+    for (s, o) in serial.iter().zip(&overlapped) {
+        // Service time is contention-independent (the isolated DES run).
+        assert_eq!(s.cycles, o.cycles, "job {}", s.id);
+        // Latency = isolated cycles + nonnegative queueing delay.
+        assert_eq!(o.latency(), o.cycles + o.queue_delay);
+        assert_eq!(o.completion, o.start + o.cycles);
+    }
+    // Contention exists: this mix cannot fully overlap on 32 clusters.
+    assert!(
+        overlapped.iter().map(|r| r.queue_delay).sum::<u64>() > 0,
+        "a window of 4 over 16+8+16+4 cluster jobs must queue"
+    );
+    // Determinism under overlap, submission timing notwithstanding.
+    let again = run_workload(4);
+    for (a, b) in overlapped.iter().zip(&again) {
+        assert_eq!(
+            (a.queue_delay, a.start, a.completion),
+            (b.queue_delay, b.start, b.completion),
+            "job {}",
+            a.id
+        );
+    }
+}
+
+#[test]
+fn queueing_delay_is_monotone_in_the_window() {
+    // Uniform 16-wide jobs: 1 and 2 fit the fabric (zero delay), wider
+    // windows queue ever deeper.
+    let cfg = Config::default();
+    let req = OffloadRequest::new(JobSpec::Axpy { n: 1024 }, 16, RoutineKind::Multicast);
+    let totals: Vec<u64> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&w| {
+            InterferenceRequest::new(req, w, 16, 0)
+                .run(&cfg)
+                .total_queue_delay()
+        })
+        .collect();
+    assert_eq!(totals[0], 0, "inflight = 1 is the serial reference");
+    assert_eq!(totals[1], 0, "two 16-wide jobs fit 32 clusters");
+    assert!(totals[2] > 0, "a window of 4 contends: {totals:?}");
+    for pair in totals.windows(2) {
+        assert!(pair[1] >= pair[0], "monotone in the window: {totals:?}");
+    }
+}
+
+#[test]
+fn coordinator_metrics_split_service_and_queueing() {
+    let c = coordinator(4);
+    for i in 0..8u64 {
+        c.submit(JobRequest::new(i, JobSpec::Axpy { n: 1024 }).with_clusters(16))
+            .unwrap();
+    }
+    for _ in 0..8 {
+        c.recv().unwrap();
+    }
+    let m = c.shutdown();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.service.count(), 8);
+    assert_eq!(m.queueing.count(), 8);
+    assert!(m.queueing.sum() > 0, "16-wide jobs at window 4 must queue");
+    assert_eq!(m.latency.sum(), m.service.sum() + m.queueing.sum());
+    assert!(m.summary().contains("queueing"));
+}
+
+#[test]
+fn bad_jobs_do_not_take_down_good_jobs_under_overlap() {
+    let c = coordinator(4);
+    // Submit-time rejection for the zero-cluster underflow case...
+    assert!(c
+        .submit(JobRequest::new(0, JobSpec::Axpy { n: 1024 }).with_clusters(0))
+        .is_err());
+    // ...and an in-loop error result for a geometry violation,
+    // interleaved with good jobs.
+    c.submit(JobRequest::new(1, JobSpec::Axpy { n: 1024 }).with_clusters(16)).unwrap();
+    c.submit(JobRequest::new(2, JobSpec::Axpy { n: 1024 }).with_clusters(999)).unwrap();
+    c.submit(JobRequest::new(3, JobSpec::Axpy { n: 1024 }).with_clusters(16)).unwrap();
+    let mut results: Vec<JobResult> = (0..3).map(|_| c.recv().unwrap()).collect();
+    results.sort_by_key(|r| r.id);
+    assert!(results[0].error.is_none());
+    assert!(results[1].is_rejected());
+    assert!(results[2].error.is_none());
+    assert_eq!(results[0].cycles, results[2].cycles);
+    let m = c.shutdown();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.rejected, 1);
+}
+
+#[test]
+fn interference_campaign_runs_merges_and_verifies_end_to_end() {
+    // A two-shard [interference] campaign through run -> merge, checked
+    // against the in-process reference, with the serial row equal to
+    // the isolated trace and the contended rows queueing.
+    let spec = CampaignSpec::parse(
+        "[campaign]\nname = \"it-interference\"\n[grid]\n\
+         kernels = [\"axpy:1024\", \"atax:64x64\"]\nclusters = [16]\n\
+         routines = [\"multicast\"]\n[timing]\nhost_ipi_issue_gap = 47\n\
+         [interference]\njobs_in_flight = [1, 4]\njobs = 12\n",
+    )
+    .unwrap();
+    let out: PathBuf = std::env::temp_dir().join(format!(
+        "occamy-it-interference-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&out);
+    for i in 0..2 {
+        campaign::run_shard(&spec, Shard::new(i, 2).unwrap(), &out, None).unwrap();
+    }
+    let merged = campaign::merge(&spec, 2, &out).unwrap();
+    assert_eq!(merged, campaign::run_single(&spec));
+    let records = campaign::interference_records(&spec, &merged).unwrap();
+    assert_eq!(records.len(), 4, "2 kernels x 2 windows");
+    for (point, outcome) in &records {
+        let isolated = merged
+            .records()
+            .iter()
+            .find(|r| r.req() == point.ireq.req)
+            .unwrap()
+            .total();
+        assert_eq!(outcome.isolated, isolated);
+        match point.ireq.inflight {
+            1 => assert_eq!(outcome.total_queue_delay(), 0, "{}", point.label),
+            _ => assert!(outcome.mean_latency() >= isolated as f64),
+        }
+    }
+    // The file merge wrote round-trips to the same records.
+    let read = campaign::stream::read_interference(
+        &out.join(campaign::stream::interference_file_name(&spec.name)),
+        &campaign::store::fingerprint(&spec.config),
+    )
+    .unwrap();
+    assert_eq!(read, records);
+}
+
+#[test]
+fn explicit_interference_sweep_matches_the_request_api() {
+    // The grid path (Sweep::inflight + run_interference) and the direct
+    // InterferenceRequest path must agree exactly.
+    let cfg = Config::default();
+    let samples = Sweep::new()
+        .kernel("axpy", JobSpec::Axpy { n: 1024 })
+        .clusters([16])
+        .routines([RoutineKind::Multicast])
+        .inflight([1, 4])
+        .run_interference(&cfg, 12, 10);
+    for s in &samples {
+        assert_eq!(s.outcome, s.point.ireq.run(&cfg));
+        assert_eq!(s.point.ireq.n_jobs, 12);
+        assert_eq!(s.point.ireq.arrival_gap, 10);
+    }
+}
