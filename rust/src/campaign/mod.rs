@@ -33,7 +33,10 @@
 //!   deterministic.
 //!
 //! CLI: `occamy campaign <run|merge|status|validate>`; quickstart:
-//! `examples/campaign_demo.rs` + `examples/campaign.toml`.
+//! `examples/campaign_demo.rs` + `examples/campaign.toml`. The
+//! [`crate::fleet`] scheduler sits on top of this module: it launches
+//! `campaign run --shard i/N` workers, watches their heartbeat leases,
+//! and auto-merges when the last shard lands.
 
 mod codec;
 pub mod shard;
@@ -42,17 +45,19 @@ pub mod store;
 pub mod stream;
 
 pub use shard::Shard;
-pub use spec::{CampaignSpec, InterferenceSpec, SpecReport};
+pub use spec::{CampaignSpec, FleetSpec, InterferenceSpec, SpecReport};
 pub use store::{StoreStats, TraceStore};
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::sim::Trace;
 use crate::sweep::{
-    cache, InterferenceOutcome, InterferencePoint, SweepPoint, SweepRecord, SweepResults,
+    cache, InterferenceOutcome, InterferencePoint, OffloadRequest, SweepPoint, SweepRecord,
+    SweepResults,
 };
 
 /// Outcome of one [`run_shard`] invocation.
@@ -71,6 +76,15 @@ pub struct ShardReport {
     pub dropped: usize,
     /// The shard's output file.
     pub output: PathBuf,
+}
+
+impl ShardReport {
+    /// Whether every owned point is now in the output file. Only a
+    /// `max_points` cap (see [`run_shard_limited`]) can leave this
+    /// false — an uncapped run either finishes or errors.
+    pub fn is_complete(&self) -> bool {
+        self.resumed + self.executed >= self.owned
+    }
 }
 
 impl std::fmt::Display for ShardReport {
@@ -100,6 +114,30 @@ pub struct ShardStatus {
     pub owned: usize,
     pub done: usize,
     pub dropped: usize,
+    /// Done points whose stream line is labelled as freshly simulated.
+    pub sims: usize,
+    /// Done points labelled as store/cache hits. `sims + hits` can be
+    /// less than `done` for files written before source labels existed.
+    pub hits: usize,
+}
+
+impl ShardStatus {
+    /// One-line progress summary — the single renderer behind both
+    /// `occamy campaign status` and `occamy fleet status` (the fleet
+    /// view appends lease state to it).
+    pub fn summary(&self) -> String {
+        let mut line = format!("shard {}: {}/{} done", self.shard, self.done, self.owned);
+        if self.done > 0 {
+            line.push_str(&format!(
+                " ({} simulated, {} store/cache hit(s))",
+                self.sims, self.hits
+            ));
+        }
+        if self.dropped > 0 {
+            line.push_str(&format!(", {} corrupt line(s)", self.dropped));
+        }
+        line
+    }
 }
 
 /// Completion state of a whole campaign's shard set.
@@ -129,11 +167,7 @@ impl std::fmt::Display for CampaignStatus {
             if self.is_complete() { " — ready to merge" } else { "" }
         )?;
         for s in &self.shards {
-            write!(f, "  shard {}: {}/{} done", s.shard, s.done, s.owned)?;
-            if s.dropped > 0 {
-                write!(f, " ({} corrupt line(s))", s.dropped)?;
-            }
-            writeln!(f)?;
+            writeln!(f, "  {}", s.summary())?;
         }
         Ok(())
     }
@@ -175,6 +209,22 @@ pub fn run_shard(
     out_dir: &Path,
     store: Option<&TraceStore>,
 ) -> anyhow::Result<ShardReport> {
+    run_shard_limited(spec, shard, out_dir, store, None)
+}
+
+/// [`run_shard`] with an execution budget: at most `max_points` of the
+/// shard's remaining points run this invocation (`--max-points` on the
+/// CLI). Useful for time-boxed scavenging runs, and the fleet
+/// scheduler's chaos injection uses it to rehearse crash recovery — a
+/// capped run leaves [`ShardReport::is_complete`] false and the CLI
+/// exits nonzero, exactly like a worker killed mid-shard.
+pub fn run_shard_limited(
+    spec: &CampaignSpec,
+    shard: Shard,
+    out_dir: &Path,
+    store: Option<&TraceStore>,
+    max_points: Option<usize>,
+) -> anyhow::Result<ShardReport> {
     let cfg = &spec.config;
     let mem_key = cache::config_key(cfg);
     let fp = store::fingerprint(cfg);
@@ -185,10 +235,11 @@ pub fn run_shard(
     let output = out_dir.join(stream::shard_file_name(&spec.name, shard));
 
     // Resume: collect completed points (written under the same config
-    // fingerprint — read_records rejects stale files), drop torn tails,
+    // fingerprint — read_shard rejects stale files), drop torn tails,
     // and rewrite the file to contain exactly the valid records before
     // appending.
-    let (done, dropped) = stream::read_records(&output, &fp)?;
+    let shard_file = stream::read_shard(&output, &fp)?;
+    let (done, sources, dropped) = (shard_file.records, shard_file.sources, shard_file.dropped);
     for (&index, rec) in &done {
         anyhow::ensure!(
             shard.owns(index),
@@ -201,13 +252,16 @@ pub fn run_shard(
         let tmp = output.with_extension("jsonl.tmp");
         let mut text = String::new();
         for (&index, rec) in &done {
-            text.push_str(&stream::line_of(&fp, index, rec));
+            text.push_str(&stream::line_of_sourced(&fp, index, rec, sources.get(&index).copied()));
             text.push('\n');
         }
         std::fs::write(&tmp, text)?;
         std::fs::rename(&tmp, &output)?;
     }
-    let todo: Vec<usize> = owned.iter().copied().filter(|i| !done.contains_key(i)).collect();
+    let mut todo: Vec<usize> = owned.iter().copied().filter(|i| !done.contains_key(i)).collect();
+    if let Some(cap) = max_points {
+        todo.truncate(cap);
+    }
 
     let file = std::fs::OpenOptions::new()
         .create(true)
@@ -216,14 +270,22 @@ pub fn run_shard(
     let writer = Mutex::new(std::io::BufWriter::new(file));
     let failure: Mutex<Option<String>> = Mutex::new(None);
 
-    let run_point = |req| match store {
-        Some(s) => s.run(&fp, &mem_key, cfg, req),
-        None => cache::run_cached_keyed(&mem_key, cfg, req),
+    let run_point = |req: OffloadRequest| -> (Arc<Trace>, stream::Source) {
+        match store {
+            Some(s) => s.run_sourced(&fp, &mem_key, cfg, req),
+            None => match cache::peek(&mem_key, req) {
+                Some(t) => (t, stream::Source::Mem),
+                None => (
+                    cache::insert(&mem_key, req, Arc::new(req.run(cfg))),
+                    stream::Source::Sim,
+                ),
+            },
+        }
     };
     let record_one = |i: usize| -> Result<(), String> {
         let point = points[i];
-        let trace = run_point(point.req);
-        let line = stream::line_of(&fp, i, &SweepRecord { point, trace });
+        let (trace, source) = run_point(point.req);
+        let line = stream::line_of_sourced(&fp, i, &SweepRecord { point, trace }, Some(source));
         let mut w = writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         // Flush per line so a killed shard keeps every finished point.
         writeln!(w, "{line}").and_then(|_| w.flush()).map_err(|e| e.to_string())
@@ -288,15 +350,17 @@ pub fn status(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow
         .map(|i| {
             let shard = Shard::new(i, shard_count)?;
             let path = out_dir.join(stream::shard_file_name(&spec.name, shard));
-            let (done, dropped) = stream::read_records(&path, &fp)?;
-            for (&index, rec) in &done {
+            let file = stream::read_shard(&path, &fp)?;
+            for (&index, rec) in &file.records {
                 check_point(&points, index, rec, &path)?;
             }
             Ok(ShardStatus {
                 shard,
                 owned: shard.indices(total).len(),
-                done: done.len(),
-                dropped,
+                done: file.records.len(),
+                dropped: file.dropped,
+                sims: file.sims(),
+                hits: file.hits(),
             })
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
@@ -306,20 +370,44 @@ pub fn status(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow
     })
 }
 
+/// Outcome of one [`merge_report`] pass: the merged results plus the
+/// source-label tallies gathered from the same read of the shard files
+/// (fresh simulations vs. store/cache hits, summed over every attempt
+/// of every shard — the fleet summary line prints them).
+#[derive(Debug, Clone)]
+pub struct MergeReport {
+    pub results: SweepResults,
+    pub sims: usize,
+    pub hits: usize,
+}
+
 /// Recombine the outputs of an N-way shard split into input-ordered
 /// [`SweepResults`] bit-identical to [`run_single`], writing the merged
 /// stream to `<out_dir>/<name>.merged.jsonl`. Fails (naming the missing
 /// counts per shard) unless every point is present.
 pub fn merge(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow::Result<SweepResults> {
+    Ok(merge_report(spec, shard_count, out_dir)?.results)
+}
+
+/// [`merge`], also reporting the shard files' source-label tallies —
+/// one pass over the (trace-heavy) JSONL serves both.
+pub fn merge_report(
+    spec: &CampaignSpec,
+    shard_count: usize,
+    out_dir: &Path,
+) -> anyhow::Result<MergeReport> {
     anyhow::ensure!(shard_count > 0, "shard count must be positive");
     let fp = store::fingerprint(&spec.config);
     let points = spec.expand();
     let mut collected: BTreeMap<usize, SweepRecord> = BTreeMap::new();
+    let (mut sims, mut hits) = (0usize, 0usize);
     for i in 0..shard_count {
         let shard = Shard::new(i, shard_count)?;
         let path = out_dir.join(stream::shard_file_name(&spec.name, shard));
-        let (records, _dropped) = stream::read_records(&path, &fp)?;
-        for (index, rec) in records {
+        let file = stream::read_shard(&path, &fp)?;
+        sims += file.sims();
+        hits += file.hits();
+        for (index, rec) in file.records {
             check_point(&points, index, &rec, &path)?;
             collected.entry(index).or_insert(rec);
         }
@@ -359,7 +447,7 @@ pub fn merge(spec: &CampaignSpec, shard_count: usize, out_dir: &Path) -> anyhow:
         }
         std::fs::write(out_dir.join(stream::interference_file_name(&spec.name)), text)?;
     }
-    Ok(results)
+    Ok(MergeReport { results, sims, hits })
 }
 
 /// Schedule the campaign's `[interference]` axis over already-merged

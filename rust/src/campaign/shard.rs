@@ -97,4 +97,25 @@ mod tests {
             assert!(Shard::parse(bad).is_err(), "{bad:?}");
         }
     }
+
+    #[test]
+    fn parse_edge_cases() {
+        // Whitespace around the separator and redundant digits are
+        // tolerated (hand-typed CLI values)...
+        assert_eq!(Shard::parse(" 1 / 4 ").unwrap(), Shard::new(1, 4).unwrap());
+        assert_eq!(Shard::parse("01/2").unwrap(), Shard::new(1, 2).unwrap());
+        // ...but anything structurally off is not.
+        for bad in [
+            "1//2",                   // the remainder "/2" is not a count
+            "1/2/3",                  // extra segment
+            "/2",                     // missing index
+            "1/",                     // missing count
+            "18446744073709551616/2", // index overflows usize
+            "1/18446744073709551616", // count overflows usize
+            "0x1/2",                  // hex is not shard syntax
+            "1.0/2",                  // fractions are not indices
+        ] {
+            assert!(Shard::parse(bad).is_err(), "{bad:?}");
+        }
+    }
 }

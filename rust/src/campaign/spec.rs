@@ -27,6 +27,11 @@
 //! jobs_in_flight = [1, 2, 4] # windows to sweep (1 = serial reference)
 //! jobs = 16                  # jobs replayed per point (default 16)
 //! arrival_gap = 0            # cycles between arrivals (default 0)
+//!
+//! [fleet]                    # optional scheduler defaults (occamy fleet)
+//! workers = 3                # shard count / concurrent workers (default 2)
+//! lease_ttl = 30             # seconds without a heartbeat => stale (default 30)
+//! max_restarts = 2           # relaunches per shard before giving up (default 2)
 //! ```
 
 use std::collections::HashSet;
@@ -58,6 +63,33 @@ pub struct CampaignSpec {
     /// and merge — is unaffected: isolated traces are
     /// contention-independent.
     pub interference: Option<InterferenceSpec>,
+    /// Scheduler defaults (`[fleet]`) for `occamy fleet`; CLI flags
+    /// override them. `None` means the spec carries no fleet section
+    /// and the built-in [`FleetSpec::default`] applies.
+    pub fleet: Option<FleetSpec>,
+}
+
+/// The `[fleet]` section of a campaign spec: defaults for the
+/// [`crate::fleet`] scheduler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSpec {
+    /// Shard count — one worker process per shard.
+    pub workers: usize,
+    /// Seconds without a heartbeat before a running worker's shard is
+    /// declared stale and reassigned.
+    pub lease_ttl_secs: u64,
+    /// Relaunches allowed per shard before the whole fleet run fails.
+    pub max_restarts: usize,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            lease_ttl_secs: 30,
+            max_restarts: 2,
+        }
+    }
 }
 
 /// The `[interference]` section of a campaign spec.
@@ -84,6 +116,8 @@ pub struct SpecReport {
     pub routines: Vec<&'static str>,
     /// Interference points derived at merge (0 without `[interference]`).
     pub interference_points: usize,
+    /// The spec's `[fleet]` scheduler defaults, if any.
+    pub fleet: Option<FleetSpec>,
     /// Content fingerprint of the resolved config (store directory name).
     pub config_fingerprint: String,
 }
@@ -98,6 +132,13 @@ impl std::fmt::Display for SpecReport {
         writeln!(f, "  points: {} ({} unique traces)", self.points, self.unique_traces)?;
         if self.interference_points > 0 {
             writeln!(f, "  interference points: {}", self.interference_points)?;
+        }
+        if let Some(fleet) = &self.fleet {
+            writeln!(
+                f,
+                "  fleet: {} worker(s), lease ttl {}s, max {} restart(s) per shard",
+                fleet.workers, fleet.lease_ttl_secs, fleet.max_restarts
+            )?;
         }
         write!(f, "  config fingerprint: {}", self.config_fingerprint)
     }
@@ -115,6 +156,8 @@ impl CampaignSpec {
         let mut jobs_in_flight: Vec<usize> = Vec::new();
         let mut interference_jobs: usize = 16;
         let mut interference_gap: u64 = 0;
+        let mut fleet_section = false;
+        let mut fleet = FleetSpec::default();
         let mut section = String::new();
         for (i, raw) in text.lines().enumerate() {
             let lineno = i + 1;
@@ -126,14 +169,17 @@ impl CampaignSpec {
                 section = s.trim().to_string();
                 if !matches!(
                     section.as_str(),
-                    "campaign" | "grid" | "soc" | "timing" | "interference"
+                    "campaign" | "grid" | "soc" | "timing" | "interference" | "fleet"
                 ) {
                     anyhow::bail!(
-                        "line {lineno}: unknown section [{section}] (expected [campaign], [grid], [soc], [timing] or [interference])"
+                        "line {lineno}: unknown section [{section}] (expected [campaign], [grid], [soc], [timing], [interference] or [fleet])"
                     );
                 }
                 if section == "interference" {
                     interference_section = true;
+                }
+                if section == "fleet" {
+                    fleet_section = true;
                 }
                 continue;
             }
@@ -201,6 +247,23 @@ impl CampaignSpec {
                 ("interference", other) => anyhow::bail!(
                     "line {lineno}: unknown [interference] key {other:?} (expected jobs_in_flight, jobs or arrival_gap)"
                 ),
+                ("fleet", "workers") => {
+                    let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    anyhow::ensure!(v > 0, "line {lineno}: workers must be positive");
+                    fleet.workers = v as usize;
+                }
+                ("fleet", "lease_ttl") => {
+                    let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    anyhow::ensure!(v > 0, "line {lineno}: lease_ttl must be positive (seconds)");
+                    fleet.lease_ttl_secs = v;
+                }
+                ("fleet", "max_restarts") => {
+                    let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    fleet.max_restarts = v as usize;
+                }
+                ("fleet", other) => anyhow::bail!(
+                    "line {lineno}: unknown [fleet] key {other:?} (expected workers, lease_ttl or max_restarts)"
+                ),
                 ("soc", key) | ("timing", key) => {
                     let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
                     let r = if section == "soc" {
@@ -253,6 +316,7 @@ impl CampaignSpec {
             routines,
             config,
             interference,
+            fleet: fleet_section.then_some(fleet),
         })
     }
 
@@ -318,6 +382,7 @@ impl CampaignSpec {
             clusters,
             routines,
             interference_points: self.interference_points().len(),
+            fleet: self.fleet.clone(),
             config_fingerprint: super::store::fingerprint(&self.config),
         }
     }
@@ -647,6 +712,54 @@ mod tests {
         assert!(err(&format!("{base}[interference]\njobs_in_flight = [0]\n")).contains("positive"));
         assert!(err(&format!("{base}[interference]\nwarp = 1\n")).contains("unknown [interference] key"));
         assert!(err(&format!("{base}[interference]\njobs_in_flight = [1]\njobs = 0\n")).contains("positive"));
+    }
+
+    #[test]
+    fn fleet_section_round_trips_with_defaults() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"f\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n\
+             [fleet]\nworkers = 3\nlease_ttl = 10\nmax_restarts = 1\n",
+        )
+        .unwrap();
+        let fleet = spec.fleet.as_ref().unwrap();
+        assert_eq!(fleet.workers, 3);
+        assert_eq!(fleet.lease_ttl_secs, 10);
+        assert_eq!(fleet.max_restarts, 1);
+        let report = spec.report();
+        assert_eq!(report.fleet, spec.fleet);
+        assert!(report.to_string().contains("fleet: 3 worker(s)"));
+
+        // Partial section: unset keys take the FleetSpec defaults.
+        let partial = CampaignSpec::parse(
+            "[campaign]\nname = \"p\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n\
+             [fleet]\nworkers = 5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            partial.fleet,
+            Some(FleetSpec {
+                workers: 5,
+                ..FleetSpec::default()
+            })
+        );
+
+        // No section: no fleet defaults, and the report omits the line.
+        let plain = CampaignSpec::parse(
+            "[campaign]\nname = \"n\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n",
+        )
+        .unwrap();
+        assert_eq!(plain.fleet, None);
+        assert!(!plain.report().to_string().contains("fleet:"));
+    }
+
+    #[test]
+    fn fleet_section_rejects_bad_values() {
+        let err = |text: &str| CampaignSpec::parse(text).unwrap_err().to_string();
+        let base = "[campaign]\nname = \"e\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n";
+        assert!(err(&format!("{base}[fleet]\nworkers = 0\n")).contains("positive"));
+        assert!(err(&format!("{base}[fleet]\nlease_ttl = 0\n")).contains("positive"));
+        assert!(err(&format!("{base}[fleet]\nwarp = 1\n")).contains("unknown [fleet] key"));
+        assert!(err(&format!("{base}[fleet]\nworkers = \"two\"\n")).contains("bad integer"));
     }
 
     #[test]

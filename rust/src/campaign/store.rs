@@ -27,6 +27,7 @@ use crate::sim::Trace;
 use crate::sweep::{cache, OffloadRequest};
 
 use super::codec;
+use super::stream::Source;
 
 /// FNV-1a 64-bit — stable across builds, unlike `DefaultHasher`.
 fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -156,13 +157,26 @@ impl TraceStore {
     /// `Arc`-shared. `fp`/`mem_key` must come from [`fingerprint`] and
     /// `sweep::cache::config_key` for the same `cfg`.
     pub fn run(&self, fp: &str, mem_key: &str, cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
+        self.run_sourced(fp, mem_key, cfg, req).0
+    }
+
+    /// [`TraceStore::run`], also reporting which layer served the
+    /// request — shard runners stamp it onto every streamed line so
+    /// status views can split done points into simulations vs. hits.
+    pub fn run_sourced(
+        &self,
+        fp: &str,
+        mem_key: &str,
+        cfg: &Config,
+        req: OffloadRequest,
+    ) -> (Arc<Trace>, Source) {
         if let Some(t) = cache::peek(mem_key, req) {
             self.memory_hits.fetch_add(1, Ordering::Relaxed);
-            return t;
+            return (t, Source::Mem);
         }
         if let Some(t) = self.load(fp, &req) {
             self.disk_hits.fetch_add(1, Ordering::Relaxed);
-            return cache::insert(mem_key, req, t);
+            return (cache::insert(mem_key, req, t), Source::Disk);
         }
         let trace = Arc::new(req.run(cfg));
         self.simulations.fetch_add(1, Ordering::Relaxed);
@@ -170,7 +184,7 @@ impl TraceStore {
             // A read-only or full disk degrades to uncached execution.
             eprintln!("campaign store: failed to persist {}: {e}", request_key(&req));
         }
-        cache::insert(mem_key, req, trace)
+        (cache::insert(mem_key, req, trace), Source::Sim)
     }
 
     /// Counters since this handle was opened.
@@ -184,13 +198,20 @@ impl TraceStore {
 
     /// Traces currently persisted for one config fingerprint.
     pub fn traces_on_disk(&self, fp: &str) -> usize {
-        match std::fs::read_dir(self.config_dir(fp)) {
-            Err(_) => 0,
-            Ok(entries) => entries
-                .filter_map(Result::ok)
-                .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
-                .count(),
-        }
+        traces_in(&self.root, fp)
+    }
+}
+
+/// Traces persisted under `root` for one config fingerprint, without
+/// opening (and thereby creating) a store — status displays use this so
+/// a read-only query never mutates the filesystem.
+pub fn traces_in(root: &Path, fp: &str) -> usize {
+    match std::fs::read_dir(root.join(fp)) {
+        Err(_) => 0,
+        Ok(entries) => entries
+            .filter_map(Result::ok)
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .count(),
     }
 }
 

@@ -18,6 +18,66 @@ use crate::sweep::{SweepPoint, SweepRecord};
 use super::codec;
 use super::shard::Shard;
 
+/// Which layer served a point's trace (the optional `"src"` field of a
+/// line). `occamy campaign status` and the fleet summary aggregate these
+/// into per-shard fresh-simulation vs. store/cache-hit counts; files
+/// written before the field existed read back as unlabelled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// Simulated fresh by the writing process.
+    Sim,
+    /// Served from the persistent on-disk trace store.
+    Disk,
+    /// Served from the process-wide memory cache.
+    Mem,
+}
+
+impl Source {
+    pub fn name(self) -> &'static str {
+        match self {
+            Source::Sim => "sim",
+            Source::Disk => "disk",
+            Source::Mem => "mem",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sim" => Some(Source::Sim),
+            "disk" => Some(Source::Disk),
+            "mem" => Some(Source::Mem),
+            _ => None,
+        }
+    }
+
+    /// Anything that avoided a fresh simulation is a hit.
+    pub fn is_hit(self) -> bool {
+        !matches!(self, Source::Sim)
+    }
+}
+
+/// Everything one shard file contains: the valid records by global
+/// index, where each trace came from (for lines that carry the `"src"`
+/// label), and how many corrupt lines were dropped.
+#[derive(Debug, Default)]
+pub struct ShardFile {
+    pub records: BTreeMap<usize, SweepRecord>,
+    pub sources: BTreeMap<usize, Source>,
+    pub dropped: usize,
+}
+
+impl ShardFile {
+    /// Points this file records as freshly simulated.
+    pub fn sims(&self) -> usize {
+        self.sources.values().filter(|s| !s.is_hit()).count()
+    }
+
+    /// Points this file records as store/cache hits.
+    pub fn hits(&self) -> usize {
+        self.sources.values().filter(|s| s.is_hit()).count()
+    }
+}
+
 /// Shard output file name: `<name>.shard-<i>-of-<N>.jsonl`.
 pub fn shard_file_name(campaign: &str, shard: Shard) -> String {
     format!("{campaign}.shard-{}-of-{}.jsonl", shard.index, shard.count)
@@ -50,7 +110,7 @@ pub fn interference_line_of(
     j.to_string()
 }
 
-/// Read an interference file back. Strict, unlike [`read_records`]:
+/// Read an interference file back. Strict, unlike [`read_shard`]:
 /// these lines are cheap to rewrite from a merged campaign, so any
 /// unparsable line or foreign fingerprint is an error rather than a
 /// silent drop.
@@ -88,23 +148,39 @@ pub fn read_interference(
 /// Every line carries the config fingerprint, so stale files from a
 /// spec whose `[soc]`/`[timing]` changed cannot be silently resumed.
 pub fn line_of(config_fp: &str, index: usize, record: &SweepRecord) -> String {
-    Json::Obj(
-        [
-            ("config".to_string(), Json::Str(config_fp.to_string())),
-            ("index".to_string(), Json::Num(index as f64)),
-            ("label".to_string(), Json::Str(record.label().to_string())),
-            ("req".to_string(), codec::request_to_json(&record.req())),
-            ("trace".to_string(), codec::trace_to_json(&record.trace)),
-        ]
-        .into_iter()
-        .collect(),
-    )
-    .to_string()
+    line_of_sourced(config_fp, index, record, None)
+}
+
+/// [`line_of`] with an optional trace-source label (`"src"`), written by
+/// shard runners so status views can split done points into fresh
+/// simulations vs. store/cache hits. Merged files omit it.
+pub fn line_of_sourced(
+    config_fp: &str,
+    index: usize,
+    record: &SweepRecord,
+    source: Option<Source>,
+) -> String {
+    let mut entries: BTreeMap<String, Json> = [
+        ("config".to_string(), Json::Str(config_fp.to_string())),
+        ("index".to_string(), Json::Num(index as f64)),
+        ("label".to_string(), Json::Str(record.label().to_string())),
+        ("req".to_string(), codec::request_to_json(&record.req())),
+        ("trace".to_string(), codec::trace_to_json(&record.trace)),
+    ]
+    .into_iter()
+    .collect();
+    if let Some(s) = source {
+        entries.insert("src".to_string(), Json::Str(s.name().to_string()));
+    }
+    Json::Obj(entries).to_string()
 }
 
 /// Parse one JSONL line back into `(config fingerprint, global index,
-/// record)`.
-pub fn record_from_line(line: &str) -> Result<(String, usize, SweepRecord), String> {
+/// record, source label)`. The source is `None` for merged output and
+/// for files written before the `"src"` field existed.
+pub fn record_from_line(
+    line: &str,
+) -> Result<(String, usize, SweepRecord, Option<Source>), String> {
     let j = Json::parse(line)?;
     let config = j
         .get("config")
@@ -129,6 +205,9 @@ pub fn record_from_line(line: &str) -> Result<(String, usize, SweepRecord), Stri
         ));
     }
     let trace = codec::trace_from_json(j.get("trace").ok_or("missing \"trace\"")?)?;
+    // Tolerant: an unknown source label degrades to "unlabelled", it
+    // does not invalidate an otherwise-good trace line.
+    let source = j.get("src").and_then(Json::as_str).and_then(Source::parse);
     Ok((
         config,
         index,
@@ -136,6 +215,7 @@ pub fn record_from_line(line: &str) -> Result<(String, usize, SweepRecord), Stri
             point: SweepPoint { label: family, req },
             trace: Arc::new(trace),
         },
+        source,
     ))
 }
 
@@ -146,38 +226,39 @@ pub fn record_from_line(line: &str) -> Result<(String, usize, SweepRecord), Stri
 /// record written under a *different* config fingerprint is a hard
 /// error, not a drop — silently re-simulating would hide that the
 /// spec's `[soc]`/`[timing]` changed under an existing output dir.
-pub fn read_records(
-    path: &Path,
-    expected_fp: &str,
-) -> anyhow::Result<(BTreeMap<usize, SweepRecord>, usize)> {
+pub fn read_shard(path: &Path, expected_fp: &str) -> anyhow::Result<ShardFile> {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         // Only an absent file is an empty shard; a permission or I/O
         // error must not masquerade as "nothing done yet" (resume would
         // silently re-simulate finished work).
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((BTreeMap::new(), 0)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(ShardFile::default()),
         Err(e) => return Err(anyhow::anyhow!("read {}: {e}", path.display())),
     };
-    let mut out = BTreeMap::new();
-    let mut dropped = 0usize;
+    let mut out = ShardFile::default();
     for line in text.lines() {
         if line.trim().is_empty() {
             continue;
         }
         match record_from_line(line) {
-            Ok((fp, index, rec)) => {
+            Ok((fp, index, rec, source)) => {
                 anyhow::ensure!(
                     fp == expected_fp,
                     "{}: written under config fingerprint {fp}, the spec now resolves to {expected_fp} — \
                      its [soc]/[timing] changed; delete the file or use a fresh --out",
                     path.display()
                 );
-                out.entry(index).or_insert(rec);
+                if !out.records.contains_key(&index) {
+                    out.records.insert(index, rec);
+                    if let Some(s) = source {
+                        out.sources.insert(index, s);
+                    }
+                }
             }
-            Err(_) => dropped += 1,
+            Err(_) => out.dropped += 1,
         }
     }
-    Ok((out, dropped))
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -201,10 +282,31 @@ mod tests {
         let rec = sample_record();
         let line = line_of("fp16chars", 7, &rec);
         assert!(!line.contains('\n'));
-        let (fp, index, back) = record_from_line(&line).unwrap();
+        let (fp, index, back, source) = record_from_line(&line).unwrap();
         assert_eq!(fp, "fp16chars");
         assert_eq!(index, 7);
         assert_eq!(back, rec);
+        assert_eq!(source, None, "plain lines carry no source label");
+    }
+
+    #[test]
+    fn source_labels_round_trip_and_tolerate_garbage() {
+        let rec = sample_record();
+        for src in [Source::Sim, Source::Disk, Source::Mem] {
+            let line = line_of_sourced("fp", 3, &rec, Some(src));
+            let (_, _, back, parsed) = record_from_line(&line).unwrap();
+            assert_eq!(back, rec);
+            assert_eq!(parsed, Some(src));
+            assert_eq!(Source::parse(src.name()), Some(src));
+        }
+        assert_eq!(Source::parse("warp"), None);
+        assert!(!Source::Sim.is_hit());
+        assert!(Source::Disk.is_hit() && Source::Mem.is_hit());
+        // An unknown label is dropped, not fatal: the record survives.
+        let line = line_of_sourced("fp", 3, &rec, Some(Source::Sim)).replace("\"sim\"", "\"warp\"");
+        let (_, _, back, parsed) = record_from_line(&line).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(parsed, None);
     }
 
     #[test]
@@ -216,7 +318,7 @@ mod tests {
     }
 
     #[test]
-    fn read_records_drops_torn_tails_and_dedups() {
+    fn read_shard_drops_torn_tails_and_dedups() {
         let rec = sample_record();
         let dir = std::env::temp_dir().join(format!("occamy-stream-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -225,13 +327,38 @@ mod tests {
         let torn = &full[..full.len() - 10];
         let text = format!("{full}\n{}\n\n{torn}", line_of("fp", 0, &rec));
         std::fs::write(&path, text).unwrap();
-        let (records, dropped) = read_records(&path, "fp").unwrap();
-        assert_eq!(records.len(), 1);
-        assert_eq!(dropped, 1);
-        assert_eq!(records[&0], rec);
-        let (empty, dropped) = read_records(&dir.join("absent.jsonl"), "fp").unwrap();
-        assert!(empty.is_empty());
-        assert_eq!(dropped, 0);
+        let file = read_shard(&path, "fp").unwrap();
+        assert_eq!(file.records.len(), 1);
+        assert_eq!(file.dropped, 1);
+        assert_eq!(file.records[&0], rec);
+        let empty = read_shard(&dir.join("absent.jsonl"), "fp").unwrap();
+        assert!(empty.records.is_empty());
+        assert_eq!(empty.dropped, 0);
+    }
+
+    #[test]
+    fn read_shard_counts_sims_and_hits() {
+        let rec = sample_record();
+        let dir = std::env::temp_dir().join(format!(
+            "occamy-stream-src-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sources.jsonl");
+        let text = format!(
+            "{}\n{}\n{}\n{}\n",
+            line_of_sourced("fp", 0, &rec, Some(Source::Sim)),
+            line_of_sourced("fp", 1, &rec, Some(Source::Disk)),
+            line_of_sourced("fp", 2, &rec, Some(Source::Mem)),
+            line_of("fp", 3, &rec), // unlabelled (pre-`src` file)
+        );
+        std::fs::write(&path, text).unwrap();
+        let file = read_shard(&path, "fp").unwrap();
+        assert_eq!(file.records.len(), 4);
+        assert_eq!(file.dropped, 0);
+        assert_eq!(file.sims(), 1);
+        assert_eq!(file.hits(), 2, "disk and mem both count as hits");
+        assert_eq!(file.sources.len(), 3, "the unlabelled line stays unlabelled");
     }
 
     #[test]
@@ -244,7 +371,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("stale.jsonl");
         std::fs::write(&path, line_of("old-config", 0, &rec)).unwrap();
-        let err = read_records(&path, "new-config").unwrap_err().to_string();
+        let err = read_shard(&path, "new-config").unwrap_err().to_string();
         assert!(err.contains("old-config"), "{err}");
         assert!(err.contains("[soc]/[timing]"), "{err}");
     }

@@ -1,0 +1,204 @@
+//! The launcher seam: how the fleet scheduler turns "shard i/N should
+//! be running" into an actual worker.
+//!
+//! The scheduler only ever talks to [`Launcher`] and [`WorkerHandle`] —
+//! spawn, poll, kill. [`LocalLauncher`] implements it with
+//! `occamy campaign run --shard i/N` subprocesses on this host; an SSH
+//! or Kubernetes launcher would implement the same two traits and
+//! nothing else changes, because all *state* (results, heartbeat
+//! leases, the trace store) already lives on the shared filesystem.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+use crate::campaign::Shard;
+
+/// Everything a launcher needs to start one worker attempt.
+#[derive(Debug, Clone)]
+pub struct WorkerTask {
+    /// The campaign TOML the worker re-reads (specs are files, not
+    /// serialized state — any host with the shared checkout can run it).
+    pub spec_path: PathBuf,
+    pub shard: Shard,
+    pub out_dir: PathBuf,
+    /// Persistent trace store root; `None` disables the store.
+    pub store: Option<PathBuf>,
+    /// The lease file this worker must heartbeat.
+    pub lease_path: PathBuf,
+    pub lease_ttl_secs: u64,
+    pub run_id: String,
+    /// 0 for the initial launch, +1 per relaunch.
+    pub attempt: usize,
+    /// Cap on points executed this attempt (`--max-points`); the
+    /// scheduler's chaos injection sets it to rehearse crash recovery.
+    pub max_points: Option<usize>,
+}
+
+/// Observed state of a launched worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    Running,
+    Exited { success: bool },
+}
+
+/// A launched worker the scheduler can poll and kill. `kill` must be
+/// idempotent and safe on an already-exited worker.
+pub trait WorkerHandle: Send {
+    fn poll(&mut self) -> anyhow::Result<WorkerState>;
+    fn kill(&mut self);
+    /// Human-readable identity for log lines (e.g. `pid 1234`).
+    fn describe(&self) -> String;
+}
+
+/// Spawns workers for shard tasks. Implementations decide *where* a
+/// worker runs; the scheduler decides *what* runs and *when*.
+pub trait Launcher {
+    fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>>;
+}
+
+/// Runs workers as local `occamy campaign run` subprocesses.
+pub struct LocalLauncher {
+    /// The `occamy` binary to spawn (usually the running one).
+    pub exe: PathBuf,
+    /// Silence worker stdout (the scheduler summarizes instead); worker
+    /// stderr is always inherited so failures stay visible.
+    pub quiet: bool,
+}
+
+impl LocalLauncher {
+    /// Launch workers with the currently-running binary.
+    pub fn current_exe() -> anyhow::Result<Self> {
+        Ok(Self {
+            exe: std::env::current_exe()
+                .map_err(|e| anyhow::anyhow!("cannot resolve the current executable: {e}"))?,
+            quiet: true,
+        })
+    }
+
+    /// The `campaign run` argument vector for a task (separated out so
+    /// tests can assert on it without spawning anything).
+    pub fn args_of(task: &WorkerTask) -> Vec<std::ffi::OsString> {
+        let mut args: Vec<std::ffi::OsString> = vec![
+            "campaign".into(),
+            "run".into(),
+            "--spec".into(),
+            task.spec_path.clone().into(),
+            "--shard".into(),
+            task.shard.to_string().into(),
+            "--out".into(),
+            task.out_dir.clone().into(),
+        ];
+        match &task.store {
+            Some(root) => {
+                args.push("--store".into());
+                args.push(root.clone().into());
+            }
+            None => args.push("--no-store".into()),
+        }
+        args.push("--lease".into());
+        args.push(task.lease_path.clone().into());
+        args.push("--lease-ttl".into());
+        args.push(task.lease_ttl_secs.to_string().into());
+        args.push("--run-id".into());
+        args.push(task.run_id.clone().into());
+        args.push("--attempt".into());
+        args.push(task.attempt.to_string().into());
+        if let Some(cap) = task.max_points {
+            args.push("--max-points".into());
+            args.push(cap.to_string().into());
+        }
+        args
+    }
+}
+
+impl Launcher for LocalLauncher {
+    fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let mut cmd = Command::new(&self.exe);
+        cmd.args(Self::args_of(task));
+        cmd.stdin(Stdio::null());
+        if self.quiet {
+            cmd.stdout(Stdio::null());
+        }
+        let child = cmd.spawn().map_err(|e| {
+            anyhow::anyhow!(
+                "spawn {} for shard {} (attempt {}): {e}",
+                self.exe.display(),
+                task.shard,
+                task.attempt
+            )
+        })?;
+        Ok(Box::new(LocalWorker { child }))
+    }
+}
+
+struct LocalWorker {
+    child: Child,
+}
+
+impl WorkerHandle for LocalWorker {
+    fn poll(&mut self) -> anyhow::Result<WorkerState> {
+        match self.child.try_wait() {
+            Ok(None) => Ok(WorkerState::Running),
+            Ok(Some(status)) => Ok(WorkerState::Exited {
+                success: status.success(),
+            }),
+            Err(e) => Err(anyhow::anyhow!("poll pid {}: {e}", self.child.id())),
+        }
+    }
+
+    fn kill(&mut self) {
+        // Both calls fail harmlessly on an already-reaped child.
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    fn describe(&self) -> String {
+        format!("pid {}", self.child.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_cover_every_task_field() {
+        let task = WorkerTask {
+            spec_path: PathBuf::from("spec.toml"),
+            shard: Shard::new(1, 3).unwrap(),
+            out_dir: PathBuf::from("out"),
+            store: Some(PathBuf::from("store-root")),
+            lease_path: PathBuf::from("lease/shard-1-of-3.lease"),
+            lease_ttl_secs: 12,
+            run_id: "demo".into(),
+            attempt: 2,
+            max_points: Some(1),
+        };
+        let args: Vec<String> = LocalLauncher::args_of(&task)
+            .into_iter()
+            .map(|a| a.to_string_lossy().into_owned())
+            .collect();
+        let joined = args.join(" ");
+        assert_eq!(&args[..2], ["campaign", "run"]);
+        assert!(joined.contains("--spec spec.toml"), "{joined}");
+        assert!(joined.contains("--shard 1/3"), "{joined}");
+        assert!(joined.contains("--store store-root"), "{joined}");
+        assert!(joined.contains("--lease-ttl 12"), "{joined}");
+        assert!(joined.contains("--run-id demo"), "{joined}");
+        assert!(joined.contains("--attempt 2"), "{joined}");
+        assert!(joined.contains("--max-points 1"), "{joined}");
+        assert!(!joined.contains("--no-store"), "{joined}");
+
+        let mut bare = task.clone();
+        bare.store = None;
+        bare.max_points = None;
+        let joined = LocalLauncher::args_of(&bare)
+            .into_iter()
+            .map(|a| a.to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join(" ");
+        assert!(joined.contains("--no-store"), "{joined}");
+        assert!(!joined.contains("--max-points"), "{joined}");
+        assert!(!joined.contains("--store "), "{joined}");
+    }
+}

@@ -1,0 +1,349 @@
+//! Heartbeat lease files: how a fleet scheduler sees worker liveness
+//! through nothing but a shared filesystem.
+//!
+//! Each worker owns one lease file,
+//! `<store root>/fleet/<run-id>/shard-<i>-of-<N>.lease`, and refreshes
+//! it (atomic temp-file + rename, like `campaign::store`) every quarter
+//! of its TTL, bumping a monotonic `seq` counter. The scheduler never
+//! compares clocks across hosts: it watches the *content* change and
+//! declares a shard stale when `seq` has not advanced for a TTL on its
+//! own monotonic clock. One-shot status displays, which have no history
+//! to difference, fall back to the file's mtime age — good enough for a
+//! human-facing staleness hint.
+//!
+//! A worker that finishes its shard rewrites the lease in the `done`
+//! state; a worker that dies simply stops writing, and its lease goes
+//! stale. Either way the file is the complete protocol — there is no
+//! side channel, which is what makes the `Launcher` seam host-agnostic.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::campaign::Shard;
+use crate::runtime::json::Json;
+
+/// Lifecycle state recorded in a lease file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseState {
+    /// The worker is (or was, if the lease is stale) executing points.
+    Running,
+    /// The worker confirmed every owned point is in the output file.
+    Done,
+}
+
+impl LeaseState {
+    pub fn name(self) -> &'static str {
+        match self {
+            LeaseState::Running => "running",
+            LeaseState::Done => "done",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "running" => Some(LeaseState::Running),
+            "done" => Some(LeaseState::Done),
+            _ => None,
+        }
+    }
+}
+
+/// One worker's lease: identity, heartbeat counter and TTL.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lease {
+    /// The fleet run this lease belongs to (leases from another run in
+    /// the same directory are a configuration error, not a heartbeat).
+    pub run_id: String,
+    pub shard: Shard,
+    /// 0 for the initial launch, +1 per relaunch.
+    pub attempt: usize,
+    /// Process id of the writer (diagnostics only — pids are not
+    /// comparable across hosts).
+    pub pid: u32,
+    /// Monotonic heartbeat counter; staleness = no advance for a TTL.
+    pub seq: u64,
+    /// The TTL the writer was told to honour, so one-shot status
+    /// readers know the threshold without the fleet options in hand.
+    pub ttl_secs: u64,
+    pub state: LeaseState,
+}
+
+impl Lease {
+    /// A fresh `Running` lease for this process.
+    pub fn new(run_id: impl Into<String>, shard: Shard, attempt: usize, ttl_secs: u64) -> Self {
+        Self {
+            run_id: run_id.into(),
+            shard,
+            attempt,
+            pid: std::process::id(),
+            seq: 0,
+            ttl_secs,
+            state: LeaseState::Running,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("run".to_string(), Json::Str(self.run_id.clone())),
+                ("shard".to_string(), Json::Str(self.shard.to_string())),
+                ("attempt".to_string(), Json::Num(self.attempt as f64)),
+                ("pid".to_string(), Json::Num(self.pid as f64)),
+                ("seq".to_string(), Json::Num(self.seq as f64)),
+                ("ttl_secs".to_string(), Json::Num(self.ttl_secs as f64)),
+                ("state".to_string(), Json::Str(self.state.name().to_string())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let str_field = |key: &str| -> Result<&str, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("missing or invalid {key:?}"))
+        };
+        let num_field = |key: &str| -> Result<u64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| format!("missing or invalid {key:?}"))
+        };
+        let state = str_field("state")?;
+        Ok(Self {
+            run_id: str_field("run")?.to_string(),
+            shard: Shard::parse(str_field("shard")?).map_err(|e| e.to_string())?,
+            attempt: num_field("attempt")? as usize,
+            pid: num_field("pid")? as u32,
+            seq: num_field("seq")?,
+            ttl_secs: num_field("ttl_secs")?,
+            state: LeaseState::parse(state).ok_or_else(|| format!("unknown state {state:?}"))?,
+        })
+    }
+}
+
+/// Lease file name of one shard: `shard-<i>-of-<N>.lease`.
+pub fn file_name(shard: Shard) -> String {
+    format!("shard-{}-of-{}.lease", shard.index, shard.count)
+}
+
+/// Atomically (re)write a lease: temp file in the same directory, then
+/// rename over the target, so a reader never observes a torn lease.
+pub fn write(path: &Path, lease: &Lease) -> anyhow::Result<()> {
+    let dir = path
+        .parent()
+        .ok_or_else(|| anyhow::anyhow!("lease path {} has no parent directory", path.display()))?;
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("create lease dir {}: {e}", dir.display()))?;
+    // Process id + sequence number, like `campaign::store`: two
+    // in-process workers heartbeating different shards in one lease dir
+    // must never interleave on one temp path.
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = dir.join(format!(
+        ".lease-tmp-{}-{}",
+        lease.pid,
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, lease.to_json().to_string())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Read a lease; `None` for an absent or unparsable file. Unparsable is
+/// deliberately soft: on a network filesystem without atomic rename a
+/// torn read is indistinguishable from "no heartbeat observed yet", and
+/// the staleness clock handles both.
+pub fn read(path: &Path) -> Option<Lease> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).ok().and_then(|j| Lease::from_json(&j).ok())
+}
+
+/// Wall-clock age of the lease file, from its mtime. Only the one-shot
+/// status views use this (the scheduler differences `seq` on a
+/// monotonic clock instead); `None` when the file is absent or the
+/// filesystem reports no usable mtime.
+pub fn age(path: &Path) -> Option<Duration> {
+    std::fs::metadata(path).ok()?.modified().ok()?.elapsed().ok()
+}
+
+/// A background thread refreshing one lease every TTL/4 (min 25 ms)
+/// until stopped. Dropping it stops the refresh and *leaves the last
+/// `Running` lease in place* — exactly what a crash would do, so the
+/// scheduler path for "worker vanished" and "worker dropped its
+/// heartbeat" is one and the same. Call [`Heartbeat::finish`] instead
+/// when the shard completed.
+pub struct Heartbeat {
+    path: PathBuf,
+    lease: Lease,
+    seq: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    /// Write the initial lease and start refreshing it.
+    pub fn start(path: PathBuf, lease: Lease) -> anyhow::Result<Self> {
+        write(&path, &lease)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let seq = Arc::new(AtomicU64::new(lease.seq));
+        let period = Duration::from_millis(lease.ttl_secs.saturating_mul(250).clamp(25, 10_000));
+        let thread = {
+            let (path, lease) = (path.clone(), lease.clone());
+            let (stop, seq) = (Arc::clone(&stop), Arc::clone(&seq));
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    // Sleep in small slices so finish()/drop return
+                    // promptly even with a long TTL.
+                    let mut slept = Duration::ZERO;
+                    while slept < period && !stop.load(Ordering::Relaxed) {
+                        let slice = (period - slept).min(Duration::from_millis(20));
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let mut beat = lease.clone();
+                    beat.seq = seq.fetch_add(1, Ordering::Relaxed) + 1;
+                    // A transiently unwritable shared directory must not
+                    // kill the worker; a few missed beats only risk one
+                    // spurious (and resume-safe) relaunch.
+                    let _ = write(&path, &beat);
+                }
+            })
+        };
+        Ok(Self {
+            path,
+            lease,
+            seq,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// Heartbeats written so far (the initial write is seq 0).
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop refreshing and mark the lease `Done` — the worker verified
+    /// that every owned point is in the shard's output file.
+    pub fn finish(mut self) -> anyhow::Result<()> {
+        self.halt();
+        let mut fin = self.lease.clone();
+        fin.seq = self.seq.load(Ordering::Relaxed) + 1;
+        fin.state = LeaseState::Done;
+        write(&self.path, &fin)
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("occamy-lease-test-{}-{tag}", std::process::id()))
+            .join("shard-0-of-2.lease")
+    }
+
+    #[test]
+    fn lease_round_trips_through_json() {
+        let lease = Lease {
+            run_id: "demo".into(),
+            shard: Shard::new(1, 3).unwrap(),
+            attempt: 2,
+            pid: 4242,
+            seq: 17,
+            ttl_secs: 30,
+            state: LeaseState::Done,
+        };
+        let text = lease.to_json().to_string();
+        assert!(!text.contains('\n'));
+        let back = Lease::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, lease);
+    }
+
+    #[test]
+    fn write_read_round_trips_and_tolerates_garbage() {
+        let path = temp_path("roundtrip");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        assert_eq!(read(&path), None, "absent lease reads as None");
+        assert_eq!(age(&path), None);
+        let lease = Lease::new("rt", Shard::new(0, 2).unwrap(), 0, 5);
+        write(&path, &lease).unwrap();
+        assert_eq!(read(&path), Some(lease.clone()));
+        assert!(age(&path).is_some());
+        // Corruption (torn write on a non-atomic FS) degrades to None.
+        for bad in ["", "{", "not json", "{\"run\":\"rt\"}", "{\"run\":1}"] {
+            std::fs::write(&path, bad).unwrap();
+            assert_eq!(read(&path), None, "{bad:?}");
+        }
+        // Bad field values are rejected, not coerced.
+        let mut torn = lease.clone();
+        torn.seq = 9;
+        let text = torn.to_json().to_string().replace("\"0/2\"", "\"2/2\"");
+        std::fs::write(&path, text).unwrap();
+        assert_eq!(read(&path), None, "out-of-range shard is corruption");
+    }
+
+    #[test]
+    fn heartbeat_advances_seq_and_finish_marks_done() {
+        let path = temp_path("heartbeat");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        // ttl 1s => 250 ms period.
+        let hb = Heartbeat::start(path.clone(), Lease::new("hb", Shard::SINGLE, 1, 1)).unwrap();
+        let initial = read(&path).expect("initial lease written synchronously");
+        assert_eq!(initial.state, LeaseState::Running);
+        assert_eq!(initial.seq, 0);
+        assert_eq!(initial.attempt, 1);
+        // Wait for at least one refresh (generous margin for slow CI).
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while hb.seq() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        assert!(hb.seq() >= 1, "heartbeat thread never refreshed the lease");
+        let beating = read(&path).unwrap();
+        assert_eq!(beating.state, LeaseState::Running);
+        hb.finish().unwrap();
+        let done = read(&path).unwrap();
+        assert_eq!(done.state, LeaseState::Done);
+        assert!(done.seq >= 1);
+    }
+
+    #[test]
+    fn dropping_a_heartbeat_leaves_the_running_lease() {
+        let path = temp_path("dropped");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        let hb = Heartbeat::start(path.clone(), Lease::new("drop", Shard::SINGLE, 0, 5)).unwrap();
+        drop(hb);
+        // The lease is still there, still Running: to any scheduler it
+        // is indistinguishable from a crash, and goes stale.
+        assert_eq!(read(&path).unwrap().state, LeaseState::Running);
+    }
+
+    #[test]
+    fn file_names_embed_the_split() {
+        assert_eq!(file_name(Shard::new(2, 5).unwrap()), "shard-2-of-5.lease");
+        assert_eq!(file_name(Shard::SINGLE), "shard-0-of-1.lease");
+    }
+}

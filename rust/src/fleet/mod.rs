@@ -1,0 +1,801 @@
+//! # Multi-host campaign scheduling (`fleet`)
+//!
+//! [`crate::campaign`] made sweeps sharded, resumable and
+//! bit-identically mergeable — but a human still had to start
+//! `campaign run --shard i/N` on every host and run `merge` at the end.
+//! This subsystem closes that loop: a campaign spec plus a worker count
+//! becomes one fully automatic run.
+//!
+//! * [`launcher`] — the placement seam. The scheduler talks only to the
+//!   [`Launcher`]/[`WorkerHandle`] traits; [`LocalLauncher`] implements
+//!   them with local `occamy campaign run` subprocesses, and an SSH or
+//!   Kubernetes launcher slots in without touching the scheduler,
+//!   because all shared state (streamed JSONL results, heartbeat
+//!   leases, the trace store) lives on the filesystem.
+//! * [`lease`] — liveness through the shared filesystem alone: each
+//!   worker refreshes `<store>/fleet/<run-id>/shard-<i>-of-<N>.lease`
+//!   (atomic rename, monotonic `seq`); the scheduler declares a shard
+//!   stale when its `seq` stops advancing for a TTL and reassigns it.
+//! * [`run`] — the scheduler: plan shards, launch workers, poll exits
+//!   and leases, relaunch dead or stalled shards (resume-after-kill
+//!   makes reassignment safe — finished points are never redone), honor
+//!   a `cancel` marker file, and auto-merge into [`SweepResults`]
+//!   **bit-identical** to a single-process run when the last shard
+//!   lands.
+//! * [`status`]/[`StatusView`] — one renderer for per-shard progress
+//!   (points done/total, fresh-simulation vs. store/cache-hit counts
+//!   from the streamed JSONL, lease state/staleness), shared by
+//!   `occamy campaign status` and `occamy fleet status`.
+//!
+//! Quickstart (spec in `examples/fleet.toml`, `[fleet]` table holds the
+//! defaults):
+//!
+//! ```text
+//! occamy fleet run    --spec examples/fleet.toml --workers 3
+//! occamy fleet status --spec examples/fleet.toml --workers 3
+//! occamy fleet watch  --spec examples/fleet.toml --workers 3
+//! occamy fleet cancel --spec examples/fleet.toml
+//! ```
+
+pub mod launcher;
+pub mod lease;
+
+pub use launcher::{Launcher, LocalLauncher, WorkerHandle, WorkerState, WorkerTask};
+pub use lease::{Heartbeat, Lease, LeaseState};
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::campaign::{self, store, stream, CampaignSpec, CampaignStatus, Shard};
+use crate::sweep::SweepResults;
+
+/// Scheduler parameters for one fleet run. [`FleetOptions::new`] seeds
+/// them from the spec's `[fleet]` table (or [`campaign::FleetSpec`]
+/// defaults); the CLI layers flag overrides on top.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Shard count — one worker per shard.
+    pub workers: usize,
+    /// No heartbeat for this long ⇒ the shard is stale and reassigned.
+    /// The lease protocol's granularity is whole seconds, so this is
+    /// rounded *up* to seconds (min 1 s) before use.
+    pub lease_ttl: Duration,
+    /// Relaunches allowed per shard before the fleet run fails.
+    pub max_restarts: usize,
+    /// Scheduler poll interval.
+    pub poll: Duration,
+    /// Names the lease directory; defaults to the campaign name.
+    pub run_id: String,
+    pub out_dir: PathBuf,
+    /// Shared trace store root (`None` disables the store, and leases
+    /// fall back to living under the output directory).
+    pub store: Option<PathBuf>,
+    /// Chaos injection: this shard's first attempt runs with
+    /// `--max-points 1`, so it dies mid-shard and exercises the
+    /// recovery path (CI smoke tests; `--chaos-kill` on the CLI).
+    pub chaos_kill: Option<usize>,
+}
+
+impl FleetOptions {
+    pub fn new(spec: &CampaignSpec, out_dir: PathBuf) -> Self {
+        let defaults = spec.fleet.clone().unwrap_or_default();
+        Self {
+            workers: defaults.workers,
+            lease_ttl: Duration::from_secs(defaults.lease_ttl_secs),
+            max_restarts: defaults.max_restarts,
+            poll: Duration::from_millis(200),
+            run_id: spec.name.clone(),
+            store: Some(out_dir.join("store")),
+            out_dir,
+            chaos_kill: None,
+        }
+    }
+
+    /// Where this run's leases (and cancel marker) live.
+    pub fn lease_dir(&self) -> PathBuf {
+        lease_dir_of(&self.out_dir, self.store.as_deref(), &self.run_id)
+    }
+}
+
+/// Lease directory of a run: `<store root>/fleet/<run-id>` (falling
+/// back to the output dir without a store — both are shared across the
+/// fleet's hosts, which is all that matters).
+pub fn lease_dir_of(out_dir: &Path, store: Option<&Path>, run_id: &str) -> PathBuf {
+    store.unwrap_or(out_dir).join("fleet").join(run_id)
+}
+
+/// The cancel marker inside a lease directory: `occamy fleet cancel`
+/// creates it, a running scheduler stops (and kills its workers) at the
+/// next poll, and a fresh `fleet run` clears it on startup.
+pub fn cancel_path(lease_dir: &Path) -> PathBuf {
+    lease_dir.join("cancel")
+}
+
+/// How one shard fared across the whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardOutcome {
+    pub shard: Shard,
+    /// Relaunches this shard needed (0 = first worker finished it).
+    pub restarts: usize,
+}
+
+/// Outcome of a completed [`run`]: merged results plus provenance.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub run_id: String,
+    pub shards: Vec<ShardOutcome>,
+    /// Merged, input-ordered results — bit-identical to
+    /// [`campaign::run_single`].
+    pub results: SweepResults,
+    /// The merged JSONL stream on disk.
+    pub merged: PathBuf,
+    /// Points the streamed lines label as freshly simulated, across
+    /// every attempt of every shard.
+    pub sims: usize,
+    /// Points labelled as store/cache hits.
+    pub hits: usize,
+}
+
+impl FleetReport {
+    pub fn restarts(&self) -> usize {
+        self.shards.iter().map(|s| s.restarts).sum()
+    }
+}
+
+impl std::fmt::Display for FleetReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "fleet {:?}: {} shard(s) complete, {} restart(s)",
+            self.run_id,
+            self.shards.len(),
+            self.restarts()
+        )?;
+        write!(
+            f,
+            "merged {} point(s) ({} fresh simulation(s), {} store/cache hit(s)) -> {}",
+            self.results.len(),
+            self.sims,
+            self.hits,
+            self.merged.display()
+        )
+    }
+}
+
+enum Slot {
+    Running {
+        handle: Box<dyn WorkerHandle>,
+        attempt: usize,
+        /// Last lease `seq` observed, if any.
+        last_seq: Option<u64>,
+        /// When the lease last advanced (or the worker launched) — on
+        /// the *scheduler's* monotonic clock, so multi-host clock skew
+        /// cannot fake liveness.
+        last_advance: Instant,
+    },
+    Done {
+        restarts: usize,
+    },
+}
+
+enum Verdict {
+    Keep,
+    Exited { success: bool },
+    Stale { silent_for: Duration },
+    Foreign { other_run: String },
+}
+
+struct Scheduler<'a> {
+    spec: &'a CampaignSpec,
+    spec_path: &'a Path,
+    launcher: &'a dyn Launcher,
+    opts: &'a FleetOptions,
+    fp: String,
+    total: usize,
+    lease_dir: PathBuf,
+    cancel: PathBuf,
+    shards: Vec<Shard>,
+    slots: Vec<Slot>,
+}
+
+impl Scheduler<'_> {
+    /// The staleness window, rounded *up* to whole seconds — the same
+    /// value workers receive as their lease TTL, so the heartbeat
+    /// period (TTL/4) always fits inside the window with 4x margin no
+    /// matter what sub-second `FleetOptions.lease_ttl` a caller picks.
+    fn staleness_ttl(&self) -> Duration {
+        let ttl = self.opts.lease_ttl;
+        Duration::from_secs((ttl.as_secs() + u64::from(ttl.subsec_nanos() > 0)).max(1))
+    }
+
+    fn task(&self, shard: Shard, attempt: usize) -> WorkerTask {
+        let ttl_secs = self.staleness_ttl().as_secs();
+        WorkerTask {
+            spec_path: self.spec_path.to_path_buf(),
+            shard,
+            out_dir: self.opts.out_dir.clone(),
+            store: self.opts.store.clone(),
+            lease_path: self.lease_dir.join(lease::file_name(shard)),
+            lease_ttl_secs: ttl_secs,
+            run_id: self.opts.run_id.clone(),
+            attempt,
+            max_points: (self.opts.chaos_kill == Some(shard.index) && attempt == 0).then_some(1),
+        }
+    }
+
+    fn drive(&mut self) -> anyhow::Result<()> {
+        let tasks: Vec<WorkerTask> = self.shards.iter().map(|&s| self.task(s, 0)).collect();
+        for task in tasks {
+            let handle = self.launcher.launch(&task)?;
+            self.slots.push(Slot::Running {
+                handle,
+                attempt: 0,
+                last_seq: None,
+                last_advance: Instant::now(),
+            });
+        }
+        loop {
+            anyhow::ensure!(
+                !self.cancel.exists(),
+                "fleet {:?} cancelled via {} (workers stopped; remove the marker or start a new `fleet run` to continue)",
+                self.opts.run_id,
+                self.cancel.display()
+            );
+            if self.slots.iter().all(|s| matches!(s, Slot::Done { .. })) {
+                return Ok(());
+            }
+            for i in 0..self.slots.len() {
+                self.step(i)?;
+            }
+            std::thread::sleep(self.opts.poll);
+        }
+    }
+
+    /// Poll one shard's worker and apply the resulting transition.
+    fn step(&mut self, i: usize) -> anyhow::Result<()> {
+        let shard = self.shards[i];
+        let lease_path = self.lease_dir.join(lease::file_name(shard));
+        let ttl = self.staleness_ttl();
+        let run_id = self.opts.run_id.clone();
+        let verdict = match &mut self.slots[i] {
+            Slot::Done { .. } => Verdict::Keep,
+            Slot::Running {
+                handle,
+                attempt,
+                last_seq,
+                last_advance,
+            } => match handle.poll()? {
+                WorkerState::Exited { success } => Verdict::Exited { success },
+                WorkerState::Running => {
+                    match lease::read(&lease_path) {
+                        Some(l) if l.run_id != run_id => Verdict::Foreign { other_run: l.run_id },
+                        observed => {
+                            // Only a *changing* seq from the attempt we
+                            // are tracking proves liveness: a predecessor
+                            // attempt that survived kill() (possible
+                            // behind a remote launcher) must not fake a
+                            // heartbeat for its dead replacement. None
+                            // (not written yet / torn read) never counts.
+                            let seq = observed.filter(|l| l.attempt == *attempt).map(|l| l.seq);
+                            if seq.is_some() && seq != *last_seq {
+                                *last_seq = seq;
+                                *last_advance = Instant::now();
+                            }
+                            let silent_for = last_advance.elapsed();
+                            if silent_for >= ttl {
+                                Verdict::Stale { silent_for }
+                            } else {
+                                Verdict::Keep
+                            }
+                        }
+                    }
+                }
+            },
+        };
+        match verdict {
+            Verdict::Keep => Ok(()),
+            Verdict::Foreign { other_run } => anyhow::bail!(
+                "lease {} belongs to fleet run {other_run:?}, this run is {:?} — two fleets are sharing one lease directory; pick distinct --run-id values",
+                lease_path.display(),
+                self.opts.run_id
+            ),
+            Verdict::Exited { success } => {
+                let done = self.done_points(shard)?;
+                let owned = shard.indices(self.total).len();
+                if success && done >= owned {
+                    self.finish_slot(i);
+                    Ok(())
+                } else {
+                    self.restart(
+                        i,
+                        &format!(
+                            "worker exited {} with {done}/{owned} points done",
+                            if success { "cleanly" } else { "with failure" }
+                        ),
+                    )
+                }
+            }
+            Verdict::Stale { silent_for } => self.restart(
+                i,
+                &format!(
+                    "no heartbeat for {}ms (lease ttl {}ms)",
+                    silent_for.as_millis(),
+                    ttl.as_millis()
+                ),
+            ),
+        }
+    }
+
+    /// Points of `shard` currently in its output file.
+    fn done_points(&self, shard: Shard) -> anyhow::Result<usize> {
+        let path = self.opts.out_dir.join(stream::shard_file_name(&self.spec.name, shard));
+        Ok(stream::read_shard(&path, &self.fp)?.records.len())
+    }
+
+    fn finish_slot(&mut self, i: usize) {
+        let slot = std::mem::replace(&mut self.slots[i], Slot::Done { restarts: 0 });
+        let Slot::Running { mut handle, attempt, .. } = slot else {
+            return;
+        };
+        // Reaps the exited local child; a no-op for remote handles.
+        handle.kill();
+        self.slots[i] = Slot::Done { restarts: attempt };
+        println!(
+            "fleet: shard {} complete{}",
+            self.shards[i],
+            if attempt > 0 {
+                format!(" (after {attempt} restart(s))")
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    /// Kill shard `i`'s worker and relaunch it — or fail the whole run
+    /// once the shard's restart budget is spent.
+    fn restart(&mut self, i: usize, reason: &str) -> anyhow::Result<()> {
+        let shard = self.shards[i];
+        let slot = std::mem::replace(&mut self.slots[i], Slot::Done { restarts: 0 });
+        let Slot::Running { mut handle, attempt, .. } = slot else {
+            unreachable!("restart is only reached from a running slot");
+        };
+        handle.kill();
+        anyhow::ensure!(
+            attempt < self.opts.max_restarts,
+            "shard {shard} ({}): {reason}, restart budget exhausted ({} restart(s))",
+            handle.describe(),
+            self.opts.max_restarts
+        );
+        println!(
+            "fleet: shard {shard} ({}) {reason}; relaunching (restart {}/{})",
+            handle.describe(),
+            attempt + 1,
+            self.opts.max_restarts
+        );
+        let task = self.task(shard, attempt + 1);
+        self.slots[i] = Slot::Running {
+            handle: self.launcher.launch(&task)?,
+            attempt: attempt + 1,
+            last_seq: None,
+            last_advance: Instant::now(),
+        };
+        Ok(())
+    }
+
+    fn kill_all(&mut self) {
+        for slot in &mut self.slots {
+            if let Slot::Running { handle, .. } = slot {
+                handle.kill();
+            }
+        }
+    }
+}
+
+/// Run a whole campaign automatically: plan `opts.workers` shards,
+/// launch a worker per shard through `launcher`, restart dead or
+/// stalled workers (up to `opts.max_restarts` each), and auto-merge
+/// when the last shard completes. The merged [`SweepResults`] are
+/// bit-identical to [`campaign::run_single`] — crash recovery included,
+/// because workers resume from their streamed output and merge
+/// deduplicates deterministically.
+///
+/// On any failure (restart budget exhausted, cancel marker, launcher
+/// error) every still-running worker is killed before the error
+/// returns; completed points stay on disk, so a later run resumes
+/// instead of re-simulating.
+pub fn run(
+    spec: &CampaignSpec,
+    spec_path: &Path,
+    launcher: &dyn Launcher,
+    opts: &FleetOptions,
+) -> anyhow::Result<FleetReport> {
+    anyhow::ensure!(opts.workers > 0, "a fleet needs at least one worker");
+    let lease_dir = opts.lease_dir();
+    std::fs::create_dir_all(&lease_dir)
+        .map_err(|e| anyhow::anyhow!("create lease dir {}: {e}", lease_dir.display()))?;
+    let cancel = cancel_path(&lease_dir);
+    // Starting a new run is fresh consent: clear a leftover marker.
+    let _ = std::fs::remove_file(&cancel);
+    let shards: Vec<Shard> = (0..opts.workers)
+        .map(|i| Shard::new(i, opts.workers))
+        .collect::<anyhow::Result<_>>()?;
+    let mut sched = Scheduler {
+        spec,
+        spec_path,
+        launcher,
+        opts,
+        fp: store::fingerprint(&spec.config),
+        total: spec.expand().len(),
+        lease_dir,
+        cancel,
+        shards,
+        slots: Vec::new(),
+    };
+    let driven = sched.drive();
+    if driven.is_err() {
+        sched.kill_all();
+    }
+    driven?;
+
+    // One pass serves both the merge and the summary tallies — the
+    // shard files are trace-heavy, re-reading them would double the
+    // end-of-run cost.
+    let merged = campaign::merge_report(spec, opts.workers, &opts.out_dir)?;
+    let shards = sched
+        .shards
+        .iter()
+        .zip(&sched.slots)
+        .map(|(&shard, slot)| ShardOutcome {
+            shard,
+            restarts: match slot {
+                Slot::Done { restarts } => *restarts,
+                Slot::Running { .. } => 0,
+            },
+        })
+        .collect();
+    Ok(FleetReport {
+        run_id: opts.run_id.clone(),
+        shards,
+        merged: opts.out_dir.join(stream::merged_file_name(&spec.name)),
+        results: merged.results,
+        sims: merged.sims,
+        hits: merged.hits,
+    })
+}
+
+/// One shard's lease as seen right now.
+#[derive(Debug, Clone)]
+pub struct ShardLease {
+    pub lease: Option<Lease>,
+    /// Wall-clock age of the lease file (mtime-based — a display hint,
+    /// not the scheduler's staleness source).
+    pub age: Option<Duration>,
+}
+
+impl ShardLease {
+    /// A running lease older than its own TTL. Done leases never go
+    /// stale.
+    pub fn is_stale(&self) -> bool {
+        match (&self.lease, self.age) {
+            (Some(l), Some(age)) => l.state == LeaseState::Running && age.as_secs() > l.ttl_secs,
+            _ => false,
+        }
+    }
+}
+
+/// Per-shard progress plus lease/staleness view — the one renderer
+/// behind both `occamy campaign status` and `occamy fleet status`.
+#[derive(Debug, Clone)]
+pub struct StatusView {
+    pub run_id: String,
+    pub campaign: CampaignStatus,
+    /// Parallel to `campaign.shards`.
+    pub leases: Vec<ShardLease>,
+    /// Traces persisted in the shared store for this config, when a
+    /// store root was given and exists.
+    pub traces_on_disk: Option<usize>,
+    /// A cancel marker is present in the lease directory.
+    pub cancel_requested: bool,
+}
+
+impl StatusView {
+    pub fn is_complete(&self) -> bool {
+        self.campaign.is_complete()
+    }
+
+    pub fn stale_shards(&self) -> usize {
+        self.leases.iter().filter(|l| l.is_stale()).count()
+    }
+}
+
+impl std::fmt::Display for StatusView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{} of {} points complete{}",
+            self.campaign.done(),
+            self.campaign.total_points,
+            if self.is_complete() { " — ready to merge" } else { "" }
+        )?;
+        for (s, sl) in self.campaign.shards.iter().zip(&self.leases) {
+            write!(f, "  {}", s.summary())?;
+            match &sl.lease {
+                None => {}
+                Some(l) if l.run_id != self.run_id => {
+                    write!(f, " [lease: foreign run {:?}]", l.run_id)?;
+                }
+                Some(l) => match l.state {
+                    LeaseState::Done => write!(f, " [lease: done, attempt {}]", l.attempt)?,
+                    LeaseState::Running if sl.is_stale() => write!(
+                        f,
+                        " [lease: STALE — last heartbeat {}s ago, ttl {}s, attempt {}]",
+                        sl.age.map(|a| a.as_secs()).unwrap_or(0),
+                        l.ttl_secs,
+                        l.attempt
+                    )?,
+                    LeaseState::Running => write!(f, " [lease: alive, attempt {}]", l.attempt)?,
+                },
+            }
+            writeln!(f)?;
+        }
+        if let Some(n) = self.traces_on_disk {
+            writeln!(f, "  store: {n} trace(s) on disk")?;
+        }
+        if self.cancel_requested {
+            writeln!(f, "  cancel requested — a running scheduler stops at its next poll")?;
+        }
+        Ok(())
+    }
+}
+
+/// Assemble the shared status view: campaign progress (per-shard
+/// done/sims/hits from the streamed JSONL) plus each shard's lease.
+pub fn status(
+    spec: &CampaignSpec,
+    workers: usize,
+    out_dir: &Path,
+    store_root: Option<&Path>,
+    run_id: &str,
+) -> anyhow::Result<StatusView> {
+    let campaign_status = campaign::status(spec, workers, out_dir)?;
+    let dir = lease_dir_of(out_dir, store_root, run_id);
+    let leases = campaign_status
+        .shards
+        .iter()
+        .map(|s| {
+            let path = dir.join(lease::file_name(s.shard));
+            ShardLease {
+                lease: lease::read(&path),
+                age: lease::age(&path),
+            }
+        })
+        .collect();
+    let traces_on_disk = store_root
+        .filter(|root| root.exists())
+        .map(|root| store::traces_in(root, &store::fingerprint(&spec.config)));
+    Ok(StatusView {
+        run_id: run_id.to_string(),
+        campaign: campaign_status,
+        leases,
+        traces_on_disk,
+        cancel_requested: cancel_path(&dir).exists(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn temp_out(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("occamy-fleet-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn spec(name: &str, gap: u64) -> CampaignSpec {
+        CampaignSpec::parse(&format!(
+            "[campaign]\nname = \"{name}\"\n[grid]\nkernels = [\"axpy:96\", \"atax:16\"]\nclusters = [1, 4]\n\
+             routines = [\"baseline\", \"ideal\"]\n[timing]\nhost_ipi_issue_gap = {gap}\n"
+        ))
+        .unwrap()
+    }
+
+    fn opts(spec: &CampaignSpec, out: PathBuf) -> FleetOptions {
+        let mut o = FleetOptions::new(spec, out);
+        o.poll = Duration::from_millis(10);
+        o.store = None; // cache-only: keep unit tests off the disk store
+        o
+    }
+
+    /// Runs shards in-process (via `campaign::run_shard`) instead of
+    /// spawning subprocesses; optionally fails a shard's first attempt.
+    struct InProcess {
+        spec: CampaignSpec,
+        fail_first_attempt_of: Option<usize>,
+        launches: Arc<AtomicUsize>,
+    }
+
+    struct InProcessWorker {
+        spec: CampaignSpec,
+        shard: Shard,
+        out: PathBuf,
+        fail: bool,
+        ran: bool,
+    }
+
+    impl WorkerHandle for InProcessWorker {
+        fn poll(&mut self) -> anyhow::Result<WorkerState> {
+            if self.fail {
+                return Ok(WorkerState::Exited { success: false });
+            }
+            if !self.ran {
+                campaign::run_shard(&self.spec, self.shard, &self.out, None)?;
+                self.ran = true;
+            }
+            Ok(WorkerState::Exited { success: true })
+        }
+
+        fn kill(&mut self) {}
+
+        fn describe(&self) -> String {
+            "in-process".into()
+        }
+    }
+
+    impl Launcher for InProcess {
+        fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+            self.launches.fetch_add(1, Ordering::Relaxed);
+            Ok(Box::new(InProcessWorker {
+                spec: self.spec.clone(),
+                shard: task.shard,
+                out: task.out_dir.clone(),
+                fail: self.fail_first_attempt_of == Some(task.shard.index) && task.attempt == 0,
+                ran: false,
+            }))
+        }
+    }
+
+    /// A worker that never exits and never heartbeats.
+    struct NeverExits {
+        launches: Arc<AtomicUsize>,
+    }
+
+    struct Immortal;
+
+    impl WorkerHandle for Immortal {
+        fn poll(&mut self) -> anyhow::Result<WorkerState> {
+            Ok(WorkerState::Running)
+        }
+        fn kill(&mut self) {}
+        fn describe(&self) -> String {
+            "immortal".into()
+        }
+    }
+
+    impl Launcher for NeverExits {
+        fn launch(&self, _task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+            self.launches.fetch_add(1, Ordering::Relaxed);
+            Ok(Box::new(Immortal))
+        }
+    }
+
+    #[test]
+    fn fleet_completes_and_merges_bit_identically_despite_a_failed_attempt() {
+        let spec = spec("fleet-unit-restart", 7001);
+        let out = temp_out("restart");
+        let mut o = opts(&spec, out);
+        o.workers = 2;
+        o.max_restarts = 1;
+        let launcher = InProcess {
+            spec: spec.clone(),
+            fail_first_attempt_of: Some(1),
+            launches: Arc::new(AtomicUsize::new(0)),
+        };
+        let report = run(&spec, Path::new("unused.toml"), &launcher, &o).unwrap();
+        assert_eq!(report.results, campaign::run_single(&spec));
+        assert_eq!(report.shards.len(), 2);
+        assert_eq!(report.shards[0].restarts, 0);
+        assert_eq!(report.shards[1].restarts, 1, "the failed attempt was relaunched");
+        assert_eq!(report.restarts(), 1);
+        assert_eq!(launcher.launches.load(Ordering::Relaxed), 3);
+        assert!(report.merged.exists());
+        // Cache-only run: every line is labelled, nothing read from disk.
+        assert_eq!(report.sims + report.hits, report.results.len());
+        // The shared renderer sees completion (no store, no leases —
+        // the in-process workers never wrote any).
+        let view = status(&spec, 2, &o.out_dir, None, &o.run_id).unwrap();
+        assert!(view.is_complete());
+        assert_eq!(view.stale_shards(), 0);
+        assert!(view.to_string().contains("ready to merge"));
+    }
+
+    #[test]
+    fn more_workers_than_points_still_merges() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"fleet-unit-tiny\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [2]\n\
+             routines = [\"ideal\"]\n[timing]\nhost_ipi_issue_gap = 7002\n",
+        )
+        .unwrap();
+        assert_eq!(spec.expand().len(), 1);
+        let out = temp_out("tiny");
+        let mut o = opts(&spec, out);
+        o.workers = 3;
+        let launcher = InProcess {
+            spec: spec.clone(),
+            fail_first_attempt_of: None,
+            launches: Arc::new(AtomicUsize::new(0)),
+        };
+        let report = run(&spec, Path::new("unused.toml"), &launcher, &o).unwrap();
+        assert_eq!(report.results, campaign::run_single(&spec));
+        assert_eq!(report.restarts(), 0);
+    }
+
+    #[test]
+    fn a_shard_that_keeps_failing_exhausts_its_restart_budget() {
+        let spec = spec("fleet-unit-budget", 7003);
+        let out = temp_out("budget");
+        let mut o = opts(&spec, out);
+        o.workers = 2;
+        o.max_restarts = 0;
+        let launcher = InProcess {
+            spec: spec.clone(),
+            fail_first_attempt_of: Some(0),
+            launches: Arc::new(AtomicUsize::new(0)),
+        };
+        let err = run(&spec, Path::new("unused.toml"), &launcher, &o).unwrap_err().to_string();
+        assert!(err.contains("restart budget exhausted"), "{err}");
+        assert!(err.contains("shard 0/2"), "{err}");
+    }
+
+    #[test]
+    fn a_silent_worker_goes_stale_after_the_ttl() {
+        let spec = spec("fleet-unit-stale", 7004);
+        let out = temp_out("stale");
+        let mut o = opts(&spec, out);
+        o.workers = 1;
+        o.max_restarts = 0;
+        o.lease_ttl = Duration::from_millis(150);
+        let launcher = NeverExits {
+            launches: Arc::new(AtomicUsize::new(0)),
+        };
+        let err = run(&spec, Path::new("unused.toml"), &launcher, &o).unwrap_err().to_string();
+        assert!(err.contains("no heartbeat"), "{err}");
+    }
+
+    #[test]
+    fn a_heartbeating_worker_survives_the_ttl_and_cancel_stops_the_run() {
+        let spec = spec("fleet-unit-cancel", 7005);
+        let out = temp_out("cancel");
+        let mut o = opts(&spec, out);
+        o.workers = 1;
+        o.max_restarts = 0;
+        o.lease_ttl = Duration::from_millis(900);
+        let launches = Arc::new(AtomicUsize::new(0));
+        let launcher = NeverExits {
+            launches: Arc::clone(&launches),
+        };
+        // Heartbeat the worker's lease ourselves (ttl_secs 1 => 250 ms
+        // period, well under the scheduler's staleness window — 900 ms
+        // rounds up to 1 s).
+        let lease_path = o.lease_dir().join(lease::file_name(Shard::SINGLE));
+        let lease = Lease::new(o.run_id.clone(), Shard::SINGLE, 0, 1);
+        let hb = Heartbeat::start(lease_path, lease).unwrap();
+        let err = std::thread::scope(|s| {
+            let worker = s.spawn(|| run(&spec, Path::new("unused.toml"), &launcher, &o));
+            // Wait until the scheduler is live (it has launched), then
+            // outlast several TTLs to prove heartbeats keep it alive.
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while launches.load(Ordering::Relaxed) == 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            assert!(launches.load(Ordering::Relaxed) >= 1, "scheduler never launched");
+            std::thread::sleep(Duration::from_millis(2500));
+            std::fs::write(cancel_path(&o.lease_dir()), "cancel\n").unwrap();
+            worker.join().unwrap().unwrap_err().to_string()
+        });
+        drop(hb);
+        assert!(err.contains("cancelled"), "stale instead of cancelled? {err}");
+    }
+}

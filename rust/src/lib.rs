@@ -31,6 +31,15 @@
 //! and a merge/resume step whose output is bit-identical to a
 //! single-process run (`occamy campaign <run|merge|status|validate>`).
 //!
+//! [`fleet`] scales campaigns beyond one *operator*: a scheduler turns
+//! a spec plus a worker count into a fully automatic run — it launches
+//! `campaign run --shard i/N` workers through the [`fleet::Launcher`]
+//! seam (local subprocesses today, SSH/k8s tomorrow), tracks liveness
+//! via heartbeat lease files on the shared store, reassigns dead or
+//! stalled shards (resume makes that safe), and auto-merges when the
+//! last shard lands (`occamy fleet <run|status|watch|cancel>`, `[fleet]`
+//! spec table).
+//!
 //! Contention is a first-class axis: the coordinator dispatches up to
 //! `inflight` jobs concurrently on a deterministic virtual timeline
 //! ([`coordinator::OccupancyModel`] — free JCU-slot allocation, shared
@@ -49,7 +58,7 @@
 //! |---|---|
 //! | SoC model | [`config`], [`cluster`], [`host`], [`mem`], [`noc`], [`dma`], [`interrupt`] |
 //! | simulation | [`sim`] (DES engine, traces), [`offload`] (routines §4), [`kernels`] (workloads §5.1) |
-//! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`exp`] (Figs. 7-12, interference), [`bench`] |
+//! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`fleet`] (multi-host scheduler: leases, recovery, auto-merge), [`exp`] (Figs. 7-12, interference), [`bench`] |
 //! | modeling | [`model`] (analytical runtime model §5.6) |
 //! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`runtime`] (PJRT numerics, JSON) |
 //! | support | [`rng`] |
@@ -64,6 +73,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dma;
 pub mod exp;
+pub mod fleet;
 pub mod host;
 pub mod interrupt;
 pub mod kernels;

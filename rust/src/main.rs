@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F]
 //!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
+//!   fleet <run|status|watch|cancel> --spec F [--workers N] [--out DIR]
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
 //!   interfere --kernel K --size N [--clusters C] [--inflight LIST] [--jobs N] [--gap G]
 //!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
@@ -10,17 +11,22 @@
 //!   model --kernel K --size N [--config F]
 //!   config-dump
 //!
+//! Unknown flags are rejected per subcommand — a typo'd `--flag` fails
+//! fast instead of silently no-opping.
+//!
 //! The binary is self-contained after `make artifacts`: python never runs
 //! on the request path.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::time::Duration;
 
 use occamy_offload::campaign::{self, CampaignSpec, Shard, TraceStore};
 use occamy_offload::config::Config;
 use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Planner};
 use occamy_offload::exp::{self, Table};
+use occamy_offload::fleet::{self, FleetOptions, Heartbeat, Lease, LocalLauncher};
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::OffloadModel;
 use occamy_offload::offload::RoutineKind;
@@ -82,6 +88,44 @@ impl Args {
             Some(v) => Ok(v.parse()?),
         }
     }
+
+    /// Strict per-subcommand validation: every given `--flag` must be in
+    /// `allowed`, and at most `max_positional` bare arguments may
+    /// appear. A typo'd flag fails fast with the usage text instead of
+    /// silently no-opping.
+    fn reject_unknown(
+        &self,
+        what: &str,
+        allowed: &[&str],
+        max_positional: usize,
+    ) -> anyhow::Result<()> {
+        if self.has("help") {
+            anyhow::bail!("{USAGE}");
+        }
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|f| !allowed.contains(f))
+            .collect();
+        unknown.sort_unstable();
+        if !unknown.is_empty() {
+            let unknown: Vec<String> = unknown.iter().map(|f| format!("--{f}")).collect();
+            let allowed: Vec<String> = allowed.iter().map(|f| format!("--{f}")).collect();
+            anyhow::bail!(
+                "unknown flag(s) for `{what}`: {}\nallowed: {}\n{USAGE}",
+                unknown.join(", "),
+                if allowed.is_empty() { "(none)".to_string() } else { allowed.join(", ") }
+            );
+        }
+        if self.positional.len() > max_positional {
+            anyhow::bail!(
+                "unexpected argument {:?} for `{what}`\n{USAGE}",
+                self.positional[max_positional]
+            );
+        }
+        Ok(())
+    }
 }
 
 fn load_config(a: &Args) -> anyhow::Result<Config> {
@@ -97,12 +141,33 @@ fn artifacts_dir(a: &Args) -> PathBuf {
         .unwrap_or_else(default_artifacts_dir)
 }
 
+/// One resolution of the shared store root for every campaign/fleet
+/// subcommand: `--no-store` disables it, `--store` overrides it, and the
+/// default is `<out>/store` — the same root the fleet's lease directory
+/// hangs off, so run/status/fleet always look at the same place.
+fn resolve_store_root(a: &Args, out_dir: &Path) -> Option<PathBuf> {
+    if a.has("no-store") {
+        None
+    } else {
+        let root = a
+            .flag("store")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| out_dir.join("store"));
+        Some(root)
+    }
+}
+
 /// Kernel family + single size, via the campaign token grammar (one
 /// mapping for the CLI and campaign specs; `matmul:S` is a cube,
 /// `atax:S` square, `covariance:S` is m=S n=2S, `bfs:S` 4 levels).
 fn job_spec(kernel: &str, size: u64) -> anyhow::Result<JobSpec> {
     occamy_offload::campaign::spec::parse_kernel(&format!("{kernel}:{size}"))
         .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// `fleet::status` with the view parameters a [`FleetOptions`] carries.
+fn fleet_status_of(spec: &CampaignSpec, opts: &FleetOptions) -> anyhow::Result<fleet::StatusView> {
+    fleet::status(spec, opts.workers, &opts.out_dir, opts.store.as_deref(), &opts.run_id)
 }
 
 fn emit(table: Table, csv: bool) {
@@ -113,12 +178,18 @@ fn emit(table: Table, csv: bool) {
     }
 }
 
-const USAGE: &str = "usage: occamy <experiment|campaign|sim|interfere|serve|validate-artifacts|model|config-dump> [options]
+const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serve|validate-artifacts|model|config-dump> [options]
   experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|interference|all> [--csv] [--config F]
-  campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store]
+  campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store] [--max-points N]
+                    [--lease FILE] [--lease-ttl SECS] [--run-id ID] [--attempt K]
   campaign merge    --spec F [--shards N] [--out DIR] [--verify] [--render FIG|interference] [--csv]
-  campaign status   --spec F [--shards N] [--out DIR]
+  campaign status   --spec F [--shards N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   campaign validate --spec F
+  fleet run    --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--lease-ttl SECS]
+               [--max-restarts K] [--poll-ms MS] [--run-id ID] [--chaos-kill SHARD]
+  fleet status --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
+  fleet watch  --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID] [--interval SECS]
+  fleet cancel --spec F [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
   interfere --kernel K --size N [--clusters C] [--routine R] [--inflight 1,2,4,8] [--jobs 16] [--gap 0] [--csv]
   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
@@ -136,12 +207,14 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
     match cmd {
         "experiment" => cmd_experiment(&a),
         "campaign" => cmd_campaign(&a),
+        "fleet" => cmd_fleet(&a),
         "sim" => cmd_sim(&a),
         "interfere" => cmd_interfere(&a),
         "serve" => cmd_serve(&a),
         "validate-artifacts" => cmd_validate(&a),
         "model" => cmd_model(&a),
         "config-dump" => {
+            a.reject_unknown("config-dump", &[], 0)?;
             print!("{}", Config::default().to_toml());
             Ok(())
         }
@@ -154,6 +227,7 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("experiment", &["csv", "config"], 1)?;
     let which = a.positional.first().map(String::as_str).unwrap_or("all");
     let cfg = load_config(a)?;
     let csv = a.has("csv");
@@ -232,6 +306,28 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
         .first()
         .map(String::as_str)
         .ok_or_else(|| anyhow::anyhow!("usage: occamy campaign <run|merge|status|validate> --spec FILE"))?;
+    // Flags are validated before anything touches the filesystem, so a
+    // typo fails fast even when --spec is wrong too.
+    const RUN_FLAGS: &[&str] = &[
+        "spec",
+        "shard",
+        "out",
+        "store",
+        "no-store",
+        "max-points",
+        "lease",
+        "lease-ttl",
+        "run-id",
+        "attempt",
+    ];
+    let allowed: &[&str] = match action {
+        "validate" => &["spec"],
+        "run" => RUN_FLAGS,
+        "status" => &["spec", "shards", "out", "store", "no-store", "run-id"],
+        "merge" => &["spec", "shards", "out", "verify", "render", "csv"],
+        other => anyhow::bail!("unknown campaign action {other:?} (run, merge, status or validate)"),
+    };
+    a.reject_unknown(&format!("campaign {action}"), allowed, 1)?;
     let spec_path = a
         .flag("spec")
         .ok_or_else(|| anyhow::anyhow!("campaign {action} requires --spec FILE"))?;
@@ -250,16 +346,37 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                 Some(s) => Shard::parse(s)?,
                 None => Shard::SINGLE,
             };
-            let store = if a.has("no-store") {
-                None
-            } else {
-                let root = a
-                    .flag("store")
-                    .map(PathBuf::from)
-                    .unwrap_or_else(|| out_dir.join("store"));
-                Some(TraceStore::open(root)?)
+            let store = match resolve_store_root(a, &out_dir) {
+                None => None,
+                Some(root) => Some(TraceStore::open(root)?),
             };
-            let report = campaign::run_shard(&spec, shard, &out_dir, store.as_ref())?;
+            let max_points = match a.flag("max-points") {
+                None => None,
+                Some(v) => {
+                    let n: usize = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad --max-points {v:?}: {e}"))?;
+                    anyhow::ensure!(n > 0, "--max-points must be >= 1");
+                    Some(n)
+                }
+            };
+            // Under a fleet scheduler the worker heartbeats its own
+            // lease: liveness is observed purely through the shared
+            // filesystem, so the scheduler needs no host access.
+            let heartbeat = match a.flag("lease") {
+                None => None,
+                Some(path) => {
+                    let ttl = a.u64_flag("lease-ttl", 30)?.max(1);
+                    let attempt = a.u64_flag("attempt", 0)? as usize;
+                    let run_id = a.flag("run-id").unwrap_or(&spec.name).to_string();
+                    Some(Heartbeat::start(
+                        PathBuf::from(path),
+                        Lease::new(run_id, shard, attempt, ttl),
+                    )?)
+                }
+            };
+            let report =
+                campaign::run_shard_limited(&spec, shard, &out_dir, store.as_ref(), max_points)?;
             println!("{report}");
             if let Some(s) = &store {
                 let st = s.stats();
@@ -268,10 +385,32 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                     st.memory_hits, st.disk_hits, st.simulations
                 );
             }
+            if report.is_complete() {
+                if let Some(hb) = heartbeat {
+                    hb.finish()?;
+                }
+            } else {
+                // Dropping the heartbeat leaves a Running lease that
+                // goes stale — to a fleet scheduler this exit is
+                // indistinguishable from a mid-shard kill, which is the
+                // point of --max-points chaos runs.
+                drop(heartbeat);
+                anyhow::bail!(
+                    "shard {} incomplete: --max-points stopped it at {} of {} owned points; re-run to resume",
+                    report.shard,
+                    report.resumed + report.executed,
+                    report.owned
+                );
+            }
         }
         "status" => {
             let shards = a.u64_flag("shards", 1)? as usize;
-            print!("{}", campaign::status(&spec, shards, &out_dir)?);
+            let store_root = resolve_store_root(a, &out_dir);
+            let run_id = a.flag("run-id").unwrap_or(&spec.name);
+            print!(
+                "{}",
+                fleet::status(&spec, shards, &out_dir, store_root.as_deref(), run_id)?
+            );
         }
         "merge" => {
             let shards = a.u64_flag("shards", 1)? as usize;
@@ -317,12 +456,120 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                 }
             }
         }
-        other => anyhow::bail!("unknown campaign action {other:?} (run, merge, status or validate)"),
+        _ => unreachable!("actions validated above"),
+    }
+    Ok(())
+}
+
+/// `occamy fleet <run|status|watch|cancel>` — the multi-host campaign
+/// scheduler. `run` is fully automatic: plan shards, launch local
+/// workers, recover dead/stalled shards, auto-merge.
+fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
+    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("usage: occamy fleet <run|status|watch|cancel> --spec FILE")
+    })?;
+    const RUN_FLAGS: &[&str] = &[
+        "spec",
+        "workers",
+        "out",
+        "store",
+        "no-store",
+        "lease-ttl",
+        "max-restarts",
+        "poll-ms",
+        "run-id",
+        "chaos-kill",
+    ];
+    let allowed: &[&str] = match action {
+        "run" => RUN_FLAGS,
+        "status" => &["spec", "workers", "out", "store", "no-store", "run-id"],
+        "watch" => &["spec", "workers", "out", "store", "no-store", "run-id", "interval"],
+        "cancel" => &["spec", "workers", "out", "store", "no-store", "run-id"],
+        other => anyhow::bail!("unknown fleet action {other:?} (run, status, watch or cancel)"),
+    };
+    a.reject_unknown(&format!("fleet {action}"), allowed, 1)?;
+    let spec_path = PathBuf::from(
+        a.flag("spec")
+            .ok_or_else(|| anyhow::anyhow!("fleet {action} requires --spec FILE"))?,
+    );
+    let spec = CampaignSpec::from_path(&spec_path)?;
+    let out_dir = a
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("campaign-out").join(&spec.name));
+    // Seed every parameter from the spec's [fleet] table (or the
+    // built-in defaults) exactly once, then layer flag overrides on top.
+    let mut opts = FleetOptions::new(&spec, out_dir);
+    opts.workers = a.u64_flag("workers", opts.workers as u64)? as usize;
+    anyhow::ensure!(opts.workers > 0, "--workers must be >= 1");
+    if let Some(id) = a.flag("run-id") {
+        opts.run_id = id.to_string();
+    }
+    opts.store = resolve_store_root(a, &opts.out_dir);
+    match action {
+        "run" => {
+            opts.lease_ttl =
+                Duration::from_secs(a.u64_flag("lease-ttl", opts.lease_ttl.as_secs())?.max(1));
+            opts.max_restarts = a.u64_flag("max-restarts", opts.max_restarts as u64)? as usize;
+            opts.poll =
+                Duration::from_millis(a.u64_flag("poll-ms", opts.poll.as_millis() as u64)?.max(10));
+            opts.chaos_kill = match a.flag("chaos-kill") {
+                None => None,
+                Some(v) => {
+                    let i: usize = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad --chaos-kill {v:?}: {e}"))?;
+                    anyhow::ensure!(
+                        i < opts.workers,
+                        "--chaos-kill {i} out of range (0..{})",
+                        opts.workers
+                    );
+                    Some(i)
+                }
+            };
+            let launcher = LocalLauncher::current_exe()?;
+            let report = fleet::run(&spec, &spec_path, &launcher, &opts)?;
+            println!("{report}");
+        }
+        "status" => {
+            print!("{}", fleet_status_of(&spec, &opts)?);
+        }
+        "watch" => {
+            let interval = Duration::from_secs(a.u64_flag("interval", 2)?.max(1));
+            loop {
+                let view = fleet_status_of(&spec, &opts)?;
+                print!("{view}");
+                use std::io::Write as _;
+                std::io::stdout().flush()?;
+                if view.is_complete() {
+                    break;
+                }
+                if view.cancel_requested {
+                    println!("cancel requested — no scheduler will finish this run; stopping watch");
+                    break;
+                }
+                std::thread::sleep(interval);
+                println!("---");
+            }
+        }
+        "cancel" => {
+            let dir = opts.lease_dir();
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| anyhow::anyhow!("create {}: {e}", dir.display()))?;
+            let marker = fleet::cancel_path(&dir);
+            std::fs::write(&marker, "cancelled\n")?;
+            println!("cancel requested: {}", marker.display());
+            println!(
+                "a running scheduler kills its workers at the next poll; `fleet run` clears the marker on startup"
+            );
+        }
+        _ => unreachable!("actions validated above"),
     }
     Ok(())
 }
 
 fn cmd_sim(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("sim", &["kernel", "size", "clusters", "routine", "config"], 0)?;
     let cfg = load_config(a)?;
     let kernel = a.flag("kernel").unwrap_or("axpy");
     let size = a.u64_flag("size", 1024)?;
@@ -375,6 +622,11 @@ fn cmd_sim(a: &Args) -> anyhow::Result<()> {
 /// jobs-in-flight window swept over `--inflight` (comma-separated), and
 /// print the latency decomposition per window.
 fn cmd_interfere(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown(
+        "interfere",
+        &["kernel", "size", "clusters", "routine", "inflight", "jobs", "gap", "csv", "config"],
+        0,
+    )?;
     let cfg = load_config(a)?;
     let kernel = a.flag("kernel").unwrap_or("axpy");
     let size = a.u64_flag("size", 1024)?;
@@ -422,6 +674,11 @@ fn cmd_interfere(a: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown(
+        "serve",
+        &["jobs", "artifacts", "timing-only", "seed", "clusters", "inflight", "gap", "config"],
+        0,
+    )?;
     let cfg = load_config(a)?;
     let n_jobs = a.u64_flag("jobs", 64)?;
     let seed = a.u64_flag("seed", 42)?;
@@ -495,6 +752,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_validate(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("validate-artifacts", &["artifacts"], 0)?;
     let dir = artifacts_dir(a);
     let rt = PjrtRuntime::new(&dir)?;
     println!(
@@ -550,6 +808,7 @@ fn spec_for_entry(kernel: &str, params: &HashMap<String, u64>) -> anyhow::Result
 }
 
 fn cmd_model(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("model", &["kernel", "size", "config"], 0)?;
     let cfg = load_config(a)?;
     let kernel = a.flag("kernel").unwrap_or("axpy");
     let size = a.u64_flag("size", 1024)?;
@@ -575,4 +834,84 @@ fn cmd_model(a: &Args) -> anyhow::Result<()> {
         plan.placement, plan.estimate
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Args {
+        Args::parse(&list.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parse_splits_positionals_flags_and_values() {
+        let a = args(&["run", "--spec", "f.toml", "--verify", "--shards", "2"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.flag("spec"), Some("f.toml"));
+        assert_eq!(a.flag("shards"), Some("2"));
+        assert!(a.has("verify"));
+        assert!(!a.has("csv"));
+    }
+
+    #[test]
+    fn reject_unknown_names_the_typo_and_the_allowed_set() {
+        let a = args(&["--warp", "9", "--spec", "f.toml"]);
+        let err = a.reject_unknown("campaign run", &["spec"], 0);
+        let err = err.unwrap_err().to_string();
+        assert!(err.contains("unknown flag(s) for `campaign run`: --warp"), "{err}");
+        assert!(err.contains("allowed: --spec"), "{err}");
+        assert!(err.contains("usage:"), "{err}");
+        // The allowed set passes.
+        let a = args(&["--spec", "f.toml"]);
+        a.reject_unknown("campaign run", &["spec"], 0).unwrap();
+    }
+
+    #[test]
+    fn reject_unknown_catches_extra_positionals_and_serves_help() {
+        let a = args(&["run", "stray"]);
+        let err = a.reject_unknown("fleet", &[], 1).unwrap_err().to_string();
+        assert!(err.contains("unexpected argument \"stray\""), "{err}");
+        let err = args(&["--help"]).reject_unknown("sim", &[], 0).unwrap_err().to_string();
+        assert!(err.starts_with("usage:"), "{err}");
+    }
+
+    #[test]
+    fn every_subcommand_rejects_a_bogus_flag() {
+        for cmd in [
+            "experiment",
+            "sim",
+            "interfere",
+            "serve",
+            "validate-artifacts",
+            "model",
+            "config-dump",
+        ] {
+            let raw: Vec<String> = [cmd, "--definitely-bogus-flag", "1"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            let err = run(&raw).unwrap_err().to_string();
+            assert!(
+                err.contains("--definitely-bogus-flag"),
+                "{cmd}: {err}"
+            );
+        }
+        // campaign/fleet validate flags per action, before loading the
+        // spec, so a typo'd flag is caught even without a spec file.
+        for cmd in ["campaign", "fleet"] {
+            for action in ["run", "status"] {
+                let raw: Vec<String> = [cmd, action, "--definitely-bogus-flag", "1"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+                let err = run(&raw).unwrap_err().to_string();
+                assert!(err.contains("--definitely-bogus-flag"), "{cmd} {action}: {err}");
+            }
+        }
+        let err = run(&["fleet".to_string(), "run".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("--spec"), "{err}");
+        let err = run(&["fleet".to_string(), "frobnicate".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("unknown fleet action"), "{err}");
+    }
 }

@@ -1,0 +1,138 @@
+//! Black-box tests of the `occamy` CLI surface: strict per-subcommand
+//! flag rejection (a typo'd `--flag` must fail, not silently no-op) and
+//! the fleet worker flags `campaign run` grew for the scheduler.
+
+use std::process::{Command, Output};
+
+fn occamy<S: AsRef<std::ffi::OsStr>>(args: &[S]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_occamy"))
+        .args(args)
+        .output()
+        .expect("spawn occamy")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn unknown_flags_fail_fast_per_subcommand() {
+    for args in [
+        vec!["sim", "--warp", "9"],
+        vec!["experiment", "fig7", "--wrap-speed", "1"],
+        vec!["model", "--sizee", "64"],
+        vec!["config-dump", "--verbose"],
+        vec!["campaign", "run", "--maxpoints", "1"],
+        vec!["campaign", "merge", "--shard", "0/2"], // merge takes --shards, not --shard
+        vec!["fleet", "run", "--worker", "3"],       // fleet takes --workers
+        vec!["fleet", "status", "--lease-ttl", "5"], // run-only flag
+    ] {
+        let out = occamy(&args);
+        assert!(!out.status.success(), "{args:?} should fail");
+        let err = stderr_of(&out);
+        assert!(err.contains("unknown flag(s)"), "{args:?}: {err}");
+        assert!(err.contains("allowed:"), "{args:?}: {err}");
+    }
+}
+
+#[test]
+fn extra_positionals_and_unknown_actions_are_rejected() {
+    let out = occamy(&["config-dump", "stray"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unexpected argument"), "{}", stderr_of(&out));
+
+    let out = occamy(&["campaign", "frobnicate"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown campaign action"), "{}", stderr_of(&out));
+
+    let out = occamy(&["fleet", "frobnicate"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown fleet action"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn valid_invocations_still_work() {
+    let out = occamy(&["config-dump"]);
+    assert!(out.status.success());
+    assert!(!out.stdout.is_empty());
+
+    let out = occamy(&["help"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("fleet run"));
+
+    // --help inside a subcommand prints usage (as an error exit, so
+    // scripts notice a half-formed command line).
+    let out = occamy(&["sim", "--help"]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("usage:"));
+}
+
+#[test]
+fn campaign_run_max_points_stops_early_with_a_nonzero_exit() {
+    // --max-points is the chaos seam the fleet smoke tests lean on: the
+    // worker streams N points, then exits nonzero like a killed worker.
+    let dir = std::env::temp_dir().join(format!("occamy-cli-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = dir.join("spec.toml");
+    std::fs::write(
+        &spec,
+        "[campaign]\nname = \"cli-maxpoints\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [1, 2]\n\
+         routines = [\"baseline\", \"ideal\"]\n[timing]\nhost_ipi_issue_gap = 8201\n",
+    )
+    .unwrap();
+    let out_dir = dir.join("out");
+    let lease = dir.join("lease").join("shard-0-of-1.lease");
+
+    let spec_s = spec.to_str().unwrap();
+    let out_s = out_dir.to_str().unwrap();
+    let lease_s = lease.to_str().unwrap();
+    let worker_flags = |extra: &[&str]| -> Vec<String> {
+        let mut args: Vec<String> = vec![
+            "campaign".into(),
+            "run".into(),
+            "--spec".into(),
+            spec_s.into(),
+            "--out".into(),
+            out_s.into(),
+            "--no-store".into(),
+            "--lease".into(),
+            lease_s.into(),
+            "--lease-ttl".into(),
+            "5".into(),
+            "--run-id".into(),
+            "cli-test".into(),
+        ];
+        args.extend(extra.iter().map(|s| s.to_string()));
+        args
+    };
+    let capped = worker_flags(&["--attempt", "0", "--max-points", "1"]);
+    let run = occamy(&capped);
+    assert!(!run.status.success(), "a capped run exits nonzero");
+    assert!(stderr_of(&run).contains("--max-points"), "{}", stderr_of(&run));
+    // It did stream its one point, and left the lease Running (stale to
+    // any scheduler — exactly like a kill).
+    let lease_text = std::fs::read_to_string(&lease).unwrap();
+    assert!(lease_text.contains("\"running\""), "{lease_text}");
+    assert!(lease_text.contains("\"cli-test\""), "{lease_text}");
+
+    // Finishing the shard (no cap) succeeds and marks the lease done.
+    let uncapped = worker_flags(&["--attempt", "1"]);
+    let finish = occamy(&uncapped);
+    assert!(finish.status.success(), "{}", stderr_of(&finish));
+    let stdout = String::from_utf8_lossy(&finish.stdout);
+    assert!(stdout.contains("1 resumed"), "{stdout}");
+    let lease_text = std::fs::read_to_string(&lease).unwrap();
+    assert!(lease_text.contains("\"done\""), "{lease_text}");
+
+    // The shared status renderer shows per-shard sims and the merge
+    // verifies bit-identity against a single-process reference.
+    let status = occamy(&["campaign", "status", "--spec", spec_s, "--out", out_s, "--no-store"]);
+    assert!(status.status.success(), "{}", stderr_of(&status));
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    assert!(stdout.contains("4 of 4 points complete"), "{stdout}");
+    assert!(stdout.contains("simulated"), "{stdout}");
+    let merge = occamy(&["campaign", "merge", "--spec", spec_s, "--out", out_s, "--verify"]);
+    assert!(merge.status.success(), "{}", stderr_of(&merge));
+    assert!(String::from_utf8_lossy(&merge.stdout).contains("verified"), "{}", stderr_of(&merge));
+}

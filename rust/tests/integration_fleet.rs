@@ -1,0 +1,240 @@
+//! End-to-end tests of the `fleet` scheduler driving real `occamy`
+//! worker subprocesses: automatic crash recovery merging bit-identical
+//! to single-process execution, restart-budget exhaustion, warm-store
+//! reuse, and a genuine mid-shard SIGKILL.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use occamy_offload::campaign::{self, CampaignSpec};
+use occamy_offload::fleet::{
+    self, FleetOptions, Launcher, LeaseState, LocalLauncher, WorkerHandle, WorkerTask,
+};
+
+/// The occamy binary built for this test run.
+fn occamy_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_occamy"))
+}
+
+/// Unique scratch directory per call (tests run in parallel).
+fn temp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "occamy-fleet-it-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Write a small campaign spec to disk (workers re-read it), with a
+/// per-test timing override so parallel tests never share cache/store
+/// namespaces. 12 points: 2 kernels x 2 cluster counts x 3 routines.
+fn write_spec(tag: &str, gap: u64) -> (PathBuf, CampaignSpec) {
+    let dir = temp_dir(&format!("spec-{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("campaign.toml");
+    let text = format!(
+        "[campaign]\nname = \"fleet-it-{tag}\"\n\n[grid]\nkernels = [\"axpy:96\", \"atax:16\"]\n\
+         clusters = [1, 4]\nroutines = [\"baseline\", \"ideal\", \"multicast\"]\n\n\
+         [timing]\nhost_ipi_issue_gap = {gap}\n\n\
+         [fleet]\nworkers = 3\nlease_ttl = 10\nmax_restarts = 2\n"
+    );
+    std::fs::write(&path, &text).unwrap();
+    (path, CampaignSpec::parse(&text).unwrap())
+}
+
+fn fast_opts(spec: &CampaignSpec, out: PathBuf) -> FleetOptions {
+    let mut opts = FleetOptions::new(spec, out);
+    opts.poll = Duration::from_millis(20);
+    opts
+}
+
+#[test]
+fn a_worker_killed_mid_shard_recovers_and_merges_bit_identically() {
+    // The acceptance criterion: a 3-worker local fleet with one worker
+    // dying mid-shard (chaos injection caps its first attempt at one
+    // point and exits nonzero — byte-for-byte what a kill after one
+    // streamed line looks like) recovers automatically and the merged
+    // results equal single-process execution exactly.
+    let (spec_path, spec) = write_spec("chaos", 8101);
+    let out = temp_dir("chaos-out");
+    let mut opts = fast_opts(&spec, out);
+    opts.chaos_kill = Some(1);
+    let launcher = LocalLauncher {
+        exe: occamy_exe(),
+        quiet: true,
+    };
+    let report = fleet::run(&spec, &spec_path, &launcher, &opts).unwrap();
+
+    assert_eq!(report.shards.len(), 3);
+    assert_eq!(report.shards[0].restarts, 0);
+    assert_eq!(report.shards[1].restarts, 1, "the chaos-killed shard was relaunched once");
+    assert_eq!(report.shards[2].restarts, 0);
+    assert_eq!(report.results, campaign::run_single(&spec), "bit-identical merge");
+    assert!(report.merged.exists());
+    // Every point was simulated exactly once across the whole fleet
+    // (including the one the killed worker streamed before dying).
+    assert_eq!(report.sims, spec.expand().len());
+    assert_eq!(report.hits, 0);
+
+    // The shared status renderer agrees and shows the done leases.
+    let view = fleet::status(&spec, 3, &opts.out_dir, opts.store.as_deref(), &opts.run_id).unwrap();
+    assert!(view.is_complete());
+    assert_eq!(view.stale_shards(), 0);
+    for sl in &view.leases {
+        let lease = sl.lease.as_ref().expect("every worker wrote a lease");
+        assert_eq!(lease.state, LeaseState::Done);
+    }
+    assert_eq!(
+        view.leases[1].lease.as_ref().unwrap().attempt,
+        1,
+        "the relaunched worker's final lease records attempt 1"
+    );
+    let text = view.to_string();
+    assert!(text.contains("ready to merge"), "{text}");
+    assert!(text.contains("store:"), "{text}");
+}
+
+/// Always re-injects the chaos cap, so the target shard can never
+/// finish and the restart budget runs out.
+struct AlwaysChaos {
+    inner: LocalLauncher,
+    shard: usize,
+}
+
+impl Launcher for AlwaysChaos {
+    fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let mut task = task.clone();
+        if task.shard.index == self.shard {
+            task.max_points = Some(1);
+        }
+        self.inner.launch(&task)
+    }
+}
+
+#[test]
+fn a_shard_that_keeps_dying_fails_the_run_after_max_restarts() {
+    let (spec_path, spec) = write_spec("budget", 8102);
+    let out = temp_dir("budget-out");
+    let mut opts = fast_opts(&spec, out);
+    opts.workers = 2;
+    opts.max_restarts = 1;
+    let launcher = AlwaysChaos {
+        inner: LocalLauncher {
+            exe: occamy_exe(),
+            quiet: true,
+        },
+        shard: 0,
+    };
+    let err = fleet::run(&spec, &spec_path, &launcher, &opts).unwrap_err().to_string();
+    assert!(err.contains("restart budget exhausted"), "{err}");
+    assert!(err.contains("shard 0/2"), "{err}");
+    // The two completed attempts each streamed one point; they resume
+    // (not re-simulate) on the next run.
+    let st = campaign::status(&spec, 2, &opts.out_dir).unwrap();
+    assert_eq!(st.shards[0].done, 2, "one point per attempt survived");
+}
+
+#[test]
+fn warm_store_fleet_rerun_simulates_nothing() {
+    let (spec_path, spec) = write_spec("warm", 8103);
+    let store_root = temp_dir("warm-store");
+    let total = spec.expand().len();
+
+    let cold_out = temp_dir("warm-cold-out");
+    let mut cold = fast_opts(&spec, cold_out);
+    cold.workers = 2;
+    cold.store = Some(store_root.clone());
+    let launcher = LocalLauncher {
+        exe: occamy_exe(),
+        quiet: true,
+    };
+    let report = fleet::run(&spec, &spec_path, &launcher, &cold).unwrap();
+    assert_eq!(report.sims, total, "cold fleet simulates everything");
+    assert_eq!(report.hits, 0);
+
+    // Second fleet run: fresh output dir, same store — every point is
+    // served from disk, zero new simulations.
+    let warm_out = temp_dir("warm-warm-out");
+    let mut warm = fast_opts(&spec, warm_out);
+    warm.workers = 2;
+    warm.store = Some(store_root);
+    let rerun = fleet::run(&spec, &spec_path, &launcher, &warm).unwrap();
+    assert_eq!(rerun.sims, 0, "warm store: zero new simulations");
+    assert_eq!(rerun.hits, total);
+    assert_eq!(rerun.results, report.results);
+    assert_eq!(rerun.results, campaign::run_single(&spec));
+}
+
+/// SIGKILLs the target shard's first attempt as soon as its output file
+/// has at least one streamed line — a genuine mid-shard kill, not an
+/// orderly exit.
+struct KillOnceStarted {
+    inner: LocalLauncher,
+    shard: usize,
+    watch_file: PathBuf,
+}
+
+struct KillingHandle {
+    inner: Box<dyn WorkerHandle>,
+    watch: Option<PathBuf>,
+}
+
+impl WorkerHandle for KillingHandle {
+    fn poll(&mut self) -> anyhow::Result<fleet::WorkerState> {
+        if let Some(path) = &self.watch {
+            if std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false) {
+                self.inner.kill();
+                self.watch = None;
+            }
+        }
+        self.inner.poll()
+    }
+
+    fn kill(&mut self) {
+        self.inner.kill();
+    }
+
+    fn describe(&self) -> String {
+        self.inner.describe()
+    }
+}
+
+impl Launcher for KillOnceStarted {
+    fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let inner = self.inner.launch(task)?;
+        Ok(Box::new(KillingHandle {
+            inner,
+            watch: (task.shard.index == self.shard && task.attempt == 0)
+                .then(|| self.watch_file.clone()),
+        }))
+    }
+}
+
+#[test]
+fn a_sigkilled_worker_is_reassigned_and_the_merge_stays_exact() {
+    let (spec_path, spec) = write_spec("sigkill", 8104);
+    let out = temp_dir("sigkill-out");
+    let mut opts = fast_opts(&spec, out);
+    opts.workers = 2;
+    opts.poll = Duration::from_millis(5);
+    let shard1 = campaign::Shard::new(1, 2).unwrap();
+    let watch_file = opts.out_dir.join(campaign::stream::shard_file_name(&spec.name, shard1));
+    let launcher = KillOnceStarted {
+        inner: LocalLauncher {
+            exe: occamy_exe(),
+            quiet: true,
+        },
+        shard: 1,
+        watch_file,
+    };
+    let report = fleet::run(&spec, &spec_path, &launcher, &opts).unwrap();
+    // Whether the SIGKILL landed mid-shard or the worker won the race
+    // and finished first, the merged results are exact; a landed kill
+    // shows up as exactly one restart.
+    assert!(report.shards[1].restarts <= 1);
+    assert_eq!(report.results, campaign::run_single(&spec));
+}
