@@ -45,7 +45,7 @@ pub mod store;
 pub mod stream;
 
 pub use shard::Shard;
-pub use spec::{CampaignSpec, FleetSpec, InterferenceSpec, SpecReport};
+pub use spec::{CampaignSpec, FleetSpec, HostSpec, InterferenceSpec, SpecReport};
 pub use store::{StoreStats, TraceStore};
 
 use std::collections::BTreeMap;

@@ -32,6 +32,15 @@
 //! workers = 3                # shard count / concurrent workers (default 2)
 //! lease_ttl = 30             # seconds without a heartbeat => stale (default 30)
 //! max_restarts = 2           # relaunches per shard before giving up (default 2)
+//! # Multi-host: non-empty `hosts` makes `occamy fleet run` fan shards
+//! # out over SSH against the shared mount instead of spawning local
+//! # subprocesses. Each entry is "host" optionally followed by
+//! # space-separated attributes: `bin=` (remote occamy binary, overriding
+//! # remote_bin) and `root=` (what this host mounts `local_root` as —
+//! # every task path under local_root is rewritten with that prefix).
+//! hosts = ["alpha", "beta bin=/opt/occamy root=/data/shared"]
+//! remote_bin = "occamy"      # default remote binary (default "occamy")
+//! local_root = "/mnt/shared" # local prefix the per-host root= replaces
 //! ```
 
 use std::collections::HashSet;
@@ -80,6 +89,13 @@ pub struct FleetSpec {
     pub lease_ttl_secs: u64,
     /// Relaunches allowed per shard before the whole fleet run fails.
     pub max_restarts: usize,
+    /// SSH hosts to fan shards out over; empty means local subprocesses.
+    pub hosts: Vec<HostSpec>,
+    /// Remote `occamy` binary for hosts without their own `bin=`.
+    pub remote_bin: String,
+    /// Local prefix that per-host `root=` attributes replace in every
+    /// task path (shared mounts mounted at different points per host).
+    pub local_root: Option<std::path::PathBuf>,
 }
 
 impl Default for FleetSpec {
@@ -88,7 +104,74 @@ impl Default for FleetSpec {
             workers: 2,
             lease_ttl_secs: 30,
             max_restarts: 2,
+            hosts: Vec::new(),
+            remote_bin: "occamy".to_string(),
+            local_root: None,
         }
+    }
+}
+
+/// One SSH host of a multi-host fleet, parsed from a `[fleet] hosts`
+/// entry: `"name"` or `"name bin=/path/occamy root=/remote/mount"`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostSpec {
+    /// The ssh destination (`host` or `user@host`).
+    pub name: String,
+    /// Remote `occamy` binary; `None` falls back to
+    /// [`FleetSpec::remote_bin`].
+    pub remote_bin: Option<String>,
+    /// What this host mounts [`FleetSpec::local_root`] as; task paths
+    /// under `local_root` are rewritten with this prefix.
+    pub remote_root: Option<std::path::PathBuf>,
+}
+
+impl HostSpec {
+    /// A host with no per-host overrides.
+    pub fn named(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            remote_bin: None,
+            remote_root: None,
+        }
+    }
+
+    /// Parse a host token: whitespace-separated, first the ssh
+    /// destination, then optional `bin=`/`root=` attributes.
+    pub fn parse(tok: &str) -> Result<Self, String> {
+        let mut parts = tok.split_whitespace();
+        let name = parts
+            .next()
+            .ok_or_else(|| "empty host entry".to_string())?
+            .to_string();
+        if name.contains('=') {
+            return Err(format!(
+                "host entry {tok:?} starts with an attribute; the ssh destination comes first"
+            ));
+        }
+        if name.starts_with('-') {
+            return Err(format!(
+                "host {name:?} begins with '-' — ssh would read it as an option, not a destination"
+            ));
+        }
+        let mut host = Self::named(name);
+        for attr in parts {
+            let (key, value) = attr
+                .split_once('=')
+                .ok_or_else(|| format!("host attribute {attr:?} is not key=value"))?;
+            if value.is_empty() {
+                return Err(format!("host attribute {attr:?} has an empty value"));
+            }
+            match key {
+                "bin" => host.remote_bin = Some(value.to_string()),
+                "root" => host.remote_root = Some(std::path::PathBuf::from(value)),
+                other => {
+                    return Err(format!(
+                        "unknown host attribute {other:?} (expected bin= or root=)"
+                    ))
+                }
+            }
+        }
+        Ok(host)
     }
 }
 
@@ -134,11 +217,16 @@ impl std::fmt::Display for SpecReport {
             writeln!(f, "  interference points: {}", self.interference_points)?;
         }
         if let Some(fleet) = &self.fleet {
-            writeln!(
+            write!(
                 f,
                 "  fleet: {} worker(s), lease ttl {}s, max {} restart(s) per shard",
                 fleet.workers, fleet.lease_ttl_secs, fleet.max_restarts
             )?;
+            if !fleet.hosts.is_empty() {
+                let names: Vec<&str> = fleet.hosts.iter().map(|h| h.name.as_str()).collect();
+                write!(f, ", {} ssh host(s): {}", names.len(), names.join(", "))?;
+            }
+            writeln!(f)?;
         }
         write!(f, "  config fingerprint: {}", self.config_fingerprint)
     }
@@ -261,8 +349,28 @@ impl CampaignSpec {
                     let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
                     fleet.max_restarts = v as usize;
                 }
+                ("fleet", "hosts") => {
+                    for tok in parse_string_array(value)
+                        .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?
+                    {
+                        fleet.hosts.push(
+                            HostSpec::parse(&tok)
+                                .map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?,
+                        );
+                    }
+                }
+                ("fleet", "remote_bin") => {
+                    let v = parse_string(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    anyhow::ensure!(!v.is_empty(), "line {lineno}: remote_bin must be non-empty");
+                    fleet.remote_bin = v;
+                }
+                ("fleet", "local_root") => {
+                    let v = parse_string(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    anyhow::ensure!(!v.is_empty(), "line {lineno}: local_root must be non-empty");
+                    fleet.local_root = Some(std::path::PathBuf::from(v));
+                }
                 ("fleet", other) => anyhow::bail!(
-                    "line {lineno}: unknown [fleet] key {other:?} (expected workers, lease_ttl or max_restarts)"
+                    "line {lineno}: unknown [fleet] key {other:?} (expected workers, lease_ttl, max_restarts, hosts, remote_bin or local_root)"
                 ),
                 ("soc", key) | ("timing", key) => {
                     let v = parse_int(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
@@ -760,6 +868,55 @@ mod tests {
         assert!(err(&format!("{base}[fleet]\nlease_ttl = 0\n")).contains("positive"));
         assert!(err(&format!("{base}[fleet]\nwarp = 1\n")).contains("unknown [fleet] key"));
         assert!(err(&format!("{base}[fleet]\nworkers = \"two\"\n")).contains("bad integer"));
+        assert!(err(&format!("{base}[fleet]\nremote_bin = \"\"\n")).contains("non-empty"));
+        assert!(err(&format!("{base}[fleet]\nhosts = [\"a warp=1\"]\n"))
+            .contains("unknown host attribute"));
+    }
+
+    #[test]
+    fn fleet_hosts_parse_with_per_host_attributes() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nname = \"ssh\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n\
+             [fleet]\nworkers = 2\nhosts = [\"alpha\", \"user@beta bin=/opt/occamy root=/data/shared\"]\n\
+             remote_bin = \"/shared/bin/occamy\"\nlocal_root = \"/mnt/shared\"\n",
+        )
+        .unwrap();
+        let fleet = spec.fleet.as_ref().unwrap();
+        assert_eq!(fleet.hosts.len(), 2);
+        assert_eq!(fleet.hosts[0], HostSpec::named("alpha"));
+        assert_eq!(
+            fleet.hosts[1],
+            HostSpec {
+                name: "user@beta".into(),
+                remote_bin: Some("/opt/occamy".into()),
+                remote_root: Some(std::path::PathBuf::from("/data/shared")),
+            }
+        );
+        assert_eq!(fleet.remote_bin, "/shared/bin/occamy");
+        assert_eq!(fleet.local_root, Some(std::path::PathBuf::from("/mnt/shared")));
+        let rendered = spec.report().to_string();
+        assert!(rendered.contains("2 ssh host(s): alpha, user@beta"), "{rendered}");
+
+        // An empty hosts array stays local and reports no host list.
+        let local = CampaignSpec::parse(
+            "[campaign]\nname = \"l\"\n[grid]\nkernels = [\"axpy:64\"]\nclusters = [4]\n\
+             [fleet]\nhosts = []\n",
+        )
+        .unwrap();
+        assert!(local.fleet.as_ref().unwrap().hosts.is_empty());
+        assert!(!local.report().to_string().contains("ssh host"));
+    }
+
+    #[test]
+    fn host_spec_grammar_edge_cases() {
+        assert_eq!(HostSpec::parse("alpha").unwrap(), HostSpec::named("alpha"));
+        let full = HostSpec::parse("  beta   bin=/x/occamy   root=/y  ").unwrap();
+        assert_eq!(full.name, "beta");
+        assert_eq!(full.remote_bin.as_deref(), Some("/x/occamy"));
+        assert_eq!(full.remote_root, Some(std::path::PathBuf::from("/y")));
+        for bad in ["", "bin=/x", "a bin", "a bin=", "a warp=9", "-i", "-oProxyCommand=x"] {
+            assert!(HostSpec::parse(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -17,9 +17,10 @@
 //! miss and re-simulated (then rewritten atomically via a temp file +
 //! rename, so a killed shard can never publish a half-written trace).
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
@@ -78,6 +79,11 @@ pub struct TraceStore {
     memory_hits: AtomicU64,
     disk_hits: AtomicU64,
     simulations: AtomicU64,
+    /// Fingerprints whose `config.toml` this handle has already
+    /// verified (or written): the byte-compare healing check runs once
+    /// per config per handle, not once per trace save — a fresh process
+    /// (the only thing that can outlive a torn writer) re-verifies.
+    verified_manifests: Mutex<HashSet<String>>,
 }
 
 impl TraceStore {
@@ -91,6 +97,7 @@ impl TraceStore {
             memory_hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             simulations: AtomicU64::new(0),
+            verified_manifests: Mutex::new(HashSet::new()),
         })
     }
 
@@ -126,28 +133,34 @@ impl TraceStore {
 
     /// Persist one trace. Atomic: writes a temp file in the same
     /// directory, then renames over the target, so readers never observe
-    /// a partial trace. Also drops the human-readable `config.toml`
-    /// alongside on first write.
+    /// a partial trace. Also keeps the human-readable `config.toml`
+    /// alongside, written the same way — a torn manifest from a killed
+    /// writer is healed by the next save rather than shadowing the
+    /// correct content forever.
     pub fn save(&self, fp: &str, cfg: &Config, req: &OffloadRequest, trace: &Trace) -> anyhow::Result<()> {
         let dir = self.config_dir(fp);
         std::fs::create_dir_all(&dir)?;
-        let manifest = dir.join("config.toml");
-        if !manifest.exists() {
-            std::fs::write(&manifest, cfg.to_toml())?;
+        // Verify the manifest once per config per handle (the read is a
+        // shared-FS round-trip; per-trace it would dominate large
+        // campaigns). Skip the write only when the manifest already
+        // holds exactly the right bytes; anything else (absent, torn,
+        // stale) is rewritten atomically. Concurrent writers racing here
+        // all rename identical content, so last-writer-wins is harmless.
+        let mut verified = self
+            .verified_manifests
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if !verified.contains(fp) {
+            let manifest = dir.join("config.toml");
+            let toml = cfg.to_toml();
+            if std::fs::read_to_string(&manifest).ok().as_deref() != Some(toml.as_str()) {
+                atomic_write(&dir, &manifest, "config", &toml)?;
+            }
+            verified.insert(fp.to_string());
         }
+        drop(verified);
         let target = self.trace_path(fp, req);
-        // Process id + sequence number: two workers of one shard saving
-        // the same request (a spec listing a kernel twice) must not
-        // interleave on one temp path.
-        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-        let tmp = dir.join(format!(
-            ".{}.tmp-{}-{}",
-            request_key(req),
-            std::process::id(),
-            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        std::fs::write(&tmp, codec::trace_to_json(trace).to_string())?;
-        std::fs::rename(&tmp, &target)?;
+        atomic_write(&dir, &target, &request_key(req), &codec::trace_to_json(trace).to_string())?;
         Ok(())
     }
 
@@ -200,6 +213,39 @@ impl TraceStore {
     pub fn traces_on_disk(&self, fp: &str) -> usize {
         traces_in(&self.root, fp)
     }
+}
+
+/// Write `text` to `target` atomically: a `.{stem}.tmp-{pid}-{seq}` file
+/// in `dir`, then a rename over the target. The temp file is unlinked
+/// (best-effort) on either a failed write or a failed rename — a writer
+/// killed *between* the two still leaks one, which `fleet gc` sweeps.
+/// The pid + process-wide sequence keep concurrent writers (two workers
+/// of one shard saving the same request, two heartbeats in one lease
+/// dir) off each other's temp paths. The one publication idiom for the
+/// whole shared store: traces and manifests here, leases via
+/// `fleet::lease::write`.
+pub(crate) fn atomic_write(
+    dir: &Path,
+    target: &Path,
+    stem: &str,
+    text: &str,
+) -> anyhow::Result<()> {
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = dir.join(format!(
+        ".{stem}.tmp-{}-{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let written = std::fs::write(&tmp, text)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))
+        .and_then(|()| {
+            std::fs::rename(&tmp, target)
+                .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), target.display()))
+        });
+    if written.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    written
 }
 
 /// Traces persisted under `root` for one config fingerprint, without
@@ -263,6 +309,65 @@ mod tests {
         std::fs::write(&path, &full[..full.len() / 2]).unwrap();
         assert!(store.load(&fp, &req).is_none());
         // Re-saving heals it.
+        store.save(&fp, &cfg, &req, &trace).unwrap();
+        assert_eq!(*store.load(&fp, &req).unwrap(), trace);
+    }
+
+    /// Non-hidden files in a config dir (the temp-leak assertions below
+    /// must not be fooled by legitimately present traces/manifests).
+    fn tmp_files_in(dir: &Path) -> Vec<String> {
+        match std::fs::read_dir(dir) {
+            Err(_) => Vec::new(),
+            Ok(entries) => entries
+                .filter_map(Result::ok)
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.starts_with('.'))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn a_torn_manifest_is_healed_by_the_next_save() {
+        let store = temp_store("heal-manifest");
+        let cfg = Config::default();
+        let fp = fingerprint(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 128 }, 2, RoutineKind::Baseline);
+        let trace = req.run(&cfg);
+        store.save(&fp, &cfg, &req, &trace).unwrap();
+        let manifest = store.config_dir(&fp).join("config.toml");
+        // A writer killed mid-write publishes a torn manifest. The old
+        // `!manifest.exists()` guard would have shadowed the good content
+        // forever; now the next save from a *fresh handle* (the torn
+        // writer is dead — any healer is another process) detects the
+        // mismatch and heals it.
+        let full = std::fs::read_to_string(&manifest).unwrap();
+        std::fs::write(&manifest, &full[..full.len() / 2]).unwrap();
+        let healer = TraceStore::open(store.root()).unwrap();
+        healer.save(&fp, &cfg, &req, &trace).unwrap();
+        assert_eq!(std::fs::read_to_string(&manifest).unwrap(), cfg.to_toml());
+        assert_eq!(Config::from_path(&manifest).unwrap(), cfg);
+        // And a healthy manifest is left alone (byte-compare short-circuit).
+        healer.save(&fp, &cfg, &req, &trace).unwrap();
+        assert_eq!(std::fs::read_to_string(&manifest).unwrap(), cfg.to_toml());
+    }
+
+    #[test]
+    fn a_failed_rename_does_not_leak_the_temp_file() {
+        let store = temp_store("rename-fail");
+        let cfg = Config::default();
+        let fp = fingerprint(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 256 }, 2, RoutineKind::Baseline);
+        let trace = req.run(&cfg);
+        // Make the trace target an occupied *directory*: the temp write
+        // succeeds, the rename over it fails.
+        let target = store.config_dir(&fp).join(format!("{}.json", request_key(&req)));
+        std::fs::create_dir_all(&target).unwrap();
+        let err = store.save(&fp, &cfg, &req, &trace).unwrap_err().to_string();
+        assert!(err.contains("rename"), "{err}");
+        let leaked = tmp_files_in(&store.config_dir(&fp));
+        assert!(leaked.is_empty(), "temp files leaked: {leaked:?}");
+        // Clearing the obstruction lets the same save succeed.
+        std::fs::remove_dir(&target).unwrap();
         store.save(&fp, &cfg, &req, &trace).unwrap();
         assert_eq!(*store.load(&fp, &req).unwrap(), trace);
     }

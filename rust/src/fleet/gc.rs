@@ -1,0 +1,524 @@
+//! Store compaction for long-lived shared trace stores (`fleet gc`).
+//!
+//! A store that outlives many fleet runs accumulates garbage that
+//! nothing on the hot path may touch, precisely *because* every hot-path
+//! write is careful: atomic temp+rename publication means a writer
+//! killed between the write and the rename leaks a `.tmp-` file forever,
+//! completed runs leave their lease directories behind as provenance,
+//! and specs that stop being swept leave whole config-fingerprint
+//! directories of traces nothing will read again. `occamy fleet gc`
+//! sweeps all three, off the hot path, with a `--dry-run` mode that
+//! reports without touching anything:
+//!
+//! * **Orphaned temp files** — any `.lease-tmp-*` or `.<stem>.tmp-*`
+//!   file older than [`GcOptions::tmp_grace`]. The grace window keeps a
+//!   *live* writer's milliseconds-old temp file safe; ages are computed
+//!   with the same future-mtime clamp as [`super::lease::age`], so
+//!   cross-host clock skew can only delay a sweep, never delete fresh
+//!   work.
+//! * **Lease directories of finished runs** — a
+//!   `<root>/fleet/<run-id>/` directory whose lease files *all* read as
+//!   `done` (or that carries a cancel marker: cancelled workers die
+//!   before writing `done`, and a fresh run clears the marker) and
+//!   whose newest entry is older than [`GcOptions::retention`]. A
+//!   running or torn lease without a marker keeps the whole directory:
+//!   conservative by design, since a torn lease on a non-atomic network
+//!   filesystem may belong to a live worker.
+//! * **Unreferenced config directories** — fingerprint directories not
+//!   named by any spec passed on the command line. Pruning only runs
+//!   when at least one spec *is* passed ([`GcOptions::keep_fingerprints`]
+//!   is `Some`): with no referenced set in hand, "unreferenced" is
+//!   unknowable and the pass is skipped rather than guessed.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+use super::lease::{self, LeaseState};
+
+/// What one [`run`] pass may touch.
+#[derive(Debug, Clone)]
+pub struct GcOptions {
+    /// Completed-run lease directories younger than this are kept.
+    pub retention: Duration,
+    /// Temp files younger than this are presumed live and kept.
+    pub tmp_grace: Duration,
+    /// Report what would be removed without removing anything.
+    pub dry_run: bool,
+    /// Config fingerprints still referenced by known specs; directories
+    /// outside the set are pruned. `None` skips the pruning pass.
+    pub keep_fingerprints: Option<HashSet<String>>,
+}
+
+impl Default for GcOptions {
+    fn default() -> Self {
+        Self {
+            retention: Duration::from_secs(7 * 24 * 3600),
+            tmp_grace: Duration::from_secs(3600),
+            dry_run: false,
+            keep_fingerprints: None,
+        }
+    }
+}
+
+/// What a [`run`] pass found (and, unless dry-run, removed).
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    pub root: PathBuf,
+    pub dry_run: bool,
+    /// Orphaned temp files swept.
+    pub orphaned_tmp: Vec<PathBuf>,
+    /// Completed-run lease directories past retention, removed whole.
+    pub removed_lease_dirs: Vec<PathBuf>,
+    /// Lease directories kept (running, torn, or inside retention).
+    pub kept_lease_dirs: usize,
+    /// Config fingerprint directories pruned as unreferenced.
+    pub pruned_configs: Vec<String>,
+    /// Config directories kept, and the traces they hold.
+    pub kept_configs: usize,
+    pub kept_traces: usize,
+    /// Best-effort removals that failed (the pass continues past them).
+    pub errors: Vec<String>,
+}
+
+impl GcReport {
+    /// Nothing was (or would be) removed.
+    pub fn is_clean(&self) -> bool {
+        self.orphaned_tmp.is_empty()
+            && self.removed_lease_dirs.is_empty()
+            && self.pruned_configs.is_empty()
+    }
+}
+
+impl std::fmt::Display for GcReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let verb = if self.dry_run { "would remove" } else { "removed" };
+        writeln!(
+            f,
+            "fleet gc {}{}:",
+            self.root.display(),
+            if self.dry_run { " (dry run)" } else { "" }
+        )?;
+        writeln!(f, "  orphaned temp file(s): {} {verb}", self.orphaned_tmp.len())?;
+        for p in &self.orphaned_tmp {
+            writeln!(f, "    {}", p.display())?;
+        }
+        writeln!(
+            f,
+            "  lease dir(s): {} completed past retention {verb}, {} kept",
+            self.removed_lease_dirs.len(),
+            self.kept_lease_dirs
+        )?;
+        for p in &self.removed_lease_dirs {
+            writeln!(f, "    {}", p.display())?;
+        }
+        write!(
+            f,
+            "  config dir(s): {} kept ({} trace(s))",
+            self.kept_configs, self.kept_traces
+        )?;
+        if self.pruned_configs.is_empty() {
+            writeln!(f)?;
+        } else {
+            writeln!(
+                f,
+                ", {} unreferenced {verb}: {}",
+                self.pruned_configs.len(),
+                self.pruned_configs.join(", ")
+            )?;
+        }
+        for e in &self.errors {
+            writeln!(f, "  error: {e}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One compaction pass over a store root. Read-only when
+/// `opts.dry_run`; otherwise removals are best-effort — a path that
+/// cannot be removed lands in [`GcReport::errors`] and the pass
+/// continues.
+pub fn run(root: &Path, opts: &GcOptions) -> anyhow::Result<GcReport> {
+    anyhow::ensure!(
+        root.is_dir(),
+        "store root {} does not exist (or is not a directory)",
+        root.display()
+    );
+    let now = SystemTime::now();
+    let mut report = GcReport {
+        root: root.to_path_buf(),
+        dry_run: opts.dry_run,
+        ..GcReport::default()
+    };
+    // Temp files first: an orphan inside a removable lease directory is
+    // then reported as what it is, instead of vanishing with the dir.
+    sweep_tmp(root, now, opts, &mut report);
+    sweep_lease_dirs(&root.join("fleet"), now, opts, &mut report);
+    prune_configs(root, opts, &mut report);
+    Ok(report)
+}
+
+/// Temp-file name patterns the atomic writers use:
+/// `.<stem>.tmp-<pid>-<seq>` (the shared `campaign::store::atomic_write`
+/// behind traces, manifests and [`super::lease::write`]) plus the
+/// legacy `.lease-tmp-<pid>-<seq>` form older lease writers left
+/// behind. Every legitimate store/lease file (traces `*.json`,
+/// `config.toml`, `*.lease`, `*.jsonl`, `cancel`) starts with a
+/// non-dot character.
+fn is_orphan_tmp(name: &str) -> bool {
+    name.starts_with(".lease-tmp-") || (name.starts_with('.') && name.contains(".tmp-"))
+}
+
+/// `<root>/<16 lowercase hex digits>` — the shape `store::fingerprint`
+/// gives config directories. The `fleet/` subtree never matches.
+fn is_fingerprint_name(name: &str) -> bool {
+    name.len() == 16 && name.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+/// Age of a path from its mtime — [`lease::age_at`], so gc shares the
+/// one future-mtime clamp (cross-host clock skew may delay a sweep,
+/// never hasten it).
+fn age_of(path: &Path, now: SystemTime) -> Option<Duration> {
+    lease::age_at(path, now)
+}
+
+/// Recursively sweep orphaned temp files older than the grace window.
+fn sweep_tmp(dir: &Path, now: SystemTime, opts: &GcOptions, report: &mut GcReport) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            report.errors.push(format!("read {}: {e}", dir.display()));
+            return;
+        }
+    };
+    for entry in entries.filter_map(Result::ok) {
+        let path = entry.path();
+        let Ok(ft) = entry.file_type() else { continue };
+        if ft.is_dir() {
+            sweep_tmp(&path, now, opts, report);
+            continue;
+        }
+        let name = entry.file_name();
+        if !is_orphan_tmp(&name.to_string_lossy()) {
+            continue;
+        }
+        // Unknown age reads as zero: never delete what cannot be dated.
+        let age = age_of(&path, now).unwrap_or(Duration::ZERO);
+        if age < opts.tmp_grace {
+            continue;
+        }
+        if !opts.dry_run {
+            if let Err(e) = std::fs::remove_file(&path) {
+                report.errors.push(format!("remove {}: {e}", path.display()));
+                continue;
+            }
+        }
+        report.orphaned_tmp.push(path);
+    }
+}
+
+/// Remove `<root>/fleet/<run-id>/` directories whose runs completed
+/// (every lease `done`) longer ago than the retention window.
+fn sweep_lease_dirs(fleet_dir: &Path, now: SystemTime, opts: &GcOptions, report: &mut GcReport) {
+    let entries = match std::fs::read_dir(fleet_dir) {
+        // No fleet/ subtree at all is simply a store no fleet ever used.
+        Err(_) => return,
+        Ok(e) => e,
+    };
+    for entry in entries.filter_map(Result::ok) {
+        let path = entry.path();
+        if !entry.file_type().map(|t| t.is_dir()).unwrap_or(false) {
+            continue;
+        }
+        match completed_run_age(&path, now) {
+            Some(age) if age >= opts.retention => {
+                if !opts.dry_run {
+                    if let Err(e) = std::fs::remove_dir_all(&path) {
+                        report.errors.push(format!("remove {}: {e}", path.display()));
+                        report.kept_lease_dirs += 1;
+                        continue;
+                    }
+                }
+                report.removed_lease_dirs.push(path);
+            }
+            _ => report.kept_lease_dirs += 1,
+        }
+    }
+}
+
+/// `Some(age of the newest entry)` when the run can never resume:
+/// either every lease file reads as `done`, or a cancel marker is
+/// present (`fleet cancel` kills the workers before they can write
+/// `done` leases, and a fresh `fleet run` clears the marker on startup
+/// — so marker + past-retention age is unambiguously a dead run).
+/// `None` (keep) when any lease is running, torn, or unreadable with no
+/// marker — a torn lease on a non-atomic network filesystem may belong
+/// to a live worker.
+fn completed_run_age(dir: &Path, now: SystemTime) -> Option<Duration> {
+    let cancelled = super::cancel_path(dir).exists();
+    let mut newest = age_of(dir, now)?;
+    for entry in std::fs::read_dir(dir).ok()?.filter_map(Result::ok) {
+        let path = entry.path();
+        if let Some(age) = age_of(&path, now) {
+            newest = newest.min(age);
+        }
+        if path.extension().is_some_and(|x| x == "lease") && !cancelled {
+            match lease::read(&path) {
+                Some(l) if l.state == LeaseState::Done => {}
+                _ => return None,
+            }
+        }
+    }
+    Some(newest)
+}
+
+/// Remove top-level fingerprint directories outside the referenced set;
+/// count what stays either way so the report shows store size.
+fn prune_configs(root: &Path, opts: &GcOptions, report: &mut GcReport) {
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(e) => {
+            report.errors.push(format!("read {}: {e}", root.display()));
+            return;
+        }
+    };
+    for entry in entries.filter_map(Result::ok) {
+        let path = entry.path();
+        if !entry.file_type().map(|t| t.is_dir()).unwrap_or(false) {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !is_fingerprint_name(&name) {
+            continue;
+        }
+        let referenced = match &opts.keep_fingerprints {
+            None => true, // no specs given: pruning pass disabled
+            Some(keep) => keep.contains(&name),
+        };
+        if referenced {
+            report.kept_configs += 1;
+            report.kept_traces += traces_in_dir(&path);
+        } else {
+            if !opts.dry_run {
+                if let Err(e) = std::fs::remove_dir_all(&path) {
+                    report.errors.push(format!("remove {}: {e}", path.display()));
+                    report.kept_configs += 1;
+                    continue;
+                }
+            }
+            report.pruned_configs.push(name);
+        }
+    }
+    report.pruned_configs.sort_unstable();
+}
+
+fn traces_in_dir(dir: &Path) -> usize {
+    match std::fs::read_dir(dir) {
+        Err(_) => 0,
+        Ok(entries) => entries
+            .filter_map(Result::ok)
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .count(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::store::{fingerprint, TraceStore};
+    use crate::campaign::Shard;
+    use crate::config::Config;
+    use crate::fleet::lease::Lease;
+    use crate::kernels::JobSpec;
+    use crate::offload::RoutineKind;
+    use crate::sweep::OffloadRequest;
+
+    /// Retention/grace of zero: everything eligible is eligible *now*.
+    fn eager() -> GcOptions {
+        GcOptions {
+            retention: Duration::ZERO,
+            tmp_grace: Duration::ZERO,
+            dry_run: false,
+            keep_fingerprints: None,
+        }
+    }
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("occamy-gc-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A store root with one real trace, two planted orphans, one old
+    /// completed run dir and one live running run dir.
+    fn populated(tag: &str) -> (PathBuf, String, OffloadRequest) {
+        let root = temp_root(tag);
+        let cfg = Config::default();
+        let fp = fingerprint(&cfg);
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 96 }, 2, RoutineKind::Baseline);
+        let store = TraceStore::open(&root).unwrap();
+        store.save(&fp, &cfg, &req, &req.run(&cfg)).unwrap();
+        // Orphans: a killed trace writer and a killed lease writer.
+        std::fs::write(root.join(&fp).join(".axpy_n96.tmp-999-0"), "torn").unwrap();
+        let done_dir = root.join("fleet").join("old-run");
+        std::fs::create_dir_all(&done_dir).unwrap();
+        std::fs::write(done_dir.join(".lease-tmp-999-1"), "torn").unwrap();
+        let mut done = Lease::new("old-run", Shard::SINGLE, 0, 5);
+        done.state = LeaseState::Done;
+        lease::write(&done_dir.join(lease::file_name(Shard::SINGLE)), &done).unwrap();
+        let live_dir = root.join("fleet").join("live-run");
+        let live = Lease::new("live-run", Shard::SINGLE, 0, 5);
+        lease::write(&live_dir.join(lease::file_name(Shard::SINGLE)), &live).unwrap();
+        (root, fp, req)
+    }
+
+    #[test]
+    fn gc_sweeps_orphans_and_done_runs_but_keeps_live_state() {
+        let (root, fp, req) = populated("sweep");
+        // Dry run: everything reported, nothing touched.
+        let dry = run(&root, &GcOptions { dry_run: true, ..eager() }).unwrap();
+        assert_eq!(dry.orphaned_tmp.len(), 2, "{dry:?}");
+        assert_eq!(dry.removed_lease_dirs.len(), 1, "{dry:?}");
+        assert_eq!(dry.kept_lease_dirs, 1);
+        assert!(root.join(&fp).join(".axpy_n96.tmp-999-0").exists());
+        assert!(root.join("fleet").join("old-run").exists());
+        let text = dry.to_string();
+        assert!(text.contains("(dry run)"), "{text}");
+        assert!(text.contains("orphaned temp file(s): 2 would remove"), "{text}");
+
+        // Real pass: orphans and the old completed run go, live state stays.
+        let report = run(&root, &eager()).unwrap();
+        assert_eq!(report.orphaned_tmp.len(), 2, "{report:?}");
+        assert_eq!(report.removed_lease_dirs.len(), 1);
+        assert_eq!(report.kept_lease_dirs, 1);
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert!(!root.join(&fp).join(".axpy_n96.tmp-999-0").exists());
+        assert!(!root.join("fleet").join("old-run").exists());
+        assert!(root.join("fleet").join("live-run").exists(), "running lease survives");
+        // The real trace and manifest are untouched and still load.
+        let store = TraceStore::open(&root).unwrap();
+        assert!(store.load(&fp, &req).is_some(), "valid trace survives gc");
+        assert!(root.join(&fp).join("config.toml").exists());
+        let report_text = report.to_string();
+        assert!(report_text.contains("orphaned temp file(s): 2 removed"), "{report_text}");
+
+        // A second pass finds nothing.
+        let again = run(&root, &eager()).unwrap();
+        assert!(again.is_clean(), "{again:?}");
+    }
+
+    #[test]
+    fn cancelled_runs_age_out_despite_running_leases() {
+        let root = temp_root("cancelled");
+        // A cancelled run: workers were killed mid-shard, so their
+        // leases are stuck Running, and the cancel marker is present.
+        let dir = root.join("fleet").join("cancelled-run");
+        let stuck = Lease::new("cancelled-run", Shard::SINGLE, 0, 5);
+        lease::write(&dir.join(lease::file_name(Shard::SINGLE)), &stuck).unwrap();
+        std::fs::write(crate::fleet::cancel_path(&dir), "cancelled\n").unwrap();
+        // Without the marker an identical dir is kept forever...
+        let live = root.join("fleet").join("live-run");
+        lease::write(
+            &live.join(lease::file_name(Shard::SINGLE)),
+            &Lease::new("live-run", Shard::SINGLE, 0, 5),
+        )
+        .unwrap();
+        let report = run(&root, &eager()).unwrap();
+        assert_eq!(report.removed_lease_dirs, vec![dir.clone()]);
+        assert_eq!(report.kept_lease_dirs, 1);
+        assert!(!dir.exists());
+        assert!(live.exists());
+    }
+
+    #[test]
+    fn fresh_temp_files_survive_the_grace_window() {
+        let (root, fp, _) = populated("grace");
+        let opts = GcOptions {
+            retention: Duration::ZERO,
+            tmp_grace: Duration::from_secs(3600),
+            dry_run: false,
+            keep_fingerprints: None,
+        };
+        let report = run(&root, &opts).unwrap();
+        assert!(report.orphaned_tmp.is_empty(), "just-planted temps are presumed live");
+        assert!(root.join(&fp).join(".axpy_n96.tmp-999-0").exists());
+
+        // A future mtime (clock skew) also reads as fresh — skew delays
+        // sweeps, it never deletes fresh work.
+        let tmp = root.join(&fp).join(".axpy_n96.tmp-999-0");
+        let file = std::fs::OpenOptions::new().append(true).open(&tmp).unwrap();
+        if file
+            .set_modified(SystemTime::now() + Duration::from_secs(7200))
+            .is_ok()
+        {
+            let report = run(&root, &opts).unwrap();
+            assert!(report.orphaned_tmp.is_empty(), "{report:?}");
+        }
+    }
+
+    #[test]
+    fn unreferenced_config_dirs_prune_only_when_specs_are_known() {
+        let (root, fp, req) = populated("prune");
+        // A second, unreferenced config directory.
+        let mut other_cfg = Config::default();
+        other_cfg.timing.host_ipi_issue_gap += 1;
+        let other_fp = fingerprint(&other_cfg);
+        let store = TraceStore::open(&root).unwrap();
+        store.save(&other_fp, &other_cfg, &req, &req.run(&other_cfg)).unwrap();
+
+        // No keep set: both kept, pruning skipped.
+        let no_specs = run(&root, &eager()).unwrap();
+        assert!(no_specs.pruned_configs.is_empty());
+        assert_eq!(no_specs.kept_configs, 2);
+        assert_eq!(no_specs.kept_traces, 2);
+
+        // Keep set naming only the first: the other is pruned.
+        let opts = GcOptions {
+            keep_fingerprints: Some([fp.clone()].into_iter().collect()),
+            ..eager()
+        };
+        let report = run(&root, &opts).unwrap();
+        assert_eq!(report.pruned_configs, vec![other_fp.clone()]);
+        assert_eq!(report.kept_configs, 1);
+        assert_eq!(report.kept_traces, 1);
+        assert!(!root.join(&other_fp).exists());
+        assert!(root.join(&fp).exists());
+        assert!(root.join("fleet").exists(), "fleet/ is never fingerprint-shaped");
+        assert!(report.to_string().contains("unreferenced removed"), "{}", report.to_string());
+    }
+
+    #[test]
+    fn name_classifiers_are_precise() {
+        assert!(is_orphan_tmp(".lease-tmp-42-0"));
+        assert!(is_orphan_tmp(".axpy_n96-c2-baseline.tmp-42-7"));
+        assert!(is_orphan_tmp(".config.tmp-1-1"));
+        for live in [
+            "config.toml",
+            "axpy_n96-c2-baseline.json",
+            "shard-0-of-2.lease",
+            "cancel",
+            "demo.merged.jsonl",
+            ".hidden",
+        ] {
+            assert!(!is_orphan_tmp(live), "{live}");
+        }
+        assert!(is_fingerprint_name("0123456789abcdef"));
+        for not_fp in [
+            "fleet",
+            "0123456789ABCDEF",
+            "0123456789abcde",
+            "0123456789abcdef0",
+            "xyz3456789abcdef",
+        ] {
+            assert!(!is_fingerprint_name(not_fp), "{not_fp}");
+        }
+    }
+
+    #[test]
+    fn gc_refuses_a_missing_root() {
+        let root = temp_root("missing").join("nope");
+        let err = run(&root, &eager()).unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "{err}");
+    }
+}

@@ -3,15 +3,20 @@
 //!
 //! The scheduler only ever talks to [`Launcher`] and [`WorkerHandle`] —
 //! spawn, poll, kill. [`LocalLauncher`] implements it with
-//! `occamy campaign run --shard i/N` subprocesses on this host; an SSH
-//! or Kubernetes launcher would implement the same two traits and
-//! nothing else changes, because all *state* (results, heartbeat
-//! leases, the trace store) already lives on the shared filesystem.
+//! `occamy campaign run --shard i/N` subprocesses on this host;
+//! [`SshLauncher`] fans the same workers out over
+//! `ssh <host> <remote-occamy> campaign run ...` against a shared
+//! mount. Nothing in the scheduler changes between them, because all
+//! *state* (results, heartbeat leases, the trace store) already lives
+//! on the shared filesystem — the launcher only decides *where* the
+//! process runs and how to kill it.
 
+use std::io::BufRead;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
 
-use crate::campaign::Shard;
+use crate::campaign::{HostSpec, Shard};
 
 /// Everything a launcher needs to start one worker attempt.
 #[derive(Debug, Clone)]
@@ -157,6 +162,288 @@ impl WorkerHandle for LocalWorker {
     }
 }
 
+/// The line a remote worker's wrapping shell prints before `exec`ing the
+/// worker, carrying the pid the scheduler later kills: because `exec`
+/// replaces the shell, `$$` *is* the worker's pid on the remote host.
+const PID_BANNER: &str = "__occamy_remote_pid";
+
+/// Options on every ssh invocation: never prompt for credentials, and
+/// bound the connect wait — the kill path runs synchronously inside the
+/// scheduler loop, so an unreachable host must cost seconds, not the
+/// TCP timeout. Shim scripts skip leading `-o <value>` pairs.
+const SSH_OPTIONS: &[&str] = &["-o", "BatchMode=yes", "-o", "ConnectTimeout=5"];
+
+/// Runs workers over SSH against a shared mount: shard `i` of attempt
+/// `a` lands on `hosts[(i + a) % len]` — deterministic round-robin for
+/// the initial placement, and a relaunched shard rotates to the *next*
+/// host, so a single bad machine cannot eat a shard's whole restart
+/// budget.
+///
+/// The remote command is
+/// `echo __occamy_remote_pid $$; exec <bin> campaign run ...`: the pid
+/// is captured from the remote shell's banner line on stdout, and
+/// [`WorkerHandle::kill`] becomes `ssh <host> kill <pid>` (killing the
+/// local `ssh` client alone would leave the remote worker running).
+/// Everything else — results, leases, resume — already flows through
+/// the shared filesystem, so the scheduler is untouched.
+///
+/// Hermetic testing needs no remote host: point [`SshLauncher::ssh`] at
+/// a shim script that drops the host argument and runs the command
+/// locally (`tests/integration_ssh.rs`, the `fleet-ssh` CI job).
+pub struct SshLauncher {
+    /// Hosts to round-robin shards over; must be non-empty.
+    pub hosts: Vec<HostSpec>,
+    /// Remote binary for hosts without their own `bin=` attribute.
+    pub remote_bin: String,
+    /// Local prefix that per-host `root=` attributes replace in every
+    /// task path (for mounts that sit at different points per host).
+    pub local_root: Option<PathBuf>,
+    /// The ssh client to spawn — `ssh` from `PATH` in production, a
+    /// shim script under test.
+    pub ssh: PathBuf,
+    /// Silence forwarded worker stdout (stderr is always inherited).
+    pub quiet: bool,
+}
+
+impl SshLauncher {
+    /// Check the host list is usable: non-empty, and per-host `root=`
+    /// mappings have a `local_root` to map from.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.hosts.is_empty(),
+            "an SSH fleet needs at least one host ([fleet] hosts or --hosts)"
+        );
+        for h in &self.hosts {
+            anyhow::ensure!(
+                h.remote_root.is_none() || self.local_root.is_some(),
+                "host {:?} maps root={} but no local_root names the local prefix to replace",
+                h.name,
+                h.remote_root.as_ref().unwrap().display()
+            );
+        }
+        Ok(())
+    }
+
+    /// The host this shard attempt lands on.
+    pub fn host_for(&self, shard: Shard, attempt: usize) -> &HostSpec {
+        &self.hosts[(shard.index + attempt) % self.hosts.len()]
+    }
+
+    /// Rewrite one task path for `host`: a path under `local_root` gets
+    /// the host's `remote_root` prefix instead; everything else (and
+    /// every path on hosts without a mapping) passes through untouched.
+    fn map_path(&self, host: &HostSpec, path: &std::path::Path) -> PathBuf {
+        if let (Some(local), Some(remote)) = (&self.local_root, &host.remote_root) {
+            if let Ok(rest) = path.strip_prefix(local) {
+                return remote.join(rest);
+            }
+        }
+        path.to_path_buf()
+    }
+
+    /// The `(host, remote command)` pair for a task: the banner+exec
+    /// payload wrapped as `sh -c '...'`, because sshd hands the command
+    /// string to the user's *login* shell, which need not be POSIX
+    /// (fish, for one, rejects `$$`) — under `sh` the payload behaves
+    /// identically everywhere.
+    pub fn remote_command(&self, task: &WorkerTask) -> anyhow::Result<(String, String)> {
+        let (host, payload) = self.payload(task)?;
+        Ok((host, format!("sh -c {}", shell_quote(&payload))))
+    }
+
+    /// The unwrapped worker invocation
+    /// (`echo <banner> $$; exec <bin> campaign run ...`) — separated out
+    /// so tests can assert on placement, path mapping and quoting
+    /// without spawning anything.
+    ///
+    /// Task paths are absolutized against the scheduler's cwd first: a
+    /// relative `--out` would otherwise resolve against the remote
+    /// login directory and the scheduler would watch files no worker
+    /// ever writes. `remote_bin` is deliberately left alone — a bare
+    /// name resolves on the remote `PATH`.
+    fn payload(&self, task: &WorkerTask) -> anyhow::Result<(String, String)> {
+        let host = self.host_for(task.shard, task.attempt);
+        let bin = host.remote_bin.as_deref().unwrap_or(&self.remote_bin);
+        let mut mapped = task.clone();
+        mapped.spec_path = self.map_path(host, &absolutize(&task.spec_path));
+        mapped.out_dir = self.map_path(host, &absolutize(&task.out_dir));
+        mapped.store = task.store.as_deref().map(|s| self.map_path(host, &absolutize(s)));
+        mapped.lease_path = self.map_path(host, &absolutize(&task.lease_path));
+        let mut command = format!("echo {PID_BANNER} $$; exec {}", shell_quote(bin));
+        for arg in LocalLauncher::args_of(&mapped) {
+            let arg = arg.to_str().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "task path {:?} is not UTF-8; the ssh transport cannot carry it",
+                    arg
+                )
+            })?;
+            command.push(' ');
+            command.push_str(&shell_quote(arg));
+        }
+        Ok((host.name.clone(), command))
+    }
+}
+
+impl Launcher for SshLauncher {
+    fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let (host, command) = self.remote_command(task)?;
+        let mut cmd = Command::new(&self.ssh);
+        cmd.args(SSH_OPTIONS);
+        cmd.arg(&host);
+        cmd.arg(&command);
+        cmd.stdin(Stdio::null());
+        // stdout is always piped: the pid banner arrives there.
+        cmd.stdout(Stdio::piped());
+        let mut child = cmd.spawn().map_err(|e| {
+            anyhow::anyhow!(
+                "spawn {} {host} for shard {} (attempt {}): {e}",
+                self.ssh.display(),
+                task.shard,
+                task.attempt
+            )
+        })?;
+        let pid = Arc::new(Mutex::new(None));
+        let reader = child.stdout.take().map(|out| {
+            let pid = Arc::clone(&pid);
+            let quiet = self.quiet;
+            let host = host.clone();
+            // Drain stdout off-thread so a chatty worker can never fill
+            // the pipe and wedge itself; the first banner line is the
+            // remote pid, the rest is forwarded (unless quiet).
+            std::thread::spawn(move || {
+                for line in std::io::BufReader::new(out).lines() {
+                    let Ok(line) = line else { break };
+                    if let Some(rest) = line.trim().strip_prefix(PID_BANNER) {
+                        if let Ok(p) = rest.trim().parse::<u32>() {
+                            *pid.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                                Some(p);
+                            continue;
+                        }
+                    }
+                    if !quiet {
+                        println!("[{host}] {line}");
+                    }
+                }
+            })
+        });
+        Ok(Box::new(SshWorker {
+            child,
+            host,
+            ssh: self.ssh.clone(),
+            pid,
+            reader,
+            remote_done: false,
+        }))
+    }
+}
+
+struct SshWorker {
+    /// The local ssh client; its exit status is the remote command's.
+    child: Child,
+    host: String,
+    ssh: PathBuf,
+    /// Remote worker pid, once the banner line has arrived.
+    pid: Arc<Mutex<Option<u32>>>,
+    reader: Option<std::thread::JoinHandle<()>>,
+    /// The *remote command itself* was observed to finish (ssh relayed
+    /// a real exit code) — kill() then only reaps the local client
+    /// instead of paying an ssh round-trip. A transport death (ssh exit
+    /// 255, or the client killed by a signal) does NOT set this: the
+    /// remote worker may still be running and must be killed remotely
+    /// before its shard is handed to a replacement.
+    remote_done: bool,
+}
+
+impl SshWorker {
+    fn remote_pid(&self) -> Option<u32> {
+        *self.pid.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+/// ssh's own exit code for "the connection failed", as opposed to a
+/// relayed remote exit code.
+const SSH_TRANSPORT_FAILURE: i32 = 255;
+
+impl WorkerHandle for SshWorker {
+    fn poll(&mut self) -> anyhow::Result<WorkerState> {
+        // ssh exits with the remote command's status (255 for transport
+        // failure, which correctly reads as a failed attempt).
+        match self.child.try_wait() {
+            Ok(None) => Ok(WorkerState::Running),
+            Ok(Some(status)) => {
+                self.remote_done = status.code().is_some_and(|c| c != SSH_TRANSPORT_FAILURE);
+                Ok(WorkerState::Exited {
+                    success: status.success(),
+                })
+            }
+            Err(e) => Err(anyhow::anyhow!("poll ssh {}: {e}", self.host)),
+        }
+    }
+
+    fn kill(&mut self) {
+        // Remote first: killing the local ssh client alone leaves the
+        // remote worker running (there is no tty to carry a hangup), and
+        // after a transport failure the client is gone but the worker
+        // may not be — an orphan writing next to its replacement. A
+        // worker whose banner never arrived cannot be killed remotely;
+        // it then just goes stale and is superseded, which resume makes
+        // safe.
+        if !self.remote_done {
+            if let Some(pid) = self.remote_pid() {
+                let _ = Command::new(&self.ssh)
+                    .args(SSH_OPTIONS)
+                    .arg(&self.host)
+                    .arg(format!("kill {pid}"))
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null())
+                    .status();
+            }
+        }
+        // Both calls fail harmlessly on an already-reaped child; wait()
+        // closes the stdout pipe, which ends the reader thread.
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        self.remote_done = true;
+        if let Some(t) = self.reader.take() {
+            let _ = t.join();
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self.remote_pid() {
+            Some(pid) => format!("ssh {}, remote pid {pid}", self.host),
+            None => format!("ssh {}, remote pid pending", self.host),
+        }
+    }
+}
+
+/// Resolve a relative path against this process's cwd (shared-mount
+/// paths must mean the same thing on every host; a failure to read the
+/// cwd degrades to passing the path through unchanged).
+fn absolutize(path: &std::path::Path) -> PathBuf {
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        std::env::current_dir().map(|d| d.join(path)).unwrap_or_else(|_| path.to_path_buf())
+    }
+}
+
+/// Quote one argument for the remote POSIX shell: plain tokens pass
+/// through, anything else is single-quoted with embedded quotes escaped.
+fn shell_quote(s: &str) -> String {
+    let plain = !s.is_empty()
+        && s.bytes().all(|b| {
+            b.is_ascii_alphanumeric()
+                || matches!(b, b'_' | b'-' | b'.' | b'/' | b':' | b'=' | b'@' | b'%' | b'+')
+        });
+    if plain {
+        s.to_string()
+    } else {
+        format!("'{}'", s.replace('\'', "'\\''"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,5 +487,146 @@ mod tests {
         assert!(joined.contains("--no-store"), "{joined}");
         assert!(!joined.contains("--max-points"), "{joined}");
         assert!(!joined.contains("--store "), "{joined}");
+    }
+
+    fn ssh_task() -> WorkerTask {
+        WorkerTask {
+            spec_path: PathBuf::from("/mnt/shared/specs/demo.toml"),
+            shard: Shard::new(0, 2).unwrap(),
+            out_dir: PathBuf::from("/mnt/shared/out"),
+            store: Some(PathBuf::from("/mnt/shared/out/store")),
+            lease_path: PathBuf::from("/mnt/shared/out/store/fleet/demo/shard-0-of-2.lease"),
+            lease_ttl_secs: 30,
+            run_id: "demo".into(),
+            attempt: 0,
+            max_points: None,
+        }
+    }
+
+    fn ssh_launcher(hosts: &[&str]) -> SshLauncher {
+        SshLauncher {
+            hosts: hosts.iter().map(|h| HostSpec::parse(h).unwrap()).collect(),
+            remote_bin: "occamy".into(),
+            local_root: None,
+            ssh: PathBuf::from("ssh"),
+            quiet: true,
+        }
+    }
+
+    #[test]
+    fn shards_round_robin_and_restarts_rotate_hosts() {
+        let l = ssh_launcher(&["alpha", "beta", "gamma"]);
+        let shard = |i| Shard::new(i, 5).unwrap();
+        assert_eq!(l.host_for(shard(0), 0).name, "alpha");
+        assert_eq!(l.host_for(shard(1), 0).name, "beta");
+        assert_eq!(l.host_for(shard(2), 0).name, "gamma");
+        assert_eq!(l.host_for(shard(3), 0).name, "alpha");
+        // A relaunch moves to the next host, so one bad machine cannot
+        // eat a shard's whole restart budget.
+        assert_eq!(l.host_for(shard(0), 1).name, "beta");
+        assert_eq!(l.host_for(shard(0), 2).name, "gamma");
+    }
+
+    #[test]
+    fn payload_carries_banner_exec_and_worker_args() {
+        let l = ssh_launcher(&["alpha", "beta bin=/opt/occamy"]);
+        let (host, cmd) = l.payload(&ssh_task()).unwrap();
+        assert_eq!(host, "alpha");
+        assert!(cmd.starts_with("echo __occamy_remote_pid $$; exec occamy campaign run "), "{cmd}");
+        assert!(cmd.contains("--shard 0/2"), "{cmd}");
+        assert!(cmd.contains("--spec /mnt/shared/specs/demo.toml"), "{cmd}");
+        assert!(cmd.contains("--store /mnt/shared/out/store"), "{cmd}");
+        // Shard 1 lands on beta and uses its per-host binary.
+        let mut t = ssh_task();
+        t.shard = Shard::new(1, 2).unwrap();
+        let (host, cmd) = l.payload(&t).unwrap();
+        assert_eq!(host, "beta");
+        assert!(cmd.contains("exec /opt/occamy campaign run"), "{cmd}");
+    }
+
+    #[test]
+    fn remote_command_wraps_the_payload_for_any_login_shell() {
+        // sshd hands the command to the user's login shell, which need
+        // not be POSIX — the wire format always runs the payload under
+        // `sh -c`.
+        let l = ssh_launcher(&["alpha"]);
+        let (_, payload) = l.payload(&ssh_task()).unwrap();
+        let (host, cmd) = l.remote_command(&ssh_task()).unwrap();
+        assert_eq!(host, "alpha");
+        assert_eq!(cmd, format!("sh -c {}", shell_quote(&payload)));
+        assert!(cmd.starts_with("sh -c 'echo __occamy_remote_pid $$; exec "), "{cmd}");
+    }
+
+    #[test]
+    fn payload_maps_shared_mount_prefixes_per_host() {
+        let mut l = ssh_launcher(&["alpha root=/data/shared", "beta"]);
+        l.local_root = Some(PathBuf::from("/mnt/shared"));
+        l.validate().unwrap();
+        let (_, cmd) = l.payload(&ssh_task()).unwrap();
+        // Every path under local_root is rewritten for alpha...
+        assert!(cmd.contains("--spec /data/shared/specs/demo.toml"), "{cmd}");
+        assert!(cmd.contains("--out /data/shared/out"), "{cmd}");
+        assert!(cmd.contains("--store /data/shared/out/store"), "{cmd}");
+        assert!(cmd.contains("--lease /data/shared/out/store/fleet/demo/shard-0-of-2.lease"), "{cmd}");
+        assert!(!cmd.contains("/mnt/shared"), "{cmd}");
+        // ...and passes through untouched for beta (no root= mapping).
+        let mut t = ssh_task();
+        t.shard = Shard::new(1, 2).unwrap();
+        let (_, cmd) = l.payload(&t).unwrap();
+        assert!(cmd.contains("--spec /mnt/shared/specs/demo.toml"), "{cmd}");
+    }
+
+    #[test]
+    fn payload_absolutizes_relative_task_paths() {
+        let l = ssh_launcher(&["alpha"]);
+        let mut t = ssh_task();
+        t.out_dir = PathBuf::from("rel-out");
+        let (_, cmd) = l.payload(&t).unwrap();
+        let abs = std::env::current_dir().unwrap().join("rel-out");
+        assert!(
+            cmd.contains(&format!("--out {}", shell_quote(&abs.to_string_lossy()))),
+            "{cmd}"
+        );
+        // A bare remote binary name stays bare: it resolves on the
+        // remote PATH, not against the scheduler's cwd.
+        assert!(cmd.contains("exec occamy "), "{cmd}");
+    }
+
+    #[test]
+    fn payload_quotes_hostile_paths() {
+        let l = ssh_launcher(&["alpha"]);
+        let mut t = ssh_task();
+        t.out_dir = PathBuf::from("/mnt/shared/out dir with spaces");
+        t.run_id = "it's a run; rm -rf /".into();
+        let (_, cmd) = l.payload(&t).unwrap();
+        assert!(cmd.contains("'/mnt/shared/out dir with spaces'"), "{cmd}");
+        assert!(cmd.contains("'it'\\''s a run; rm -rf /'"), "{cmd}");
+    }
+
+    #[test]
+    fn shell_quote_passes_plain_tokens_and_wraps_the_rest() {
+        assert_eq!(shell_quote("campaign"), "campaign");
+        assert_eq!(shell_quote("/a/b-c_d.e:f=g@h%i+j"), "/a/b-c_d.e:f=g@h%i+j");
+        assert_eq!(shell_quote(""), "''");
+        assert_eq!(shell_quote("a b"), "'a b'");
+        assert_eq!(shell_quote("a,b"), "'a,b'");
+        assert_eq!(shell_quote("$HOME"), "'$HOME'");
+        assert_eq!(shell_quote("a'b"), "'a'\\''b'");
+        assert_eq!(shell_quote("`ls`"), "'`ls`'");
+    }
+
+    #[test]
+    fn launcher_validation_rejects_broken_configs() {
+        let empty = SshLauncher {
+            hosts: Vec::new(),
+            remote_bin: "occamy".into(),
+            local_root: None,
+            ssh: PathBuf::from("ssh"),
+            quiet: true,
+        };
+        assert!(empty.validate().unwrap_err().to_string().contains("at least one host"));
+        let unmapped = ssh_launcher(&["alpha root=/data/shared"]);
+        let err = unmapped.validate().unwrap_err().to_string();
+        assert!(err.contains("local_root"), "{err}");
     }
 }

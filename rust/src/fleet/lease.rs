@@ -133,26 +133,16 @@ pub fn file_name(shard: Shard) -> String {
 
 /// Atomically (re)write a lease: temp file in the same directory, then
 /// rename over the target, so a reader never observes a torn lease.
+/// Uses the shared `campaign::store` publication idiom (one temp-name
+/// family, one unlink-on-failure cleanup path, swept by `fleet gc` when
+/// a writer dies between write and rename).
 pub fn write(path: &Path, lease: &Lease) -> anyhow::Result<()> {
     let dir = path
         .parent()
         .ok_or_else(|| anyhow::anyhow!("lease path {} has no parent directory", path.display()))?;
     std::fs::create_dir_all(dir)
         .map_err(|e| anyhow::anyhow!("create lease dir {}: {e}", dir.display()))?;
-    // Process id + sequence number, like `campaign::store`: two
-    // in-process workers heartbeating different shards in one lease dir
-    // must never interleave on one temp path.
-    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-    let tmp = dir.join(format!(
-        ".lease-tmp-{}-{}",
-        lease.pid,
-        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    std::fs::write(&tmp, lease.to_json().to_string())
-        .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
-    Ok(())
+    crate::campaign::store::atomic_write(dir, path, "lease", &lease.to_json().to_string())
 }
 
 /// Read a lease; `None` for an absent or unparsable file. Unparsable is
@@ -167,9 +157,19 @@ pub fn read(path: &Path) -> Option<Lease> {
 /// Wall-clock age of the lease file, from its mtime. Only the one-shot
 /// status views use this (the scheduler differences `seq` on a
 /// monotonic clock instead); `None` when the file is absent or the
-/// filesystem reports no usable mtime.
+/// filesystem reports no usable mtime. A *future* mtime — routine on
+/// NFS when the writing host's clock runs ahead — clamps to zero age
+/// rather than `None`: the old `elapsed().ok()` turned skew into a
+/// missing staleness hint for exactly the hosts most likely wedged.
 pub fn age(path: &Path) -> Option<Duration> {
-    std::fs::metadata(path).ok()?.modified().ok()?.elapsed().ok()
+    age_at(path, std::time::SystemTime::now())
+}
+
+/// [`age`] against an explicit "now" — the testable seam for the
+/// cross-host clock-skew clamp.
+pub fn age_at(path: &Path, now: std::time::SystemTime) -> Option<Duration> {
+    let mtime = std::fs::metadata(path).ok()?.modified().ok()?;
+    Some(now.duration_since(mtime).unwrap_or(Duration::ZERO))
 }
 
 /// A background thread refreshing one lease every TTL/4 (min 25 ms)
@@ -339,6 +339,57 @@ mod tests {
         // The lease is still there, still Running: to any scheduler it
         // is indistinguishable from a crash, and goes stale.
         assert_eq!(read(&path).unwrap().state, LeaseState::Running);
+    }
+
+    #[test]
+    fn a_future_mtime_clamps_age_to_zero() {
+        let path = temp_path("skew");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        write(&path, &Lease::new("skew", Shard::SINGLE, 0, 5)).unwrap();
+        let mtime = std::fs::metadata(&path).unwrap().modified().unwrap();
+        // A reader whose clock runs *behind* the writer's (cross-host
+        // skew over NFS) sees a future mtime; the age must clamp to
+        // zero, not vanish.
+        let behind = mtime - Duration::from_secs(120);
+        assert_eq!(age_at(&path, behind), Some(Duration::ZERO));
+        // A reader ahead of the writer sees the true age.
+        let ahead = mtime + Duration::from_secs(120);
+        assert_eq!(age_at(&path, ahead), Some(Duration::from_secs(120)));
+        // The wall-clock entry point agrees with the seam (fresh file,
+        // so both are near zero — and crucially Some, not None).
+        assert!(age(&path).unwrap() < Duration::from_secs(60));
+
+        // Belt and braces: physically stamp a future mtime and read it
+        // back through the production path.
+        let file = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        if file
+            .set_modified(std::time::SystemTime::now() + Duration::from_secs(3600))
+            .is_ok()
+        {
+            assert_eq!(age(&path), Some(Duration::ZERO), "future mtime hides staleness");
+        }
+    }
+
+    #[test]
+    fn a_failed_lease_rename_does_not_leak_the_temp_file() {
+        let path = temp_path("rename-fail");
+        let dir = path.parent().unwrap().to_path_buf();
+        let _ = std::fs::remove_dir_all(&dir);
+        // Occupy the lease path with a directory so the rename fails.
+        std::fs::create_dir_all(&path).unwrap();
+        let err = write(&path, &Lease::new("leak", Shard::SINGLE, 0, 5)).unwrap_err().to_string();
+        assert!(err.contains("rename"), "{err}");
+        let leaked: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(Result::ok)
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with('.'))
+            .collect();
+        assert!(leaked.is_empty(), "temp files leaked: {leaked:?}");
+        // Clearing the obstruction lets the same write succeed.
+        std::fs::remove_dir(&path).unwrap();
+        write(&path, &Lease::new("leak", Shard::SINGLE, 0, 5)).unwrap();
+        assert!(read(&path).is_some());
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //!
 //! * [`launcher`] — the placement seam. The scheduler talks only to the
 //!   [`Launcher`]/[`WorkerHandle`] traits; [`LocalLauncher`] implements
-//!   them with local `occamy campaign run` subprocesses, and an SSH or
-//!   Kubernetes launcher slots in without touching the scheduler,
-//!   because all shared state (streamed JSONL results, heartbeat
-//!   leases, the trace store) lives on the filesystem.
+//!   them with local `occamy campaign run` subprocesses, and
+//!   [`SshLauncher`] fans the same workers out as
+//!   `ssh <host> <remote-occamy> campaign run ...` against a shared
+//!   mount (round-robin host placement, pid captured from the remote
+//!   shell, kill via `ssh <host> kill <pid>`) — the scheduler is
+//!   untouched, because all shared state (streamed JSONL results,
+//!   heartbeat leases, the trace store) lives on the filesystem.
 //! * [`lease`] — liveness through the shared filesystem alone: each
 //!   worker refreshes `<store>/fleet/<run-id>/shard-<i>-of-<N>.lease`
 //!   (atomic rename, monotonic `seq`); the scheduler declares a shard
@@ -26,6 +29,11 @@
 //!   (points done/total, fresh-simulation vs. store/cache-hit counts
 //!   from the streamed JSONL, lease state/staleness), shared by
 //!   `occamy campaign status` and `occamy fleet status`.
+//! * [`gc`] — compaction for long-lived shared stores: sweep the
+//!   `.tmp-*`/`.lease-tmp-*` orphans of killed writers, remove lease
+//!   directories of completed runs past a retention window, and prune
+//!   config directories no known spec references
+//!   (`occamy fleet gc --store ROOT [--dry-run] [SPEC..]`).
 //!
 //! Quickstart (spec in `examples/fleet.toml`, `[fleet]` table holds the
 //! defaults):
@@ -35,12 +43,27 @@
 //! occamy fleet status --spec examples/fleet.toml --workers 3
 //! occamy fleet watch  --spec examples/fleet.toml --workers 3
 //! occamy fleet cancel --spec examples/fleet.toml
+//! occamy fleet gc     --store campaign-out/fleet-demo/store --dry-run
+//! ```
+//!
+//! Multi-host: list hosts in the spec's `[fleet]` table (or `--hosts`)
+//! and every path — spec, out dir, store — on a shared mount; the same
+//! scheduler then drives the shards over SSH:
+//!
+//! ```toml
+//! [fleet]
+//! workers    = 4
+//! hosts      = ["node-a", "node-b bin=/opt/occamy root=/data/shared"]
+//! remote_bin = "/shared/bin/occamy"   # default for hosts without bin=
+//! local_root = "/mnt/shared"          # prefix the per-host root= replaces
 //! ```
 
+pub mod gc;
 pub mod launcher;
 pub mod lease;
 
-pub use launcher::{Launcher, LocalLauncher, WorkerHandle, WorkerState, WorkerTask};
+pub use gc::{GcOptions, GcReport};
+pub use launcher::{Launcher, LocalLauncher, SshLauncher, WorkerHandle, WorkerState, WorkerTask};
 pub use lease::{Heartbeat, Lease, LeaseState};
 
 use std::path::{Path, PathBuf};

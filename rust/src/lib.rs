@@ -31,14 +31,15 @@
 //! and a merge/resume step whose output is bit-identical to a
 //! single-process run (`occamy campaign <run|merge|status|validate>`).
 //!
-//! [`fleet`] scales campaigns beyond one *operator*: a scheduler turns
-//! a spec plus a worker count into a fully automatic run — it launches
-//! `campaign run --shard i/N` workers through the [`fleet::Launcher`]
-//! seam (local subprocesses today, SSH/k8s tomorrow), tracks liveness
-//! via heartbeat lease files on the shared store, reassigns dead or
+//! [`fleet`] scales campaigns beyond one *operator* and one *host*: a
+//! scheduler turns a spec plus a worker count into a fully automatic
+//! run — it launches `campaign run --shard i/N` workers through the
+//! [`fleet::Launcher`] seam (local subprocesses, or SSH fan-out over a
+//! `[fleet] hosts` list against a shared mount), tracks liveness via
+//! heartbeat lease files on the shared store, reassigns dead or
 //! stalled shards (resume makes that safe), and auto-merges when the
-//! last shard lands (`occamy fleet <run|status|watch|cancel>`, `[fleet]`
-//! spec table).
+//! last shard lands (`occamy fleet <run|status|watch|cancel|gc>`,
+//! `[fleet]` spec table; `fleet gc` compacts long-lived shared stores).
 //!
 //! Contention is a first-class axis: the coordinator dispatches up to
 //! `inflight` jobs concurrently on a deterministic virtual timeline

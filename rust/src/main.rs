@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F]
 //!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
-//!   fleet <run|status|watch|cancel> --spec F [--workers N] [--out DIR]
+//!   fleet <run|status|watch|cancel|gc> --spec F [--workers N] [--out DIR]
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
 //!   interfere --kernel K --size N [--clusters C] [--inflight LIST] [--jobs N] [--gap G]
 //!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
@@ -17,16 +17,18 @@
 //! The binary is self-contained after `make artifacts`: python never runs
 //! on the request path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::time::Duration;
 
-use occamy_offload::campaign::{self, CampaignSpec, Shard, TraceStore};
+use occamy_offload::campaign::{self, CampaignSpec, HostSpec, Shard, TraceStore};
 use occamy_offload::config::Config;
 use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Planner};
 use occamy_offload::exp::{self, Table};
-use occamy_offload::fleet::{self, FleetOptions, Heartbeat, Lease, LocalLauncher};
+use occamy_offload::fleet::{
+    self, FleetOptions, GcOptions, Heartbeat, Lease, LocalLauncher, SshLauncher,
+};
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::OffloadModel;
 use occamy_offload::offload::RoutineKind;
@@ -51,6 +53,19 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
+/// Flags that never take a value, across every subcommand: a bare token
+/// following one of these is a positional, not the flag's value
+/// (`fleet gc --dry-run spec.toml` must not swallow the spec).
+const BOOLEAN_FLAGS: &[&str] = &[
+    "csv",
+    "dry-run",
+    "help",
+    "local",
+    "no-store",
+    "timing-only",
+    "verify",
+];
+
 impl Args {
     fn parse(args: &[String]) -> Self {
         let mut positional = Vec::new();
@@ -58,7 +73,9 @@ impl Args {
         let mut i = 0;
         while i < args.len() {
             if let Some(name) = args[i].strip_prefix("--") {
-                let has_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+                let has_value = i + 1 < args.len()
+                    && !args[i + 1].starts_with("--")
+                    && !BOOLEAN_FLAGS.contains(&name);
                 if has_value {
                     flags.insert(name.to_string(), args[i + 1].clone());
                     i += 2;
@@ -187,6 +204,8 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serv
   campaign validate --spec F
   fleet run    --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--lease-ttl SECS]
                [--max-restarts K] [--poll-ms MS] [--run-id ID] [--chaos-kill SHARD]
+               [--hosts H1,H2,..] [--remote-bin PATH] [--local-root DIR] [--ssh BIN] [--local]
+  fleet gc     --store DIR [--dry-run] [--retention-secs S] [--tmp-grace-secs S] [SPEC..]
   fleet status --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   fleet watch  --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID] [--interval SECS]
   fleet cancel --spec F [--out DIR] [--store DIR] [--no-store] [--run-id ID]
@@ -466,8 +485,11 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
 /// workers, recover dead/stalled shards, auto-merge.
 fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
     let action = a.positional.first().map(String::as_str).ok_or_else(|| {
-        anyhow::anyhow!("usage: occamy fleet <run|status|watch|cancel> --spec FILE")
+        anyhow::anyhow!("usage: occamy fleet <run|status|watch|cancel|gc> --spec FILE")
     })?;
+    if action == "gc" {
+        return cmd_fleet_gc(a);
+    }
     const RUN_FLAGS: &[&str] = &[
         "spec",
         "workers",
@@ -479,13 +501,18 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
         "poll-ms",
         "run-id",
         "chaos-kill",
+        "hosts",
+        "remote-bin",
+        "local-root",
+        "ssh",
+        "local",
     ];
     let allowed: &[&str] = match action {
         "run" => RUN_FLAGS,
         "status" => &["spec", "workers", "out", "store", "no-store", "run-id"],
         "watch" => &["spec", "workers", "out", "store", "no-store", "run-id", "interval"],
         "cancel" => &["spec", "workers", "out", "store", "no-store", "run-id"],
-        other => anyhow::bail!("unknown fleet action {other:?} (run, status, watch or cancel)"),
+        other => anyhow::bail!("unknown fleet action {other:?} (run, status, watch, cancel or gc)"),
     };
     a.reject_unknown(&format!("fleet {action}"), allowed, 1)?;
     let spec_path = PathBuf::from(
@@ -527,8 +554,49 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
                     Some(i)
                 }
             };
-            let launcher = LocalLauncher::current_exe()?;
-            let report = fleet::run(&spec, &spec_path, &launcher, &opts)?;
+            // Placement: non-empty hosts (spec [fleet] table, overridden
+            // by --hosts) fan shards out over SSH against the shared
+            // mount; --local forces local subprocesses regardless.
+            let fleet_defaults = spec.fleet.clone().unwrap_or_default();
+            let hosts: Vec<HostSpec> = if a.has("local") {
+                Vec::new()
+            } else {
+                match a.flag("hosts") {
+                    Some(list) => list
+                        .split(',')
+                        .map(|tok| {
+                            HostSpec::parse(tok.trim())
+                                .map_err(|e| anyhow::anyhow!("--hosts: {e}"))
+                        })
+                        .collect::<anyhow::Result<_>>()?,
+                    None => fleet_defaults.hosts.clone(),
+                }
+            };
+            let report = if hosts.is_empty() {
+                let launcher = LocalLauncher::current_exe()?;
+                fleet::run(&spec, &spec_path, &launcher, &opts)?
+            } else {
+                let launcher = SshLauncher {
+                    hosts,
+                    remote_bin: a
+                        .flag("remote-bin")
+                        .map(str::to_string)
+                        .unwrap_or_else(|| fleet_defaults.remote_bin.clone()),
+                    local_root: a
+                        .flag("local-root")
+                        .map(PathBuf::from)
+                        .or_else(|| fleet_defaults.local_root.clone()),
+                    ssh: a.flag("ssh").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("ssh")),
+                    quiet: true,
+                };
+                launcher.validate()?;
+                println!(
+                    "fleet: ssh fan-out over {} host(s): {}",
+                    launcher.hosts.len(),
+                    launcher.hosts.iter().map(|h| h.name.as_str()).collect::<Vec<_>>().join(", ")
+                );
+                fleet::run(&spec, &spec_path, &launcher, &opts)?
+            };
             println!("{report}");
         }
         "status" => {
@@ -565,6 +633,43 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
         }
         _ => unreachable!("actions validated above"),
     }
+    Ok(())
+}
+
+/// `occamy fleet gc --store ROOT [--dry-run] [SPEC..]` — compaction for
+/// long-lived shared stores: sweep orphaned temp files, remove lease
+/// directories of completed runs past retention, and (when spec files
+/// are passed as positionals) prune config directories no spec
+/// references.
+fn cmd_fleet_gc(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown(
+        "fleet gc",
+        &["store", "dry-run", "retention-secs", "tmp-grace-secs"],
+        64,
+    )?;
+    let root = PathBuf::from(
+        a.flag("store")
+            .ok_or_else(|| anyhow::anyhow!("fleet gc requires --store DIR (the shared store root)"))?,
+    );
+    let mut opts = GcOptions {
+        dry_run: a.has("dry-run"),
+        ..GcOptions::default()
+    };
+    opts.retention = Duration::from_secs(a.u64_flag("retention-secs", opts.retention.as_secs())?);
+    opts.tmp_grace = Duration::from_secs(a.u64_flag("tmp-grace-secs", opts.tmp_grace.as_secs())?);
+    // Positionals after `gc` are the specs still in use; their config
+    // fingerprints become the keep-set for pruning. No specs, no
+    // pruning — "unreferenced" is unknowable without a reference list.
+    let specs = &a.positional[1..];
+    if !specs.is_empty() {
+        let mut keep = HashSet::new();
+        for path in specs {
+            let spec = CampaignSpec::from_path(&PathBuf::from(path))?;
+            keep.insert(campaign::store::fingerprint(&spec.config));
+        }
+        opts.keep_fingerprints = Some(keep);
+    }
+    print!("{}", fleet::gc::run(&root, &opts)?);
     Ok(())
 }
 
@@ -855,6 +960,19 @@ mod tests {
     }
 
     #[test]
+    fn boolean_flags_never_swallow_a_following_positional() {
+        // `fleet gc --store ROOT --dry-run spec.toml` — the exact order
+        // the usage line documents — must keep spec.toml a positional.
+        let a = args(&["gc", "--store", "root", "--dry-run", "spec.toml"]);
+        assert_eq!(a.positional, vec!["gc", "spec.toml"]);
+        assert!(a.has("dry-run"));
+        assert_eq!(a.flag("store"), Some("root"));
+        let a = args(&["merge", "--verify", "out.csv"]);
+        assert_eq!(a.positional, vec!["merge", "out.csv"]);
+        assert!(a.has("verify"));
+    }
+
+    #[test]
     fn reject_unknown_names_the_typo_and_the_allowed_set() {
         let a = args(&["--warp", "9", "--spec", "f.toml"]);
         let err = a.reject_unknown("campaign run", &["spec"], 0);
@@ -913,5 +1031,17 @@ mod tests {
         assert!(err.contains("--spec"), "{err}");
         let err = run(&["fleet".to_string(), "frobnicate".to_string()]).unwrap_err().to_string();
         assert!(err.contains("unknown fleet action"), "{err}");
+    }
+
+    #[test]
+    fn fleet_gc_validates_its_flags_and_requires_a_store() {
+        let raw: Vec<String> = ["fleet", "gc", "--definitely-bogus-flag", "1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = run(&raw).unwrap_err().to_string();
+        assert!(err.contains("--definitely-bogus-flag"), "{err}");
+        let err = run(&["fleet".to_string(), "gc".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("--store"), "{err}");
     }
 }

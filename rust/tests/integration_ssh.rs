@@ -1,0 +1,237 @@
+//! End-to-end tests of [`SshLauncher`] driving the fleet scheduler —
+//! hermetically, via an `ssh` shim script that drops the host argument
+//! and executes the remote command locally, so no real remote host (or
+//! sshd) is needed. The transport is byte-for-byte what production ssh
+//! sees: `<shim> <host> '<command>'`, pid banner on stdout, kill via a
+//! second `<shim> <host> kill <pid>` invocation.
+
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use occamy_offload::campaign::{self, CampaignSpec, HostSpec, Shard};
+use occamy_offload::fleet::{
+    self, FleetOptions, Launcher, LeaseState, SshLauncher, WorkerState, WorkerTask,
+};
+
+/// The occamy binary built for this test run.
+fn occamy_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_occamy"))
+}
+
+/// Unique scratch directory per call (tests run in parallel).
+fn temp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "occamy-ssh-it-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_executable(path: &Path, text: &str) {
+    use std::os::unix::fs::PermissionsExt;
+    std::fs::write(path, text).unwrap();
+    std::fs::set_permissions(path, std::fs::Permissions::from_mode(0o755)).unwrap();
+}
+
+/// The hermetic ssh: `shim [-o opt].. <host> <command>` becomes
+/// `sh -c <command>` locally, exactly how sshd hands the command to the
+/// remote shell.
+fn write_shim(dir: &Path) -> PathBuf {
+    let path = dir.join("ssh");
+    write_executable(
+        &path,
+        "#!/bin/sh\n# Hermetic ssh stand-in: skip options, drop the host, run locally.\n\
+         while [ \"$1\" = \"-o\" ]; do shift 2; done\nshift\nexec /bin/sh -c \"$*\"\n",
+    );
+    path
+}
+
+/// A 12-point campaign spec on disk, with a per-test timing override so
+/// parallel tests never share cache/store namespaces.
+fn write_spec(tag: &str, gap: u64) -> (PathBuf, CampaignSpec) {
+    let dir = temp_dir(&format!("spec-{tag}"));
+    let path = dir.join("campaign.toml");
+    let text = format!(
+        "[campaign]\nname = \"ssh-it-{tag}\"\n\n[grid]\nkernels = [\"axpy:96\", \"atax:16\"]\n\
+         clusters = [1, 4]\nroutines = [\"baseline\", \"ideal\", \"multicast\"]\n\n\
+         [timing]\nhost_ipi_issue_gap = {gap}\n\n\
+         [fleet]\nworkers = 2\nlease_ttl = 10\nmax_restarts = 2\n"
+    );
+    std::fs::write(&path, &text).unwrap();
+    (path, CampaignSpec::parse(&text).unwrap())
+}
+
+fn shim_launcher(shim: PathBuf) -> SshLauncher {
+    SshLauncher {
+        hosts: vec![HostSpec::named("shim-a"), HostSpec::named("shim-b")],
+        remote_bin: occamy_exe().to_string_lossy().into_owned(),
+        local_root: None,
+        ssh: shim,
+        quiet: true,
+    }
+}
+
+#[test]
+fn a_two_shard_ssh_fleet_survives_a_chaos_kill_and_merges_bit_identically() {
+    // The acceptance criterion: a 2-shard fleet fanned out over the ssh
+    // shim, one worker chaos-killed mid-shard, recovers automatically
+    // and merges bit-identical to single-process execution.
+    let (spec_path, spec) = write_spec("chaos", 8301);
+    let out = temp_dir("chaos-out");
+    let shim = write_shim(&out);
+    let mut opts = FleetOptions::new(&spec, out);
+    opts.poll = Duration::from_millis(20);
+    opts.chaos_kill = Some(1);
+    let launcher = shim_launcher(shim);
+    launcher.validate().unwrap();
+    let report = fleet::run(&spec, &spec_path, &launcher, &opts).unwrap();
+
+    assert_eq!(report.results, campaign::run_single(&spec), "bit-identical merge");
+    assert_eq!(report.shards.len(), 2);
+    assert_eq!(report.shards[0].restarts, 0);
+    assert_eq!(report.shards[1].restarts, 1, "the chaos-killed shard was relaunched once");
+    assert!(report.merged.exists());
+    // Every point was simulated exactly once across the fleet,
+    // including the one the killed worker streamed before dying.
+    assert_eq!(report.sims, spec.expand().len());
+    assert_eq!(report.hits, 0);
+
+    // Workers heartbeated their leases over the "shared" filesystem and
+    // marked them done; the relaunched worker's lease records attempt 1.
+    let view = fleet::status(&spec, 2, &opts.out_dir, opts.store.as_deref(), &opts.run_id).unwrap();
+    assert!(view.is_complete());
+    assert_eq!(view.stale_shards(), 0);
+    for sl in &view.leases {
+        assert_eq!(sl.lease.as_ref().expect("every worker wrote a lease").state, LeaseState::Done);
+    }
+    assert_eq!(view.leases[1].lease.as_ref().unwrap().attempt, 1);
+}
+
+#[test]
+fn ssh_worker_pid_banner_arrives_and_kill_terminates_the_remote_process() {
+    let dir = temp_dir("pid");
+    let shim = write_shim(&dir);
+    // A "remote occamy" that just sleeps: exec keeps the banner pid and
+    // the long-running process identical, like the real worker.
+    let fake = dir.join("fake-occamy");
+    write_executable(&fake, "#!/bin/sh\nexec sleep 30\n");
+    let launcher = SshLauncher {
+        hosts: vec![HostSpec::named("shim-a")],
+        remote_bin: fake.to_string_lossy().into_owned(),
+        local_root: None,
+        ssh: shim,
+        quiet: true,
+    };
+    let task = WorkerTask {
+        spec_path: dir.join("unused.toml"),
+        shard: Shard::SINGLE,
+        out_dir: dir.clone(),
+        store: None,
+        lease_path: dir.join("shard-0-of-1.lease"),
+        lease_ttl_secs: 5,
+        run_id: "pid-test".into(),
+        attempt: 0,
+        max_points: None,
+    };
+    let mut handle = launcher.launch(&task).unwrap();
+    // The pid banner is the first stdout line; wait for the reader
+    // thread to parse it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while handle.describe().contains("pending") && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let who = handle.describe();
+    assert!(who.contains("ssh shim-a, remote pid "), "{who}");
+    assert!(!who.contains("pending"), "banner never arrived: {who}");
+    assert_eq!(handle.poll().unwrap(), WorkerState::Running);
+    // Kill goes through `ssh <host> kill <pid>` (the shim runs it
+    // locally); idempotent, and the worker is observably gone.
+    handle.kill();
+    handle.kill();
+    assert_eq!(handle.poll().unwrap(), WorkerState::Exited { success: false });
+}
+
+#[test]
+fn cli_ssh_fleet_runs_merges_and_gc_sweeps_orphans_but_not_live_state() {
+    let (spec_path, spec) = write_spec("cli", 8302);
+    let out = temp_dir("cli-out");
+    let shim = write_shim(&out);
+    let exe = occamy_exe();
+    let run = Command::new(&exe)
+        .args(["fleet", "run", "--spec"])
+        .arg(&spec_path)
+        .args(["--workers", "2", "--poll-ms", "20", "--chaos-kill", "0", "--out"])
+        .arg(&out)
+        .args(["--hosts", "shim-a,shim-b", "--ssh"])
+        .arg(&shim)
+        .arg("--remote-bin")
+        .arg(&exe)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&run.stdout);
+    let stderr = String::from_utf8_lossy(&run.stderr);
+    assert!(run.status.success(), "fleet run failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("ssh fan-out over 2 host(s): shim-a, shim-b"), "{stdout}");
+    assert!(stdout.contains("1 restart(s)"), "{stdout}");
+
+    // The merged output verifies bit-identical against a single-process
+    // reference through the CLI as well.
+    let merge = Command::new(&exe)
+        .args(["campaign", "merge", "--spec"])
+        .arg(&spec_path)
+        .args(["--shards", "2", "--verify", "--out"])
+        .arg(&out)
+        .output()
+        .unwrap();
+    assert!(
+        merge.status.success(),
+        "merge --verify failed: {}",
+        String::from_utf8_lossy(&merge.stderr)
+    );
+
+    // Plant orphans a killed writer would leave, next to live state.
+    let store_root = out.join("store");
+    let fp = campaign::store::fingerprint(&spec.config);
+    let live_traces = campaign::store::traces_in(&store_root, &fp);
+    assert!(live_traces > 0, "the fleet run persisted traces");
+    let orphan_trace = store_root.join(&fp).join(".axpy_n96-c1-baseline.tmp-424242-0");
+    std::fs::write(&orphan_trace, "torn").unwrap();
+    let lease_dir = store_root.join("fleet").join(&spec.name);
+    let orphan_lease = lease_dir.join(".lease-tmp-424242-0");
+    std::fs::write(&orphan_lease, "torn").unwrap();
+
+    // Dry run reports both orphans and touches nothing.
+    let gc_args = |extra: &[&str]| {
+        let mut c = Command::new(&exe);
+        c.args(["fleet", "gc", "--store"]).arg(&store_root).args(["--tmp-grace-secs", "0"]);
+        c.args(extra);
+        c
+    };
+    let dry = gc_args(&["--dry-run"]).output().unwrap();
+    let dry_out = String::from_utf8_lossy(&dry.stdout);
+    assert!(dry.status.success(), "{}", String::from_utf8_lossy(&dry.stderr));
+    assert!(dry_out.contains("orphaned temp file(s): 2 would remove"), "{dry_out}");
+    assert!(orphan_trace.exists() && orphan_lease.exists(), "dry run must not delete");
+
+    // The real pass sweeps the orphans and keeps live leases and traces
+    // (the completed run's lease dir is younger than retention).
+    let gc = gc_args(&[]).output().unwrap();
+    let gc_out = String::from_utf8_lossy(&gc.stdout);
+    assert!(gc.status.success(), "{}", String::from_utf8_lossy(&gc.stderr));
+    assert!(gc_out.contains("orphaned temp file(s): 2 removed"), "{gc_out}");
+    assert!(!orphan_trace.exists() && !orphan_lease.exists());
+    assert!(lease_dir.exists(), "the recent run's lease dir survives retention");
+    assert_eq!(
+        campaign::store::traces_in(&store_root, &fp),
+        live_traces,
+        "gc must not touch valid traces"
+    );
+}
