@@ -180,8 +180,10 @@ pub fn run_single(spec: &CampaignSpec) -> SweepResults {
 }
 
 /// Check a restored record against the campaign's expansion; a mismatch
-/// means the output file belongs to a different spec.
-fn check_point(points: &[SweepPoint], index: usize, rec: &SweepRecord, path: &Path) -> anyhow::Result<()> {
+/// means the output file belongs to a different spec. Crate-visible so
+/// `fleet gc --prune-merged` can re-verify a merged file before deleting
+/// the shards behind it.
+pub(crate) fn check_point(points: &[SweepPoint], index: usize, rec: &SweepRecord, path: &Path) -> anyhow::Result<()> {
     let expected = points.get(index).ok_or_else(|| {
         anyhow::anyhow!(
             "{}: point index {index} out of range ({} points) — output from a different spec?",

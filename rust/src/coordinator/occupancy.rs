@@ -129,6 +129,17 @@ impl OccupancyModel {
     /// fabric for `service` cycles (its isolated DES runtime). Returns
     /// the job's complete virtual-time schedule.
     pub fn admit(&mut self, n_clusters: usize, service: Time) -> Admission {
+        self.admit_at(0, n_clusters, service)
+    }
+
+    /// [`admit`](Self::admit) with an externally-driven arrival floor:
+    /// the job arrives no earlier than `arrival_floor` on the virtual
+    /// timeline. This is how an *open-loop* client (the serve daemon's
+    /// load generator) drives the model — arrivals come from a traffic
+    /// process instead of the closed-loop window, while the window floor
+    /// and arrival-gap spacing still apply as lower bounds. `admit` is
+    /// the `arrival_floor = 0` special case.
+    pub fn admit_at(&mut self, arrival_floor: Time, n_clusters: usize, service: Time) -> Admission {
         assert!(n_clusters >= 1, "a job occupies at least one cluster");
         assert!(
             n_clusters <= self.params.capacity,
@@ -138,16 +149,16 @@ impl OccupancyModel {
         let seq = self.admitted;
         self.admitted += 1;
 
-        // Arrival: the later of the arrival-gap spacing and the window
-        // floor — the earliest time a client slot frees, i.e. the
-        // smallest of the `inflight` largest completions so far (a
-        // closed-loop client pool submits the next job the moment *any*
-        // of its outstanding jobs completes, not a fixed round-robin
-        // member's).
+        // Arrival: the latest of the caller's floor, the arrival-gap
+        // spacing, and the window floor — the earliest time a client
+        // slot frees, i.e. the smallest of the `inflight` largest
+        // completions so far (a closed-loop client pool submits the next
+        // job the moment *any* of its outstanding jobs completes, not a
+        // fixed round-robin member's).
         let mut arrival = if seq == 0 {
-            0
+            arrival_floor
         } else {
-            self.last_arrival + self.params.arrival_gap
+            arrival_floor.max(self.last_arrival + self.params.arrival_gap)
         };
         if self.window.len() == self.params.inflight {
             arrival = arrival.max(self.window.peek().expect("window is non-empty").0);
@@ -399,6 +410,55 @@ mod tests {
         for _ in 0..10 {
             let a = m.admit(32, 100);
             assert_eq!(a.slot, 0, "serial dispatch always reuses slot 0");
+        }
+        m.finish();
+    }
+
+    #[test]
+    fn admit_at_floors_the_arrival() {
+        // Open-loop arrivals: each job carries its own arrival instant.
+        let mut m = model(8, 0);
+        let a = m.admit_at(100, 1, 50);
+        assert_eq!((a.arrival, a.start, a.queue_delay), (100, 100, 0));
+        // A later floor wins over gap/window; an earlier floor cannot
+        // move the arrival clock backwards past the gap spacing.
+        let b = m.admit_at(400, 1, 50);
+        assert_eq!(b.arrival, 400);
+        let mut gapped = model(8, 250);
+        gapped.admit_at(0, 1, 10);
+        let late = gapped.admit_at(100, 1, 10);
+        assert_eq!(late.arrival, 250, "arrival-gap spacing still applies");
+    }
+
+    #[test]
+    fn admit_at_zero_matches_admit() {
+        let mut a = model(4, 0);
+        let mut b = model(4, 0);
+        for _ in 0..6 {
+            assert_eq!(a.admit(16, 1000), b.admit_at(0, 16, 1000));
+        }
+        a.finish();
+        b.finish();
+        assert_eq!(a.interrupts_delivered(), b.interrupts_delivered());
+    }
+
+    #[test]
+    fn admit_at_overload_queues_fifo() {
+        // Arrivals faster than service on one slot's worth of clusters:
+        // queueing delay grows linearly, classic open-loop saturation.
+        let mut m = OccupancyModel::new(OccupancyParams {
+            capacity: 32,
+            jcu_slots: 1,
+            inflight: 8,
+            arrival_gap: 0,
+        });
+        let mut prev_start = 0;
+        for i in 0..4u64 {
+            let a = m.admit_at(i * 100, 32, 1000);
+            assert_eq!(a.arrival, i * 100);
+            assert!(a.start >= prev_start, "FIFO no overtaking");
+            assert_eq!(a.queue_delay, a.start - a.arrival);
+            prev_start = a.start;
         }
         m.finish();
     }

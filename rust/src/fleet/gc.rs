@@ -30,9 +30,12 @@
 //!   is `Some`): with no referenced set in hand, "unreferenced" is
 //!   unknowable and the pass is skipped rather than guessed.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, SystemTime};
+
+use crate::campaign::{check_point, stream, CampaignSpec};
+use crate::sweep::SweepRecord;
 
 use super::lease::{self, LeaseState};
 
@@ -322,6 +325,154 @@ fn traces_in_dir(dir: &Path) -> usize {
     }
 }
 
+/// Outcome of one [`prune_merged`] pass (`fleet gc --prune-merged`).
+#[derive(Debug, Clone, Default)]
+pub struct PruneReport {
+    /// The merged file the shards were verified against.
+    pub merged: PathBuf,
+    pub dry_run: bool,
+    /// Points the merged file was re-verified to cover.
+    pub points: usize,
+    /// Shard files whose every record matched the merged file — deleted
+    /// (or, dry-run, deletable).
+    pub pruned_shards: Vec<PathBuf>,
+    /// Shard files kept, with the reason each survived.
+    pub kept_shards: Vec<(PathBuf, String)>,
+}
+
+impl std::fmt::Display for PruneReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let verb = if self.dry_run { "would prune" } else { "pruned" };
+        writeln!(
+            f,
+            "prune-merged {}{}: {} point(s) re-verified",
+            self.merged.display(),
+            if self.dry_run { " (dry run)" } else { "" },
+            self.points
+        )?;
+        writeln!(
+            f,
+            "  shard file(s): {} {verb}, {} kept",
+            self.pruned_shards.len(),
+            self.kept_shards.len()
+        )?;
+        for p in &self.pruned_shards {
+            writeln!(f, "    {}", p.display())?;
+        }
+        for (p, reason) in &self.kept_shards {
+            writeln!(f, "    {} kept: {reason}", p.display())?;
+        }
+        Ok(())
+    }
+}
+
+/// Delete the shard JSONL files behind a completed, verified merge.
+///
+/// Shard files are the write-ahead form of a campaign's results; once
+/// `campaign merge --verify` has recombined them the merged file is the
+/// canonical copy and the shards are redundant bulk (each line carries a
+/// full trace). But "the merge succeeded once" is exactly the kind of
+/// fact a long-lived shared store cannot trust — the merged file may
+/// have been torn by a later crash, truncated by a copy, or left over
+/// from a different grid. So this pass **re-verifies the merged file
+/// from scratch, now**: every line must parse, carry the spec's config
+/// fingerprint, match the spec's expansion point-for-point, and the
+/// index set must cover the whole campaign exactly once. Any failure
+/// aborts the pass with nothing deleted. A shard file is then pruned
+/// only if every record it holds is bit-identical to the merged record
+/// at the same index; mismatched or foreign shard files are kept and
+/// reported, never silently dropped.
+pub fn prune_merged(spec: &CampaignSpec, out_dir: &Path, dry_run: bool) -> anyhow::Result<PruneReport> {
+    let fp = crate::campaign::store::fingerprint(&spec.config);
+    let points = spec.expand();
+    let merged = out_dir.join(stream::merged_file_name(&spec.name));
+    let text = std::fs::read_to_string(&merged).map_err(|e| {
+        anyhow::anyhow!("no merged file to verify against ({}: {e}); run `campaign merge` first", merged.display())
+    })?;
+
+    // Re-verify the merged file line by line. Every failure path prunes
+    // nothing: a torn or foreign merge means the shards are still the
+    // only trustworthy copy.
+    let mut records: BTreeMap<usize, SweepRecord> = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let (line_fp, index, rec, _source) = stream::record_from_line(line).map_err(|e| {
+            anyhow::anyhow!("{} line {}: {e} — merged file is torn, pruning nothing", merged.display(), lineno + 1)
+        })?;
+        anyhow::ensure!(
+            line_fp == fp,
+            "{} line {}: config fingerprint {line_fp} does not match the spec ({fp}), pruning nothing",
+            merged.display(),
+            lineno + 1
+        );
+        check_point(&points, index, &rec, &merged)?;
+        anyhow::ensure!(
+            records.insert(index, rec).is_none(),
+            "{}: point {index} appears twice, pruning nothing",
+            merged.display()
+        );
+    }
+    anyhow::ensure!(
+        records.len() == points.len(),
+        "{}: {}/{} points present — merge incomplete, pruning nothing",
+        merged.display(),
+        records.len(),
+        points.len()
+    );
+
+    let mut report = PruneReport {
+        merged,
+        dry_run,
+        points: points.len(),
+        ..PruneReport::default()
+    };
+    let prefix = format!("{}.shard-", spec.name);
+    let mut shard_paths: Vec<PathBuf> = std::fs::read_dir(out_dir)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", out_dir.display()))?
+        .filter_map(Result::ok)
+        .filter(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            name.starts_with(&prefix) && name.ends_with(".jsonl")
+        })
+        .map(|e| e.path())
+        .collect();
+    shard_paths.sort();
+    for path in shard_paths {
+        match shard_subsumed_by(&path, &fp, &records) {
+            Ok(()) => {
+                if !dry_run {
+                    if let Err(e) = std::fs::remove_file(&path) {
+                        report.kept_shards.push((path, format!("remove failed: {e}")));
+                        continue;
+                    }
+                }
+                report.pruned_shards.push(path);
+            }
+            Err(reason) => report.kept_shards.push((path, reason)),
+        }
+    }
+    Ok(report)
+}
+
+/// Every record in the shard file must be bit-identical to the verified
+/// merged record at the same index. Torn tail lines don't block — the
+/// merge was just proven complete, so a half-written line holds nothing
+/// the merged file lacks.
+fn shard_subsumed_by(
+    path: &Path,
+    fp: &str,
+    merged: &BTreeMap<usize, SweepRecord>,
+) -> Result<(), String> {
+    let file = stream::read_shard(path, fp).map_err(|e| e.to_string())?;
+    for (index, rec) in &file.records {
+        match merged.get(index) {
+            Some(m) if m == rec => {}
+            Some(_) => return Err(format!("point {index} differs from the merged record")),
+            None => return Err(format!("point {index} is not in the merged file")),
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -520,5 +671,112 @@ mod tests {
         let root = temp_root("missing").join("nope");
         let err = run(&root, &eager()).unwrap_err().to_string();
         assert!(err.contains("does not exist"), "{err}");
+    }
+
+    /// A tiny 4-point campaign with a unique timing override so the
+    /// process-wide cache namespace stays disjoint per test.
+    fn prune_spec(name: &str, gap: u64) -> CampaignSpec {
+        CampaignSpec::parse(&format!(
+            "[campaign]\nname = \"{name}\"\n[grid]\nkernels = [\"axpy:96\"]\nclusters = [1, 2]\n\
+             routines = [\"baseline\", \"ideal\"]\n[timing]\nhost_ipi_issue_gap = {gap}\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn prune_merged_deletes_shards_only_after_reverifying() {
+        let out = temp_root("prune-merged");
+        let spec = prune_spec("pm-demo", 9401);
+        let shard0 = out.join(stream::shard_file_name(&spec.name, Shard::new(0, 2).unwrap()));
+        let shard1 = out.join(stream::shard_file_name(&spec.name, Shard::new(1, 2).unwrap()));
+        for i in 0..2 {
+            crate::campaign::run_shard(&spec, Shard::new(i, 2).unwrap(), &out, None).unwrap();
+        }
+        // No merge yet: nothing to verify against, nothing deleted.
+        let err = prune_merged(&spec, &out, false).unwrap_err().to_string();
+        assert!(err.contains("no merged file"), "{err}");
+        assert!(shard0.exists() && shard1.exists());
+
+        crate::campaign::merge(&spec, 2, &out).unwrap();
+        // Dry run: reports both shards as prunable, touches neither.
+        let dry = prune_merged(&spec, &out, true).unwrap();
+        assert_eq!(dry.pruned_shards.len(), 2, "{dry:?}");
+        assert!(shard0.exists() && shard1.exists());
+        assert!(dry.to_string().contains("2 would prune, 0 kept"), "{dry}");
+
+        let report = prune_merged(&spec, &out, false).unwrap();
+        assert_eq!(report.pruned_shards.len(), 2, "{report:?}");
+        assert!(report.kept_shards.is_empty(), "{report:?}");
+        assert_eq!(report.points, 4);
+        assert!(!shard0.exists() && !shard1.exists());
+        assert!(out.join(stream::merged_file_name(&spec.name)).exists(), "merged file survives");
+        assert!(report.to_string().contains("2 pruned, 0 kept"), "{report}");
+
+        // A second pass still verifies but has nothing left to prune.
+        let again = prune_merged(&spec, &out, false).unwrap();
+        assert!(again.pruned_shards.is_empty() && again.kept_shards.is_empty(), "{again:?}");
+    }
+
+    #[test]
+    fn torn_or_incomplete_merges_prune_nothing() {
+        let out = temp_root("prune-torn");
+        let spec = prune_spec("pm-torn", 9403);
+        crate::campaign::run_shard(&spec, Shard::SINGLE, &out, None).unwrap();
+        crate::campaign::merge(&spec, 1, &out).unwrap();
+        let merged = out.join(stream::merged_file_name(&spec.name));
+        let shard = out.join(stream::shard_file_name(&spec.name, Shard::SINGLE));
+        let intact = std::fs::read_to_string(&merged).unwrap();
+
+        // Torn tail (killed writer, truncated copy): refuse.
+        std::fs::write(&merged, format!("{intact}{{\"config\":\"torn")).unwrap();
+        let err = prune_merged(&spec, &out, false).unwrap_err().to_string();
+        assert!(err.contains("pruning nothing"), "{err}");
+        assert!(shard.exists(), "a torn merge must not cost the shards");
+
+        // Incomplete (missing point): refuse.
+        let lines: Vec<&str> = intact.lines().collect();
+        std::fs::write(&merged, format!("{}\n", lines[..lines.len() - 1].join("\n"))).unwrap();
+        let err = prune_merged(&spec, &out, false).unwrap_err().to_string();
+        assert!(err.contains("merge incomplete"), "{err}");
+        assert!(shard.exists());
+
+        // Intact again: now the shard is redundant and goes.
+        std::fs::write(&merged, &intact).unwrap();
+        let report = prune_merged(&spec, &out, false).unwrap();
+        assert_eq!(report.pruned_shards, vec![shard.clone()]);
+        assert!(!shard.exists());
+    }
+
+    #[test]
+    fn foreign_and_mismatched_shards_are_kept_with_reasons() {
+        let out = temp_root("prune-foreign");
+        let spec = prune_spec("pm-foreign", 9405);
+        crate::campaign::run_shard(&spec, Shard::SINGLE, &out, None).unwrap();
+        crate::campaign::merge(&spec, 1, &out).unwrap();
+        let fp = fingerprint(&spec.config);
+        let real_shard = out.join(stream::shard_file_name(&spec.name, Shard::SINGLE));
+        let first_line = {
+            let text = std::fs::read_to_string(&real_shard).unwrap();
+            text.lines().next().unwrap().to_string()
+        };
+
+        // A full, parsable record under a different config fingerprint:
+        // read_shard hard-errors, so the file is kept with the reason.
+        let foreign = out.join(format!("{}.shard-2-of-3.jsonl", spec.name));
+        std::fs::write(&foreign, format!("{}\n", first_line.replace(&fp, "ffffffffffffffff"))).unwrap();
+        // A record claiming an index whose merged content differs.
+        let swapped = out.join(format!("{}.shard-1-of-3.jsonl", spec.name));
+        let retargeted = first_line.replace("\"index\":0", "\"index\":3");
+        assert_ne!(retargeted, first_line, "line surgery must hit the index field");
+        std::fs::write(&swapped, format!("{retargeted}\n")).unwrap();
+
+        let report = prune_merged(&spec, &out, false).unwrap();
+        assert_eq!(report.pruned_shards, vec![real_shard.clone()], "{report:?}");
+        assert_eq!(report.kept_shards.len(), 2, "{report:?}");
+        assert!(!real_shard.exists());
+        assert!(foreign.exists() && swapped.exists(), "suspect shards must survive");
+        let text = report.to_string();
+        assert!(text.contains("1 pruned, 2 kept"), "{text}");
+        assert!(text.contains("kept:"), "{text}");
     }
 }

@@ -53,6 +53,18 @@
 //! isolated DES cycles + nonnegative queueing delay; `inflight = 1`
 //! reproduces the serial coordinator bit-identically.
 //!
+//! [`serve`] turns the coordinator into a *service*: `occamy serve
+//! --listen` runs a long-lived daemon speaking line-delimited JSON over
+//! TCP ([`serve::proto`]), scheduling concurrent sessions through the
+//! same occupancy model driven open-loop (arrival gaps ride in the
+//! requests, so every run is reproducible), shedding overload with an
+//! explicit `rejected: overloaded` reply instead of unbounded queueing,
+//! and answering repeats from the campaign trace store — a warm store
+//! serves entire bursts with zero fresh simulations. `occamy loadgen`
+//! is its seeded open-loop client (Poisson / bursty / diurnal arrival
+//! processes over a kernel mix) and `occamy bench serve` measures the
+//! engine's service rate.
+//!
 //! ## Module map
 //!
 //! | layer | modules |
@@ -61,7 +73,7 @@
 //! | simulation | [`sim`] (DES engine, traces), [`offload`] (routines §4), [`kernels`] (workloads §5.1) |
 //! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`fleet`] (multi-host scheduler: leases, recovery, auto-merge), [`exp`] (Figs. 7-12, interference), [`bench`] |
 //! | modeling | [`model`] (analytical runtime model §5.6) |
-//! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`runtime`] (PJRT numerics, JSON) |
+//! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`serve`] (TCP daemon: admission control, memoization, load generator), [`runtime`] (PJRT numerics, JSON) |
 //! | support | [`rng`] |
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
@@ -84,5 +96,6 @@ pub mod noc;
 pub mod offload;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;

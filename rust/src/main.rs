@@ -6,7 +6,10 @@
 //!   fleet <run|status|watch|cancel|gc> --spec F [--workers N] [--out DIR]
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
 //!   interfere --kernel K --size N [--clusters C] [--inflight LIST] [--jobs N] [--gap G]
-//!   serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
+//!   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--slo CYC] [--store DIR]
+//!   serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
+//!   loadgen --connect ADDR [--requests N] [--seed S] [--process poisson|bursty|diurnal]
+//!   bench serve [--requests N] [--inflight W] [--out FILE]
 //!   validate-artifacts [--artifacts DIR]
 //!   model --kernel K --size N [--config F]
 //!   config-dump
@@ -22,6 +25,7 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::time::Duration;
 
+use occamy_offload::bench::Bench;
 use occamy_offload::campaign::{self, CampaignSpec, HostSpec, Shard, TraceStore};
 use occamy_offload::config::Config;
 use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Planner};
@@ -32,7 +36,12 @@ use occamy_offload::fleet::{
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::OffloadModel;
 use occamy_offload::offload::RoutineKind;
+use occamy_offload::runtime::json::Json;
 use occamy_offload::runtime::{default_artifacts_dir, run_and_verify, PjrtRuntime};
+use occamy_offload::serve::{
+    self, ArrivalKind, ArrivalProcess, Engine, EngineOptions, LoadgenOptions, Request, ServeSpec,
+    Server, Submit,
+};
 use occamy_offload::sim::Phase;
 use occamy_offload::sweep::{self, OffloadRequest, SweepResults};
 
@@ -61,7 +70,11 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "dry-run",
     "help",
     "local",
+    "no-stats",
     "no-store",
+    "oneshot",
+    "prune-merged",
+    "shutdown",
     "timing-only",
     "verify",
 ];
@@ -195,7 +208,7 @@ fn emit(table: Table, csv: bool) {
     }
 }
 
-const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serve|validate-artifacts|model|config-dump> [options]
+const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serve|loadgen|bench|validate-artifacts|model|config-dump> [options]
   experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|interference|all> [--csv] [--config F]
   campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store] [--max-points N]
                     [--lease FILE] [--lease-ttl SECS] [--run-id ID] [--attempt K]
@@ -206,12 +219,19 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serv
                [--max-restarts K] [--poll-ms MS] [--run-id ID] [--chaos-kill SHARD]
                [--hosts H1,H2,..] [--remote-bin PATH] [--local-root DIR] [--ssh BIN] [--local]
   fleet gc     --store DIR [--dry-run] [--retention-secs S] [--tmp-grace-secs S] [SPEC..]
+               [--prune-merged [--out DIR] SPEC..]   (delete shard files behind a re-verified merge)
   fleet status --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   fleet watch  --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID] [--interval SECS]
   fleet cancel --spec F [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
   interfere --kernel K --size N [--clusters C] [--routine R] [--inflight 1,2,4,8] [--jobs 16] [--gap 0] [--csv]
-  serve --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
+  serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--gap G] [--slo CYC]
+        [--summary-every N] [--store DIR] [--config F]
+  serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
+  loadgen --connect ADDR [--spec F] [--requests N] [--seed S] [--process poisson|bursty|diurnal]
+          [--mean-gap G] [--burst B] [--period P] [--mix K1,K2,..] [--clusters C] [--routine R]
+          [--no-stats] [--shutdown]
+  bench serve [--requests N] [--inflight W] [--seed S] [--mean-gap G] [--out FILE] [--config F]
   validate-artifacts [--artifacts DIR]
   model --kernel K --size N [--config F]
   config-dump";
@@ -230,6 +250,8 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         "sim" => cmd_sim(&a),
         "interfere" => cmd_interfere(&a),
         "serve" => cmd_serve(&a),
+        "loadgen" => cmd_loadgen(&a),
+        "bench" => cmd_bench(&a),
         "validate-artifacts" => cmd_validate(&a),
         "model" => cmd_model(&a),
         "config-dump" => {
@@ -644,9 +666,32 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
 fn cmd_fleet_gc(a: &Args) -> anyhow::Result<()> {
     a.reject_unknown(
         "fleet gc",
-        &["store", "dry-run", "retention-secs", "tmp-grace-secs"],
+        &["store", "dry-run", "retention-secs", "tmp-grace-secs", "prune-merged", "out"],
         64,
     )?;
+    // --prune-merged: delete the shard JSONL files behind a completed
+    // merge, after re-verifying the merged file from scratch. Specs name
+    // the campaigns; shard/merged files live in the campaign out dir,
+    // not the store, so this works with or without --store (when both
+    // are given, the normal store sweep still runs below).
+    if a.has("prune-merged") {
+        let specs = &a.positional[1..];
+        anyhow::ensure!(
+            !specs.is_empty(),
+            "fleet gc --prune-merged requires at least one SPEC positional (the campaign whose shards to prune)"
+        );
+        for path in specs {
+            let spec = CampaignSpec::from_path(&PathBuf::from(path))?;
+            let out_dir = a
+                .flag("out")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("campaign-out").join(&spec.name));
+            print!("{}", fleet::gc::prune_merged(&spec, &out_dir, a.has("dry-run"))?);
+        }
+        if !a.has("store") {
+            return Ok(());
+        }
+    }
     let root = PathBuf::from(
         a.flag("store")
             .ok_or_else(|| anyhow::anyhow!("fleet gc requires --store DIR (the shared store root)"))?,
@@ -778,12 +823,41 @@ fn cmd_interfere(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `occamy serve`: with `--listen`, the long-lived daemon; without it
+/// (or with the explicit `--oneshot`), the original in-process batch
+/// path, unchanged.
 fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     a.reject_unknown(
         "serve",
-        &["jobs", "artifacts", "timing-only", "seed", "clusters", "inflight", "gap", "config"],
+        &[
+            "jobs",
+            "artifacts",
+            "timing-only",
+            "seed",
+            "clusters",
+            "inflight",
+            "gap",
+            "config",
+            "listen",
+            "oneshot",
+            "spec",
+            "queue-factor",
+            "slo",
+            "summary-every",
+            "store",
+        ],
         0,
     )?;
+    if let Some(listen) = a.flag("listen") {
+        anyhow::ensure!(
+            !a.has("oneshot"),
+            "--listen and --oneshot are mutually exclusive (daemon vs batch)"
+        );
+        return cmd_serve_daemon(a, listen);
+    }
+    for f in ["spec", "queue-factor", "slo", "summary-every", "store"] {
+        anyhow::ensure!(!a.has(f), "--{f} applies to the daemon (`serve --listen ADDR`)");
+    }
     let cfg = load_config(a)?;
     let n_jobs = a.u64_flag("jobs", 64)?;
     let seed = a.u64_flag("seed", 42)?;
@@ -853,6 +927,193 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         failures == 0 && rejected == 0,
         "{failures} verification failure(s), {rejected} rejected job(s)"
     );
+    Ok(())
+}
+
+/// The serve daemon: bind, serve sessions until a client sends
+/// `shutdown`, then report final stats. Knob precedence is engine
+/// defaults < `--spec serve.toml` < flags.
+fn cmd_serve_daemon(a: &Args, listen: &str) -> anyhow::Result<()> {
+    let spec = match a.flag("spec") {
+        Some(p) => ServeSpec::load(Path::new(p))?,
+        None => ServeSpec::default(),
+    };
+    let mut opts = spec.engine_options(EngineOptions {
+        cfg: load_config(a)?,
+        ..EngineOptions::default()
+    });
+    opts.inflight = a.u64_flag("inflight", opts.inflight as u64)? as usize;
+    opts.queue_factor = a.u64_flag("queue-factor", opts.queue_factor as u64)? as usize;
+    opts.default_gap = a.u64_flag("gap", opts.default_gap)?;
+    opts.slo_cycles = a.u64_flag("slo", opts.slo_cycles)?;
+    opts.summary_every = a.u64_flag("summary-every", opts.summary_every)?;
+    if let Some(p) = a.flag("store") {
+        opts.store_root = Some(PathBuf::from(p));
+    }
+    let queue_bound = opts.inflight.saturating_mul(opts.queue_factor);
+    let server = Server::start(opts, listen)?;
+    println!(
+        "serve: listening on {} (inflight bound {queue_bound}; drive with `occamy loadgen --connect {}`)",
+        server.addr(),
+        server.addr()
+    );
+    let (stats, store_stats, summary) = server.wait();
+    println!("{summary}");
+    if let Some(st) = store_stats {
+        println!(
+            "store: {} memory hit(s), {} disk hit(s), {} simulation(s)",
+            st.memory_hits, st.disk_hits, st.simulations
+        );
+    }
+    println!(
+        "serve: shut down after {} request(s)",
+        stats.completed + stats.rejected + stats.errors
+    );
+    Ok(())
+}
+
+/// `occamy loadgen`: a seeded open-loop client for the serve daemon.
+fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown(
+        "loadgen",
+        &[
+            "connect",
+            "requests",
+            "seed",
+            "process",
+            "mean-gap",
+            "burst",
+            "period",
+            "mix",
+            "clusters",
+            "routine",
+            "no-stats",
+            "shutdown",
+            "spec",
+        ],
+        0,
+    )?;
+    let spec = match a.flag("spec") {
+        Some(p) => ServeSpec::load(Path::new(p))?,
+        None => ServeSpec::default(),
+    };
+    let mut opts = spec.loadgen_options(LoadgenOptions::default());
+    if let Some(addr) = a.flag("connect") {
+        opts.addr = addr.to_string();
+    }
+    opts.requests = a.u64_flag("requests", opts.requests)?;
+    opts.seed = a.u64_flag("seed", opts.seed)?;
+    if let Some(v) = a.flag("process") {
+        opts.kind = ArrivalKind::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown process {v:?} (poisson, bursty or diurnal)"))?;
+    }
+    opts.mean_gap = a.u64_flag("mean-gap", opts.mean_gap)?;
+    opts.burst = a.u64_flag("burst", opts.burst)?;
+    opts.period = a.u64_flag("period", opts.period)?;
+    if let Some(list) = a.flag("mix") {
+        opts.mix = list.split(',').map(|s| s.trim().to_string()).collect();
+        for tok in &opts.mix {
+            campaign::spec::parse_kernel(tok)
+                .map_err(|e| anyhow::anyhow!("--mix entry {tok:?}: {e}"))?;
+        }
+    }
+    if let Some(v) = a.flag("clusters") {
+        opts.clusters = Some(v.parse()?);
+    }
+    if let Some(r) = a.flag("routine") {
+        opts.routine =
+            Some(RoutineKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown routine {r:?}"))?);
+    }
+    opts.fetch_stats = !a.has("no-stats");
+    if a.has("shutdown") {
+        opts.shutdown = true;
+    }
+    let report = serve::loadgen::run(&opts)?;
+    print!("{}", report.render());
+    anyhow::ensure!(report.failures == 0, "{} loadgen failure(s)", report.failures);
+    Ok(())
+}
+
+/// `occamy bench serve`: benchmark the serve engine's service rate on a
+/// fixed seeded burst and write `BENCH_serve.json` — the regression
+/// baseline for later DES-speed work. The burst is generated once, a
+/// warmup pass primes the process trace cache, and the timed iterations
+/// then measure the request path (admission, scheduling, memoized
+/// lookup) rather than first-run DES cost.
+fn cmd_bench(a: &Args) -> anyhow::Result<()> {
+    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("usage: occamy bench serve [--requests N] [--inflight W] [--out FILE]")
+    })?;
+    anyhow::ensure!(action == "serve", "unknown bench target {action:?} (expected: serve)");
+    a.reject_unknown(
+        "bench serve",
+        &["requests", "inflight", "seed", "mean-gap", "out", "config"],
+        1,
+    )?;
+    let cfg = load_config(a)?;
+    let requests = a.u64_flag("requests", 256)?;
+    anyhow::ensure!(requests >= 1, "--requests must be >= 1");
+    let inflight = a.u64_flag("inflight", 4)? as usize;
+    let seed = a.u64_flag("seed", 1)?;
+    let mean_gap = a.u64_flag("mean-gap", 50_000)?;
+    let out = a
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_serve.json"));
+
+    // One fixed request sequence, replayed identically every iteration.
+    let mix = LoadgenOptions::default().mix;
+    let mut arrivals = ArrivalProcess::new(ArrivalKind::Poisson, mean_gap, 8, 4_000_000, seed);
+    let submits: Vec<Submit> = (0..requests)
+        .map(|id| Submit {
+            id,
+            kernel: mix[(id as usize) % mix.len()].clone(),
+            clusters: None,
+            routine: None,
+            gap: Some(arrivals.next_gap()),
+            seed: Some(seed.wrapping_add(id)),
+        })
+        .collect();
+
+    let opts = EngineOptions {
+        cfg,
+        inflight,
+        ..EngineOptions::default()
+    };
+    Engine::new(opts.clone())?; // validate the options once, loudly
+    let mut stats = None;
+    let mut bench = Bench::new();
+    bench.run("serve_engine_burst", 1, 5, || {
+        let mut e = Engine::new(opts.clone()).expect("options validated above");
+        for s in &submits {
+            occamy_offload::bench::black_box(e.handle(&Request::Submit(s.clone())));
+        }
+        stats = Some(e.stats());
+    });
+    let m = bench.results().last().expect("one measurement recorded").clone();
+    let stats = stats.expect("bench ran at least once");
+
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("serve".to_string()));
+    obj.insert("requests".to_string(), Json::Num(requests as f64));
+    obj.insert("inflight".to_string(), Json::Num(inflight as f64));
+    obj.insert("seed".to_string(), Json::Num(seed as f64));
+    obj.insert("mean_gap".to_string(), Json::Num(mean_gap as f64));
+    obj.insert("wall_mean_s".to_string(), Json::Num(m.mean.as_secs_f64()));
+    obj.insert("wall_min_s".to_string(), Json::Num(m.min.as_secs_f64()));
+    obj.insert(
+        "jobs_per_s".to_string(),
+        Json::Num(requests as f64 / m.mean.as_secs_f64()),
+    );
+    obj.insert("latency_p50_cyc".to_string(), Json::Num(stats.latency.p50 as f64));
+    obj.insert("latency_p99_cyc".to_string(), Json::Num(stats.latency.p99 as f64));
+    obj.insert("queue_p99_cyc".to_string(), Json::Num(stats.queue.p99 as f64));
+    obj.insert("completed".to_string(), Json::Num(stats.completed as f64));
+    obj.insert("rejected".to_string(), Json::Num(stats.rejected as f64));
+    std::fs::write(&out, format!("{}\n", Json::Obj(obj)))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", out.display()))?;
+    bench.finish("serve");
+    println!("bench: wrote {}", out.display());
     Ok(())
 }
 
@@ -1001,6 +1262,7 @@ mod tests {
             "sim",
             "interfere",
             "serve",
+            "loadgen",
             "validate-artifacts",
             "model",
             "config-dump",
@@ -1031,6 +1293,15 @@ mod tests {
         assert!(err.contains("--spec"), "{err}");
         let err = run(&["fleet".to_string(), "frobnicate".to_string()]).unwrap_err().to_string();
         assert!(err.contains("unknown fleet action"), "{err}");
+        // bench validates per-target, like campaign/fleet per-action.
+        let raw: Vec<String> = ["bench", "serve", "--definitely-bogus-flag", "1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = run(&raw).unwrap_err().to_string();
+        assert!(err.contains("--definitely-bogus-flag"), "{err}");
+        let err = run(&["bench".to_string(), "sleep".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("unknown bench target"), "{err}");
     }
 
     #[test]
@@ -1043,5 +1314,26 @@ mod tests {
         assert!(err.contains("--definitely-bogus-flag"), "{err}");
         let err = run(&["fleet".to_string(), "gc".to_string()]).unwrap_err().to_string();
         assert!(err.contains("--store"), "{err}");
+        // --prune-merged needs a spec to know which campaign's shards
+        // are up for deletion; nothing else can stand in for it.
+        let raw: Vec<String> = ["fleet", "gc", "--prune-merged", "--store", "x"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = run(&raw).unwrap_err().to_string();
+        assert!(err.contains("SPEC"), "{err}");
+    }
+
+    #[test]
+    fn serve_daemon_and_oneshot_flags_stay_disjoint() {
+        let err = run(&["serve".to_string(), "--listen".to_string(), "127.0.0.1:0".to_string(), "--oneshot".to_string()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        // Daemon knobs on the batch path are a usage error, not a no-op.
+        let err = run(&["serve".to_string(), "--oneshot".to_string(), "--slo".to_string(), "5".to_string()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--slo applies to the daemon"), "{err}");
     }
 }

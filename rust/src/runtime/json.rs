@@ -124,7 +124,14 @@ impl std::fmt::Display for Json {
 pub const EXACT_INT: f64 = 9_007_199_254_740_992.0;
 
 fn write_num(n: f64, out: &mut String) {
-    if n.fract() == 0.0 && n.abs() <= EXACT_INT {
+    if !n.is_finite() {
+        // JSON has no inf/NaN literals; `{:?}` would emit "inf"/"NaN"
+        // and produce an unparseable document. Every non-finite float in
+        // this crate is a degenerate statistic (e.g. a throughput over
+        // zero cycles), so `null` — "no meaningful value" — is the
+        // faithful encoding and every consumer can parse it.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() <= EXACT_INT {
         out.push_str(&format!("{}", n as i64));
     } else {
         // `{:?}` is Rust's shortest round-trip float formatting.
@@ -393,6 +400,25 @@ mod tests {
         let line = v.to_string();
         assert_eq!(Json::parse(&line).unwrap(), v);
         assert!(line.contains("\\u0001"));
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        // `Metrics::jobs_per_sim_second` is INFINITY for zero-cycle
+        // batches (a deliberate API choice pinned by a coordinator
+        // test); the wire must still be valid JSON. Same for NaN and
+        // non-finite values buried in containers.
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let line = Json::Num(bad).to_string();
+            assert_eq!(line, "null");
+            assert_eq!(Json::parse(&line).unwrap(), Json::Null);
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("rate".to_string(), Json::Num(f64::INFINITY));
+        obj.insert("ok".to_string(), Json::Num(2.5));
+        let line = Json::Obj(obj).to_string();
+        assert_eq!(line, r#"{"ok":2.5,"rate":null}"#);
+        assert!(Json::parse(&line).is_ok());
     }
 
     #[test]

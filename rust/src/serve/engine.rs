@@ -1,0 +1,494 @@
+//! The daemon's core: one request in, one reply out, deterministically.
+//!
+//! # Scheduling
+//! Jobs are scheduled through the same [`OccupancyModel`] the batch
+//! coordinator uses, but driven *open-loop*: every submission carries a
+//! virtual inter-arrival gap (sampled by the load generator's traffic
+//! process), the engine advances its arrival clock by that gap, and the
+//! job enters the model at the clock via
+//! [`OccupancyModel::admit_at`]. Because the timeline is virtual, the
+//! whole schedule is a pure function of the request sequence — identical
+//! bursts produce identical latencies regardless of wall-clock timing,
+//! which is what makes serve runs reproducible benchmarks rather than
+//! load-dependent noise.
+//!
+//! # Admission control
+//! The bounded queue is `inflight * queue_factor` jobs outstanding on
+//! the virtual timeline (admitted, not yet completed by the current
+//! arrival instant). A submission that finds the queue full gets an
+//! immediate `rejected: overloaded` reply — never a blocking wait — so
+//! an overload sheds load visibly instead of growing queueing delay
+//! without bound. Jobs inside the bound still queue (for the window, a
+//! JCU slot, or clusters) and that wait is reported per request.
+//!
+//! # Memoization
+//! Service cycles come from the same three-tier lookup campaigns use:
+//! process-wide trace cache, then the on-disk [`TraceStore`], then a
+//! fresh DES run (persisted back). A warm store answers every request
+//! with zero fresh simulations — the `stats` verb exposes the counter
+//! that proves it.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::campaign::store::{self, TraceStore};
+use crate::campaign::stream::Source;
+use crate::config::Config;
+use crate::coordinator::{OccupancyModel, OccupancyParams, Placement, Planner, JCU_SLOTS};
+use crate::offload::RoutineKind;
+use crate::sim::Time;
+use crate::sweep::{cache, OffloadRequest};
+
+use super::metrics::ServeMetrics;
+use super::proto::{ErrorReply, JobReply, Rejected, Reply, Request, StatsReply, Submit};
+
+/// Configuration of one engine (and daemon) instance.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    pub cfg: Config,
+    /// Closed-loop window of the occupancy model (how many jobs may be
+    /// dispatch-eligible at once).
+    pub inflight: usize,
+    /// Admission bound = `inflight * queue_factor` jobs outstanding.
+    pub queue_factor: usize,
+    /// Default arrival gap for submissions that carry none.
+    pub default_gap: Time,
+    /// Latency SLO in virtual cycles.
+    pub slo_cycles: u64,
+    /// Trace-store root; `None` keeps memoization process-local.
+    pub store_root: Option<PathBuf>,
+    /// Print a summary line every N completions (0 = only at shutdown).
+    pub summary_every: u64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            cfg: Config::default(),
+            inflight: 4,
+            queue_factor: 4,
+            default_gap: 0,
+            slo_cycles: 1_000_000,
+            store_root: None,
+            summary_every: 0,
+        }
+    }
+}
+
+/// The serve daemon's single-threaded core. Sessions serialize on it; a
+/// request's reply depends only on the engine state and the request
+/// sequence so far.
+pub struct Engine {
+    cfg: Config,
+    fp: String,
+    mem_key: String,
+    store: Option<TraceStore>,
+    model: OccupancyModel,
+    metrics: ServeMetrics,
+    /// Open-loop arrival clock (virtual cycles).
+    clock: Time,
+    /// Completion times of admitted jobs not yet retired by the clock.
+    outstanding: BinaryHeap<Reverse<Time>>,
+    queue_bound: usize,
+    default_gap: Time,
+    summary_every: u64,
+    summary_due: bool,
+}
+
+impl Engine {
+    pub fn new(opts: EngineOptions) -> anyhow::Result<Self> {
+        anyhow::ensure!(opts.inflight >= 1, "inflight must be >= 1");
+        anyhow::ensure!(opts.queue_factor >= 1, "queue-factor must be >= 1");
+        let store = opts.store_root.map(TraceStore::open).transpose()?;
+        let fp = store::fingerprint(&opts.cfg);
+        let mem_key = cache::config_key(&opts.cfg);
+        let model = OccupancyModel::new(OccupancyParams {
+            capacity: opts.cfg.soc.n_clusters(),
+            jcu_slots: JCU_SLOTS,
+            inflight: opts.inflight,
+            arrival_gap: 0,
+        });
+        Ok(Self {
+            cfg: opts.cfg,
+            fp,
+            mem_key,
+            store,
+            model,
+            metrics: ServeMetrics::new(opts.slo_cycles),
+            clock: 0,
+            outstanding: BinaryHeap::new(),
+            queue_bound: opts.inflight * opts.queue_factor,
+            default_gap: opts.default_gap,
+            summary_every: opts.summary_every,
+            summary_due: false,
+        })
+    }
+
+    /// Handle one request. Every variant answers; `Shutdown` also drains
+    /// the virtual timeline (the session layer closes the listener).
+    pub fn handle(&mut self, req: &Request) -> Reply {
+        match req {
+            Request::Submit(s) => self.submit(s),
+            Request::Stats => Reply::Stats(self.stats()),
+            Request::Ping => Reply::Pong,
+            Request::Shutdown => Reply::ShuttingDown {
+                drained: self.drain(),
+            },
+        }
+    }
+
+    /// Record a protocol-level failure (unparseable line) and build the
+    /// error reply for it.
+    pub fn protocol_error(&mut self, message: String) -> Reply {
+        self.metrics.record_error();
+        Reply::Error(ErrorReply { id: None, message })
+    }
+
+    fn error(&mut self, id: u64, message: String) -> Reply {
+        self.metrics.record_error();
+        Reply::Error(ErrorReply {
+            id: Some(id),
+            message,
+        })
+    }
+
+    fn submit(&mut self, s: &Submit) -> Reply {
+        let spec = match crate::campaign::spec::parse_kernel(&s.kernel) {
+            Ok(spec) => spec,
+            Err(e) => return self.error(s.id, e),
+        };
+        let capacity = self.model.params().capacity;
+        if let Some(n) = s.clusters {
+            if n == 0 || n > capacity {
+                return self.error(
+                    s.id,
+                    format!("clusters must be in 1..={capacity} (the SoC geometry), got {n}"),
+                );
+            }
+        }
+
+        // Advance the open-loop arrival clock, then retire everything
+        // the fabric finished before this arrival.
+        self.clock = self.clock.saturating_add(s.gap.unwrap_or(self.default_gap));
+        while let Some(&Reverse(c)) = self.outstanding.peek() {
+            if c > self.clock {
+                break;
+            }
+            self.outstanding.pop();
+        }
+
+        // Admission control: the bounded queue. Full → shed, visibly.
+        if self.outstanding.len() >= self.queue_bound {
+            self.metrics.record_rejection();
+            return Reply::Rejected(Rejected {
+                id: s.id,
+                reason: "overloaded".into(),
+                backlog: self.outstanding.len() as u64,
+                bound: self.queue_bound as u64,
+            });
+        }
+
+        let planner = Planner::new(&self.cfg);
+        let routine = s.routine.unwrap_or(RoutineKind::Multicast);
+        let placement = match s.clusters {
+            Some(n) => Placement::Accelerator { n_clusters: n },
+            None => planner.plan(&spec).placement,
+        };
+        match placement {
+            Placement::Host => {
+                // Host jobs run on CVA6 outside the fabric's dispatch
+                // window — no simulation, no queueing (mirrors the batch
+                // coordinator's host path).
+                let cycles = planner.host_estimate(&spec);
+                self.metrics.record_host(cycles);
+                self.after_completion();
+                Reply::Result(JobReply {
+                    id: s.id,
+                    kernel: s.kernel.clone(),
+                    placement,
+                    routine,
+                    cycles,
+                    queue_delay: 0,
+                    latency: cycles,
+                    start: self.clock,
+                    completion: self.clock + cycles,
+                    source: None,
+                    hit: false,
+                })
+            }
+            Placement::Accelerator { n_clusters } => {
+                let req = OffloadRequest::new(spec, n_clusters, routine);
+                let (service, source) = self.service_cycles(req);
+                let adm = self.model.admit_at(self.clock, n_clusters, service);
+                self.outstanding.push(Reverse(adm.completion));
+                // End-to-end wait from the *open-loop* arrival, which
+                // includes any window-floor deferral the model applied.
+                let queue_delay = adm.start - self.clock;
+                self.metrics.record_accel(service, queue_delay, source);
+                self.after_completion();
+                Reply::Result(JobReply {
+                    id: s.id,
+                    kernel: s.kernel.clone(),
+                    placement,
+                    routine,
+                    cycles: service,
+                    queue_delay,
+                    latency: service + queue_delay,
+                    start: adm.start,
+                    completion: adm.completion,
+                    source: Some(source),
+                    hit: source.is_hit(),
+                })
+            }
+        }
+    }
+
+    /// Service cycles for one offload, through the memoization tiers.
+    fn service_cycles(&mut self, req: OffloadRequest) -> (Time, Source) {
+        if let Some(store) = &self.store {
+            let (trace, source) = store.run_sourced(&self.fp, &self.mem_key, &self.cfg, req);
+            (trace.total, source)
+        } else if let Some(t) = cache::peek(&self.mem_key, req) {
+            (t.total, Source::Mem)
+        } else {
+            let t = cache::insert(&self.mem_key, req, Arc::new(req.run(&self.cfg)));
+            (t.total, Source::Sim)
+        }
+    }
+
+    fn after_completion(&mut self) {
+        if self.summary_every > 0 && self.metrics.completed % self.summary_every == 0 {
+            self.summary_due = true;
+        }
+    }
+
+    /// A periodic summary line, if one came due since the last poll.
+    pub fn take_summary(&mut self) -> Option<String> {
+        if std::mem::take(&mut self.summary_due) {
+            Some(self.metrics.summary_line())
+        } else {
+            None
+        }
+    }
+
+    /// The metrics snapshot behind the `stats` verb.
+    pub fn stats(&self) -> StatsReply {
+        self.metrics.snapshot()
+    }
+
+    /// The final summary line (shutdown).
+    pub fn summary_line(&self) -> String {
+        self.metrics.summary_line()
+    }
+
+    /// Trace-store counters, when a store is attached.
+    pub fn store_stats(&self) -> Option<crate::campaign::store::StoreStats> {
+        self.store.as_ref().map(TraceStore::stats)
+    }
+
+    /// Drain the virtual timeline: retire every in-flight job (with full
+    /// JCU interrupt bookkeeping) and return how many were still
+    /// outstanding. Part of graceful shutdown.
+    pub fn drain(&mut self) -> u64 {
+        let drained = self.outstanding.len() as u64;
+        self.outstanding.clear();
+        self.model.finish();
+        drained
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unique timing offset per test so the process-wide cache and any
+    /// store fingerprints never alias across parallel tests (the
+    /// campaign test idiom).
+    fn cfg_with_gap(gap: u64) -> Config {
+        let mut cfg = Config::default();
+        cfg.timing.host_ipi_issue_gap = gap;
+        cfg
+    }
+
+    fn submit(id: u64, kernel: &str, clusters: usize, gap: u64) -> Submit {
+        Submit {
+            id,
+            kernel: kernel.into(),
+            clusters: Some(clusters),
+            routine: Some(RoutineKind::Multicast),
+            gap: Some(gap),
+            seed: None,
+        }
+    }
+
+    #[test]
+    fn identical_request_sequences_reply_identically() {
+        let opts = EngineOptions {
+            cfg: cfg_with_gap(9301),
+            ..EngineOptions::default()
+        };
+        // Prime the process-wide cache so both runs see the same
+        // memoization state (otherwise the first run's inserts would
+        // turn the second run's misses into hits).
+        let mut warm = Engine::new(opts.clone()).unwrap();
+        for i in 0..6 {
+            warm.handle(&Request::Submit(submit(i, "axpy:512", 4, i * 50)));
+        }
+        let mut a = Engine::new(opts.clone()).unwrap();
+        let mut b = Engine::new(opts).unwrap();
+        for i in 0..6 {
+            let s = submit(i, "axpy:512", 4, i * 50);
+            assert_eq!(a.handle(&Request::Submit(s.clone())), b.handle(&Request::Submit(s)));
+        }
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn service_cycles_match_the_isolated_des() {
+        let cfg = cfg_with_gap(9303);
+        let req = OffloadRequest::new(
+            crate::kernels::JobSpec::Axpy { n: 640 },
+            4,
+            RoutineKind::Multicast,
+        );
+        let isolated = req.run(&cfg).total;
+        let mut e = Engine::new(EngineOptions {
+            cfg,
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        match e.handle(&Request::Submit(submit(1, "axpy:640", 4, 0))) {
+            Reply::Result(r) => {
+                assert_eq!(r.cycles, isolated);
+                assert_eq!(r.latency, r.cycles + r.queue_delay);
+                assert_eq!(r.completion, r.start + r.cycles);
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn overload_rejects_instead_of_hanging() {
+        // inflight 1, factor 1: one job outstanding is the bound. A
+        // burst at gap 0 keeps the clock at 0, so nothing ever retires
+        // and every job after the first is shed.
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9305),
+            inflight: 1,
+            queue_factor: 1,
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        let first = e.handle(&Request::Submit(submit(0, "axpy:512", 4, 0)));
+        assert!(matches!(first, Reply::Result(_)), "{first:?}");
+        for i in 1..4 {
+            match e.handle(&Request::Submit(submit(i, "axpy:512", 4, 0))) {
+                Reply::Rejected(r) => {
+                    assert_eq!(r.reason, "overloaded");
+                    assert_eq!((r.id, r.backlog, r.bound), (i, 1, 1));
+                }
+                other => panic!("expected rejection, got {other:?}"),
+            }
+        }
+        assert_eq!(e.stats().rejected, 3);
+        // Once the clock passes the first job's completion, admission
+        // reopens.
+        let reply = e.handle(&Request::Submit(submit(9, "axpy:512", 4, u32::MAX as u64)));
+        assert!(matches!(reply, Reply::Result(_)), "{reply:?}");
+    }
+
+    #[test]
+    fn repeats_hit_the_memoization_tier() {
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9307),
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        let miss = e.handle(&Request::Submit(submit(0, "axpy:768", 8, 0)));
+        let hit = e.handle(&Request::Submit(submit(1, "axpy:768", 8, 1_000_000)));
+        match (&miss, &hit) {
+            (Reply::Result(m), Reply::Result(h)) => {
+                assert!(!m.hit, "first request simulates: {m:?}");
+                assert!(h.hit, "repeat is a memory hit: {h:?}");
+                assert_eq!(m.cycles, h.cycles, "memoization is transparent");
+            }
+            other => panic!("expected two results, got {other:?}"),
+        }
+        let s = e.stats();
+        assert_eq!((s.fresh_sims, s.hits), (1, 1));
+    }
+
+    #[test]
+    fn bad_requests_answer_errors_and_count_them() {
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9309),
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        for (id, kernel, clusters) in
+            [(1, "frobnicate:64", 4), (2, "axpy:", 4), (3, "axpy:64", 0), (4, "axpy:64", 33)]
+        {
+            let s = Submit {
+                id,
+                kernel: kernel.into(),
+                clusters: Some(clusters),
+                routine: None,
+                gap: None,
+                seed: None,
+            };
+            match e.handle(&Request::Submit(s)) {
+                Reply::Error(err) => assert_eq!(err.id, Some(id)),
+                other => panic!("expected error, got {other:?}"),
+            }
+        }
+        assert_eq!(e.stats().errors, 4);
+        // Errors never touched the timeline.
+        assert_eq!(e.stats().completed, 0);
+        assert!(matches!(e.handle(&Request::Ping), Reply::Pong));
+    }
+
+    #[test]
+    fn planner_places_tiny_jobs_on_the_host() {
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9311),
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        let s = Submit {
+            id: 1,
+            kernel: "axpy:16".into(),
+            clusters: None,
+            routine: None,
+            gap: None,
+            seed: None,
+        };
+        match e.handle(&Request::Submit(s)) {
+            Reply::Result(r) => {
+                assert_eq!(r.placement, Placement::Host);
+                assert_eq!(r.queue_delay, 0);
+                assert_eq!(r.source, None);
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+        assert_eq!(e.stats().host_placements, 1);
+    }
+
+    #[test]
+    fn drain_retires_everything_and_reports_the_count() {
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9313),
+            inflight: 4,
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        for i in 0..3 {
+            e.handle(&Request::Submit(submit(i, "axpy:512", 4, 0)));
+        }
+        match e.handle(&Request::Shutdown) {
+            Reply::ShuttingDown { drained } => assert_eq!(drained, 3),
+            other => panic!("expected shutting-down, got {other:?}"),
+        }
+    }
+}

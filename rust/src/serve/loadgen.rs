@@ -1,0 +1,419 @@
+//! Open-loop load generator for the serve daemon.
+//!
+//! Open-loop means arrivals are drawn from a traffic process and do
+//! *not* wait for the system: each submission carries the sampled
+//! inter-arrival gap as virtual cycles, and the daemon advances its
+//! clock by exactly that gap. The generator itself runs the protocol in
+//! lockstep (send, read reply, repeat) — TCP pacing never distorts the
+//! schedule because time lives in the requests, not on the wall clock.
+//! An overloaded daemon therefore cannot slow arrivals down; it has to
+//! shed them, which is precisely the behavior admission control exists
+//! to make visible.
+//!
+//! Three arrival shapes, all seeded and deterministic:
+//! - **poisson**: exponential gaps around a mean — memoryless baseline.
+//! - **bursty**: on/off. Requests arrive in dense bursts (gaps at a
+//!   quarter of the mean) separated by long off-gaps sized so the
+//!   long-run rate still matches the mean.
+//! - **diurnal**: exponential gaps whose rate swings sinusoidally over
+//!   a virtual "day", modeling the daily load curve a shared
+//!   simulation service actually sees.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::coordinator::Dist;
+use crate::offload::RoutineKind;
+use crate::rng::Rng64;
+
+use super::proto::{Reply, Request, StatsReply, Submit};
+
+/// The shape of the arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "bursty" => Some(ArrivalKind::Bursty),
+            "diurnal" => Some(ArrivalKind::Diurnal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// A seeded arrival process: a deterministic stream of inter-arrival
+/// gaps in virtual cycles.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    kind: ArrivalKind,
+    /// Long-run mean inter-arrival gap (cycles).
+    mean_gap: f64,
+    /// Bursty: requests per on-burst.
+    burst: u64,
+    /// Diurnal: virtual cycles per full rate oscillation.
+    period: f64,
+    rng: Rng64,
+    /// Arrivals emitted so far (drives the bursty on/off phase).
+    emitted: u64,
+    /// Accumulated virtual time (drives the diurnal phase).
+    elapsed: f64,
+}
+
+impl ArrivalProcess {
+    pub fn new(kind: ArrivalKind, mean_gap: u64, burst: u64, period: u64, seed: u64) -> Self {
+        Self {
+            kind,
+            mean_gap: (mean_gap.max(1)) as f64,
+            burst: burst.max(2),
+            period: (period.max(1)) as f64,
+            rng: Rng64::seed_from_u64(seed),
+            emitted: 0,
+            elapsed: 0.0,
+        }
+    }
+
+    /// Exponential sample with the given mean (inverse-CDF transform;
+    /// `1 - u` keeps `ln` away from zero).
+    fn exp(&mut self, mean: f64) -> f64 {
+        -(1.0 - self.rng.next_f64()).ln() * mean
+    }
+
+    /// The next inter-arrival gap, in virtual cycles.
+    pub fn next_gap(&mut self) -> u64 {
+        let gap = match self.kind {
+            ArrivalKind::Poisson => self.exp(self.mean_gap),
+            ArrivalKind::Bursty => {
+                // Every `burst`-th arrival opens a new burst after a
+                // long off-gap; within a burst, gaps shrink to a
+                // quarter of the mean. Off mass = the other 3/4 of
+                // every on-request's budget, spent once per burst.
+                if self.emitted % self.burst == 0 {
+                    self.exp(0.75 * self.mean_gap * self.burst as f64)
+                } else {
+                    self.exp(0.25 * self.mean_gap)
+                }
+            }
+            ArrivalKind::Diurnal => {
+                // Rate swings ±75% around the mean over one period.
+                let phase = (self.elapsed / self.period) * std::f64::consts::TAU;
+                let rate_factor = 1.0 + 0.75 * phase.sin();
+                self.exp(self.mean_gap / rate_factor.max(0.25))
+            }
+        };
+        self.emitted += 1;
+        self.elapsed += gap;
+        gap.round() as u64
+    }
+}
+
+/// Configuration of one load-generator run.
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Daemon address, e.g. `127.0.0.1:7077`.
+    pub addr: String,
+    pub requests: u64,
+    pub seed: u64,
+    pub kind: ArrivalKind,
+    /// Long-run mean inter-arrival gap (virtual cycles).
+    pub mean_gap: u64,
+    /// Bursty: requests per burst.
+    pub burst: u64,
+    /// Diurnal: cycles per rate oscillation.
+    pub period: u64,
+    /// Kernel mix, uniform over these campaign-grammar tokens.
+    pub mix: Vec<String>,
+    /// Forced cluster count (`None` lets the daemon's planner place).
+    pub clusters: Option<usize>,
+    pub routine: Option<RoutineKind>,
+    /// Fetch the daemon's `stats` snapshot after the burst.
+    pub fetch_stats: bool,
+    /// Send `shutdown` after the burst (and the stats fetch).
+    pub shutdown: bool,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7077".into(),
+            requests: 64,
+            seed: 1,
+            kind: ArrivalKind::Poisson,
+            mean_gap: 50_000,
+            burst: 8,
+            period: 4_000_000,
+            mix: vec![
+                "axpy:1024".into(),
+                "matmul:16".into(),
+                "atax:64x64".into(),
+                "montecarlo:4096".into(),
+            ],
+            clusters: None,
+            routine: None,
+            fetch_stats: true,
+            shutdown: false,
+        }
+    }
+}
+
+/// What one load-generator run observed.
+#[derive(Debug, Default)]
+pub struct LoadgenReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Error replies plus protocol failures (short reads, bad replies).
+    pub failures: u64,
+    pub hits: u64,
+    /// End-to-end virtual latency of completed requests.
+    pub latency: Dist,
+    /// The daemon's snapshot, when `fetch_stats` was set.
+    pub stats: Option<StatsReply>,
+    /// In-flight jobs the daemon drained, when `shutdown` was set.
+    pub drained: Option<u64>,
+}
+
+impl LoadgenReport {
+    /// Render the run, one grep-stable line per fact. The CI smoke job
+    /// matches on `" 0 failure(s)"` and `"0 fresh simulation(s)"`.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "loadgen: {} submitted, {} completed, {} rejected, {} failure(s)\n",
+            self.submitted, self.completed, self.rejected, self.failures
+        );
+        if self.latency.count() > 0 {
+            let q = self.latency.quantiles(&[0.50, 0.95, 0.99]);
+            out.push_str(&format!(
+                "latency p50/p95/p99/max: {}/{}/{}/{} cyc\n",
+                q[0], q[1], q[2], self.latency.max()
+            ));
+        }
+        if let Some(s) = &self.stats {
+            out.push_str(&format!(
+                "server: {} hit(s), {} fresh simulation(s), {} SLO violation(s)\n",
+                s.hits, s.fresh_sims, s.slo_violations
+            ));
+        }
+        if let Some(d) = self.drained {
+            out.push_str(&format!("shutdown: server drained {d} in-flight job(s)\n"));
+        }
+        out
+    }
+}
+
+/// One lockstep exchange: write the request line, read one reply line.
+fn exchange(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    req: &Request,
+) -> anyhow::Result<Reply> {
+    writer.write_all(format!("{}\n", req.to_line()).as_bytes())?;
+    writer.flush()?;
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    anyhow::ensure!(n > 0, "server closed the connection mid-exchange");
+    Reply::from_line(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+}
+
+/// Run one seeded open-loop burst against a serve daemon.
+pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
+    anyhow::ensure!(!opts.mix.is_empty(), "loadgen needs a non-empty kernel mix");
+    let stream =
+        TcpStream::connect(&opts.addr).map_err(|e| anyhow::anyhow!("connect {}: {e}", opts.addr))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let mut arrivals =
+        ArrivalProcess::new(opts.kind, opts.mean_gap, opts.burst, opts.period, opts.seed);
+    // Independent stream for the kernel mix so changing the arrival
+    // shape never reshuffles which kernels get submitted.
+    let mut mix_rng = Rng64::seed_from_u64(opts.seed ^ 0x6D69_785F_7365_6564);
+    let mut report = LoadgenReport::default();
+
+    for id in 0..opts.requests {
+        let kernel = opts.mix[mix_rng.gen_range_usize(0, opts.mix.len())].clone();
+        let submit = Submit {
+            id,
+            kernel,
+            clusters: opts.clusters,
+            routine: opts.routine,
+            gap: Some(arrivals.next_gap()),
+            seed: Some(opts.seed.wrapping_add(id)),
+        };
+        report.submitted += 1;
+        match exchange(&mut writer, &mut reader, &Request::Submit(submit))? {
+            Reply::Result(r) => {
+                report.completed += 1;
+                report.latency.record(r.latency);
+                if r.hit {
+                    report.hits += 1;
+                }
+            }
+            Reply::Rejected(_) => report.rejected += 1,
+            Reply::Error(_) => report.failures += 1,
+            other => {
+                report.failures += 1;
+                eprintln!("loadgen: unexpected reply to submit: {other:?}");
+            }
+        }
+    }
+
+    if opts.fetch_stats {
+        match exchange(&mut writer, &mut reader, &Request::Stats)? {
+            Reply::Stats(s) => report.stats = Some(s),
+            other => {
+                report.failures += 1;
+                eprintln!("loadgen: unexpected reply to stats: {other:?}");
+            }
+        }
+    }
+    if opts.shutdown {
+        match exchange(&mut writer, &mut reader, &Request::Shutdown)? {
+            Reply::ShuttingDown { drained } => report.drained = Some(drained),
+            other => {
+                report.failures += 1;
+                eprintln!("loadgen: unexpected reply to shutdown: {other:?}");
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaps(kind: ArrivalKind, seed: u64, n: usize) -> Vec<u64> {
+        let mut p = ArrivalProcess::new(kind, 10_000, 8, 1_000_000, seed);
+        (0..n).map(|_| p.next_gap()).collect()
+    }
+
+    #[test]
+    fn same_seed_same_gaps() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            assert_eq!(gaps(kind, 42, 256), gaps(kind, 42, 256), "{kind:?}");
+            assert_ne!(gaps(kind, 42, 256), gaps(kind, 43, 256), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn poisson_mean_tracks_the_target() {
+        let g = gaps(ArrivalKind::Poisson, 7, 20_000);
+        let mean = g.iter().sum::<u64>() as f64 / g.len() as f64;
+        assert!(
+            (mean - 10_000.0).abs() < 500.0,
+            "empirical mean {mean} strays from the 10k target"
+        );
+    }
+
+    #[test]
+    fn bursty_alternates_dense_and_sparse() {
+        // Within a burst the gaps average a quarter of the mean; the
+        // burst-opening off-gaps are an order of magnitude longer. The
+        // long-run rate still matches the configured mean.
+        let g = gaps(ArrivalKind::Bursty, 11, 16_000);
+        let (mut on_sum, mut on_n, mut off_sum, mut off_n) = (0u64, 0u64, 0u64, 0u64);
+        for (i, gap) in g.iter().enumerate() {
+            if i as u64 % 8 == 0 {
+                off_sum += gap;
+                off_n += 1;
+            } else {
+                on_sum += gap;
+                on_n += 1;
+            }
+        }
+        let on_mean = on_sum as f64 / on_n as f64;
+        let off_mean = off_sum as f64 / off_n as f64;
+        assert!(on_mean < 3_000.0, "on-burst gaps are dense: {on_mean}");
+        assert!(off_mean > 50_000.0, "off gaps are sparse: {off_mean}");
+        let overall = g.iter().sum::<u64>() as f64 / g.len() as f64;
+        assert!(
+            (overall - 10_000.0).abs() < 1_000.0,
+            "long-run mean {overall} strays from the 10k target"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_actually_swings() {
+        // Bucket arrivals by phase of the virtual day: the peak half
+        // of the cycle must see meaningfully more arrivals than the
+        // trough half.
+        let mut p = ArrivalProcess::new(ArrivalKind::Diurnal, 10_000, 8, 1_000_000, 13);
+        let mut t = 0.0f64;
+        let (mut peak, mut trough) = (0u64, 0u64);
+        for _ in 0..50_000 {
+            t += p.next_gap() as f64;
+            let phase = (t / 1_000_000.0).fract();
+            if phase < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > trough as f64 * 1.5,
+            "peak {peak} vs trough {trough}: no diurnal swing"
+        );
+    }
+
+    #[test]
+    fn arrival_kind_names_round_trip() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            assert_eq!(ArrivalKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ArrivalKind::parse("sawtooth"), None);
+    }
+
+    #[test]
+    fn report_renders_the_grep_targets() {
+        let mut r = LoadgenReport {
+            submitted: 4,
+            completed: 4,
+            ..LoadgenReport::default()
+        };
+        for v in [100, 200, 300, 400] {
+            r.latency.record(v);
+        }
+        r.stats = Some(StatsReply {
+            hits: 4,
+            ..sample_empty_stats()
+        });
+        r.drained = Some(0);
+        let text = r.render();
+        assert!(text.contains("4 submitted, 4 completed, 0 rejected, 0 failure(s)"), "{text}");
+        assert!(text.contains("0 fresh simulation(s)"), "{text}");
+        assert!(text.contains("drained 0 in-flight job(s)"), "{text}");
+    }
+
+    fn sample_empty_stats() -> StatsReply {
+        StatsReply {
+            completed: 0,
+            rejected: 0,
+            errors: 0,
+            host_placements: 0,
+            accel_placements: 0,
+            hits: 0,
+            fresh_sims: 0,
+            queue: Default::default(),
+            service: Default::default(),
+            latency: Default::default(),
+            slo_cycles: 1_000_000,
+            slo_violations: 0,
+            jobs_per_sim_second: None,
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Per-request metrics for the serve daemon.
+//!
+//! Everything is measured in *virtual* cycles on the daemon's open-loop
+//! timeline: queue delay (arrival → dispatch), service (the isolated DES
+//! runtime), and end-to-end latency (their sum), each kept as a full
+//! sample distribution so the `stats` verb can answer p50/p95/p99
+//! honestly rather than from a lossy sketch. Latency is additionally
+//! judged against a configurable SLO so a load-generator run summarizes
+//! to one number: how many requests the fabric served late.
+//!
+//! Hit/miss bookkeeping counts *fresh simulations* as misses — the
+//! number the memoization proof greps for. Memory and disk hits are kept
+//! separately so a warm-store rerun is distinguishable from same-process
+//! caching.
+
+use crate::campaign::stream::Source;
+use crate::coordinator::Dist;
+
+use super::proto::{DistSummary, StatsReply};
+
+/// Counters and distributions for one daemon lifetime.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub host_placements: u64,
+    pub accel_placements: u64,
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    /// Fresh simulations (request-level misses).
+    pub fresh_sims: u64,
+    pub slo_cycles: u64,
+    pub slo_violations: u64,
+    pub queue: Dist,
+    pub service: Dist,
+    pub latency: Dist,
+}
+
+impl ServeMetrics {
+    pub fn new(slo_cycles: u64) -> Self {
+        Self {
+            slo_cycles,
+            ..Self::default()
+        }
+    }
+
+    /// Record one accelerator-placed completion.
+    pub fn record_accel(&mut self, service: u64, queue_delay: u64, source: Source) {
+        self.completed += 1;
+        self.accel_placements += 1;
+        match source {
+            Source::Mem => self.mem_hits += 1,
+            Source::Disk => self.disk_hits += 1,
+            Source::Sim => self.fresh_sims += 1,
+        }
+        let latency = service + queue_delay;
+        self.queue.record(queue_delay);
+        self.service.record(service);
+        self.latency.record(latency);
+        if latency > self.slo_cycles {
+            self.slo_violations += 1;
+        }
+    }
+
+    /// Record one host-placed completion (no simulation, no queueing —
+    /// the host core runs it outside the fabric's dispatch window).
+    pub fn record_host(&mut self, cycles: u64) {
+        self.completed += 1;
+        self.host_placements += 1;
+        self.queue.record(0);
+        self.service.record(cycles);
+        self.latency.record(cycles);
+        if cycles > self.slo_cycles {
+            self.slo_violations += 1;
+        }
+    }
+
+    pub fn record_rejection(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Memoization hits (memory + disk).
+    pub fn hits(&self) -> u64 {
+        self.mem_hits + self.disk_hits
+    }
+
+    /// Simulated-time throughput, mirroring
+    /// `coordinator::Metrics::jobs_per_sim_second` but already mapped to
+    /// `None` where the f64 would be non-finite — the wire encodes that
+    /// as `null`.
+    pub fn jobs_per_sim_second(&self) -> Option<f64> {
+        if self.completed == 0 || self.latency.sum() == 0 {
+            return None;
+        }
+        Some(self.completed as f64 / (self.latency.sum() as f64 / 1e9))
+    }
+
+    fn summarize(d: &Dist) -> DistSummary {
+        if d.count() == 0 {
+            return DistSummary::default();
+        }
+        let q = d.quantiles(&[0.50, 0.95, 0.99]);
+        DistSummary {
+            count: d.count() as u64,
+            p50: q[0],
+            p95: q[1],
+            p99: q[2],
+            max: d.max(),
+        }
+    }
+
+    /// The `stats` reply for the current state.
+    pub fn snapshot(&self) -> StatsReply {
+        StatsReply {
+            completed: self.completed,
+            rejected: self.rejected,
+            errors: self.errors,
+            host_placements: self.host_placements,
+            accel_placements: self.accel_placements,
+            hits: self.hits(),
+            fresh_sims: self.fresh_sims,
+            queue: Self::summarize(&self.queue),
+            service: Self::summarize(&self.service),
+            latency: Self::summarize(&self.latency),
+            slo_cycles: self.slo_cycles,
+            slo_violations: self.slo_violations,
+            jobs_per_sim_second: self.jobs_per_sim_second(),
+        }
+    }
+
+    /// The periodic one-line summary the daemon prints.
+    pub fn summary_line(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "serve: {} done ({} rejected, {} error(s)), {} hit(s), {} fresh simulation(s), \
+             latency p50/p95/p99 {}/{}/{} cyc, {} over the {}-cyc SLO",
+            s.completed,
+            s.rejected,
+            s.errors,
+            s.hits,
+            s.fresh_sims,
+            s.latency.p50,
+            s.latency.p95,
+            s.latency.p99,
+            s.slo_violations,
+            s.slo_cycles
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::json::Json;
+
+    #[test]
+    fn percentiles_track_recorded_latencies() {
+        let mut m = ServeMetrics::new(1_000);
+        for v in 1..=100u64 {
+            m.record_accel(v * 10, 0, Source::Sim);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.fresh_sims, 100);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.latency.count, 100);
+        // Nearest-rank over [10, 20, .., 1000]: rank round(99 * .5) = 50.
+        assert_eq!(s.latency.p50, 510);
+        assert_eq!(s.latency.p99, 990);
+        assert_eq!(s.latency.max, 1000);
+        // No latency exceeds the 1000-cycle SLO (1000 is on time).
+        assert_eq!(s.slo_violations, 0);
+        let mut m = ServeMetrics::new(500);
+        for v in 1..=10u64 {
+            m.record_accel(v * 100, 0, Source::Mem);
+        }
+        assert_eq!(m.snapshot().slo_violations, 5, "600..=1000 are late");
+    }
+
+    #[test]
+    fn hit_miss_split_by_source() {
+        let mut m = ServeMetrics::new(u64::MAX);
+        m.record_accel(100, 0, Source::Sim);
+        m.record_accel(100, 10, Source::Disk);
+        m.record_accel(100, 20, Source::Mem);
+        m.record_host(40);
+        m.record_rejection();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!((s.completed, s.rejected, s.errors), (4, 1, 1));
+        assert_eq!((s.hits, s.fresh_sims), (2, 1));
+        assert_eq!((s.host_placements, s.accel_placements), (1, 3));
+        assert_eq!(s.queue.max, 20);
+    }
+
+    #[test]
+    fn degenerate_throughput_is_null_on_the_wire() {
+        // Zero-cycle completions: the coordinator's f64 API says
+        // INFINITY; the serve snapshot says None and the serialized
+        // stats reply stays valid JSON with a null rate.
+        let mut m = ServeMetrics::new(1_000);
+        m.record_host(0);
+        assert_eq!(m.jobs_per_sim_second(), None);
+        let line = crate::serve::proto::Reply::Stats(m.snapshot()).to_line();
+        assert!(line.contains("\"jobs_per_sim_second\":null"), "{line}");
+        assert!(Json::parse(&line).is_ok(), "{line}");
+        // And an empty daemon reports zeros, not NaN percentiles.
+        let empty = ServeMetrics::new(1_000).snapshot();
+        assert_eq!(empty.latency, DistSummary::default());
+        assert_eq!(empty.jobs_per_sim_second, None);
+    }
+
+    #[test]
+    fn summary_line_carries_the_grep_targets() {
+        let mut m = ServeMetrics::new(1_000_000);
+        m.record_accel(500, 0, Source::Disk);
+        let line = m.summary_line();
+        assert!(line.contains("1 done"), "{line}");
+        assert!(line.contains("1 hit(s)"), "{line}");
+        assert!(line.contains("0 fresh simulation(s)"), "{line}");
+    }
+}

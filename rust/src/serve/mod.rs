@@ -1,0 +1,44 @@
+//! Simulation-as-a-service: a long-lived daemon in front of the DES.
+//!
+//! The batch coordinator answers "run these N jobs"; this module answers
+//! "keep answering jobs" — the shape a shared simulation service on a
+//! login node actually has. Five pieces:
+//!
+//! * [`proto`] — line-delimited JSON wire protocol (submit / stats /
+//!   ping / shutdown), deterministic bytes, malformed input downgraded
+//!   to per-request errors.
+//! * [`engine`] — the deterministic core: open-loop arrival clock,
+//!   admission control with a bounded queue (`rejected: overloaded`
+//!   instead of unbounded delay), scheduling through the coordinator's
+//!   [`OccupancyModel`](crate::coordinator::OccupancyModel), and
+//!   three-tier memoization (process cache → campaign
+//!   [`TraceStore`](crate::campaign::TraceStore) → fresh simulation).
+//! * [`metrics`] — per-request queue/service/latency distributions,
+//!   hit/miss counters, SLO accounting, the `stats` snapshot and the
+//!   periodic summary line.
+//! * [`server`] — the TCP front end: concurrent sessions, graceful
+//!   drain on shutdown, nothing a client writes can take it down.
+//! * [`loadgen`] — a seeded open-loop client: Poisson, bursty and
+//!   diurnal arrivals over a kernel mix, reporting client-side
+//!   latency percentiles next to the server's own stats.
+//!
+//! Because time is virtual and arrivals ride in the requests, a serve
+//! run is a *reproducible experiment*: the same seed and mix produce the
+//! same schedule, latencies and rejections on any machine, warm or cold.
+//! `occamy serve --listen` starts the daemon, `occamy loadgen` drives
+//! it, `occamy serve --oneshot` keeps the original in-process batch
+//! path, and `occamy bench serve` measures the engine's service rate.
+
+pub mod engine;
+pub mod loadgen;
+pub mod metrics;
+pub mod proto;
+pub mod server;
+pub mod spec;
+
+pub use engine::{Engine, EngineOptions};
+pub use loadgen::{ArrivalKind, ArrivalProcess, LoadgenOptions, LoadgenReport};
+pub use metrics::ServeMetrics;
+pub use proto::{Reply, Request, StatsReply, Submit};
+pub use server::Server;
+pub use spec::ServeSpec;

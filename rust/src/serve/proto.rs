@@ -1,0 +1,616 @@
+//! The serve daemon's wire protocol: line-delimited JSON over TCP.
+//!
+//! One request per line, one reply line per request, in order — a
+//! session is a lockstep request/reply stream, which keeps the protocol
+//! trivially framable (no length prefixes, no multiplexing) and makes
+//! client-side accounting deterministic. Every message is a single JSON
+//! object; requests carry an `"op"` discriminant, replies a `"reply"`
+//! discriminant. Encoding rides on [`runtime::json`](crate::runtime::json)
+//! — deterministic key order, integers without fractional suffixes, and
+//! non-finite floats as `null` — so replies are stable byte-for-byte for
+//! a given state, and a `stats` reply can never emit unparseable JSON
+//! no matter how degenerate a metric gets.
+//!
+//! Unknown operations, malformed JSON, and semantically invalid requests
+//! (bad kernel token, out-of-range cluster count) are all *per-request*
+//! failures: the daemon answers with an `error` reply and keeps the
+//! session open. Nothing a client writes can take the daemon down.
+
+use std::collections::BTreeMap;
+
+use crate::campaign::stream::Source;
+use crate::coordinator::Placement;
+use crate::offload::RoutineKind;
+use crate::runtime::json::Json;
+
+/// A client → daemon message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit one job (the `JobRequest` shape: id, kernel, clusters,
+    /// routine, seed) plus the open-loop arrival gap.
+    Submit(Submit),
+    /// Ask for the daemon's metrics snapshot.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Graceful shutdown: drain the virtual timeline, stop accepting.
+    Shutdown,
+}
+
+/// One job submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Submit {
+    /// Client-chosen id, echoed on the reply.
+    pub id: u64,
+    /// Kernel token in the campaign grammar (`axpy:1024`, `matmul:32`,
+    /// `montecarlo:4096`, ...).
+    pub kernel: String,
+    /// Forced cluster count; `None` lets the planner decide (which may
+    /// place the job on the host).
+    pub clusters: Option<usize>,
+    /// Offload routine; `None` means multicast (the optimized default).
+    pub routine: Option<RoutineKind>,
+    /// Virtual cycles since the previous arrival on the daemon's
+    /// open-loop clock; `None` uses the daemon's configured default.
+    pub gap: Option<u64>,
+    /// Reserved for numerics-bearing backends; the timing-only daemon
+    /// accepts and ignores it (kept so submissions stay
+    /// `JobRequest`-shaped).
+    pub seed: Option<u64>,
+}
+
+/// A daemon → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// A completed job's schedule on the virtual timeline.
+    Result(JobReply),
+    /// Admission control refused the job: the bounded queue is full.
+    Rejected(Rejected),
+    /// The request could not be processed; the session stays open.
+    Error(ErrorReply),
+    /// Answer to `ping`.
+    Pong,
+    /// Answer to `stats`.
+    Stats(StatsReply),
+    /// Answer to `shutdown`: the daemon drained `drained` in-flight jobs
+    /// off the virtual timeline and is closing.
+    ShuttingDown { drained: u64 },
+}
+
+/// The virtual-time outcome of one admitted job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobReply {
+    pub id: u64,
+    /// Echo of the submitted kernel token.
+    pub kernel: String,
+    pub placement: Placement,
+    pub routine: RoutineKind,
+    /// Isolated service cycles (bit-identical to the serial coordinator
+    /// — contention never changes a job's own DES runtime).
+    pub cycles: u64,
+    /// Wait from open-loop arrival to dispatch (window + slots +
+    /// clusters). Zero for host placements.
+    pub queue_delay: u64,
+    /// `cycles + queue_delay`.
+    pub latency: u64,
+    /// Dispatch instant on the virtual timeline.
+    pub start: u64,
+    /// `start + cycles`.
+    pub completion: u64,
+    /// Which memoization layer served the trace (`None` for host
+    /// placements — they never simulate).
+    pub source: Option<Source>,
+    /// `true` when the trace came from memory or disk, not a fresh
+    /// simulation.
+    pub hit: bool,
+}
+
+/// An `overloaded` admission rejection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rejected {
+    pub id: u64,
+    /// Always `"overloaded"` today; a field so future admission policies
+    /// can reject for other reasons without a wire break.
+    pub reason: String,
+    /// Jobs outstanding on the virtual timeline at the arrival instant.
+    pub backlog: u64,
+    /// The admission bound (`inflight * queue_factor`).
+    pub bound: u64,
+}
+
+/// A per-request failure. `id` is present when the offending request
+/// carried one (a malformed line has no parseable id).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReply {
+    pub id: Option<u64>,
+    pub message: String,
+}
+
+/// Nearest-rank percentile summary of one latency distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DistSummary {
+    pub count: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+/// The daemon's metrics snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReply {
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub host_placements: u64,
+    pub accel_placements: u64,
+    /// Requests served from the memoization tiers (process memory or
+    /// the on-disk trace store).
+    pub hits: u64,
+    /// Requests that ran a fresh simulation — zero on a warm store.
+    pub fresh_sims: u64,
+    pub queue: DistSummary,
+    pub service: DistSummary,
+    pub latency: DistSummary,
+    /// The SLO the daemon judges end-to-end latency against.
+    pub slo_cycles: u64,
+    /// Completed jobs whose latency exceeded `slo_cycles`.
+    pub slo_violations: u64,
+    /// Simulated-time throughput; `None` when not meaningful (no jobs,
+    /// or zero simulated cycles — the case that used to serialize as
+    /// invalid JSON before non-finite floats mapped to `null`).
+    pub jobs_per_sim_second: Option<f64>,
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn need_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("missing or non-numeric {key:?}"))
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| format!("non-numeric {key:?}")),
+    }
+}
+
+fn need_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing or non-string {key:?}"))
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit(s) => {
+                let mut pairs = vec![
+                    ("op", Json::Str("submit".into())),
+                    ("id", num(s.id)),
+                    ("kernel", Json::Str(s.kernel.clone())),
+                ];
+                if let Some(n) = s.clusters {
+                    pairs.push(("clusters", num(n as u64)));
+                }
+                if let Some(r) = s.routine {
+                    pairs.push(("routine", Json::Str(r.name().into())));
+                }
+                if let Some(g) = s.gap {
+                    pairs.push(("gap", num(g)));
+                }
+                if let Some(seed) = s.seed {
+                    pairs.push(("seed", num(seed)));
+                }
+                obj(pairs)
+            }
+            Request::Stats => obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Ping => obj(vec![("op", Json::Str("ping".into()))]),
+            Request::Shutdown => obj(vec![("op", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request, String> {
+        match need_str(v, "op")? {
+            "submit" => {
+                let routine = match v.get("routine") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => {
+                        let name = j.as_str().ok_or("non-string \"routine\"")?;
+                        Some(
+                            RoutineKind::parse(name)
+                                .ok_or_else(|| format!("unknown routine {name:?}"))?,
+                        )
+                    }
+                };
+                Ok(Request::Submit(Submit {
+                    id: need_u64(v, "id")?,
+                    kernel: need_str(v, "kernel")?.to_string(),
+                    clusters: opt_u64(v, "clusters")?.map(|n| n as usize),
+                    routine,
+                    gap: opt_u64(v, "gap")?,
+                    seed: opt_u64(v, "seed")?,
+                }))
+            }
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    /// Parse one wire line.
+    pub fn from_line(line: &str) -> Result<Request, String> {
+        Request::from_json(&Json::parse(line)?)
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+impl Reply {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Reply::Result(r) => {
+                let mut pairs = vec![
+                    ("reply", Json::Str("result".into())),
+                    ("id", num(r.id)),
+                    ("kernel", Json::Str(r.kernel.clone())),
+                    ("routine", Json::Str(r.routine.name().into())),
+                    ("cycles", num(r.cycles)),
+                    ("queue_delay", num(r.queue_delay)),
+                    ("latency", num(r.latency)),
+                    ("start", num(r.start)),
+                    ("completion", num(r.completion)),
+                    ("hit", Json::Bool(r.hit)),
+                ];
+                match r.placement {
+                    Placement::Host => pairs.push(("placement", Json::Str("host".into()))),
+                    Placement::Accelerator { n_clusters } => {
+                        pairs.push(("placement", Json::Str("accel".into())));
+                        pairs.push(("clusters", num(n_clusters as u64)));
+                    }
+                }
+                if let Some(src) = r.source {
+                    pairs.push(("source", Json::Str(src.name().into())));
+                }
+                obj(pairs)
+            }
+            Reply::Rejected(r) => obj(vec![
+                ("reply", Json::Str("rejected".into())),
+                ("id", num(r.id)),
+                ("reason", Json::Str(r.reason.clone())),
+                ("backlog", num(r.backlog)),
+                ("bound", num(r.bound)),
+            ]),
+            Reply::Error(e) => {
+                let mut pairs = vec![
+                    ("reply", Json::Str("error".into())),
+                    ("message", Json::Str(e.message.clone())),
+                ];
+                if let Some(id) = e.id {
+                    pairs.push(("id", num(id)));
+                }
+                obj(pairs)
+            }
+            Reply::Pong => obj(vec![("reply", Json::Str("pong".into()))]),
+            Reply::Stats(s) => obj(vec![
+                ("reply", Json::Str("stats".into())),
+                ("completed", num(s.completed)),
+                ("rejected", num(s.rejected)),
+                ("errors", num(s.errors)),
+                ("host_placements", num(s.host_placements)),
+                ("accel_placements", num(s.accel_placements)),
+                ("hits", num(s.hits)),
+                ("fresh_sims", num(s.fresh_sims)),
+                ("queue", dist_json(&s.queue)),
+                ("service", dist_json(&s.service)),
+                ("latency", dist_json(&s.latency)),
+                ("slo_cycles", num(s.slo_cycles)),
+                ("slo_violations", num(s.slo_violations)),
+                // Non-finite rates serialize as null either way (the
+                // json layer guarantees it); mapping them out here keeps
+                // encode/decode a round trip.
+                (
+                    "jobs_per_sim_second",
+                    match s.jobs_per_sim_second {
+                        Some(r) if r.is_finite() => Json::Num(r),
+                        _ => Json::Null,
+                    },
+                ),
+            ]),
+            Reply::ShuttingDown { drained } => obj(vec![
+                ("reply", Json::Str("shutting-down".into())),
+                ("drained", num(*drained)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Reply, String> {
+        match need_str(v, "reply")? {
+            "result" => {
+                let placement = match need_str(v, "placement")? {
+                    "host" => Placement::Host,
+                    "accel" => Placement::Accelerator {
+                        n_clusters: need_u64(v, "clusters")? as usize,
+                    },
+                    other => return Err(format!("unknown placement {other:?}")),
+                };
+                let routine = need_str(v, "routine")?;
+                let routine = RoutineKind::parse(routine)
+                    .ok_or_else(|| format!("unknown routine {routine:?}"))?;
+                let source = match v.get("source") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => {
+                        let name = j.as_str().ok_or("non-string \"source\"")?;
+                        Some(
+                            Source::parse(name)
+                                .ok_or_else(|| format!("unknown source {name:?}"))?,
+                        )
+                    }
+                };
+                Ok(Reply::Result(JobReply {
+                    id: need_u64(v, "id")?,
+                    kernel: need_str(v, "kernel")?.to_string(),
+                    placement,
+                    routine,
+                    cycles: need_u64(v, "cycles")?,
+                    queue_delay: need_u64(v, "queue_delay")?,
+                    latency: need_u64(v, "latency")?,
+                    start: need_u64(v, "start")?,
+                    completion: need_u64(v, "completion")?,
+                    source,
+                    hit: matches!(v.get("hit"), Some(Json::Bool(true))),
+                }))
+            }
+            "rejected" => Ok(Reply::Rejected(Rejected {
+                id: need_u64(v, "id")?,
+                reason: need_str(v, "reason")?.to_string(),
+                backlog: need_u64(v, "backlog")?,
+                bound: need_u64(v, "bound")?,
+            })),
+            "error" => Ok(Reply::Error(ErrorReply {
+                id: opt_u64(v, "id")?,
+                message: need_str(v, "message")?.to_string(),
+            })),
+            "pong" => Ok(Reply::Pong),
+            "stats" => Ok(Reply::Stats(StatsReply {
+                completed: need_u64(v, "completed")?,
+                rejected: need_u64(v, "rejected")?,
+                errors: need_u64(v, "errors")?,
+                host_placements: need_u64(v, "host_placements")?,
+                accel_placements: need_u64(v, "accel_placements")?,
+                hits: need_u64(v, "hits")?,
+                fresh_sims: need_u64(v, "fresh_sims")?,
+                queue: dist_from_json(v.get("queue").ok_or("missing \"queue\"")?)?,
+                service: dist_from_json(v.get("service").ok_or("missing \"service\"")?)?,
+                latency: dist_from_json(v.get("latency").ok_or("missing \"latency\"")?)?,
+                slo_cycles: need_u64(v, "slo_cycles")?,
+                slo_violations: need_u64(v, "slo_violations")?,
+                jobs_per_sim_second: match v.get("jobs_per_sim_second") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(j.as_f64().ok_or("non-numeric \"jobs_per_sim_second\"")?),
+                },
+            })),
+            "shutting-down" => Ok(Reply::ShuttingDown {
+                drained: need_u64(v, "drained")?,
+            }),
+            other => Err(format!("unknown reply {other:?}")),
+        }
+    }
+
+    pub fn from_line(line: &str) -> Result<Reply, String> {
+        Reply::from_json(&Json::parse(line)?)
+    }
+
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+fn dist_json(d: &DistSummary) -> Json {
+    obj(vec![
+        ("count", num(d.count)),
+        ("p50", num(d.p50)),
+        ("p95", num(d.p95)),
+        ("p99", num(d.p99)),
+        ("max", num(d.max)),
+    ])
+}
+
+fn dist_from_json(v: &Json) -> Result<DistSummary, String> {
+    Ok(DistSummary {
+        count: need_u64(v, "count")?,
+        p50: need_u64(v, "p50")?,
+        p95: need_u64(v, "p95")?,
+        p99: need_u64(v, "p99")?,
+        max: need_u64(v, "max")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats() -> StatsReply {
+        StatsReply {
+            completed: 10,
+            rejected: 2,
+            errors: 1,
+            host_placements: 3,
+            accel_placements: 7,
+            hits: 6,
+            fresh_sims: 4,
+            queue: DistSummary {
+                count: 7,
+                p50: 10,
+                p95: 90,
+                p99: 99,
+                max: 120,
+            },
+            service: DistSummary {
+                count: 7,
+                p50: 500,
+                p95: 900,
+                p99: 990,
+                max: 1000,
+            },
+            latency: DistSummary {
+                count: 10,
+                p50: 510,
+                p95: 990,
+                p99: 1089,
+                max: 1120,
+            },
+            slo_cycles: 1_000_000,
+            slo_violations: 1,
+            jobs_per_sim_second: Some(1234.5),
+        }
+    }
+
+    #[test]
+    fn every_request_round_trips() {
+        let requests = vec![
+            Request::Submit(Submit {
+                id: 7,
+                kernel: "axpy:1024".into(),
+                clusters: Some(8),
+                routine: Some(RoutineKind::Multicast),
+                gap: Some(120),
+                seed: Some(99),
+            }),
+            Request::Submit(Submit {
+                id: 0,
+                kernel: "montecarlo:4096".into(),
+                clusters: None,
+                routine: None,
+                gap: None,
+                seed: None,
+            }),
+            Request::Stats,
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for req in requests {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "{line}");
+            assert_eq!(Request::from_line(&line).unwrap(), req, "{line}");
+            // Deterministic bytes.
+            assert_eq!(line, req.to_line());
+        }
+    }
+
+    #[test]
+    fn every_reply_round_trips() {
+        let replies = vec![
+            Reply::Result(JobReply {
+                id: 7,
+                kernel: "axpy:1024".into(),
+                placement: Placement::Accelerator { n_clusters: 8 },
+                routine: RoutineKind::Multicast,
+                cycles: 12_345,
+                queue_delay: 678,
+                latency: 13_023,
+                start: 678,
+                completion: 13_023,
+                source: Some(Source::Disk),
+                hit: true,
+            }),
+            Reply::Result(JobReply {
+                id: 8,
+                kernel: "axpy:16".into(),
+                placement: Placement::Host,
+                routine: RoutineKind::Multicast,
+                cycles: 144,
+                queue_delay: 0,
+                latency: 144,
+                start: 0,
+                completion: 144,
+                source: None,
+                hit: false,
+            }),
+            Reply::Rejected(Rejected {
+                id: 9,
+                reason: "overloaded".into(),
+                backlog: 16,
+                bound: 16,
+            }),
+            Reply::Error(ErrorReply {
+                id: Some(3),
+                message: "bad kernel \"axpy:\"".into(),
+            }),
+            Reply::Error(ErrorReply {
+                id: None,
+                message: "unparseable line".into(),
+            }),
+            Reply::Pong,
+            Reply::Stats(sample_stats()),
+            Reply::ShuttingDown { drained: 12 },
+        ];
+        for reply in replies {
+            let line = reply.to_line();
+            assert!(!line.contains('\n'), "{line}");
+            assert_eq!(Reply::from_line(&line).unwrap(), reply, "{line}");
+            assert_eq!(line, reply.to_line());
+        }
+    }
+
+    #[test]
+    fn infinite_throughput_serializes_as_null_and_parses_back() {
+        // The satellite fix end-to-end: a degenerate rate must neither
+        // break the wire nor the parser.
+        let mut s = sample_stats();
+        s.jobs_per_sim_second = Some(f64::INFINITY);
+        let line = Reply::Stats(s).to_line();
+        assert!(line.contains("\"jobs_per_sim_second\":null"), "{line}");
+        match Reply::from_line(&line).unwrap() {
+            Reply::Stats(parsed) => assert_eq!(parsed.jobs_per_sim_second, None),
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejected_reply_names_overloaded() {
+        let r = Reply::Rejected(Rejected {
+            id: 1,
+            reason: "overloaded".into(),
+            backlog: 4,
+            bound: 4,
+        });
+        assert!(r.to_line().contains("\"reason\":\"overloaded\""));
+    }
+
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        for bad in [
+            "",
+            "{",
+            "[1,2,3]",
+            "{\"op\":\"frobnicate\"}",
+            "{\"op\":\"submit\"}",
+            "{\"op\":\"submit\",\"id\":1,\"kernel\":\"axpy:64\",\"routine\":\"warp\"}",
+            "{\"reply\":\"result\"}",
+            "\u{1}\u{2}garbage bytes\u{3}",
+        ] {
+            assert!(Request::from_line(bad).is_err(), "{bad:?}");
+        }
+        assert!(Reply::from_line("{\"reply\":\"nope\"}").is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! TCP front end: listener, sessions, graceful shutdown.
+//!
+//! One thread per session, all sessions serialized on the shared
+//! [`Engine`] mutex — the engine is a deterministic virtual-time core,
+//! so the mutex is held for microseconds per request (memoized lookups)
+//! and only ever long for a fresh simulation. Replies are written before
+//! the next line is read, so a session can never accumulate unanswered
+//! requests: "drain in-flight work on shutdown" falls out of the
+//! protocol's lockstep shape rather than needing a reaper.
+//!
+//! Robustness contract (tested in `tests/integration_serve.rs`): a
+//! malformed line — torn JSON, garbage bytes, an unknown op — yields an
+//! `error` reply on that session and nothing else. The listener and
+//! every other session keep running. Only an explicit `shutdown` request
+//! stops the daemon: it drains the virtual timeline, stops accepting,
+//! unblocks every session, and [`Server::wait`] then joins them all
+//! before reporting final stats.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::engine::{Engine, EngineOptions};
+use super::proto::{Request, StatsReply};
+
+/// How long a blocked session read waits before re-checking the
+/// shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// A running serve daemon.
+pub struct Server {
+    addr: SocketAddr,
+    engine: Arc<Mutex<Engine>>,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: JoinHandle<()>,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// Lock an engine mutex, recovering from poisoning: a session that
+/// panics mid-request leaves the engine consistent enough for metrics
+/// and shutdown, and wedging every other session behind the poison flag
+/// would turn one bad request into a daemon outage.
+fn lock(engine: &Arc<Mutex<Engine>>) -> MutexGuard<'_, Engine> {
+    engine.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `127.0.0.1:7077`, or port `0` for an
+    /// OS-assigned port) and start accepting sessions.
+    pub fn start(opts: EngineOptions, listen: &str) -> anyhow::Result<Server> {
+        let engine = Arc::new(Mutex::new(Engine::new(opts)?));
+        let listener =
+            TcpListener::bind(listen).map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_thread = {
+            let engine = Arc::clone(&engine);
+            let shutdown = Arc::clone(&shutdown);
+            let sessions = Arc::clone(&sessions);
+            std::thread::spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let eng = Arc::clone(&engine);
+                            let stop = Arc::clone(&shutdown);
+                            let handle = std::thread::spawn(move || session(stream, eng, stop));
+                            sessions.lock().unwrap_or_else(PoisonError::into_inner).push(handle);
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })
+        };
+
+        Ok(Server {
+            addr,
+            engine,
+            shutdown,
+            accept_thread,
+            sessions,
+        })
+    }
+
+    /// The actual bound address (resolves `:0` listens).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Print any summary line that came due (the CLI polls this).
+    pub fn take_summary(&self) -> Option<String> {
+        lock(&self.engine).take_summary()
+    }
+
+    /// True once a client has requested shutdown.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client requests shutdown, join every session (each
+    /// finishes its in-flight request first), and return the final
+    /// stats alongside the store counters.
+    pub fn wait(self) -> (StatsReply, Option<crate::campaign::store::StoreStats>, String) {
+        let _ = self.accept_thread.join();
+        let mut held = self.sessions.lock().unwrap_or_else(PoisonError::into_inner);
+        let handles = std::mem::take(&mut *held);
+        drop(held);
+        for h in handles {
+            let _ = h.join();
+        }
+        let engine = lock(&self.engine);
+        (engine.stats(), engine.store_stats(), engine.summary_line())
+    }
+}
+
+/// One client session: read a line, answer it, repeat. Exits on EOF,
+/// unrecoverable socket errors, or daemon shutdown.
+fn session(stream: TcpStream, engine: Arc<Mutex<Engine>>, shutdown: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_half);
+    let mut writer = stream;
+    // Bytes of the line being assembled. Kept across read timeouts so a
+    // slow writer's partial line is never dropped.
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => {
+                // EOF. Answer a torn trailing line (no newline) so the
+                // client-side error is observable, then close.
+                if !buf.is_empty() {
+                    let _ = answer(&buf, &mut writer, &engine, &shutdown);
+                }
+                return;
+            }
+            Ok(_) => {
+                if buf.last() != Some(&b'\n') {
+                    // EOF mid-line; answered on the next Ok(0) pass.
+                    continue;
+                }
+                let done = answer(&buf, &mut writer, &engine, &shutdown);
+                buf.clear();
+                if done {
+                    return;
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Process one raw line and write the reply. Returns `true` when the
+/// session should end (shutdown acknowledged or the peer is gone).
+fn answer(
+    raw: &[u8],
+    writer: &mut TcpStream,
+    engine: &Arc<Mutex<Engine>>,
+    shutdown: &Arc<AtomicBool>,
+) -> bool {
+    // Garbage bytes must produce an error reply, not kill the session:
+    // decode lossily and let the JSON parser complain.
+    let line = String::from_utf8_lossy(raw);
+    let line = line.trim();
+    if line.is_empty() {
+        return false;
+    }
+    let parsed = Request::from_line(line);
+    let is_shutdown = matches!(parsed, Ok(Request::Shutdown));
+    let reply = match parsed {
+        Ok(req) => lock(engine).handle(&req),
+        Err(e) => lock(engine).protocol_error(format!("bad request: {e}")),
+    };
+    let ok = writer
+        .write_all(format!("{}\n", reply.to_line()).as_bytes())
+        .and_then(|()| writer.flush())
+        .is_ok();
+    if let Some(summary) = lock(engine).take_summary() {
+        println!("{summary}");
+    }
+    if is_shutdown {
+        // Stop the accept loop; other sessions notice on their next
+        // read-timeout poll.
+        shutdown.store(true, Ordering::SeqCst);
+        return true;
+    }
+    !ok
+}

@@ -1,0 +1,330 @@
+//! `serve.toml`: one file describing a daemon and a load-generator run.
+//!
+//! A deliberately small TOML subset (the same philosophy as
+//! [`CampaignSpec`](crate::campaign::spec::CampaignSpec), parsed with the
+//! same line discipline): two tables, scalar and string-array values,
+//! `#` comments, and hard errors on anything unrecognized — a typo in an
+//! SLO should fail loudly, not silently serve with defaults. Every field
+//! is optional; the CLI overlays its own flags on top, so the file is a
+//! baseline, not a cage.
+
+use std::path::PathBuf;
+
+use crate::offload::RoutineKind;
+
+use super::engine::EngineOptions;
+use super::loadgen::{ArrivalKind, LoadgenOptions};
+
+/// Parsed `[serve]` table: daemon-side knobs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeSection {
+    pub inflight: Option<usize>,
+    pub queue_factor: Option<usize>,
+    /// Default arrival gap for submissions that carry none.
+    pub gap: Option<u64>,
+    pub slo_cycles: Option<u64>,
+    pub summary_every: Option<u64>,
+    /// Trace-store root (relative paths resolve against the CWD).
+    pub store: Option<String>,
+}
+
+/// Parsed `[loadgen]` table: client-side traffic description.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoadgenSection {
+    pub process: Option<ArrivalKind>,
+    pub requests: Option<u64>,
+    pub mean_gap: Option<u64>,
+    pub burst: Option<u64>,
+    pub period: Option<u64>,
+    pub seed: Option<u64>,
+    pub mix: Option<Vec<String>>,
+    pub clusters: Option<usize>,
+    pub routine: Option<RoutineKind>,
+}
+
+/// A parsed `serve.toml`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeSpec {
+    pub serve: ServeSection,
+    pub loadgen: LoadgenSection,
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless it sits inside a double-quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(v: &str, key: &str) -> Result<String, String> {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("{key} wants a double-quoted string, got {v:?}"))
+    }
+}
+
+fn parse_u64(v: &str, key: &str) -> Result<u64, String> {
+    v.trim()
+        .parse::<u64>()
+        .map_err(|_| format!("{key} wants a non-negative integer, got {:?}", v.trim()))
+}
+
+fn parse_string_array(v: &str, key: &str) -> Result<Vec<String>, String> {
+    let v = v.trim();
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("{key} wants a [\"..\", ..] array, got {v:?}"))?;
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner.split(',').map(|e| parse_string(e, key)).collect()
+}
+
+impl ServeSpec {
+    pub fn parse(text: &str) -> Result<ServeSpec, String> {
+        #[derive(PartialEq)]
+        enum Section {
+            None,
+            Serve,
+            Loadgen,
+        }
+        let mut spec = ServeSpec::default();
+        let mut section = Section::None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            let at = |e: String| format!("serve.toml line {}: {e}", lineno + 1);
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = match name.trim() {
+                    "serve" => Section::Serve,
+                    "loadgen" => Section::Loadgen,
+                    other => {
+                        return Err(at(format!(
+                            "unknown section [{other}] (expected [serve] or [loadgen])"
+                        )))
+                    }
+                };
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| at(format!("expected key = value, got {line:?}")))?;
+            let (key, value) = (key.trim(), value.trim());
+            match section {
+                Section::None => {
+                    return Err(at(format!(
+                        "key {key:?} before any section (expected [serve] or [loadgen])"
+                    )))
+                }
+                Section::Serve => match key {
+                    "inflight" => {
+                        spec.serve.inflight = Some(parse_u64(value, key).map_err(at)? as usize)
+                    }
+                    "queue_factor" => {
+                        spec.serve.queue_factor = Some(parse_u64(value, key).map_err(at)? as usize)
+                    }
+                    "gap" => spec.serve.gap = Some(parse_u64(value, key).map_err(at)?),
+                    "slo_cycles" => {
+                        spec.serve.slo_cycles = Some(parse_u64(value, key).map_err(at)?)
+                    }
+                    "summary_every" => {
+                        spec.serve.summary_every = Some(parse_u64(value, key).map_err(at)?)
+                    }
+                    "store" => spec.serve.store = Some(parse_string(value, key).map_err(at)?),
+                    other => return Err(at(format!("unknown [serve] key {other:?}"))),
+                },
+                Section::Loadgen => match key {
+                    "process" => {
+                        let name = parse_string(value, key).map_err(at)?;
+                        match ArrivalKind::parse(&name) {
+                            Some(kind) => spec.loadgen.process = Some(kind),
+                            None => {
+                                return Err(at(format!(
+                                    "unknown process {name:?} (poisson, bursty or diurnal)"
+                                )))
+                            }
+                        }
+                    }
+                    "requests" => spec.loadgen.requests = Some(parse_u64(value, key).map_err(at)?),
+                    "mean_gap" => spec.loadgen.mean_gap = Some(parse_u64(value, key).map_err(at)?),
+                    "burst" => spec.loadgen.burst = Some(parse_u64(value, key).map_err(at)?),
+                    "period" => spec.loadgen.period = Some(parse_u64(value, key).map_err(at)?),
+                    "seed" => spec.loadgen.seed = Some(parse_u64(value, key).map_err(at)?),
+                    "mix" => spec.loadgen.mix = Some(parse_string_array(value, key).map_err(at)?),
+                    "clusters" => {
+                        spec.loadgen.clusters = Some(parse_u64(value, key).map_err(at)? as usize)
+                    }
+                    "routine" => {
+                        let name = parse_string(value, key).map_err(at)?;
+                        let routine = RoutineKind::parse(&name)
+                            .ok_or_else(|| at(format!("unknown routine {name:?}")))?;
+                        spec.loadgen.routine = Some(routine);
+                    }
+                    other => return Err(at(format!("unknown [loadgen] key {other:?}"))),
+                },
+            }
+        }
+        // Validate early what the engine would reject late.
+        for tok in spec.loadgen.mix.as_deref().unwrap_or(&[]) {
+            crate::campaign::spec::parse_kernel(tok)
+                .map_err(|e| format!("serve.toml mix entry {tok:?}: {e}"))?;
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ServeSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        ServeSpec::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Overlay the `[serve]` table onto engine defaults. CLI flags are
+    /// applied by the caller after this, so precedence is
+    /// defaults < file < flags.
+    pub fn engine_options(&self, base: EngineOptions) -> EngineOptions {
+        let mut opts = base;
+        if let Some(v) = self.serve.inflight {
+            opts.inflight = v;
+        }
+        if let Some(v) = self.serve.queue_factor {
+            opts.queue_factor = v;
+        }
+        if let Some(v) = self.serve.gap {
+            opts.default_gap = v;
+        }
+        if let Some(v) = self.serve.slo_cycles {
+            opts.slo_cycles = v;
+        }
+        if let Some(v) = self.serve.summary_every {
+            opts.summary_every = v;
+        }
+        if let Some(v) = &self.serve.store {
+            opts.store_root = Some(PathBuf::from(v));
+        }
+        opts
+    }
+
+    /// Overlay the `[loadgen]` table onto loadgen defaults.
+    pub fn loadgen_options(&self, base: LoadgenOptions) -> LoadgenOptions {
+        let mut opts = base;
+        if let Some(v) = self.loadgen.process {
+            opts.kind = v;
+        }
+        if let Some(v) = self.loadgen.requests {
+            opts.requests = v;
+        }
+        if let Some(v) = self.loadgen.mean_gap {
+            opts.mean_gap = v;
+        }
+        if let Some(v) = self.loadgen.burst {
+            opts.burst = v;
+        }
+        if let Some(v) = self.loadgen.period {
+            opts.period = v;
+        }
+        if let Some(v) = self.loadgen.seed {
+            opts.seed = v;
+        }
+        if let Some(v) = &self.loadgen.mix {
+            opts.mix = v.clone();
+        }
+        if let Some(v) = self.loadgen.clusters {
+            opts.clusters = Some(v);
+        }
+        if let Some(v) = self.loadgen.routine {
+            opts.routine = Some(v);
+        }
+        opts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+# A daemon plus a matching traffic description.
+[serve]
+inflight = 8
+queue_factor = 2
+gap = 25000
+slo_cycles = 2000000   # 2M cycles end-to-end
+summary_every = 64
+store = "serve-store"
+
+[loadgen]
+process = "bursty"
+requests = 512
+mean_gap = 25000
+burst = 16
+period = 8000000
+seed = 99
+mix = ["axpy:1024", "montecarlo:4096"]  # uniform over these
+clusters = 8
+routine = "multicast"
+"#;
+
+    #[test]
+    fn full_spec_parses_and_overlays() {
+        let spec = ServeSpec::parse(FULL).unwrap();
+        let e = spec.engine_options(EngineOptions::default());
+        assert_eq!((e.inflight, e.queue_factor), (8, 2));
+        assert_eq!((e.default_gap, e.slo_cycles, e.summary_every), (25_000, 2_000_000, 64));
+        assert_eq!(e.store_root, Some(PathBuf::from("serve-store")));
+        let l = spec.loadgen_options(LoadgenOptions::default());
+        assert_eq!(l.kind, ArrivalKind::Bursty);
+        assert_eq!(
+            (l.requests, l.mean_gap, l.burst, l.period, l.seed),
+            (512, 25_000, 16, 8_000_000, 99)
+        );
+        assert_eq!(l.mix, vec!["axpy:1024".to_string(), "montecarlo:4096".to_string()]);
+        assert_eq!(l.clusters, Some(8));
+        assert_eq!(l.routine, Some(RoutineKind::Multicast));
+    }
+
+    #[test]
+    fn empty_spec_changes_nothing() {
+        let spec = ServeSpec::parse("").unwrap();
+        let base = EngineOptions::default();
+        let e = spec.engine_options(base.clone());
+        assert_eq!((e.inflight, e.queue_factor), (base.inflight, base.queue_factor));
+        let l = spec.loadgen_options(LoadgenOptions::default());
+        assert_eq!(l.requests, LoadgenOptions::default().requests);
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_fail_loudly() {
+        for (text, needle) in [
+            ("[serve]\nslo = 5\n", "unknown [serve] key"),
+            ("[loadgen]\nrate = 5\n", "unknown [loadgen] key"),
+            ("[daemon]\n", "unknown section"),
+            ("inflight = 4\n", "before any section"),
+            ("[serve]\ninflight\n", "expected key = value"),
+            ("[serve]\ninflight = \"four\"\n", "non-negative integer"),
+            ("[loadgen]\nprocess = \"sawtooth\"\n", "unknown process"),
+            ("[loadgen]\nroutine = \"warp\"\n", "unknown routine"),
+            ("[loadgen]\nmix = [\"frobnicate:9\"]\n", "mix entry"),
+        ] {
+            let err = ServeSpec::parse(text).unwrap_err();
+            assert!(err.contains(needle), "{text:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn comments_do_not_leak_into_values() {
+        let spec = ServeSpec::parse("[serve]\nstore = \"a # b\" # trailing\n").unwrap();
+        assert_eq!(spec.serve.store.as_deref(), Some("a # b"));
+    }
+}

@@ -1,0 +1,306 @@
+//! Integration tests of the serve daemon over real TCP: concurrent
+//! sessions against the serial DES reference, explicit overload
+//! shedding, warm-store memoization through the load generator, input
+//! robustness, and graceful drain — the PR's acceptance criteria.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use occamy_offload::config::Config;
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::serve::{EngineOptions, LoadgenOptions, Reply, Request, Server, Submit};
+use occamy_offload::sweep::OffloadRequest;
+
+/// Unique timing offset per test so the process-wide trace cache and
+/// store fingerprints never alias across parallel tests.
+fn cfg_with_gap(gap: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.timing.host_ipi_issue_gap = gap;
+    cfg
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().unwrap();
+        Client {
+            writer,
+            reader: BufReader::new(stream),
+        }
+    }
+
+    /// One lockstep exchange with a well-formed request.
+    fn exchange(&mut self, req: &Request) -> Reply {
+        self.send_raw(&format!("{}\n", req.to_line()))
+    }
+
+    /// Write raw bytes (well-formed or not) and read one reply line.
+    fn send_raw(&mut self, bytes: &str) -> Reply {
+        self.writer.write_all(bytes.as_bytes()).unwrap();
+        self.writer.flush().unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Reply::from_line(line.trim()).unwrap()
+    }
+}
+
+fn submit(id: u64, kernel: &str, clusters: usize, gap: u64) -> Request {
+    Request::Submit(Submit {
+        id,
+        kernel: kernel.to_string(),
+        clusters: Some(clusters),
+        routine: Some(RoutineKind::Multicast),
+        gap: Some(gap),
+        seed: None,
+    })
+}
+
+fn shut_down(addr: SocketAddr) {
+    let mut c = Client::connect(addr);
+    match c.exchange(&Request::Shutdown) {
+        Reply::ShuttingDown { .. } => {}
+        other => panic!("expected shutting-down, got {other:?}"),
+    }
+}
+
+#[test]
+fn concurrent_sessions_match_the_serial_des_reference() {
+    let cfg = cfg_with_gap(9501);
+    // The serial reference: each request shape's isolated DES total.
+    // Contention may delay a job, but can never change its own cycles.
+    let shapes = [
+        ("axpy:1024", 8usize),
+        ("matmul:16", 4),
+        ("atax:64x64", 8),
+        ("montecarlo:4096", 4),
+    ];
+    let reference: Vec<u64> = shapes
+        .iter()
+        .map(|(kernel, n)| {
+            let spec = occamy_offload::campaign::spec::parse_kernel(kernel).unwrap();
+            OffloadRequest::new(spec, *n, RoutineKind::Multicast).run(&cfg).total
+        })
+        .collect();
+
+    let server = Server::start(
+        EngineOptions {
+            cfg,
+            inflight: 4,
+            ..EngineOptions::default()
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for (t, (kernel, clusters)) in shapes.iter().enumerate() {
+        let kernel = kernel.to_string();
+        let clusters = *clusters;
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            (0..8u64)
+                .map(|i| {
+                    // Wide gaps keep admission open; interleaving with
+                    // the other sessions is still arbitrary.
+                    match c.exchange(&submit(t as u64 * 100 + i, &kernel, clusters, 1_000_000)) {
+                        Reply::Result(r) => r.cycles,
+                        other => panic!("expected result, got {other:?}"),
+                    }
+                })
+                .collect::<Vec<u64>>()
+        }));
+    }
+    for (t, h) in handles.into_iter().enumerate() {
+        let totals = h.join().unwrap();
+        assert!(
+            totals.iter().all(|&c| c == reference[t]),
+            "session {t}: cycles {totals:?} diverge from the serial reference {}",
+            reference[t]
+        );
+    }
+    let mut c = Client::connect(addr);
+    match c.exchange(&Request::Stats) {
+        Reply::Stats(s) => {
+            assert_eq!(s.completed, 32, "{s:?}");
+            assert_eq!(s.rejected, 0, "{s:?}");
+            assert_eq!(s.errors, 0, "{s:?}");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    shut_down(addr);
+    server.wait();
+}
+
+#[test]
+fn overload_sheds_with_an_explicit_reply_and_never_hangs() {
+    // inflight 1 x queue_factor 1: one job outstanding is the bound. A
+    // gap-0 burst never advances the clock, so nothing retires and
+    // every job after the first must be rejected — immediately.
+    let server = Server::start(
+        EngineOptions {
+            cfg: cfg_with_gap(9503),
+            inflight: 1,
+            queue_factor: 1,
+            ..EngineOptions::default()
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+    let first = c.exchange(&submit(0, "axpy:512", 4, 0));
+    assert!(matches!(first, Reply::Result(_)), "{first:?}");
+    for i in 1..6 {
+        match c.exchange(&submit(i, "axpy:512", 4, 0)) {
+            Reply::Rejected(r) => {
+                assert_eq!(r.reason, "overloaded");
+                assert_eq!((r.backlog, r.bound), (1, 1));
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+    }
+    shut_down(addr);
+    let (stats, _, _) = server.wait();
+    assert_eq!((stats.completed, stats.rejected), (1, 5));
+}
+
+#[test]
+fn a_warm_store_serves_bursts_with_zero_fresh_simulations() {
+    let root = std::env::temp_dir().join(format!("occamy-serve-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let opts = || EngineOptions {
+        cfg: cfg_with_gap(9505),
+        store_root: Some(root.clone()),
+        ..EngineOptions::default()
+    };
+    let burst = |addr: SocketAddr| LoadgenOptions {
+        addr: addr.to_string(),
+        requests: 24,
+        seed: 7,
+        shutdown: true,
+        ..LoadgenOptions::default()
+    };
+
+    let cold = Server::start(opts(), "127.0.0.1:0").unwrap();
+    let cold_report = occamy_offload::serve::loadgen::run(&burst(cold.addr())).unwrap();
+    cold.wait();
+    assert_eq!(cold_report.failures, 0, "{cold_report:?}");
+    let cold_stats = cold_report.stats.as_ref().unwrap();
+    assert!(cold_stats.fresh_sims > 0, "cold store must simulate: {cold_stats:?}");
+    // The store actually persisted traces to disk.
+    let fp = occamy_offload::campaign::store::fingerprint(&cfg_with_gap(9505));
+    let traces = occamy_offload::campaign::store::traces_in(&root, &fp);
+    assert!(traces > 0, "no traces persisted under {}", root.join(&fp).display());
+
+    // Identical burst against a fresh daemon over the same store: every
+    // request is answered from memoization, none simulate.
+    let warm = Server::start(opts(), "127.0.0.1:0").unwrap();
+    let warm_report = occamy_offload::serve::loadgen::run(&burst(warm.addr())).unwrap();
+    warm.wait();
+    assert_eq!(warm_report.failures, 0, "{warm_report:?}");
+    let warm_stats = warm_report.stats.as_ref().unwrap();
+    assert_eq!(warm_stats.fresh_sims, 0, "warm store must not simulate: {warm_stats:?}");
+    assert!(warm_stats.hits > 0, "{warm_stats:?}");
+    // The stats reply carries the latency percentiles...
+    assert!(warm_stats.latency.count > 0, "{warm_stats:?}");
+    assert!(
+        warm_stats.latency.p50 <= warm_stats.latency.p95
+            && warm_stats.latency.p95 <= warm_stats.latency.p99
+            && warm_stats.latency.p99 <= warm_stats.latency.max,
+        "{warm_stats:?}"
+    );
+    // ...and virtual time makes the runs reproducible: same seed, same
+    // schedule, same latencies — warm or cold.
+    assert_eq!(
+        cold_report.latency.quantiles(&[0.50, 0.95, 0.99]),
+        warm_report.latency.quantiles(&[0.50, 0.95, 0.99])
+    );
+    assert_eq!(cold_report.completed, warm_report.completed);
+}
+
+#[test]
+fn garbage_and_torn_lines_never_kill_the_daemon() {
+    let server = Server::start(
+        EngineOptions {
+            cfg: cfg_with_gap(9507),
+            ..EngineOptions::default()
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.addr();
+    let mut bad = Client::connect(addr);
+    for junk in [
+        "\u{1}\u{2}garbage bytes\u{3}\n",
+        "{\"op\":\"sub\n",
+        "{\"op\":\"frobnicate\"}\n",
+        "[1,2,3]\n",
+    ] {
+        match bad.send_raw(junk) {
+            Reply::Error(e) => assert_eq!(e.id, None, "{junk:?}"),
+            other => panic!("expected error for {junk:?}, got {other:?}"),
+        }
+    }
+    // The session that sent garbage still works.
+    assert!(matches!(bad.exchange(&Request::Ping), Reply::Pong));
+
+    // A torn trailing line (peer hangs up mid-request) is answered on
+    // EOF, observably, without taking anything down.
+    let mut torn = Client::connect(addr);
+    torn.writer.write_all(b"{\"op\":\"ping\"").unwrap();
+    torn.writer.flush().unwrap();
+    torn.writer.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut line = String::new();
+    torn.reader.read_line(&mut line).unwrap();
+    match Reply::from_line(line.trim()).unwrap() {
+        Reply::Error(e) => assert_eq!(e.id, None),
+        other => panic!("expected error for the torn line, got {other:?}"),
+    }
+
+    // Fresh sessions are unaffected and the failures were all counted.
+    let mut good = Client::connect(addr);
+    match good.exchange(&Request::Stats) {
+        Reply::Stats(s) => assert_eq!(s.errors, 5, "{s:?}"),
+        other => panic!("expected stats, got {other:?}"),
+    }
+    assert!(matches!(
+        good.exchange(&submit(1, "axpy:256", 4, 0)),
+        Reply::Result(_)
+    ));
+    shut_down(addr);
+    server.wait();
+}
+
+#[test]
+fn shutdown_drains_in_flight_work_and_reports_it() {
+    let server = Server::start(
+        EngineOptions {
+            cfg: cfg_with_gap(9509),
+            inflight: 4,
+            ..EngineOptions::default()
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+    for i in 0..3 {
+        let reply = c.exchange(&submit(i, "axpy:512", 4, 0));
+        assert!(matches!(reply, Reply::Result(_)), "{reply:?}");
+    }
+    // All three are still on the virtual timeline (gap 0 retired none);
+    // shutdown drains them and says so.
+    match c.exchange(&Request::Shutdown) {
+        Reply::ShuttingDown { drained } => assert_eq!(drained, 3),
+        other => panic!("expected shutting-down, got {other:?}"),
+    }
+    let (stats, _, summary) = server.wait();
+    assert_eq!(stats.completed, 3);
+    assert!(summary.contains("3 done"), "{summary}");
+}
