@@ -264,6 +264,16 @@ pub fn run_shard_limited(
     if let Some(cap) = max_points {
         todo.truncate(cap);
     }
+    if crate::obs::log::enabled() {
+        crate::obs::log::emit(
+            &crate::obs::log::Event::wall("campaign", "shard_start")
+                .str("campaign", &spec.name)
+                .str("shard", &shard.to_string())
+                .u64("owned", owned.len() as u64)
+                .u64("resumed", done.len() as u64)
+                .u64("todo", todo.len() as u64),
+        );
+    }
 
     let file = std::fs::OpenOptions::new()
         .create(true)
@@ -328,6 +338,14 @@ pub fn run_shard_limited(
         }
     }
 
+    if crate::obs::log::enabled() {
+        crate::obs::log::emit(
+            &crate::obs::log::Event::wall("campaign", "shard_complete")
+                .str("campaign", &spec.name)
+                .str("shard", &shard.to_string())
+                .u64("executed", todo.len() as u64),
+        );
+    }
     Ok(ShardReport {
         shard,
         total_points: points.len(),

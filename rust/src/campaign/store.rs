@@ -185,19 +185,34 @@ impl TraceStore {
     ) -> (Arc<Trace>, Source) {
         if let Some(t) = cache::peek(mem_key, req) {
             self.memory_hits.fetch_add(1, Ordering::Relaxed);
+            self.emit_tier("hit_mem", &req);
             return (t, Source::Mem);
         }
         if let Some(t) = self.load(fp, &req) {
             self.disk_hits.fetch_add(1, Ordering::Relaxed);
+            self.emit_tier("hit_disk", &req);
             return (cache::insert(mem_key, req, t), Source::Disk);
         }
         let trace = Arc::new(req.run(cfg));
         self.simulations.fetch_add(1, Ordering::Relaxed);
+        self.emit_tier("fresh_sim", &req);
         if let Err(e) = self.save(fp, cfg, &req, &trace) {
             // A read-only or full disk degrades to uncached execution.
             eprintln!("campaign store: failed to persist {}: {e}", request_key(&req));
         }
         (cache::insert(mem_key, req, trace), Source::Sim)
+    }
+
+    /// One wall-domain event per memoization decision. Campaign shards
+    /// and fleet workers have no virtual clock of their own, so store
+    /// events carry wall time — the warm-store CI check greps the file
+    /// for zero `fresh_sim` events after a rerun.
+    fn emit_tier(&self, tier: &'static str, req: &OffloadRequest) {
+        if crate::obs::log::enabled() {
+            crate::obs::log::emit(
+                &crate::obs::log::Event::wall("store", tier).str("key", &request_key(req)),
+            );
+        }
     }
 
     /// Counters since this handle was opened.

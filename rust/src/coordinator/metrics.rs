@@ -40,6 +40,12 @@ impl Dist {
         self.samples.iter().copied().max().unwrap_or(0)
     }
 
+    /// Samples at or below `bound` — the cumulative counts behind
+    /// Prometheus histogram buckets (`obs::metrics`).
+    pub fn count_le(&self, bound: u64) -> usize {
+        self.samples.iter().filter(|&&v| v <= bound).count()
+    }
+
     /// q in [0, 1]; nearest-rank on the sorted samples.
     pub fn quantile(&self, q: f64) -> u64 {
         self.quantiles(&[q])[0]
@@ -203,6 +209,19 @@ mod tests {
         assert!((d.mean() - 30.0).abs() < 1e-12);
         assert_eq!(d.quantile(0.0), 10);
         assert_eq!(d.quantile(1.0), 50);
+    }
+
+    #[test]
+    fn count_le_is_cumulative() {
+        let mut d = Dist::default();
+        for v in [10u64, 20, 30] {
+            d.record(v);
+        }
+        assert_eq!(d.count_le(9), 0);
+        assert_eq!(d.count_le(10), 1);
+        assert_eq!(d.count_le(25), 2);
+        assert_eq!(d.count_le(u64::MAX), 3);
+        assert_eq!(Dist::default().count_le(0), 0);
     }
 
     #[test]

@@ -34,7 +34,10 @@ impl Fig11 {
     }
 }
 
-fn bands_of(trace: &Trace, routine: RoutineKind, n: usize, out: &mut Vec<Band>) {
+/// Append one trace's per-phase bands (host phases as degenerate
+/// min=avg=max bands, cluster phases via [`Trace::stats`]). Public so
+/// `obs::report` derives the identical statistics from stored traces.
+pub fn bands_of(trace: &Trace, routine: RoutineKind, n: usize, out: &mut Vec<Band>) {
     for p in Phase::ALL {
         if p.is_host_phase() {
             if let Some(d) = trace.host_duration(p) {

@@ -70,6 +70,8 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::campaign::{self, store, stream, CampaignSpec, CampaignStatus, Shard};
+use crate::obs::log::{self as obslog, Event, Level};
+use crate::obs::metrics::Registry;
 use crate::sweep::SweepResults;
 
 /// Scheduler parameters for one fleet run. [`FleetOptions::new`] seeds
@@ -250,6 +252,14 @@ impl Scheduler<'_> {
         let tasks: Vec<WorkerTask> = self.shards.iter().map(|&s| self.task(s, 0)).collect();
         for task in tasks {
             let handle = self.launcher.launch(&task)?;
+            if obslog::enabled() {
+                obslog::emit(
+                    &Event::wall("fleet", "worker_launch")
+                        .str("run_id", &self.opts.run_id)
+                        .str("shard", &task.shard.to_string())
+                        .u64("attempt", 0),
+                );
+            }
             self.slots.push(Slot::Running {
                 handle,
                 attempt: 0,
@@ -363,6 +373,14 @@ impl Scheduler<'_> {
         // Reaps the exited local child; a no-op for remote handles.
         handle.kill();
         self.slots[i] = Slot::Done { restarts: attempt };
+        if obslog::enabled() {
+            obslog::emit(
+                &Event::wall("fleet", "shard_complete")
+                    .str("run_id", &self.opts.run_id)
+                    .str("shard", &self.shards[i].to_string())
+                    .u64("restarts", attempt as u64),
+            );
+        }
         println!(
             "fleet: shard {} complete{}",
             self.shards[i],
@@ -389,6 +407,16 @@ impl Scheduler<'_> {
             handle.describe(),
             self.opts.max_restarts
         );
+        if obslog::enabled() {
+            obslog::emit(
+                &Event::wall("fleet", "shard_restart")
+                    .level(Level::Warn)
+                    .str("run_id", &self.opts.run_id)
+                    .str("shard", &shard.to_string())
+                    .str("reason", reason)
+                    .u64("attempt", (attempt + 1) as u64),
+            );
+        }
         println!(
             "fleet: shard {shard} ({}) {reason}; relaunching (restart {}/{})",
             handle.describe(),
@@ -464,6 +492,15 @@ pub fn run(
     // shard files are trace-heavy, re-reading them would double the
     // end-of-run cost.
     let merged = campaign::merge_report(spec, opts.workers, &opts.out_dir)?;
+    if obslog::enabled() {
+        obslog::emit(
+            &Event::wall("fleet", "merge")
+                .str("run_id", &opts.run_id)
+                .u64("points", merged.results.len() as u64)
+                .u64("sims", merged.sims as u64)
+                .u64("hits", merged.hits as u64),
+        );
+    }
     let shards = sched
         .shards
         .iter()
@@ -528,6 +565,53 @@ impl StatusView {
 
     pub fn stale_shards(&self) -> usize {
         self.leases.iter().filter(|l| l.is_stale()).count()
+    }
+
+    /// Register the fleet's progress as gauges — `occamy fleet status
+    /// --metrics` renders them so a long campaign can be scraped from
+    /// cron instead of parsed out of the text view.
+    pub fn register_metrics(&self, r: &mut Registry) {
+        r.gauge(
+            "occamy_fleet_points_total",
+            "Points in the campaign grid",
+            &[],
+            self.campaign.total_points as f64,
+        );
+        r.gauge(
+            "occamy_fleet_points_done",
+            "Points present in the shard output files",
+            &[],
+            self.campaign.done() as f64,
+        );
+        let (mut done, mut alive, mut stale, mut unleased) = (0u64, 0u64, 0u64, 0u64);
+        for sl in &self.leases {
+            match &sl.lease {
+                None => unleased += 1,
+                Some(l) if l.run_id != self.run_id => unleased += 1,
+                Some(l) if l.state == LeaseState::Done => done += 1,
+                Some(_) if sl.is_stale() => stale += 1,
+                Some(_) => alive += 1,
+            }
+        }
+        let help = "Shards by lease state";
+        r.gauge("occamy_fleet_shards", help, &[("state", "done")], done as f64);
+        r.gauge("occamy_fleet_shards", help, &[("state", "alive")], alive as f64);
+        r.gauge("occamy_fleet_shards", help, &[("state", "stale")], stale as f64);
+        r.gauge("occamy_fleet_shards", help, &[("state", "unleased")], unleased as f64);
+        r.gauge(
+            "occamy_fleet_cancel_requested",
+            "1 when a cancel marker is present in the lease directory",
+            &[],
+            if self.cancel_requested { 1.0 } else { 0.0 },
+        );
+        if let Some(n) = self.traces_on_disk {
+            r.gauge(
+                "occamy_fleet_store_traces",
+                "Traces persisted in the shared store for this config",
+                &[],
+                n as f64,
+            );
+        }
     }
 }
 
@@ -732,6 +816,18 @@ mod tests {
         assert!(view.is_complete());
         assert_eq!(view.stale_shards(), 0);
         assert!(view.to_string().contains("ready to merge"));
+        // The same view registers as Prometheus gauges.
+        let mut reg = Registry::new();
+        view.register_metrics(&mut reg);
+        let text = reg.render();
+        let total = view.campaign.total_points as f64;
+        assert!(text.contains(&format!("occamy_fleet_points_total {}", total)));
+        assert!(text.contains(&format!("occamy_fleet_points_done {}", total)));
+        // In-process workers never wrote leases, so every shard is unleased.
+        assert!(text.contains("occamy_fleet_shards{state=\"unleased\"} 2"));
+        assert!(text.contains("occamy_fleet_shards{state=\"alive\"} 0"));
+        assert!(text.contains("occamy_fleet_cancel_requested 0"));
+        assert!(!text.contains("occamy_fleet_store_traces"), "no store was attached");
     }
 
     #[test]

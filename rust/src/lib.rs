@@ -65,6 +65,18 @@
 //! processes over a kernel mix) and `occamy bench serve` measures the
 //! engine's service rate.
 //!
+//! [`obs`] is the cross-cutting observability layer over all of the
+//! above: `occamy trace export` renders any simulated job — and any
+//! occupancy-engine batch — as deterministic Perfetto/Chrome trace
+//! JSON on the virtual-cycle clock ([`obs::perfetto`]), `occamy trace
+//! report` re-derives the paper's overhead decomposition and Fig.
+//! 11-style phase bands from a campaign store ([`obs::report`]), a
+//! structured JSONL event log replaces scattered prints for serve,
+//! fleet, campaign, and store lifecycles ([`obs::log`], off by
+//! default; `--log`/`OCCAMY_LOG`), and a Prometheus-text metrics
+//! registry is scraped through the serve protocol's `metrics` verb
+//! ([`obs::metrics`]).
+//!
 //! ## Module map
 //!
 //! | layer | modules |
@@ -74,6 +86,7 @@
 //! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`fleet`] (multi-host scheduler: leases, recovery, auto-merge), [`exp`] (Figs. 7-12, interference), [`bench`] |
 //! | modeling | [`model`] (analytical runtime model §5.6) |
 //! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`serve`] (TCP daemon: admission control, memoization, load generator), [`runtime`] (PJRT numerics, JSON) |
+//! | observability | [`obs`] (Perfetto timelines, store-wide overhead reports, JSONL event log, Prometheus metrics) |
 //! | support | [`rng`] |
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
@@ -93,6 +106,7 @@ pub mod kernels;
 pub mod mem;
 pub mod model;
 pub mod noc;
+pub mod obs;
 pub mod offload;
 pub mod rng;
 pub mod runtime;

@@ -4,6 +4,7 @@
 //!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F]
 //!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
 //!   fleet <run|status|watch|cancel|gc> --spec F [--workers N] [--out DIR]
+//!   trace <export|report> (Perfetto/Chrome timeline export; store overhead report)
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
 //!   interfere --kernel K --size N [--clusters C] [--inflight LIST] [--jobs N] [--gap G]
 //!   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--slo CYC] [--store DIR]
@@ -28,13 +29,17 @@ use std::time::Duration;
 use occamy_offload::bench::Bench;
 use occamy_offload::campaign::{self, CampaignSpec, HostSpec, Shard, TraceStore};
 use occamy_offload::config::Config;
-use occamy_offload::coordinator::{Coordinator, CoordinatorConfig, JobRequest, Planner};
+use occamy_offload::coordinator::{
+    Coordinator, CoordinatorConfig, JobRequest, OccupancyModel, OccupancyParams, Planner,
+    JCU_SLOTS,
+};
 use occamy_offload::exp::{self, Table};
 use occamy_offload::fleet::{
     self, FleetOptions, GcOptions, Heartbeat, Lease, LocalLauncher, SshLauncher,
 };
 use occamy_offload::kernels::JobSpec;
 use occamy_offload::model::OffloadModel;
+use occamy_offload::obs;
 use occamy_offload::offload::RoutineKind;
 use occamy_offload::runtime::json::Json;
 use occamy_offload::runtime::{default_artifacts_dir, run_and_verify, PjrtRuntime};
@@ -70,9 +75,11 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "dry-run",
     "help",
     "local",
+    "metrics",
     "no-stats",
     "no-store",
     "oneshot",
+    "phases",
     "prune-merged",
     "shutdown",
     "timing-only",
@@ -208,7 +215,7 @@ fn emit(table: Table, csv: bool) {
     }
 }
 
-const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serve|loadgen|bench|validate-artifacts|model|config-dump> [options]
+const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfere|serve|loadgen|bench|validate-artifacts|model|config-dump> [options]
   experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|interference|all> [--csv] [--config F]
   campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store] [--max-points N]
                     [--lease FILE] [--lease-ttl SECS] [--run-id ID] [--attempt K]
@@ -220,18 +227,22 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|sim|interfere|serv
                [--hosts H1,H2,..] [--remote-bin PATH] [--local-root DIR] [--ssh BIN] [--local]
   fleet gc     --store DIR [--dry-run] [--retention-secs S] [--tmp-grace-secs S] [SPEC..]
                [--prune-merged [--out DIR] SPEC..]   (delete shard files behind a re-verified merge)
-  fleet status --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
+  fleet status --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID] [--metrics]
   fleet watch  --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID] [--interval SECS]
   fleet cancel --spec F [--out DIR] [--store DIR] [--no-store] [--run-id ID]
+  trace export --out FILE [--kernel K] [--size N] [--clusters C] [--routine R] [--config F]
+               [--batch N [--inflight W] [--gap G]]   (Perfetto/Chrome trace-event JSON)
+  trace report --store DIR [--phases] [--csv]         (offload-overhead decomposition of a store)
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
   interfere --kernel K --size N [--clusters C] [--routine R] [--inflight 1,2,4,8] [--jobs 16] [--gap 0] [--csv]
   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--gap G] [--slo CYC]
-        [--summary-every N] [--store DIR] [--config F]
+        [--summary-every N] [--store DIR] [--config F] [--log FILE]
   serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
   loadgen --connect ADDR [--spec F] [--requests N] [--seed S] [--process poisson|bursty|diurnal]
           [--mean-gap G] [--burst B] [--period P] [--mix K1,K2,..] [--clusters C] [--routine R]
-          [--no-stats] [--shutdown]
+          [--no-stats] [--shutdown] [--metrics]
   bench serve [--requests N] [--inflight W] [--seed S] [--mean-gap G] [--out FILE] [--config F]
+              [--baseline FILE [--max-regress-pct P]]   (exit nonzero on p99 latency regression)
   validate-artifacts [--artifacts DIR]
   model --kernel K --size N [--config F]
   config-dump";
@@ -247,6 +258,7 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         "experiment" => cmd_experiment(&a),
         "campaign" => cmd_campaign(&a),
         "fleet" => cmd_fleet(&a),
+        "trace" => cmd_trace(&a),
         "sim" => cmd_sim(&a),
         "interfere" => cmd_interfere(&a),
         "serve" => cmd_serve(&a),
@@ -383,6 +395,9 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
             println!("spec OK");
         }
         "run" => {
+            // Structured events are opt-in via OCCAMY_LOG; never on by
+            // default, never a change to simulation results.
+            obs::log::init_from_env()?;
             let shard = match a.flag("shard") {
                 Some(s) => Shard::parse(s)?,
                 None => Shard::SINGLE,
@@ -531,7 +546,7 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
     ];
     let allowed: &[&str] = match action {
         "run" => RUN_FLAGS,
-        "status" => &["spec", "workers", "out", "store", "no-store", "run-id"],
+        "status" => &["spec", "workers", "out", "store", "no-store", "run-id", "metrics"],
         "watch" => &["spec", "workers", "out", "store", "no-store", "run-id", "interval"],
         "cancel" => &["spec", "workers", "out", "store", "no-store", "run-id"],
         other => anyhow::bail!("unknown fleet action {other:?} (run, status, watch, cancel or gc)"),
@@ -557,6 +572,7 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
     opts.store = resolve_store_root(a, &opts.out_dir);
     match action {
         "run" => {
+            obs::log::init_from_env()?;
             opts.lease_ttl =
                 Duration::from_secs(a.u64_flag("lease-ttl", opts.lease_ttl.as_secs())?.max(1));
             opts.max_restarts = a.u64_flag("max-restarts", opts.max_restarts as u64)? as usize;
@@ -622,7 +638,14 @@ fn cmd_fleet(a: &Args) -> anyhow::Result<()> {
             println!("{report}");
         }
         "status" => {
-            print!("{}", fleet_status_of(&spec, &opts)?);
+            let view = fleet_status_of(&spec, &opts)?;
+            if a.has("metrics") {
+                let mut r = obs::Registry::new();
+                view.register_metrics(&mut r);
+                print!("{}", r.render());
+            } else {
+                print!("{view}");
+            }
         }
         "watch" => {
             let interval = Duration::from_secs(a.u64_flag("interval", 2)?.max(1));
@@ -715,6 +738,136 @@ fn cmd_fleet_gc(a: &Args) -> anyhow::Result<()> {
         opts.keep_fingerprints = Some(keep);
     }
     print!("{}", fleet::gc::run(&root, &opts)?);
+    Ok(())
+}
+
+/// `occamy trace <export|report>`: render recorded simulation as a
+/// Perfetto/Chrome timeline, or aggregate a trace store into the
+/// paper's overhead decomposition — no fresh measurement either way
+/// beyond the one deterministic job `export` simulates.
+fn cmd_trace(a: &Args) -> anyhow::Result<()> {
+    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("usage: occamy trace <export|report> (--out FILE | --store DIR)")
+    })?;
+    match action {
+        "export" => cmd_trace_export(a),
+        "report" => cmd_trace_report(a),
+        other => anyhow::bail!("unknown trace action {other:?} (export or report)"),
+    }
+}
+
+/// `occamy trace export`: simulate one job and write its phase timeline
+/// as Chrome trace-event JSON (host + cluster lanes); with `--batch N`,
+/// add coordinator lanes — JCU slots and queue waits — for N identical
+/// jobs pushed through the occupancy model.
+fn cmd_trace_export(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown(
+        "trace export",
+        &["kernel", "size", "clusters", "routine", "config", "out", "batch", "inflight", "gap"],
+        1,
+    )?;
+    let out = PathBuf::from(a.flag("out").ok_or_else(|| {
+        anyhow::anyhow!("trace export requires --out FILE (where to write the timeline JSON)")
+    })?);
+    let cfg = load_config(a)?;
+    let kernel = a.flag("kernel").unwrap_or("axpy");
+    let size = a.u64_flag("size", 1024)?;
+    let spec = job_spec(kernel, size)?;
+    let n = a.u64_flag("clusters", 8)? as usize;
+    let capacity = cfg.soc.n_clusters();
+    anyhow::ensure!(
+        (1..=capacity).contains(&n),
+        "--clusters must be in 1..={capacity} (the SoC geometry), got {n}"
+    );
+    let routine = match a.flag("routine") {
+        None => RoutineKind::Multicast,
+        Some(r) => {
+            RoutineKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown routine {r:?}"))?
+        }
+    };
+    let trace = sweep::run_one(&cfg, OffloadRequest::new(spec, n, routine));
+    let label = format!("{kernel}:{size} c{n} {}", routine.name());
+    let doc = match a.flag("batch") {
+        None => obs::perfetto::job_timeline(&label, &trace),
+        Some(v) => {
+            let jobs: u64 = v.parse().map_err(|e| anyhow::anyhow!("bad --batch {v:?}: {e}"))?;
+            anyhow::ensure!(jobs >= 1, "--batch must be >= 1");
+            let params = OccupancyParams {
+                capacity,
+                jcu_slots: JCU_SLOTS,
+                inflight: a.u64_flag("inflight", 4)?.max(1) as usize,
+                arrival_gap: a.u64_flag("gap", 0)?,
+            };
+            let mut model = OccupancyModel::new(params);
+            let admissions: Vec<_> =
+                (0..jobs).map(|_| model.admit_at(0, n, trace.total)).collect();
+            model.finish();
+            obs::perfetto::batch_timeline(&format!("{label} x{jobs}"), &trace, &params, &admissions)
+        }
+    };
+    std::fs::write(&out, obs::perfetto::render(&doc))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", out.display()))?;
+    println!(
+        "trace export: {} span(s) -> {} (open in https://ui.perfetto.dev or chrome://tracing)",
+        obs::perfetto::span_count(&doc),
+        out.display()
+    );
+    Ok(())
+}
+
+/// `occamy trace report`: decode every trace a campaign/fleet/serve run
+/// left in a store and print the offload-overhead decomposition
+/// (end-to-end vs. critical-path execute); `--phases` adds the Fig.
+/// 11-style per-phase min/avg/max bands, computed by the figure's own
+/// band math.
+fn cmd_trace_report(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("trace report", &["store", "phases", "csv"], 1)?;
+    let root = PathBuf::from(a.flag("store").ok_or_else(|| {
+        anyhow::anyhow!("trace report requires --store DIR (a campaign/serve trace store root)")
+    })?);
+    let entries = obs::report::scan(&root)?;
+    anyhow::ensure!(!entries.is_empty(), "no decodable traces under {}", root.display());
+    let csv = a.has("csv");
+    let mut table = Table::new(
+        "Offload overhead per stored request group (cycles)",
+        &[
+            "spec", "clusters", "routine", "traces", "total avg", "execute avg", "ovh min",
+            "ovh avg", "ovh max", "ovh %",
+        ],
+    );
+    for d in obs::report::decompose(&entries) {
+        table.row(vec![
+            d.spec_key.clone(),
+            d.n_clusters.to_string(),
+            d.routine.name().to_string(),
+            d.traces.to_string(),
+            format!("{:.1}", d.total_avg),
+            format!("{:.1}", d.execute_avg),
+            d.overhead_min.to_string(),
+            format!("{:.1}", d.overhead_avg),
+            d.overhead_max.to_string(),
+            format!("{:.1}", d.overhead_pct()),
+        ]);
+    }
+    emit(table, csv);
+    if a.has("phases") {
+        let mut bands = Table::new(
+            "Per-phase cycle bands (fig11 math over the store)",
+            &["spec", "clusters", "routine", "phase", "min", "avg", "max"],
+        );
+        for (spec_key, b) in obs::report::phase_bands(&entries) {
+            bands.row(vec![
+                spec_key,
+                b.n_clusters.to_string(),
+                b.routine.name().to_string(),
+                format!("{} {}", b.phase.letter(), b.phase.name()),
+                b.min.to_string(),
+                format!("{:.1}", b.avg),
+                b.max.to_string(),
+            ]);
+        }
+        emit(bands, csv);
+    }
     Ok(())
 }
 
@@ -845,6 +998,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             "slo",
             "summary-every",
             "store",
+            "log",
         ],
         0,
     )?;
@@ -855,7 +1009,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         );
         return cmd_serve_daemon(a, listen);
     }
-    for f in ["spec", "queue-factor", "slo", "summary-every", "store"] {
+    for f in ["spec", "queue-factor", "slo", "summary-every", "store", "log"] {
         anyhow::ensure!(!a.has(f), "--{f} applies to the daemon (`serve --listen ADDR`)");
     }
     let cfg = load_config(a)?;
@@ -950,6 +1104,12 @@ fn cmd_serve_daemon(a: &Args, listen: &str) -> anyhow::Result<()> {
     if let Some(p) = a.flag("store") {
         opts.store_root = Some(PathBuf::from(p));
     }
+    // Structured event log: --log beats the spec's `log` key beats
+    // OCCAMY_LOG; absent all three, logging stays off (the default).
+    match a.flag("log").or(spec.serve.log.as_deref()) {
+        Some(path) => obs::log::init_to_file(Path::new(path))?,
+        None => obs::log::init_from_env()?,
+    }
     let queue_bound = opts.inflight.saturating_mul(opts.queue_factor);
     let server = Server::start(opts, listen)?;
     println!(
@@ -990,6 +1150,7 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
             "no-stats",
             "shutdown",
             "spec",
+            "metrics",
         ],
         0,
     )?;
@@ -1025,6 +1186,7 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
             Some(RoutineKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown routine {r:?}"))?);
     }
     opts.fetch_stats = !a.has("no-stats");
+    opts.fetch_metrics = a.has("metrics");
     if a.has("shutdown") {
         opts.shutdown = true;
     }
@@ -1047,7 +1209,7 @@ fn cmd_bench(a: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(action == "serve", "unknown bench target {action:?} (expected: serve)");
     a.reject_unknown(
         "bench serve",
-        &["requests", "inflight", "seed", "mean-gap", "out", "config"],
+        &["requests", "inflight", "seed", "mean-gap", "out", "config", "baseline", "max-regress-pct"],
         1,
     )?;
     let cfg = load_config(a)?;
@@ -1114,6 +1276,45 @@ fn cmd_bench(a: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("write {}: {e}", out.display()))?;
     bench.finish("serve");
     println!("bench: wrote {}", out.display());
+
+    // --baseline: regression gate against an earlier BENCH_serve.json.
+    // p99 latency is virtual-cycle (deterministic for a fixed seed), so
+    // any increase beyond the tolerance is a real scheduling/admission
+    // change, not measurement noise.
+    if let Some(base_path) = a.flag("baseline") {
+        let max_pct: f64 = match a.flag("max-regress-pct") {
+            None => 10.0,
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad --max-regress-pct {v:?}: {e}"))?,
+        };
+        anyhow::ensure!(max_pct >= 0.0, "--max-regress-pct must be >= 0");
+        let text = std::fs::read_to_string(base_path)
+            .map_err(|e| anyhow::anyhow!("read baseline {base_path}: {e}"))?;
+        let base = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse baseline {base_path}: {e}"))?;
+        let base_p99 = base
+            .get("latency_p99_cyc")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                anyhow::anyhow!("baseline {base_path} has no numeric latency_p99_cyc")
+            })?;
+        let now_p99 = stats.latency.p99 as f64;
+        let regress_pct = if base_p99 > 0.0 {
+            100.0 * (now_p99 - base_p99) / base_p99
+        } else if now_p99 > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        };
+        println!(
+            "bench: p99 latency {now_p99} cyc vs baseline {base_p99} cyc ({regress_pct:+.1}%, tolerance {max_pct}%)"
+        );
+        anyhow::ensure!(
+            regress_pct <= max_pct,
+            "p99 latency regressed {regress_pct:.1}% over baseline {base_path} (tolerance {max_pct}%)"
+        );
+    }
     Ok(())
 }
 
@@ -1293,6 +1494,19 @@ mod tests {
         assert!(err.contains("--spec"), "{err}");
         let err = run(&["fleet".to_string(), "frobnicate".to_string()]).unwrap_err().to_string();
         assert!(err.contains("unknown fleet action"), "{err}");
+        // trace validates per-action too, and names its actions.
+        for action in ["export", "report"] {
+            let raw: Vec<String> = ["trace", action, "--definitely-bogus-flag", "1"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            let err = run(&raw).unwrap_err().to_string();
+            assert!(err.contains("--definitely-bogus-flag"), "trace {action}: {err}");
+        }
+        let err = run(&["trace".to_string(), "frobnicate".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("unknown trace action"), "{err}");
+        let err = run(&["trace".to_string(), "export".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("--out"), "{err}");
         // bench validates per-target, like campaign/fleet per-action.
         let raw: Vec<String> = ["bench", "serve", "--definitely-bogus-flag", "1"]
             .iter()

@@ -1,0 +1,319 @@
+//! Structured JSONL event log — leveled, ring-buffered, off by default.
+//!
+//! Every event is one JSON object on one line, rendered through
+//! [`crate::runtime::json::Json`] so key order (BTreeMap) and number
+//! formatting are deterministic. Two stamping domains keep golden tests
+//! honest:
+//!
+//! * **Sim-domain** events ([`Event::sim`]) carry a `cycle` field on the
+//!   virtual clock and nothing wall-dependent — the same request always
+//!   produces byte-identical lines.
+//! * **Wall-domain** events ([`Event::wall`]) — daemon and fleet
+//!   lifecycle — carry `t_ms` (milliseconds since the Unix epoch).
+//!
+//! The process-wide sink is disabled until [`init`] installs an
+//! [`EventLog`]; call sites guard their hot paths with [`enabled`], so
+//! an un-configured run pays one atomic load per event site. The serve
+//! daemon wires `--log FILE` (or the spec's `log` key) through
+//! [`init_to_file`]; every other entry point honors the `OCCAMY_LOG`
+//! environment variable via [`init_from_env`]. Logging is pure
+//! observation: it never changes a simulation result.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+use crate::runtime::json::Json;
+use crate::sim::Time;
+
+/// Event severity. Ordered: `Debug < Info < Warn`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+        }
+    }
+}
+
+/// One structured event, built fluently and rendered as a single JSON
+/// line. `src` names the emitting subsystem (`"serve"`, `"store"`,
+/// `"fleet"`, `"campaign"`), `event` the lifecycle step.
+#[derive(Debug, Clone)]
+pub struct Event {
+    level: Level,
+    src: &'static str,
+    event: &'static str,
+    cycle: Option<Time>,
+    wall: bool,
+    fields: BTreeMap<String, Json>,
+}
+
+impl Event {
+    /// A sim-domain event stamped at `cycle` on the virtual clock.
+    /// Deterministic bytes: no wall time, no pid, nothing run-dependent.
+    pub fn sim(src: &'static str, event: &'static str, cycle: Time) -> Self {
+        Self {
+            level: Level::Info,
+            src,
+            event,
+            cycle: Some(cycle),
+            wall: false,
+            fields: BTreeMap::new(),
+        }
+    }
+
+    /// A wall-domain event (daemon/fleet lifecycle); `t_ms` is stamped
+    /// at render time.
+    pub fn wall(src: &'static str, event: &'static str) -> Self {
+        Self {
+            level: Level::Info,
+            src,
+            event,
+            cycle: None,
+            wall: true,
+            fields: BTreeMap::new(),
+        }
+    }
+
+    pub fn level(mut self, level: Level) -> Self {
+        self.level = level;
+        self
+    }
+
+    pub fn u64(mut self, key: &str, v: u64) -> Self {
+        self.fields.insert(key.to_string(), Json::Num(v as f64));
+        self
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.fields.insert(key.to_string(), Json::Str(v.to_string()));
+        self
+    }
+
+    /// Render to one JSON line (no trailing newline). Reserved keys
+    /// (`event`, `src`, `level`, `cycle`, `t_ms`) win over same-named
+    /// payload fields — the BTreeMap insert order below guarantees it.
+    fn render(&self) -> String {
+        let mut obj = self.fields.clone();
+        obj.insert("event".to_string(), Json::Str(self.event.to_string()));
+        obj.insert("src".to_string(), Json::Str(self.src.to_string()));
+        obj.insert("level".to_string(), Json::Str(self.level.name().to_string()));
+        if let Some(c) = self.cycle {
+            obj.insert("cycle".to_string(), Json::Num(c as f64));
+        }
+        if self.wall {
+            let t_ms = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0);
+            obj.insert("t_ms".to_string(), Json::Num(t_ms as f64));
+        }
+        Json::Obj(obj).to_string()
+    }
+}
+
+/// Rendered lines kept in memory for inspection ([`EventLog::recent`]).
+const RING_CAPACITY: usize = 4096;
+
+struct Inner {
+    ring: VecDeque<String>,
+    file: Option<std::fs::File>,
+    /// Write failures (full/readonly disk) — logging degrades, never
+    /// fails the workload.
+    write_errors: u64,
+}
+
+/// A JSONL event sink: a bounded in-memory ring plus an optional file.
+pub struct EventLog {
+    min_level: Level,
+    inner: Mutex<Inner>,
+}
+
+impl EventLog {
+    /// Ring-buffer only (tests, embedding).
+    pub fn in_memory() -> Self {
+        Self {
+            min_level: Level::Debug,
+            inner: Mutex::new(Inner {
+                ring: VecDeque::new(),
+                file: None,
+                write_errors: 0,
+            }),
+        }
+    }
+
+    /// Ring buffer plus a freshly truncated JSONL file at `path`.
+    pub fn to_file(path: &Path) -> anyhow::Result<Self> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("open event log {}: {e}", path.display()))?;
+        let mut log = Self::in_memory();
+        log.inner.get_mut().unwrap_or_else(PoisonError::into_inner).file = Some(file);
+        Ok(log)
+    }
+
+    /// Drop events below `level`.
+    pub fn with_min_level(mut self, level: Level) -> Self {
+        self.min_level = level;
+        self
+    }
+
+    pub fn emit(&self, ev: &Event) {
+        if ev.level < self.min_level {
+            return;
+        }
+        let line = ev.render();
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if inner.ring.len() == RING_CAPACITY {
+            inner.ring.pop_front();
+        }
+        inner.ring.push_back(line.clone());
+        if let Some(file) = inner.file.as_mut() {
+            use std::io::Write;
+            if writeln!(file, "{line}").is_err() {
+                inner.write_errors += 1;
+            }
+        }
+    }
+
+    /// Snapshot of the ring (oldest first).
+    pub fn recent(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        inner.ring.iter().cloned().collect()
+    }
+
+    pub fn write_errors(&self) -> u64 {
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        inner.write_errors
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<EventLog> = OnceLock::new();
+
+/// Install `log` as the process-wide sink. Returns `false` (and drops
+/// `log`) if a sink is already installed — first init wins.
+pub fn init(log: EventLog) -> bool {
+    let installed = GLOBAL.set(log).is_ok();
+    if installed {
+        ENABLED.store(true, Ordering::Release);
+    }
+    installed
+}
+
+/// Install a file-backed sink at `path` (`--log FILE`, the serve spec's
+/// `log` key).
+pub fn init_to_file(path: &Path) -> anyhow::Result<()> {
+    if !init(EventLog::to_file(path)?) {
+        eprintln!("obs: event log already initialized; {} ignored", path.display());
+    }
+    Ok(())
+}
+
+/// Install a file-backed sink from `OCCAMY_LOG`, if set. A no-op when
+/// the variable is absent/empty or a sink is already installed.
+pub fn init_from_env() -> anyhow::Result<()> {
+    match std::env::var("OCCAMY_LOG") {
+        Ok(path) if !path.is_empty() && GLOBAL.get().is_none() => {
+            init_to_file(Path::new(&path))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Fast-path check for call sites: one atomic load when logging is off.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// Emit through the process-wide sink; a no-op until [`init`].
+pub fn emit(ev: &Event) {
+    if enabled() {
+        if let Some(log) = GLOBAL.get() {
+            log.emit(ev);
+        }
+    }
+}
+
+/// Ring snapshot of the process-wide sink (empty when uninitialized).
+pub fn recent() -> Vec<String> {
+    GLOBAL.get().map(EventLog::recent).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_events_render_deterministic_bytes() {
+        let ev = Event::sim("serve", "accept", 1234)
+            .u64("id", 7)
+            .str("kernel", "axpy:1024");
+        let a = ev.render();
+        let b = ev.render();
+        assert_eq!(a, b);
+        assert_eq!(
+            a,
+            r#"{"cycle":1234,"event":"accept","id":7,"kernel":"axpy:1024","level":"info","src":"serve"}"#
+        );
+    }
+
+    #[test]
+    fn wall_events_carry_a_timestamp_and_sim_events_do_not() {
+        let wall = Event::wall("fleet", "restart").str("shard", "1/2").render();
+        assert!(wall.contains("\"t_ms\":"), "{wall}");
+        let sim = Event::sim("serve", "dispatch", 9).render();
+        assert!(!sim.contains("t_ms"), "{sim}");
+        assert!(sim.contains("\"cycle\":9"), "{sim}");
+    }
+
+    #[test]
+    fn hostile_field_values_stay_one_line_and_parse_back() {
+        let ev = Event::sim("serve", "accept", 0).str("kernel", "evil\n\"name\"\t\u{1}");
+        let line = ev.render();
+        assert!(!line.contains('\n'), "{line}");
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("kernel").unwrap().as_str(), Some("evil\n\"name\"\t\u{1}"));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_levels_filter() {
+        let log = EventLog::in_memory().with_min_level(Level::Info);
+        log.emit(&Event::sim("t", "dropped", 0).level(Level::Debug));
+        assert!(log.recent().is_empty(), "debug filtered below Info");
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            log.emit(&Event::sim("t", "kept", i));
+        }
+        let lines = log.recent();
+        assert_eq!(lines.len(), RING_CAPACITY);
+        assert!(lines[0].contains("\"cycle\":10"), "oldest evicted: {}", lines[0]);
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let path = std::env::temp_dir().join(format!(
+            "occamy-obs-log-test-{}.jsonl",
+            std::process::id()
+        ));
+        let log = EventLog::to_file(&path).unwrap();
+        log.emit(&Event::sim("t", "one", 1));
+        log.emit(&Event::wall("t", "two"));
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            assert!(Json::parse(l).is_ok(), "not JSON: {l}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

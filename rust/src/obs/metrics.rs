@@ -1,0 +1,244 @@
+//! A minimal metrics registry with Prometheus text exposition.
+//!
+//! Snapshot-style: producers *register* their current values into a
+//! fresh [`Registry`] at scrape time ([`crate::serve::ServeMetrics`],
+//! [`crate::campaign::StoreStats`], the fleet's
+//! [`crate::fleet::StatusView`]), and [`Registry::render`] emits the
+//! [text exposition format] — `# HELP`/`# TYPE` headers, counters,
+//! gauges, and cycle histograms with `_bucket{le=...}`/`_sum`/`_count`
+//! series. Rebuilding the registry per scrape keeps it lock-free and
+//! deterministic: families render in registration order, samples in
+//! insertion order, and integral values print without a fraction.
+//!
+//! The serve daemon exposes a rendered registry through the `metrics`
+//! wire verb (see [`crate::serve::proto`]); scrape it with
+//! `occamy loadgen --connect HOST:PORT --requests 0 --metrics`.
+//!
+//! [text exposition format]: https://prometheus.io/docs/instrumenting/exposition_formats/
+
+use crate::campaign::StoreStats;
+use crate::coordinator::Dist;
+
+/// Histogram bounds for cycle-valued distributions (queue, service,
+/// latency): decades from 1k to 10M virtual cycles, spanning a cache
+/// hit on a tiny kernel up to a wide fresh simulation.
+pub const CYCLE_BUCKETS: [u64; 5] = [1_000, 10_000, 100_000, 1_000_000, 10_000_000];
+
+/// Prometheus sample-value formatting: integral values print without a
+/// fraction (`17`, not `17.0`), everything else through Rust's shortest
+/// round-trip float form.
+fn fmt_value(v: f64) -> String {
+    const EXACT_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if v.is_finite() && v.fract() == 0.0 && v.abs() <= EXACT_INT {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn sample_line(name: &str, suffix: &str, labels: &[(&str, &str)], value: f64) -> String {
+    let mut line = format!("{name}{suffix}");
+    if !labels.is_empty() {
+        line.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+        }
+        line.push('}');
+    }
+    line.push(' ');
+    line.push_str(&fmt_value(value));
+    line
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: &'static str,
+    samples: Vec<String>,
+}
+
+/// A write-once metrics snapshot; render with [`Registry::render`].
+#[derive(Default)]
+pub struct Registry {
+    families: Vec<Family>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Find-or-create a family; re-registering with a different kind is
+    /// a programming error.
+    fn family(&mut self, name: &str, help: &str, kind: &'static str) -> &mut Family {
+        if let Some(i) = self.families.iter().position(|f| f.name == name) {
+            assert_eq!(self.families[i].kind, kind, "metric family {name} re-registered as {kind}");
+            return &mut self.families[i];
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            samples: Vec::new(),
+        });
+        self.families.last_mut().expect("just pushed")
+    }
+
+    /// A monotonically increasing counter sample. Call repeatedly with
+    /// distinct `labels` to grow one family.
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: u64) {
+        let line = sample_line(name, "", labels, value as f64);
+        self.family(name, help, "counter").samples.push(line);
+    }
+
+    /// A point-in-time gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let line = sample_line(name, "", labels, value);
+        self.family(name, help, "gauge").samples.push(line);
+    }
+
+    /// A whole [`Dist`] as a Prometheus histogram: cumulative
+    /// `_bucket{le="..."}` counts over `buckets` plus `+Inf`, `_sum` and
+    /// `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, dist: &Dist, buckets: &[u64]) {
+        let mut samples = Vec::with_capacity(buckets.len() + 3);
+        for &b in buckets {
+            samples.push(sample_line(
+                name,
+                "_bucket",
+                &[("le", &b.to_string())],
+                dist.count_le(b) as f64,
+            ));
+        }
+        samples.push(sample_line(name, "_bucket", &[("le", "+Inf")], dist.count() as f64));
+        samples.push(sample_line(name, "_sum", &[], dist.sum() as f64));
+        samples.push(sample_line(name, "_count", &[], dist.count() as f64));
+        self.family(name, help, "histogram").samples.extend(samples);
+    }
+
+    /// The text exposition: families in registration order, each with
+    /// its `# HELP`/`# TYPE` header.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind));
+            for s in &f.samples {
+                out.push_str(s);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Register one store handle's three-tier counters — the same numbers
+/// the `store:` summary line and the warm-store CI assertions read.
+pub fn register_store_stats(r: &mut Registry, s: &StoreStats) {
+    r.counter(
+        "occamy_store_memory_hits_total",
+        "Requests served from the process-wide memory cache",
+        &[],
+        s.memory_hits,
+    );
+    r.counter(
+        "occamy_store_disk_hits_total",
+        "Requests served from the on-disk trace store",
+        &[],
+        s.disk_hits,
+    );
+    r.counter(
+        "occamy_store_simulations_total",
+        "Requests that ran a fresh simulation",
+        &[],
+        s.simulations,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_headers_deterministically() {
+        let mut r = Registry::new();
+        r.counter("occamy_test_total", "Things counted", &[("kind", "a")], 3);
+        r.counter("occamy_test_total", "Things counted", &[("kind", "b")], 0);
+        r.gauge("occamy_test_depth", "Current depth", &[], 2.5);
+        let text = r.render();
+        let expected = "# HELP occamy_test_total Things counted\n\
+                        # TYPE occamy_test_total counter\n\
+                        occamy_test_total{kind=\"a\"} 3\n\
+                        occamy_test_total{kind=\"b\"} 0\n\
+                        # HELP occamy_test_depth Current depth\n\
+                        # TYPE occamy_test_depth gauge\n\
+                        occamy_test_depth 2.5\n";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn histograms_are_cumulative_with_inf_sum_and_count() {
+        let mut d = Dist::default();
+        for v in [500, 1_500, 1_500, 2_000_000] {
+            d.record(v);
+        }
+        let mut r = Registry::new();
+        r.histogram("occamy_test_cycles", "Cycles", &d, &[1_000, 10_000, 1_000_000]);
+        let text = r.render();
+        assert!(text.contains("occamy_test_cycles_bucket{le=\"1000\"} 1\n"), "{text}");
+        assert!(text.contains("occamy_test_cycles_bucket{le=\"10000\"} 3\n"), "{text}");
+        assert!(text.contains("occamy_test_cycles_bucket{le=\"1000000\"} 3\n"), "{text}");
+        assert!(text.contains("occamy_test_cycles_bucket{le=\"+Inf\"} 4\n"), "{text}");
+        assert!(text.contains("occamy_test_cycles_sum 2003500\n"), "{text}");
+        assert!(text.contains("occamy_test_cycles_count 4\n"), "{text}");
+        assert!(text.contains("# TYPE occamy_test_cycles histogram\n"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut r = Registry::new();
+        r.counter("m", "h", &[("k", "a\"b\\c\nd")], 1);
+        assert!(r.render().contains("m{k=\"a\\\"b\\\\c\\nd\"} 1\n"), "{}", r.render());
+    }
+
+    #[test]
+    fn integral_values_print_without_a_fraction() {
+        assert_eq!(fmt_value(17.0), "17");
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(2.5), "2.5");
+    }
+
+    #[test]
+    fn store_stats_cover_all_three_tiers() {
+        let mut r = Registry::new();
+        register_store_stats(
+            &mut r,
+            &StoreStats {
+                memory_hits: 1,
+                disk_hits: 2,
+                simulations: 3,
+            },
+        );
+        let text = r.render();
+        assert!(text.contains("occamy_store_memory_hits_total 1\n"), "{text}");
+        assert!(text.contains("occamy_store_disk_hits_total 2\n"), "{text}");
+        assert!(text.contains("occamy_store_simulations_total 3\n"), "{text}");
+    }
+}

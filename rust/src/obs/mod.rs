@@ -1,0 +1,39 @@
+//! # Cycle-accurate observability (`obs`)
+//!
+//! The paper's contribution is *attribution*: per-phase (A–I) runtimes
+//! reconstructed from mcycle-style instrumentation (§5.1, Fig. 11).
+//! The simulator records all of that ([`crate::sim::Trace`],
+//! [`crate::serve::ServeMetrics`], the store's hit/sim counters, the
+//! fleet's lease states) — this module is the layer that gets it *out*,
+//! in forms humans and machines already know how to read:
+//!
+//! * [`perfetto`] — deterministic Chrome trace-event / Perfetto JSON
+//!   timelines on the virtual-cycle clock: one lane per cluster with its
+//!   A–I [`crate::sim::PhaseSpan`]s, host lanes for the host-side
+//!   phases, and coordinator lanes (JCU slots + queueing) for
+//!   occupancy-engine batches. `occamy trace export` writes them; open
+//!   the file in <https://ui.perfetto.dev> or `chrome://tracing`.
+//! * [`report`] — aggregation over a campaign store: re-derive the
+//!   paper's overhead decomposition (offload overhead vs. execute) and
+//!   Fig. 11-style per-phase min/avg/max bands from arbitrary recorded
+//!   traffic, not just the `exp/fig11` grid (`occamy trace report`).
+//! * [`log`] — a leveled, ring-buffered JSONL event sink. Off by
+//!   default; enabled with `occamy serve --log FILE` or the
+//!   `OCCAMY_LOG` environment variable. Sim-domain events are stamped
+//!   in virtual cycles (deterministic bytes — golden tests hold),
+//!   daemon/fleet events in wall time. Pure observation: enabling it
+//!   never changes a simulation result or adds a fresh simulation.
+//! * [`metrics`] — a Prometheus-text metrics registry.
+//!   [`crate::serve::ServeMetrics`], [`crate::campaign::StoreStats`]
+//!   and the fleet's shard states register into it; the serve wire
+//!   protocol exposes it through the `metrics` verb (alongside the
+//!   JSON `stats` verb), so a standard scraper can watch a long-lived
+//!   daemon: `occamy loadgen --connect HOST:PORT --requests 0 --metrics`.
+
+pub mod log;
+pub mod metrics;
+pub mod perfetto;
+pub mod report;
+
+pub use log::{Event, EventLog, Level};
+pub use metrics::Registry;

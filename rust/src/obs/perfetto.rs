@@ -1,0 +1,370 @@
+//! Deterministic Chrome trace-event / Perfetto JSON timelines.
+//!
+//! Renders a [`Trace`] (and optionally an occupancy-engine batch) in the
+//! [trace-event format] both `chrome://tracing` and
+//! <https://ui.perfetto.dev> load directly:
+//!
+//! * **pid 1 — host (CVA6):** one lane with the host-side phase spans
+//!   (A "Send job information", I "Resume operation on host"; B's host
+//!   part is folded into the cluster-side B, matching
+//!   [`Trace::host_spans`]).
+//! * **pid 2 — clusters:** one lane per cluster, carrying its A–I
+//!   [`crate::sim::PhaseSpan`]s.
+//! * **pid 3 — coordinator (JCU):** for batches, one lane per JCU slot
+//!   with each admitted job's service interval (dispatch → complete),
+//!   plus `queue` lanes holding the arrival → dispatch waits
+//!   ([`Admission::queue_delay`]), packed greedily so overlapping waits
+//!   never share a lane.
+//!
+//! Timestamps are **virtual cycles** (1 cycle rendered as 1 µs — the
+//! format's native unit; wall time never appears), and every container
+//! is either a BTreeMap-ordered object or an explicitly ordered array,
+//! so the same request always renders byte-identical JSON — the golden
+//! tests and the CI determinism check rely on it.
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{Admission, OccupancyParams};
+use crate::runtime::json::Json;
+use crate::sim::{Phase, Time, Trace};
+
+/// Process ids of the three lane groups.
+pub const HOST_PID: u64 = 1;
+pub const CLUSTER_PID: u64 = 2;
+pub const COORD_PID: u64 = 3;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn meta(pid: u64, tid: u64, what: &str, name: &str) -> Json {
+    obj(vec![
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+        ("name", Json::Str(what.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+    ])
+}
+
+fn span(pid: u64, tid: u64, name: &str, cat: &str, start: Time, end: Time, args: Json) -> Json {
+    obj(vec![
+        ("args", args),
+        ("cat", Json::Str(cat.to_string())),
+        ("dur", num(end - start)),
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+        ("ts", num(start)),
+    ])
+}
+
+fn phase_name(p: Phase) -> String {
+    format!("{}: {}", p.letter(), p.name())
+}
+
+/// Host + per-cluster lanes of one job's trace, in deterministic order:
+/// process/thread metadata first, then host spans, then cluster spans
+/// (cluster-major, phases in pipeline order).
+fn job_events(trace: &Trace, events: &mut Vec<Json>) {
+    events.push(meta(HOST_PID, 0, "process_name", "host (CVA6)"));
+    events.push(meta(HOST_PID, 0, "thread_name", "host"));
+    events.push(meta(CLUSTER_PID, 0, "process_name", "clusters"));
+    for c in 0..trace.n_clusters() {
+        events.push(meta(CLUSTER_PID, c as u64, "thread_name", &format!("cluster {c}")));
+    }
+    for p in Phase::ALL {
+        if let Some(s) = trace.host_spans.get(&p) {
+            events.push(span(
+                HOST_PID,
+                0,
+                &phase_name(p),
+                "host",
+                s.start,
+                s.end,
+                obj(vec![("phase", Json::Str(p.letter().to_string()))]),
+            ));
+        }
+    }
+    for (c, spans) in trace.cluster_spans.iter().enumerate() {
+        for p in Phase::ALL {
+            if let Some(s) = spans.get(&p) {
+                events.push(span(
+                    CLUSTER_PID,
+                    c as u64,
+                    &phase_name(p),
+                    "phase",
+                    s.start,
+                    s.end,
+                    obj(vec![("phase", Json::Str(p.letter().to_string()))]),
+                ));
+            }
+        }
+    }
+}
+
+/// Coordinator lanes of an occupancy batch: JCU-slot lanes carry each
+/// job's dispatch → complete service interval, `queue` lanes its
+/// arrival → dispatch wait. A slot lane never overlaps by construction
+/// (a slot holds one job at a time); queue waits are packed greedily
+/// onto the first lane whose previous wait has ended, so overlapping
+/// waits land on distinct lanes.
+fn batch_events(params: &OccupancyParams, admissions: &[Admission], events: &mut Vec<Json>) {
+    events.push(meta(COORD_PID, 0, "process_name", "coordinator (JCU)"));
+    for s in 0..params.jcu_slots as u64 {
+        events.push(meta(COORD_PID, s, "thread_name", &format!("JCU slot {s}")));
+    }
+    // Greedy interval packing of the nonzero queue waits.
+    let mut queue_lane_ends: Vec<Time> = Vec::new();
+    let mut queue_spans: Vec<(usize, &Admission)> = Vec::new();
+    for a in admissions.iter().filter(|a| a.queue_delay > 0) {
+        let lane = match queue_lane_ends.iter().position(|&end| end <= a.arrival) {
+            Some(lane) => lane,
+            None => {
+                queue_lane_ends.push(0);
+                queue_lane_ends.len() - 1
+            }
+        };
+        queue_lane_ends[lane] = a.start;
+        queue_spans.push((lane, a));
+    }
+    let queue_tid = |lane: usize| params.jcu_slots as u64 + lane as u64;
+    for lane in 0..queue_lane_ends.len() {
+        events.push(meta(COORD_PID, queue_tid(lane), "thread_name", &format!("queue {lane}")));
+    }
+    for a in admissions {
+        events.push(span(
+            COORD_PID,
+            u64::from(a.slot),
+            &format!("job {}", a.seq),
+            "service",
+            a.start,
+            a.completion,
+            obj(vec![
+                ("arrival", num(a.arrival)),
+                ("queue_delay", num(a.queue_delay)),
+                ("seq", num(a.seq)),
+            ]),
+        ));
+    }
+    for (lane, a) in queue_spans {
+        events.push(span(
+            COORD_PID,
+            queue_tid(lane),
+            &format!("job {} queued", a.seq),
+            "queue",
+            a.arrival,
+            a.start,
+            obj(vec![("seq", num(a.seq))]),
+        ));
+    }
+}
+
+fn document(label: &str, events: Vec<Json>) -> Json {
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            obj(vec![
+                ("clock", Json::Str("virtual cycles (1 cycle = 1us)".to_string())),
+                ("label", Json::Str(label.to_string())),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// One isolated job as a timeline document (host + cluster lanes).
+pub fn job_timeline(label: &str, trace: &Trace) -> Json {
+    let mut events = Vec::new();
+    job_events(trace, &mut events);
+    document(label, events)
+}
+
+/// An occupancy batch: the isolated job's host/cluster lanes (the phase
+/// anatomy every admission repeats) plus the coordinator's JCU-slot and
+/// queue lanes on the batch's shared virtual timeline.
+pub fn batch_timeline(
+    label: &str,
+    trace: &Trace,
+    params: &OccupancyParams,
+    admissions: &[Admission],
+) -> Json {
+    let mut events = Vec::new();
+    job_events(trace, &mut events);
+    batch_events(params, admissions, &mut events);
+    document(label, events)
+}
+
+/// Serialize a timeline document (one line, trailing newline).
+pub fn render(doc: &Json) -> String {
+    format!("{doc}\n")
+}
+
+/// Number of duration (`ph: "X"`) events in a document — the CLI's
+/// summary line and the CI span-count check.
+pub fn span_count(doc: &Json) -> usize {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .map(|events| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::OccupancyModel;
+    use crate::kernels::JobSpec;
+    use crate::offload::RoutineKind;
+    use crate::sweep::OffloadRequest;
+
+    /// Collect (pid, tid) → sorted [ts, ts+dur) intervals.
+    fn lanes(doc: &Json) -> BTreeMap<(u64, u64), Vec<(u64, u64)>> {
+        let mut lanes: BTreeMap<(u64, u64), Vec<(u64, u64)>> = BTreeMap::new();
+        for e in doc.get("traceEvents").unwrap().as_arr().unwrap() {
+            if e.get("ph").and_then(Json::as_str) != Some("X") {
+                continue;
+            }
+            let pid = e.get("pid").unwrap().as_u64().unwrap();
+            let tid = e.get("tid").unwrap().as_u64().unwrap();
+            let ts = e.get("ts").unwrap().as_u64().unwrap();
+            let dur = e.get("dur").unwrap().as_u64().unwrap();
+            lanes.entry((pid, tid)).or_default().push((ts, ts + dur));
+        }
+        for spans in lanes.values_mut() {
+            spans.sort_unstable();
+        }
+        lanes
+    }
+
+    fn assert_lanes_non_overlapping(doc: &Json) {
+        for ((pid, tid), spans) in lanes(doc) {
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "lane ({pid},{tid}) overlaps: {:?} vs {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+
+    fn small_trace() -> Trace {
+        OffloadRequest::new(JobSpec::Axpy { n: 256 }, 2, RoutineKind::Multicast)
+            .run(&Config::default())
+    }
+
+    #[test]
+    fn job_timeline_is_byte_deterministic_and_parses() {
+        let trace = small_trace();
+        let a = render(&job_timeline("axpy:256 c2 multicast", &trace));
+        let b = render(&job_timeline("axpy:256 c2 multicast", &trace));
+        assert_eq!(a, b, "same trace, same bytes");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        assert!(span_count(&doc) >= 2 + 2, "host A/I plus per-cluster phases");
+    }
+
+    #[test]
+    fn job_spans_stay_on_their_lanes_without_overlap_and_tile_the_total() {
+        let trace = small_trace();
+        let doc = job_timeline("axpy:256 c2 multicast", &trace);
+        assert_lanes_non_overlapping(&doc);
+        let lanes = lanes(&doc);
+        // One host lane + one lane per cluster.
+        assert!(lanes.contains_key(&(HOST_PID, 0)));
+        assert!(lanes.contains_key(&(CLUSTER_PID, 0)));
+        assert!(lanes.contains_key(&(CLUSTER_PID, 1)));
+        // Spans live on [0, total] and the last one ends exactly at the
+        // job's end-to-end total (the host resume for offloaded runs).
+        let max_end = lanes.values().flatten().map(|&(_, e)| e).max().unwrap();
+        assert_eq!(max_end, trace.total);
+        let min_start = lanes.values().flatten().map(|&(s, _)| s).min().unwrap();
+        assert_eq!(min_start, 0, "phase A starts the timeline");
+        // The span count is exactly what the trace recorded.
+        let recorded: usize = trace.host_spans.len()
+            + trace.cluster_spans.iter().map(|m| m.len()).sum::<usize>();
+        assert_eq!(span_count(&doc), recorded);
+    }
+
+    #[test]
+    fn batch_timeline_carries_slot_and_queue_lanes() {
+        let trace = small_trace();
+        let service = trace.total;
+        let params = OccupancyParams {
+            capacity: 4,
+            jcu_slots: 2,
+            inflight: 4,
+            arrival_gap: 0,
+        };
+        let mut model = OccupancyModel::new(params);
+        // Four back-to-back jobs of 2 clusters on a 4-cluster fabric with
+        // 2 slots: jobs 2 and 3 must queue.
+        let admissions: Vec<Admission> =
+            (0..4).map(|_| model.admit_at(0, 2, service)).collect();
+        model.finish();
+        assert!(admissions.iter().any(|a| a.queue_delay > 0), "batch must contend");
+        let doc = batch_timeline("batch", &trace, &params, &admissions);
+        assert_lanes_non_overlapping(&doc);
+        let lanes = lanes(&doc);
+        // Slot lanes 0 and 1 under the coordinator pid, plus >= 1 queue lane.
+        assert!(lanes.contains_key(&(COORD_PID, 0)));
+        assert!(lanes.contains_key(&(COORD_PID, 1)));
+        assert!(lanes.contains_key(&(COORD_PID, 2)), "queue lane expected");
+        // Every admission's service interval is a span of exactly
+        // `service` cycles on its slot lane.
+        for a in &admissions {
+            let slot_spans = &lanes[&(COORD_PID, u64::from(a.slot))];
+            assert!(
+                slot_spans.contains(&(a.start, a.start + service)),
+                "admission {a:?} missing from slot lane"
+            );
+        }
+        // Deterministic bytes for batches too.
+        assert_eq!(
+            render(&batch_timeline("batch", &trace, &params, &admissions)),
+            render(&doc)
+        );
+    }
+
+    #[test]
+    fn overlapping_queue_waits_get_distinct_lanes() {
+        let params = OccupancyParams {
+            capacity: 32,
+            jcu_slots: 1,
+            inflight: 8,
+            arrival_gap: 0,
+        };
+        let mut model = OccupancyModel::new(params);
+        // One slot, three simultaneous arrivals: jobs 1 and 2 wait
+        // overlapping intervals and must not share a queue lane.
+        let admissions: Vec<Admission> =
+            (0..3).map(|_| model.admit_at(0, 32, 100)).collect();
+        model.finish();
+        let trace = Trace::new(0);
+        let doc = batch_timeline("queued", &trace, &params, &admissions);
+        assert_lanes_non_overlapping(&doc);
+        let lanes = lanes(&doc);
+        assert!(lanes.contains_key(&(COORD_PID, 1)), "first queue lane");
+        assert!(lanes.contains_key(&(COORD_PID, 2)), "second queue lane");
+    }
+}

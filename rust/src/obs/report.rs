@@ -1,0 +1,300 @@
+//! Overhead attribution over a campaign trace store.
+//!
+//! A store (`<root>/<fingerprint>/<request-key>.json`) already holds
+//! full phase-resolved traces for everything a campaign, fleet, or
+//! serve daemon ever simulated. This module turns that recorded
+//! traffic back into the paper's analysis without re-simulating
+//! anything:
+//!
+//! * [`scan`] walks a store root and decodes every trace, recovering
+//!   each request's spec/clusters/routine from its on-disk key
+//!   ([`crate::campaign::store::request_key`] spelled backwards).
+//! * [`decompose`] is the headline split of §5: per (kernel, size,
+//!   clusters, routine), end-to-end cycles vs. the critical-path
+//!   execute phase — everything else is *offload overhead* (Fig. 2).
+//! * [`phase_bands`] re-derives Fig. 11's per-phase min/avg/max bands
+//!   through the exact `exp/fig11` math
+//!   ([`crate::exp::fig11::bands_of`]), so `occamy trace report` over a
+//!   store that holds the paper grid reproduces the figure
+//!   bit-identically.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::campaign::codec;
+use crate::exp::fig11::{self, Band};
+use crate::offload::RoutineKind;
+use crate::sim::{Phase, Trace};
+
+/// One decoded trace with the request recovered from its store key.
+#[derive(Debug, Clone)]
+pub struct StoredTrace {
+    /// Config fingerprint directory the trace came from.
+    pub fingerprint: String,
+    /// Spec part of the request key, e.g. `axpy_n1024`.
+    pub spec_key: String,
+    pub n_clusters: usize,
+    pub routine: RoutineKind,
+    pub trace: Arc<Trace>,
+}
+
+/// Invert [`crate::campaign::store::request_key`]: split
+/// `<spec>-c<clusters>-<routine>` back into its parts. `None` for
+/// anything that is not a store key (foreign files are skipped, not
+/// errors).
+pub fn parse_request_key(stem: &str) -> Option<(String, usize, RoutineKind)> {
+    let (rest, routine) = stem.rsplit_once('-')?;
+    let routine = RoutineKind::parse(routine)?;
+    let (spec_key, clusters) = rest.rsplit_once("-c")?;
+    let n_clusters: usize = clusters.parse().ok()?;
+    if spec_key.is_empty() || n_clusters == 0 {
+        return None;
+    }
+    Some((spec_key.to_string(), n_clusters, routine))
+}
+
+fn is_fingerprint(name: &str) -> bool {
+    name.len() == 16 && name.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase())
+}
+
+fn sorted_names(dir: &Path, keep: impl Fn(&str) -> bool) -> anyhow::Result<Vec<String>> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read store dir {}: {e}", dir.display()))?;
+    let mut names: Vec<String> = entries
+        .filter_map(Result::ok)
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| keep(n))
+        .collect();
+    names.sort();
+    Ok(names)
+}
+
+/// Decode every trace under a store root, in deterministic
+/// (fingerprint, request-key) order. Corrupt traces are skipped with a
+/// warning, matching the store's own corruption tolerance; files that
+/// are not store keys are ignored silently.
+pub fn scan(root: &Path) -> anyhow::Result<Vec<StoredTrace>> {
+    anyhow::ensure!(
+        root.is_dir(),
+        "trace store {} does not exist (run a campaign/serve with --store first)",
+        root.display()
+    );
+    let mut out = Vec::new();
+    for fp in sorted_names(root, is_fingerprint)? {
+        let dir = root.join(&fp);
+        let stems = sorted_names(&dir, |n| n.ends_with(".json") && !n.starts_with('.'))?;
+        for file in stems {
+            let stem = file.trim_end_matches(".json");
+            let Some((spec_key, n_clusters, routine)) = parse_request_key(stem) else {
+                continue;
+            };
+            let path = dir.join(&file);
+            let Ok(text) = std::fs::read_to_string(&path) else {
+                continue;
+            };
+            match codec::trace_from_str(&text) {
+                Ok(trace) => out.push(StoredTrace {
+                    fingerprint: fp.clone(),
+                    spec_key,
+                    n_clusters,
+                    routine,
+                    trace,
+                }),
+                Err(e) => eprintln!("trace report: skipping corrupt {} ({e})", path.display()),
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The §5 overhead split of one (kernel/size, clusters, routine) group:
+/// end-to-end cycles vs. the critical-path execute phase, aggregated
+/// over every matching trace in the store (min/avg/max across traces —
+/// one trace per config fingerprint in the common case).
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub spec_key: String,
+    pub n_clusters: usize,
+    pub routine: RoutineKind,
+    /// Traces aggregated into this row.
+    pub traces: usize,
+    pub total_avg: f64,
+    /// Mean critical-path execute cycles (the slowest cluster's F phase
+    /// — the paper's "useful work" reference).
+    pub execute_avg: f64,
+    pub overhead_min: u64,
+    pub overhead_avg: f64,
+    pub overhead_max: u64,
+}
+
+impl Decomposition {
+    /// Offload overhead as a percentage of the end-to-end runtime.
+    pub fn overhead_pct(&self) -> f64 {
+        if self.total_avg > 0.0 {
+            100.0 * self.overhead_avg / self.total_avg
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-trace overhead: end-to-end total minus the slowest cluster's
+/// execute phase. Ideal runs with no recorded execute phase (there are
+/// none — every routine executes) degrade to the full total.
+fn overhead_of(trace: &Trace) -> u64 {
+    let execute = trace.stats(Phase::Execute).map(|s| s.max).unwrap_or(0);
+    trace.total.saturating_sub(execute)
+}
+
+/// Group scanned traces into the overhead decomposition, sorted by
+/// (spec key, clusters, routine name).
+pub fn decompose(entries: &[StoredTrace]) -> Vec<Decomposition> {
+    let mut groups: BTreeMap<(String, usize, &'static str), Vec<&StoredTrace>> = BTreeMap::new();
+    for e in entries {
+        groups
+            .entry((e.spec_key.clone(), e.n_clusters, e.routine.name()))
+            .or_default()
+            .push(e);
+    }
+    groups
+        .into_iter()
+        .map(|((spec_key, n_clusters, _), group)| {
+            let n = group.len() as f64;
+            let overheads: Vec<u64> = group.iter().map(|e| overhead_of(&e.trace)).collect();
+            let executes = group
+                .iter()
+                .map(|e| e.trace.stats(Phase::Execute).map(|s| s.max).unwrap_or(0));
+            Decomposition {
+                spec_key,
+                n_clusters,
+                routine: group[0].routine,
+                traces: group.len(),
+                total_avg: group.iter().map(|e| e.trace.total as f64).sum::<f64>() / n,
+                execute_avg: executes.map(|e| e as f64).sum::<f64>() / n,
+                overhead_min: *overheads.iter().min().expect("non-empty group"),
+                overhead_avg: overheads.iter().map(|&o| o as f64).sum::<f64>() / n,
+                overhead_max: *overheads.iter().max().expect("non-empty group"),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 11-style per-phase min/avg/max bands for every scanned trace,
+/// paired with its spec key — computed by the same
+/// [`fig11::bands_of`] the figure itself uses, so a store holding the
+/// paper grid reproduces `exp/fig11` bit-identically.
+pub fn phase_bands(entries: &[StoredTrace]) -> Vec<(String, Band)> {
+    let mut out = Vec::new();
+    for e in entries {
+        let mut bands = Vec::new();
+        fig11::bands_of(&e.trace, e.routine, e.n_clusters, &mut bands);
+        out.extend(bands.into_iter().map(|b| (e.spec_key.clone(), b)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::store::{self, TraceStore};
+    use crate::config::Config;
+    use crate::exp::CLUSTER_SWEEP;
+    use crate::kernels::JobSpec;
+    use crate::sweep::OffloadRequest;
+
+    #[test]
+    fn request_keys_parse_back_for_every_kernel_and_routine() {
+        let specs = [
+            JobSpec::Axpy { n: 1024 },
+            JobSpec::MonteCarlo { samples: 4096 },
+            JobSpec::Matmul { m: 16, n: 32, k: 8 },
+            JobSpec::Atax { m: 64, n: 64 },
+            JobSpec::Covariance { m: 32, n: 64 },
+            JobSpec::Bfs { nodes: 64, levels: 4 },
+        ];
+        for spec in specs {
+            for routine in RoutineKind::ALL {
+                let req = OffloadRequest::new(spec, 8, routine);
+                let key = store::request_key(&req);
+                let (_, n, r) = parse_request_key(&key)
+                    .unwrap_or_else(|| panic!("key {key} did not parse"));
+                assert_eq!((n, r), (8, routine), "{key}");
+            }
+        }
+        assert!(parse_request_key("config").is_none());
+        assert!(parse_request_key("axpy_n1024-c0-multicast").is_none());
+        assert!(parse_request_key("axpy_n1024-cX-multicast").is_none());
+    }
+
+    #[test]
+    fn store_report_reproduces_fig11_bit_identically() {
+        // A config distinct from every other test's cache namespace.
+        let mut cfg = Config::default();
+        cfg.timing.host_ipi_issue_gap = 9401;
+        let results = fig11::sweep().run(&cfg);
+        let reference = fig11::from_results(&results);
+
+        // Persist the whole grid the way a campaign/serve run would.
+        let dir = std::env::temp_dir().join(format!(
+            "occamy-obs-report-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tstore = TraceStore::open(&dir).unwrap();
+        let fp = store::fingerprint(&cfg);
+        for rec in results.records() {
+            tstore.save(&fp, &cfg, &rec.req(), &rec.trace).unwrap();
+        }
+
+        // Re-derive the figure purely from disk.
+        let entries = scan(&dir).unwrap();
+        assert_eq!(entries.len(), results.records().len());
+        let axpy: Vec<StoredTrace> = entries
+            .into_iter()
+            .filter(|e| {
+                e.spec_key == "axpy_n1024"
+                    && matches!(e.routine, RoutineKind::Baseline | RoutineKind::Multicast)
+            })
+            .collect();
+        let from_store = fig11::Fig11 {
+            bands: phase_bands(&axpy).into_iter().map(|(_, b)| b).collect(),
+        };
+        for p in Phase::ALL {
+            for routine in [RoutineKind::Baseline, RoutineKind::Multicast] {
+                for &n in &CLUSTER_SWEEP {
+                    let want = reference.get(p, routine, n);
+                    let got = from_store.get(p, routine, n);
+                    match (want, got) {
+                        (None, None) => {}
+                        (Some(w), Some(g)) => {
+                            assert_eq!((w.min, w.max), (g.min, g.max), "{p:?} {routine:?} n={n}");
+                            assert_eq!(
+                                w.avg.to_bits(),
+                                g.avg.to_bits(),
+                                "{p:?} {routine:?} n={n}: avg {} vs {}",
+                                w.avg,
+                                g.avg
+                            );
+                        }
+                        _ => panic!("band presence differs for {p:?} {routine:?} n={n}"),
+                    }
+                }
+            }
+        }
+
+        // The decomposition covers the same grid, overhead + execute
+        // summing back to the total for the single-trace groups.
+        let rows = decompose(&axpy);
+        assert_eq!(rows.len(), CLUSTER_SWEEP.len() * 2);
+        for row in &rows {
+            assert_eq!(row.traces, 1);
+            assert!(
+                (row.execute_avg + row.overhead_avg - row.total_avg).abs() < 1e-9,
+                "decomposition must sum to total: {row:?}"
+            );
+            assert!(row.overhead_pct() > 0.0 && row.overhead_pct() < 100.0, "{row:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

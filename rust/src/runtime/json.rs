@@ -422,6 +422,53 @@ mod tests {
     }
 
     #[test]
+    fn every_control_character_round_trips_on_one_line() {
+        // All of U+0000..U+001F plus DEL in one string: the serializer
+        // must emit a single line of valid JSON (the event log and the
+        // campaign stream are line-delimited) that parses back to the
+        // identical string. DEL is legal raw in JSON strings; everything
+        // below 0x20 must be escaped.
+        let hostile: String =
+            (0u32..0x20).chain([0x7f]).map(|c| char::from_u32(c).unwrap()).collect();
+        let v = Json::Str(hostile);
+        let line = v.to_string();
+        assert!(!line.contains('\n') && !line.contains('\r'), "{line:?}");
+        for esc in ["\\u0000", "\\u0008", "\\u000b", "\\u000c", "\\u001f", "\\n", "\\t", "\\r"] {
+            assert!(line.contains(esc), "missing {esc} in {line}");
+        }
+        assert_eq!(Json::parse(&line).unwrap(), v);
+    }
+
+    #[test]
+    fn hostile_strings_round_trip_as_keys_and_values() {
+        let cases = [
+            "snowman ☃ emoji 🦀 accents éü",
+            "quote\"backslash\\slash/",
+            "\\u0041 is a literal here, not an escape",
+            "mixed \u{1} ctrl ☃ \"q\" \\ end",
+            "",
+        ];
+        for s in cases {
+            let mut obj = BTreeMap::new();
+            obj.insert(s.to_string(), Json::Str(s.to_string()));
+            let v = Json::Obj(obj);
+            let line = v.to_string();
+            let back = Json::parse(&line).unwrap_or_else(|e| panic!("{s:?} via {line}: {e}"));
+            assert_eq!(back, v, "{s:?} via {line}");
+            assert_eq!(back.to_string(), line, "unstable bytes for {s:?}");
+        }
+    }
+
+    #[test]
+    fn unpaired_surrogate_escapes_degrade_to_replacement() {
+        // \uD800 names a UTF-16 surrogate with no pair; Rust strings
+        // cannot hold it, so the parser substitutes U+FFFD rather than
+        // erroring out of an otherwise-valid document.
+        let v = Json::parse("\"a\\ud800b\"").unwrap();
+        assert_eq!(v.as_str(), Some("a\u{fffd}b"));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());

@@ -41,8 +41,11 @@ use crate::offload::RoutineKind;
 use crate::sim::Time;
 use crate::sweep::{cache, OffloadRequest};
 
+use crate::obs::log::{self as obslog, Event, Level};
+use crate::obs::metrics::{register_store_stats, Registry};
+
 use super::metrics::ServeMetrics;
-use super::proto::{ErrorReply, JobReply, Rejected, Reply, Request, StatsReply, Submit};
+use super::proto::{ErrorReply, JobReply, MetricsReply, Rejected, Reply, Request, StatsReply, Submit};
 
 /// Configuration of one engine (and daemon) instance.
 #[derive(Debug, Clone)]
@@ -132,6 +135,9 @@ impl Engine {
         match req {
             Request::Submit(s) => self.submit(s),
             Request::Stats => Reply::Stats(self.stats()),
+            Request::Metrics => Reply::Metrics(MetricsReply {
+                text: self.prometheus(),
+            }),
             Request::Ping => Reply::Pong,
             Request::Shutdown => Reply::ShuttingDown {
                 drained: self.drain(),
@@ -148,6 +154,14 @@ impl Engine {
 
     fn error(&mut self, id: u64, message: String) -> Reply {
         self.metrics.record_error();
+        if obslog::enabled() {
+            obslog::emit(
+                &Event::sim("serve", "error", self.clock)
+                    .level(Level::Warn)
+                    .u64("id", id)
+                    .str("message", &message),
+            );
+        }
         Reply::Error(ErrorReply {
             id: Some(id),
             message,
@@ -182,6 +196,16 @@ impl Engine {
         // Admission control: the bounded queue. Full → shed, visibly.
         if self.outstanding.len() >= self.queue_bound {
             self.metrics.record_rejection();
+            if obslog::enabled() {
+                obslog::emit(
+                    &Event::sim("serve", "reject", self.clock)
+                        .level(Level::Warn)
+                        .u64("id", s.id)
+                        .str("kernel", &s.kernel)
+                        .u64("backlog", self.outstanding.len() as u64)
+                        .u64("bound", self.queue_bound as u64),
+                );
+            }
             return Reply::Rejected(Rejected {
                 id: s.id,
                 reason: "overloaded".into(),
@@ -203,6 +227,14 @@ impl Engine {
                 // coordinator's host path).
                 let cycles = planner.host_estimate(&spec);
                 self.metrics.record_host(cycles);
+                if obslog::enabled() {
+                    obslog::emit(
+                        &Event::sim("serve", "host_place", self.clock)
+                            .u64("id", s.id)
+                            .str("kernel", &s.kernel)
+                            .u64("cycles", cycles),
+                    );
+                }
                 self.after_completion();
                 Reply::Result(JobReply {
                     id: s.id,
@@ -220,6 +252,15 @@ impl Engine {
             }
             Placement::Accelerator { n_clusters } => {
                 let req = OffloadRequest::new(spec, n_clusters, routine);
+                if obslog::enabled() {
+                    obslog::emit(
+                        &Event::sim("serve", "accept", self.clock)
+                            .u64("id", s.id)
+                            .str("kernel", &s.kernel)
+                            .u64("clusters", n_clusters as u64)
+                            .str("routine", routine.name()),
+                    );
+                }
                 let (service, source) = self.service_cycles(req);
                 let adm = self.model.admit_at(self.clock, n_clusters, service);
                 self.outstanding.push(Reverse(adm.completion));
@@ -227,6 +268,28 @@ impl Engine {
                 // includes any window-floor deferral the model applied.
                 let queue_delay = adm.start - self.clock;
                 self.metrics.record_accel(service, queue_delay, source);
+                if obslog::enabled() {
+                    let tier = match source {
+                        Source::Mem => "hit_mem",
+                        Source::Disk => "hit_disk",
+                        Source::Sim => "fresh_sim",
+                    };
+                    obslog::emit(
+                        &Event::sim("serve", tier, self.clock)
+                            .u64("id", s.id)
+                            .u64("cycles", service),
+                    );
+                    obslog::emit(
+                        &Event::sim("serve", "dispatch", adm.start)
+                            .u64("id", s.id)
+                            .u64("queue_delay", queue_delay),
+                    );
+                    obslog::emit(
+                        &Event::sim("serve", "complete", adm.completion)
+                            .u64("id", s.id)
+                            .u64("latency", service + queue_delay),
+                    );
+                }
                 self.after_completion();
                 Reply::Result(JobReply {
                     id: s.id,
@@ -276,6 +339,18 @@ impl Engine {
     /// The metrics snapshot behind the `stats` verb.
     pub fn stats(&self) -> StatsReply {
         self.metrics.snapshot()
+    }
+
+    /// The Prometheus text exposition behind the `metrics` verb: every
+    /// serve counter/distribution, plus the trace store's three-tier
+    /// counters when a store is attached.
+    pub fn prometheus(&self) -> String {
+        let mut r = Registry::new();
+        self.metrics.register(&mut r);
+        if let Some(stats) = self.store_stats() {
+            register_store_stats(&mut r, &stats);
+        }
+        r.render()
     }
 
     /// The final summary line (shutdown).
@@ -473,6 +548,67 @@ mod tests {
             other => panic!("expected result, got {other:?}"),
         }
         assert_eq!(e.stats().host_placements, 1);
+    }
+
+    #[test]
+    fn metrics_verb_answers_prometheus_text() {
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9315),
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        e.handle(&Request::Submit(submit(1, "axpy:896", 4, 0)));
+        let reply = e.handle(&Request::Metrics);
+        let Reply::Metrics(m) = reply else {
+            panic!("expected metrics, got {reply:?}");
+        };
+        assert!(
+            m.text.contains("occamy_serve_requests_total{outcome=\"completed\"} 1\n"),
+            "{}",
+            m.text
+        );
+        assert!(m.text.contains("# TYPE occamy_serve_latency_cycles histogram\n"), "{}", m.text);
+        // No store attached: the store families are absent, not zero.
+        assert!(!m.text.contains("occamy_store_"), "{}", m.text);
+        // The reply survives the wire (newline-heavy text as one line).
+        let line = Reply::Metrics(m.clone()).to_line();
+        assert_eq!(Reply::from_line(&line).unwrap(), Reply::Metrics(m));
+    }
+
+    #[test]
+    fn event_log_records_the_request_lifecycle() {
+        // First init wins process-wide; either way the sink is live.
+        crate::obs::log::init(crate::obs::log::EventLog::in_memory());
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9317),
+            inflight: 1,
+            queue_factor: 1,
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        // Ids unique to this test: other tests' events share the ring.
+        e.handle(&Request::Submit(submit(987_001, "axpy:960", 4, 0)));
+        e.handle(&Request::Submit(submit(987_002, "axpy:960", 4, 0)));
+        let mine: Vec<String> = crate::obs::log::recent()
+            .into_iter()
+            .filter(|l| l.contains("\"id\":987"))
+            .collect();
+        let has = |id: u64, ev: &str| {
+            mine.iter().any(|l| {
+                l.contains(&format!("\"id\":{id}")) && l.contains(&format!("\"event\":\"{ev}\""))
+            })
+        };
+        assert!(has(987_001, "accept"), "{mine:?}");
+        assert!(has(987_001, "fresh_sim"), "{mine:?}");
+        assert!(has(987_001, "dispatch"), "{mine:?}");
+        assert!(has(987_001, "complete"), "{mine:?}");
+        assert!(has(987_002, "reject"), "second job overflows the bound: {mine:?}");
+        // Sim-domain lines are wall-free and cycle-stamped.
+        for l in &mine {
+            assert!(!l.contains("t_ms"), "{l}");
+            assert!(l.contains("\"cycle\":"), "{l}");
+            assert!(l.contains("\"src\":\"serve\""), "{l}");
+        }
     }
 
     #[test]

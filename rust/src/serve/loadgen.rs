@@ -26,7 +26,7 @@ use crate::coordinator::Dist;
 use crate::offload::RoutineKind;
 use crate::rng::Rng64;
 
-use super::proto::{Reply, Request, StatsReply, Submit};
+use super::proto::{DistSummary, Reply, Request, StatsReply, Submit};
 
 /// The shape of the arrival process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,6 +141,10 @@ pub struct LoadgenOptions {
     pub routine: Option<RoutineKind>,
     /// Fetch the daemon's `stats` snapshot after the burst.
     pub fetch_stats: bool,
+    /// Fetch the Prometheus text exposition (`metrics` verb) after the
+    /// burst and print it verbatim — `occamy loadgen --requests 0
+    /// --metrics` is the scrape command.
+    pub fetch_metrics: bool,
     /// Send `shutdown` after the burst (and the stats fetch).
     pub shutdown: bool,
 }
@@ -164,6 +168,7 @@ impl Default for LoadgenOptions {
             clusters: None,
             routine: None,
             fetch_stats: true,
+            fetch_metrics: false,
             shutdown: false,
         }
     }
@@ -182,6 +187,8 @@ pub struct LoadgenReport {
     pub latency: Dist,
     /// The daemon's snapshot, when `fetch_stats` was set.
     pub stats: Option<StatsReply>,
+    /// The Prometheus exposition body, when `fetch_metrics` was set.
+    pub metrics: Option<String>,
     /// In-flight jobs the daemon drained, when `shutdown` was set.
     pub drained: Option<u64>,
 }
@@ -195,10 +202,12 @@ impl LoadgenReport {
             self.submitted, self.completed, self.rejected, self.failures
         );
         if self.latency.count() > 0 {
-            let q = self.latency.quantiles(&[0.50, 0.95, 0.99]);
+            // The same reduction the daemon's stats reply uses —
+            // client- and server-side percentiles cannot drift apart.
+            let s = DistSummary::of(&self.latency);
             out.push_str(&format!(
                 "latency p50/p95/p99/max: {}/{}/{}/{} cyc\n",
-                q[0], q[1], q[2], self.latency.max()
+                s.p50, s.p95, s.p99, s.max
             ));
         }
         if let Some(s) = &self.stats {
@@ -209,6 +218,11 @@ impl LoadgenReport {
         }
         if let Some(d) = self.drained {
             out.push_str(&format!("shutdown: server drained {d} in-flight job(s)\n"));
+        }
+        if let Some(m) = &self.metrics {
+            // Verbatim, last: `loadgen --requests 0 --metrics` pipes
+            // straight into a scrape file.
+            out.push_str(m);
         }
         out
     }
@@ -278,6 +292,15 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
             other => {
                 report.failures += 1;
                 eprintln!("loadgen: unexpected reply to stats: {other:?}");
+            }
+        }
+    }
+    if opts.fetch_metrics {
+        match exchange(&mut writer, &mut reader, &Request::Metrics)? {
+            Reply::Metrics(m) => report.metrics = Some(m.text),
+            other => {
+                report.failures += 1;
+                eprintln!("loadgen: unexpected reply to metrics: {other:?}");
             }
         }
     }
@@ -393,10 +416,18 @@ mod tests {
             ..sample_empty_stats()
         });
         r.drained = Some(0);
+        r.metrics = Some("occamy_serve_requests_total{outcome=\"completed\"} 4\n".into());
         let text = r.render();
         assert!(text.contains("4 submitted, 4 completed, 0 rejected, 0 failure(s)"), "{text}");
         assert!(text.contains("0 fresh simulation(s)"), "{text}");
         assert!(text.contains("drained 0 in-flight job(s)"), "{text}");
+        // Client- and server-side percentiles share DistSummary::of.
+        let s = DistSummary::of(&r.latency);
+        assert!(
+            text.contains(&format!("latency p50/p95/p99/max: {}/{}/{}/{} cyc", s.p50, s.p95, s.p99, s.max)),
+            "{text}"
+        );
+        assert!(text.ends_with("occamy_serve_requests_total{outcome=\"completed\"} 4\n"), "{text}");
     }
 
     fn sample_empty_stats() -> StatsReply {

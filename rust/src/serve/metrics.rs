@@ -15,6 +15,7 @@
 
 use crate::campaign::stream::Source;
 use crate::coordinator::Dist;
+use crate::obs::metrics::{Registry, CYCLE_BUCKETS};
 
 use super::proto::{DistSummary, StatsReply};
 
@@ -100,21 +101,9 @@ impl ServeMetrics {
         Some(self.completed as f64 / (self.latency.sum() as f64 / 1e9))
     }
 
-    fn summarize(d: &Dist) -> DistSummary {
-        if d.count() == 0 {
-            return DistSummary::default();
-        }
-        let q = d.quantiles(&[0.50, 0.95, 0.99]);
-        DistSummary {
-            count: d.count() as u64,
-            p50: q[0],
-            p95: q[1],
-            p99: q[2],
-            max: d.max(),
-        }
-    }
-
-    /// The `stats` reply for the current state.
+    /// The `stats` reply for the current state. Percentiles reduce
+    /// through [`DistSummary::of`], the same math the load generator
+    /// and serve bench report with.
     pub fn snapshot(&self) -> StatsReply {
         StatsReply {
             completed: self.completed,
@@ -124,13 +113,70 @@ impl ServeMetrics {
             accel_placements: self.accel_placements,
             hits: self.hits(),
             fresh_sims: self.fresh_sims,
-            queue: Self::summarize(&self.queue),
-            service: Self::summarize(&self.service),
-            latency: Self::summarize(&self.latency),
+            queue: DistSummary::of(&self.queue),
+            service: DistSummary::of(&self.service),
+            latency: DistSummary::of(&self.latency),
             slo_cycles: self.slo_cycles,
             slo_violations: self.slo_violations,
             jobs_per_sim_second: self.jobs_per_sim_second(),
         }
+    }
+
+    /// Register every counter and distribution into a Prometheus
+    /// registry — the body of the `metrics` wire verb. Covers the full
+    /// `stats` surface: request outcomes, placements, memoization
+    /// tiers, SLO accounting, throughput, and the three cycle
+    /// distributions as histograms.
+    pub fn register(&self, r: &mut Registry) {
+        let outcomes = "Requests by outcome (completed, rejected, error)";
+        r.counter("occamy_serve_requests_total", outcomes, &[("outcome", "completed")], self.completed);
+        r.counter("occamy_serve_requests_total", outcomes, &[("outcome", "rejected")], self.rejected);
+        r.counter("occamy_serve_requests_total", outcomes, &[("outcome", "error")], self.errors);
+        let placements = "Completed jobs by placement";
+        r.counter("occamy_serve_placements_total", placements, &[("placement", "host")], self.host_placements);
+        r.counter("occamy_serve_placements_total", placements, &[("placement", "accel")], self.accel_placements);
+        let tiers = "Accelerator jobs by memoization tier (mem/disk hits, fresh sims)";
+        r.counter("occamy_serve_store_requests_total", tiers, &[("tier", "mem")], self.mem_hits);
+        r.counter("occamy_serve_store_requests_total", tiers, &[("tier", "disk")], self.disk_hits);
+        r.counter("occamy_serve_store_requests_total", tiers, &[("tier", "sim")], self.fresh_sims);
+        r.counter(
+            "occamy_serve_slo_violations_total",
+            "Completed jobs whose end-to-end latency exceeded the SLO",
+            &[],
+            self.slo_violations,
+        );
+        r.gauge(
+            "occamy_serve_slo_cycles",
+            "The latency SLO in virtual cycles",
+            &[],
+            self.slo_cycles as f64,
+        );
+        if let Some(rate) = self.jobs_per_sim_second() {
+            r.gauge(
+                "occamy_serve_jobs_per_sim_second",
+                "Simulated-time throughput (jobs per simulated second)",
+                &[],
+                rate,
+            );
+        }
+        r.histogram(
+            "occamy_serve_queue_cycles",
+            "Queueing delay per job, virtual cycles (arrival to dispatch)",
+            &self.queue,
+            &CYCLE_BUCKETS,
+        );
+        r.histogram(
+            "occamy_serve_service_cycles",
+            "Isolated service time per job, virtual cycles",
+            &self.service,
+            &CYCLE_BUCKETS,
+        );
+        r.histogram(
+            "occamy_serve_latency_cycles",
+            "End-to-end latency per job, virtual cycles (service + queueing)",
+            &self.latency,
+            &CYCLE_BUCKETS,
+        );
     }
 
     /// The periodic one-line summary the daemon prints.
@@ -213,6 +259,45 @@ mod tests {
         let empty = ServeMetrics::new(1_000).snapshot();
         assert_eq!(empty.latency, DistSummary::default());
         assert_eq!(empty.jobs_per_sim_second, None);
+    }
+
+    #[test]
+    fn register_covers_every_stats_counter() {
+        let mut m = ServeMetrics::new(1_000);
+        m.record_accel(2_000, 100, Source::Sim);
+        m.record_accel(500, 0, Source::Mem);
+        m.record_accel(500, 0, Source::Disk);
+        m.record_host(40);
+        m.record_rejection();
+        m.record_error();
+        let mut r = Registry::new();
+        m.register(&mut r);
+        let text = r.render();
+        for needle in [
+            "occamy_serve_requests_total{outcome=\"completed\"} 4\n",
+            "occamy_serve_requests_total{outcome=\"rejected\"} 1\n",
+            "occamy_serve_requests_total{outcome=\"error\"} 1\n",
+            "occamy_serve_placements_total{placement=\"host\"} 1\n",
+            "occamy_serve_placements_total{placement=\"accel\"} 3\n",
+            "occamy_serve_store_requests_total{tier=\"mem\"} 1\n",
+            "occamy_serve_store_requests_total{tier=\"disk\"} 1\n",
+            "occamy_serve_store_requests_total{tier=\"sim\"} 1\n",
+            "occamy_serve_slo_violations_total 1\n",
+            "occamy_serve_slo_cycles 1000\n",
+            "# TYPE occamy_serve_jobs_per_sim_second gauge\n",
+            "occamy_serve_queue_cycles_bucket{le=\"1000\"} 4\n",
+            "occamy_serve_service_cycles_count 4\n",
+            "occamy_serve_latency_cycles_sum 3140\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // An idle daemon renders too (no NaN gauges): the throughput
+        // gauge is simply absent until it is meaningful.
+        let mut r = Registry::new();
+        ServeMetrics::new(1_000).register(&mut r);
+        let idle = r.render();
+        assert!(!idle.contains("occamy_serve_jobs_per_sim_second"), "{idle}");
+        assert!(idle.contains("occamy_serve_requests_total{outcome=\"completed\"} 0\n"), "{idle}");
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! login node actually has. Five pieces:
 //!
 //! * [`proto`] — line-delimited JSON wire protocol (submit / stats /
-//!   ping / shutdown), deterministic bytes, malformed input downgraded
-//!   to per-request errors.
+//!   metrics / ping / shutdown), deterministic bytes, malformed input
+//!   downgraded to per-request errors.
 //! * [`engine`] — the deterministic core: open-loop arrival clock,
 //!   admission control with a bounded queue (`rejected: overloaded`
 //!   instead of unbounded delay), scheduling through the coordinator's
@@ -15,7 +15,14 @@
 //!   [`TraceStore`](crate::campaign::TraceStore) → fresh simulation).
 //! * [`metrics`] — per-request queue/service/latency distributions,
 //!   hit/miss counters, SLO accounting, the `stats` snapshot and the
-//!   periodic summary line.
+//!   periodic summary line. The same counters register into an
+//!   [`obs::metrics`](crate::obs::metrics) registry, answered in
+//!   Prometheus text form by the `metrics` wire verb (scrape with
+//!   `occamy loadgen --requests 0 --metrics`). With `--log FILE` (or
+//!   the spec's `log` key) the engine also emits a structured JSONL
+//!   event per request-lifecycle step through
+//!   [`obs::log`](crate::obs::log) — accept, memoization tier,
+//!   dispatch, complete, reject — stamped in virtual cycles.
 //! * [`server`] — the TCP front end: concurrent sessions, graceful
 //!   drain on shutdown, nothing a client writes can take it down.
 //! * [`loadgen`] — a seeded open-loop client: Poisson, bursty and
@@ -39,6 +46,6 @@ pub mod spec;
 pub use engine::{Engine, EngineOptions};
 pub use loadgen::{ArrivalKind, ArrivalProcess, LoadgenOptions, LoadgenReport};
 pub use metrics::ServeMetrics;
-pub use proto::{Reply, Request, StatsReply, Submit};
+pub use proto::{DistSummary, MetricsReply, Reply, Request, StatsReply, Submit};
 pub use server::Server;
 pub use spec::ServeSpec;

@@ -19,7 +19,7 @@
 use std::collections::BTreeMap;
 
 use crate::campaign::stream::Source;
-use crate::coordinator::Placement;
+use crate::coordinator::{Dist, Placement};
 use crate::offload::RoutineKind;
 use crate::runtime::json::Json;
 
@@ -31,6 +31,10 @@ pub enum Request {
     Submit(Submit),
     /// Ask for the daemon's metrics snapshot.
     Stats,
+    /// Ask for the same counters in Prometheus text exposition format
+    /// (`obs::metrics`), for scrape pipelines; `stats` stays the JSON
+    /// form.
+    Metrics,
     /// Liveness probe.
     Ping,
     /// Graceful shutdown: drain the virtual timeline, stop accepting.
@@ -72,6 +76,8 @@ pub enum Reply {
     Pong,
     /// Answer to `stats`.
     Stats(StatsReply),
+    /// Answer to `metrics`: the Prometheus text exposition body.
+    Metrics(MetricsReply),
     /// Answer to `shutdown`: the daemon drained `drained` in-flight jobs
     /// off the virtual timeline and is closing.
     ShuttingDown { drained: u64 },
@@ -134,6 +140,34 @@ pub struct DistSummary {
     pub p95: u64,
     pub p99: u64,
     pub max: u64,
+}
+
+impl DistSummary {
+    /// The one summary shape every consumer shares: the daemon's
+    /// `stats` reply, the load generator's report, and the serve
+    /// bench all reduce a [`Dist`] through this, so their percentile
+    /// math cannot drift apart.
+    pub fn of(d: &Dist) -> DistSummary {
+        if d.count() == 0 {
+            return DistSummary::default();
+        }
+        let q = d.quantiles(&[0.50, 0.95, 0.99]);
+        DistSummary {
+            count: d.count() as u64,
+            p50: q[0],
+            p95: q[1],
+            p99: q[2],
+            max: d.max(),
+        }
+    }
+}
+
+/// The Prometheus text exposition body answering a `metrics` request.
+/// Carried as one JSON string on the wire (the protocol stays
+/// line-delimited JSON); clients print `text` verbatim for scraping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsReply {
+    pub text: String,
 }
 
 /// The daemon's metrics snapshot.
@@ -220,6 +254,7 @@ impl Request {
                 obj(pairs)
             }
             Request::Stats => obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Metrics => obj(vec![("op", Json::Str("metrics".into()))]),
             Request::Ping => obj(vec![("op", Json::Str("ping".into()))]),
             Request::Shutdown => obj(vec![("op", Json::Str("shutdown".into()))]),
         }
@@ -248,6 +283,7 @@ impl Request {
                 }))
             }
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!("unknown op {other:?}")),
@@ -336,6 +372,10 @@ impl Reply {
                     },
                 ),
             ]),
+            Reply::Metrics(m) => obj(vec![
+                ("reply", Json::Str("metrics".into())),
+                ("text", Json::Str(m.text.clone())),
+            ]),
             Reply::ShuttingDown { drained } => obj(vec![
                 ("reply", Json::Str("shutting-down".into())),
                 ("drained", num(*drained)),
@@ -408,6 +448,9 @@ impl Reply {
                     None | Some(Json::Null) => None,
                     Some(j) => Some(j.as_f64().ok_or("non-numeric \"jobs_per_sim_second\"")?),
                 },
+            })),
+            "metrics" => Ok(Reply::Metrics(MetricsReply {
+                text: need_str(v, "text")?.to_string(),
             })),
             "shutting-down" => Ok(Reply::ShuttingDown {
                 drained: need_u64(v, "drained")?,
@@ -505,6 +548,7 @@ mod tests {
                 seed: None,
             }),
             Request::Stats,
+            Request::Metrics,
             Request::Ping,
             Request::Shutdown,
         ];
@@ -562,6 +606,12 @@ mod tests {
             }),
             Reply::Pong,
             Reply::Stats(sample_stats()),
+            Reply::Metrics(MetricsReply {
+                // Exposition text is newline-heavy and quote-heavy; the
+                // wire escaping must keep it one line and bring it back
+                // byte-identical.
+                text: "# HELP occamy_serve_completed_total x\n# TYPE occamy_serve_completed_total counter\noccamy_serve_completed_total 3\noccamy_serve_requests_total{outcome=\"rejected\"} 1\n".into(),
+            }),
             Reply::ShuttingDown { drained: 12 },
         ];
         for reply in replies {
@@ -584,6 +634,21 @@ mod tests {
             Reply::Stats(parsed) => assert_eq!(parsed.jobs_per_sim_second, None),
             other => panic!("expected stats, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn dist_summary_of_matches_dist_quantiles() {
+        let mut d = Dist::default();
+        for v in 1..=100u64 {
+            d.record(v);
+        }
+        let s = DistSummary::of(&d);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, d.quantile(0.50));
+        assert_eq!(s.p95, d.quantile(0.95));
+        assert_eq!(s.p99, d.quantile(0.99));
+        assert_eq!(s.max, 100);
+        assert_eq!(DistSummary::of(&Dist::default()), DistSummary::default());
     }
 
     #[test]

@@ -26,6 +26,9 @@ pub struct ServeSection {
     pub summary_every: Option<u64>,
     /// Trace-store root (relative paths resolve against the CWD).
     pub store: Option<String>,
+    /// Structured JSONL event-log path ([`crate::obs::log`]); the CLI's
+    /// `--log` flag overrides it.
+    pub log: Option<String>,
 }
 
 /// Parsed `[loadgen]` table: client-side traffic description.
@@ -143,6 +146,7 @@ impl ServeSpec {
                         spec.serve.summary_every = Some(parse_u64(value, key).map_err(at)?)
                     }
                     "store" => spec.serve.store = Some(parse_string(value, key).map_err(at)?),
+                    "log" => spec.serve.log = Some(parse_string(value, key).map_err(at)?),
                     other => return Err(at(format!("unknown [serve] key {other:?}"))),
                 },
                 Section::Loadgen => match key {
@@ -263,6 +267,7 @@ gap = 25000
 slo_cycles = 2000000   # 2M cycles end-to-end
 summary_every = 64
 store = "serve-store"
+log = "serve-events.jsonl"
 
 [loadgen]
 process = "bursty"
@@ -283,6 +288,10 @@ routine = "multicast"
         assert_eq!((e.inflight, e.queue_factor), (8, 2));
         assert_eq!((e.default_gap, e.slo_cycles, e.summary_every), (25_000, 2_000_000, 64));
         assert_eq!(e.store_root, Some(PathBuf::from("serve-store")));
+        // `log` is CLI-side (the daemon installs the global sink before
+        // the engine exists), so it rides on the section, not the
+        // engine options.
+        assert_eq!(spec.serve.log.as_deref(), Some("serve-events.jsonl"));
         let l = spec.loadgen_options(LoadgenOptions::default());
         assert_eq!(l.kind, ArrivalKind::Bursty);
         assert_eq!(
