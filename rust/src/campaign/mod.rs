@@ -228,7 +228,9 @@ pub fn run_shard_limited(
     max_points: Option<usize>,
 ) -> anyhow::Result<ShardReport> {
     let cfg = &spec.config;
-    let mem_key = cache::config_key(cfg);
+    // Profile-aware memory key (the disk fingerprint stays profile-free:
+    // persisted traces are verified before they land).
+    let mem_key = cache::profiled_config_key(cfg, spec.profile);
     let fp = store::fingerprint(cfg);
     let points = spec.expand();
     let owned = shard.indices(points.len());
@@ -284,11 +286,11 @@ pub fn run_shard_limited(
 
     let run_point = |req: OffloadRequest| -> (Arc<Trace>, stream::Source) {
         match store {
-            Some(s) => s.run_sourced(&fp, &mem_key, cfg, req),
+            Some(s) => s.run_sourced_profiled(&fp, &mem_key, cfg, req, spec.profile),
             None => match cache::peek(&mem_key, req) {
                 Some(t) => (t, stream::Source::Mem),
                 None => (
-                    cache::insert(&mem_key, req, Arc::new(req.run(cfg))),
+                    cache::insert(&mem_key, req, Arc::new(req.run_with(cfg, spec.profile))),
                     stream::Source::Sim,
                 ),
             },

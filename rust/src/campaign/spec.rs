@@ -11,6 +11,7 @@
 //! ```toml
 //! [campaign]
 //! name = "fig7-small"
+//! profile = "reference"      # optional engine profile ("fast" opts in)
 //!
 //! [grid]
 //! kernels = ["axpy:1024", "atax:64x64"]
@@ -48,6 +49,7 @@ use std::collections::HashSet;
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
+use crate::sim::SimProfile;
 use crate::sweep::{InterferencePoint, Sweep, SweepPoint};
 
 /// A parsed campaign: grid axes plus the fully-resolved config.
@@ -66,6 +68,12 @@ pub struct CampaignSpec {
     /// The config the whole grid runs on (defaults + `[soc]`/`[timing]`
     /// overrides).
     pub config: Config,
+    /// Engine profile (`[campaign] profile`, default `"reference"`).
+    /// `"fast"` runs the grid on the elision/memoization engine — the
+    /// bit-identity harness guarantees equal traces, and the store only
+    /// persists fast-path traces after verifying them against a
+    /// reference run.
+    pub profile: SimProfile,
     /// Contention axis (`[interference]`): when present, merge
     /// additionally derives latency-vs-inflight curves from the merged
     /// traces. The trace grid itself — and therefore sharding, resume
@@ -240,6 +248,7 @@ impl CampaignSpec {
         let mut clusters: Vec<usize> = Vec::new();
         let mut routines: Vec<RoutineKind> = Vec::new();
         let mut config = Config::default();
+        let mut profile = SimProfile::Reference;
         let mut interference_section = false;
         let mut jobs_in_flight: Vec<usize> = Vec::new();
         let mut interference_jobs: usize = 16;
@@ -279,8 +288,18 @@ impl CampaignSpec {
                 ("campaign", "name") => {
                     name = Some(parse_string(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?);
                 }
+                ("campaign", "profile") => {
+                    let s = parse_string(value).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+                    profile = SimProfile::parse(&s).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "line {lineno}: unknown profile {s:?} (expected \"reference\" or \"fast\")"
+                        )
+                    })?;
+                }
                 ("campaign", other) => {
-                    anyhow::bail!("line {lineno}: unknown [campaign] key {other:?} (expected name)")
+                    anyhow::bail!(
+                        "line {lineno}: unknown [campaign] key {other:?} (expected name or profile)"
+                    )
                 }
                 ("grid", "kernels") => {
                     for tok in parse_string_array(value)
@@ -423,6 +442,7 @@ impl CampaignSpec {
             clusters,
             routines,
             config,
+            profile,
             interference,
             fleet: fleet_section.then_some(fleet),
         })
@@ -437,6 +457,7 @@ impl CampaignSpec {
     /// The equivalent single-process sweep.
     pub fn to_sweep(&self) -> Sweep {
         let mut sweep = Sweep::new()
+            .profile(self.profile)
             .clusters(self.clusters.iter().copied())
             .routines(self.routines.iter().copied());
         for spec in &self.kernels {

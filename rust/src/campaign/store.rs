@@ -23,8 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::config::Config;
-use crate::kernels::JobSpec;
-use crate::sim::Trace;
+use crate::sim::{SimProfile, Trace};
 use crate::sweep::{cache, OffloadRequest};
 
 use super::codec;
@@ -48,16 +47,10 @@ pub fn fingerprint(cfg: &Config) -> String {
 
 /// On-disk file stem of a request: every parameter spelled out
 /// (`JobSpec::id` omits the BFS level count, so it is not unique).
+/// Delegates to the canonical grammar in [`crate::offload::request_key`],
+/// which the fast profile's timeline memoizer shares.
 pub fn request_key(req: &OffloadRequest) -> String {
-    let spec = match req.spec {
-        JobSpec::Axpy { n } => format!("axpy_n{n}"),
-        JobSpec::MonteCarlo { samples } => format!("montecarlo_s{samples}"),
-        JobSpec::Matmul { m, n, k } => format!("matmul_m{m}_n{n}_k{k}"),
-        JobSpec::Atax { m, n } => format!("atax_m{m}_n{n}"),
-        JobSpec::Covariance { m, n } => format!("covariance_m{m}_n{n}"),
-        JobSpec::Bfs { nodes, levels } => format!("bfs_n{nodes}_l{levels}"),
-    };
-    format!("{spec}-c{}-{}", req.n_clusters, req.routine.name())
+    crate::offload::request_key(&req.spec, req.n_clusters, req.routine)
 }
 
 /// Hit/miss counters of one store handle (diagnostics and the warm-store
@@ -203,6 +196,57 @@ impl TraceStore {
         (cache::insert(mem_key, req, trace), Source::Sim)
     }
 
+    /// [`TraceStore::run_sourced`] under an explicit engine profile.
+    /// The reference profile delegates unchanged. The fast profile
+    /// serves memory/disk hits the same way (the on-disk grammar is
+    /// profile-free: persisted traces are verified, so both profiles
+    /// share them), but a fresh fast simulation is checked against a
+    /// reference run of the same request before anything reaches disk —
+    /// the store must never be seeded by an unproven engine build. A
+    /// divergence degrades loudly to the reference trace. `mem_key`
+    /// must come from `sweep::cache::profiled_config_key` for the same
+    /// profile.
+    pub fn run_sourced_profiled(
+        &self,
+        fp: &str,
+        mem_key: &str,
+        cfg: &Config,
+        req: OffloadRequest,
+        profile: SimProfile,
+    ) -> (Arc<Trace>, Source) {
+        if profile == SimProfile::Reference {
+            return self.run_sourced(fp, mem_key, cfg, req);
+        }
+        if let Some(t) = cache::peek(mem_key, req) {
+            self.memory_hits.fetch_add(1, Ordering::Relaxed);
+            self.emit_tier("hit_mem", &req);
+            return (t, Source::Mem);
+        }
+        if let Some(t) = self.load(fp, &req) {
+            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+            self.emit_tier("hit_disk", &req);
+            return (cache::insert(mem_key, req, t), Source::Disk);
+        }
+        let fast = req.run_with(cfg, SimProfile::Fast);
+        let reference = req.run(cfg);
+        let trace = if fast == reference {
+            Arc::new(fast)
+        } else {
+            eprintln!(
+                "campaign store: fast profile diverged from reference on {}; persisting the reference trace",
+                request_key(&req)
+            );
+            Arc::new(reference)
+        };
+        self.simulations.fetch_add(1, Ordering::Relaxed);
+        self.emit_tier("fresh_sim", &req);
+        if let Err(e) = self.save(fp, cfg, &req, &trace) {
+            // A read-only or full disk degrades to uncached execution.
+            eprintln!("campaign store: failed to persist {}: {e}", request_key(&req));
+        }
+        (cache::insert(mem_key, req, trace), Source::Sim)
+    }
+
     /// One wall-domain event per memoization decision. Campaign shards
     /// and fleet workers have no virtual clock of their own, so store
     /// events carry wall time — the warm-store CI check greps the file
@@ -279,6 +323,7 @@ pub fn traces_in(root: &Path, fp: &str) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::JobSpec;
     use crate::offload::RoutineKind;
 
     fn temp_store(tag: &str) -> TraceStore {

@@ -70,6 +70,10 @@ pub struct JobResult {
     pub start: Time,
     /// Virtual completion time (`start + cycles`; 0 for host placements).
     pub completion: Time,
+    /// DES events dispatched to produce the isolated trace
+    /// (`EventQueue::dispatched()`); 0 for host placements and rejected
+    /// jobs, which never touch the simulator.
+    pub events: u64,
     /// Model estimate the planner used (cycles).
     pub estimated_cycles: Time,
     /// Whether the PJRT outputs matched the native reference.

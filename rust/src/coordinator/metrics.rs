@@ -89,6 +89,10 @@ pub struct Metrics {
     pub latency: Dist,
     /// PJRT wall-clock micros.
     pub pjrt_micros: Dist,
+    /// DES events dispatched per job to produce its isolated trace
+    /// (`EventQueue::dispatched()`); 0 for host placements, which never
+    /// touch the simulator.
+    pub sim_events: Dist,
 }
 
 impl Metrics {
@@ -97,6 +101,7 @@ impl Metrics {
         kind: KernelKind,
         cycles: u64,
         queue_delay: u64,
+        events: u64,
         pjrt_micros: u128,
         verified: bool,
         on_host: bool,
@@ -120,6 +125,7 @@ impl Metrics {
         self.queueing.record(queue_delay);
         self.latency.record(cycles + queue_delay);
         self.pjrt_micros.record(pjrt_micros as u64);
+        self.sim_events.record(events);
     }
 
     /// A request rejected at validation (counted, not simulated).
@@ -178,6 +184,11 @@ impl Metrics {
             self.pjrt_micros.mean(),
             self.pjrt_micros.max()
         ));
+        out.push_str(&format!(
+            "events: {} dispatched (mean {:.0}/job)\n",
+            self.sim_events.sum(),
+            self.sim_events.mean()
+        ));
         let mut kinds: Vec<_> = self.cycles_by_kernel.iter().collect();
         kinds.sort_by_key(|(k, _)| **k);
         for (k, d) in kinds {
@@ -234,10 +245,11 @@ mod tests {
     #[test]
     fn metrics_aggregate() {
         let mut m = Metrics::default();
-        m.record_completion(KernelKind::Axpy, 1000, 0, 50, true, false);
-        m.record_completion(KernelKind::Axpy, 2000, 300, 60, true, false);
-        m.record_completion(KernelKind::Bfs, 500, 0, 70, false, true);
+        m.record_completion(KernelKind::Axpy, 1000, 0, 40, 50, true, false);
+        m.record_completion(KernelKind::Axpy, 2000, 300, 80, 60, true, false);
+        m.record_completion(KernelKind::Bfs, 500, 0, 0, 70, false, true);
         assert_eq!(m.completed, 3);
+        assert_eq!(m.sim_events.sum(), 120);
         assert_eq!(m.verified, 2);
         assert_eq!(m.verification_failures, 1);
         assert_eq!(m.host_placements, 1);
@@ -251,8 +263,8 @@ mod tests {
     #[test]
     fn latency_decomposes_into_service_plus_queueing() {
         let mut m = Metrics::default();
-        m.record_completion(KernelKind::Axpy, 1000, 250, 0, true, false);
-        m.record_completion(KernelKind::Axpy, 2000, 0, 0, true, false);
+        m.record_completion(KernelKind::Axpy, 1000, 250, 10, 0, true, false);
+        m.record_completion(KernelKind::Axpy, 2000, 0, 10, 0, true, false);
         assert_eq!(m.service.sum(), 3000);
         assert_eq!(m.queueing.sum(), 250);
         assert_eq!(m.latency.sum(), 3250);
@@ -267,11 +279,11 @@ mod tests {
         // the coordinator used to report 0.0 jobs/sim-s, as if stalled.
         let mut m = Metrics::default();
         assert_eq!(m.jobs_per_sim_second(), 0.0, "no jobs yet: truly idle");
-        m.record_completion(KernelKind::Axpy, 0, 0, 10, true, true);
-        m.record_completion(KernelKind::Axpy, 0, 0, 10, true, true);
+        m.record_completion(KernelKind::Axpy, 0, 0, 0, 10, true, true);
+        m.record_completion(KernelKind::Axpy, 0, 0, 0, 10, true, true);
         assert_eq!(m.completed, 2);
         assert!(m.jobs_per_sim_second().is_infinite());
-        m.record_completion(KernelKind::Axpy, 1000, 0, 10, true, false);
+        m.record_completion(KernelKind::Axpy, 1000, 0, 10, 10, true, false);
         assert!((m.jobs_per_sim_second() - 3.0e6).abs() < 1.0);
     }
 

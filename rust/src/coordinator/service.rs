@@ -208,7 +208,7 @@ fn dispatch_loop(
     // peek of the sweep cache, so a long-lived service never grows the
     // process-wide cache.
     let sim_cache_key = crate::sweep::cache::config_key(&cfg);
-    let mut sim_totals: std::collections::HashMap<OffloadRequest, crate::sim::Time> =
+    let mut sim_totals: std::collections::HashMap<OffloadRequest, (crate::sim::Time, u64)> =
         std::collections::HashMap::new();
 
     while let Some(req) = queue.pop() {
@@ -227,6 +227,7 @@ fn dispatch_loop(
                     queue_delay: 0,
                     start: 0,
                     completion: 0,
+                    events: 0,
                     estimated_cycles: 0,
                     verified: false,
                     pjrt_micros: 0,
@@ -253,22 +254,25 @@ fn dispatch_loop(
         // 2) Timing: DES of the offload (or the host estimate), then the
         // shared-timeline schedule. Jobs the planner keeps on the host
         // run on CVA6 itself and do not contend for slots or clusters.
-        let (cycles, queue_delay, start, completion) = match placement {
+        let (cycles, queue_delay, start, completion, events) = match placement {
             Placement::Accelerator { n_clusters } => {
                 let sim_req = OffloadRequest::new(req.spec, n_clusters, routine);
-                let service = *sim_totals.entry(sim_req).or_insert_with(|| {
+                let (service, events) = *sim_totals.entry(sim_req).or_insert_with(|| {
                     match crate::sweep::cache::peek(&sim_cache_key, sim_req) {
-                        Some(trace) => trace.total,
-                        None => sim_req.run(&cfg).total,
+                        Some(trace) => (trace.total, trace.events),
+                        None => {
+                            let t = sim_req.run(&cfg);
+                            (t.total, t.events)
+                        }
                     }
                 });
                 // Program a free JCU slot, occupy clusters, retire
                 // earlier completions through the deferred-interrupt
                 // chain (§4.3) — all on the virtual timeline.
                 let adm = engine.admit(n_clusters, service);
-                (service, adm.queue_delay, adm.start, adm.completion)
+                (service, adm.queue_delay, adm.start, adm.completion, events)
             }
-            Placement::Host => (planner.host_estimate(&req.spec), 0, 0, 0),
+            Placement::Host => (planner.host_estimate(&req.spec), 0, 0, 0, 0),
         };
 
         // 3) Numerics: PJRT execution + verification.
@@ -285,6 +289,7 @@ fn dispatch_loop(
             req.spec.kind(),
             cycles,
             queue_delay,
+            events,
             pjrt_micros,
             verified,
             placement == Placement::Host,
@@ -298,6 +303,7 @@ fn dispatch_loop(
             queue_delay,
             start,
             completion,
+            events,
             estimated_cycles: estimate,
             verified,
             pjrt_micros,
@@ -356,6 +362,7 @@ mod tests {
         let r = c.recv().unwrap();
         assert_eq!(r.placement, Placement::Accelerator { n_clusters: 4 });
         assert_eq!(r.routine, RoutineKind::Baseline);
+        assert!(r.events > 0, "accelerator jobs carry the DES event count");
         c.shutdown();
     }
 
@@ -365,8 +372,10 @@ mod tests {
         c.submit(JobRequest::new(0, JobSpec::Axpy { n: 16 })).unwrap();
         let r = c.recv().unwrap();
         assert_eq!(r.placement, Placement::Host);
+        assert_eq!(r.events, 0, "host jobs never touch the simulator");
         let m = c.shutdown();
         assert_eq!(m.host_placements, 1);
+        assert_eq!(m.sim_events.sum(), 0);
     }
 
     #[test]

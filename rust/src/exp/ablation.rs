@@ -9,6 +9,7 @@
 
 use crate::config::Config;
 use crate::offload::RoutineKind;
+use crate::sim::SimProfile;
 use crate::sweep::Sweep;
 
 use super::table::{f, Table};
@@ -55,11 +56,19 @@ impl Ablation {
 }
 
 pub fn run(cfg: &Config) -> Ablation {
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`); both the routine and the port-arbitration sweeps
+/// run profiled, and `fast` is bit-identical to `reference`.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Ablation {
     // All five routines over the full grid; the Baseline/Ideal/Multicast
     // traces are shared with Figs. 7-10 through the sweep cache.
     let results = Sweep::over_kernels(benchmark_set())
         .clusters(CLUSTER_SWEEP)
         .routines(RoutineKind::ALL)
+        .profile(profile)
         .run(cfg);
     let mut rows = Vec::new();
     for (name, _) in benchmark_set() {
@@ -84,6 +93,7 @@ pub fn run(cfg: &Config) -> Ablation {
     let fluid = Sweep::over_kernels(benchmark_set())
         .clusters([8, 32])
         .routines([RoutineKind::Multicast])
+        .profile(profile)
         .run(&fluid_cfg);
     let mut port_rows = Vec::new();
     for (name, _) in benchmark_set() {

@@ -3,6 +3,7 @@
 
 use crate::config::Config;
 use crate::kernels::JobSpec;
+use crate::sim::SimProfile;
 use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
@@ -84,7 +85,13 @@ pub fn from_results(results: &SweepResults) -> Fig10 {
 }
 
 pub fn run(cfg: &Config) -> Fig10 {
-    from_results(&sweep().run(cfg))
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`); `fast` is bit-identical to `reference`.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Fig10 {
+    from_results(&sweep().profile(profile).run(cfg))
 }
 
 pub fn render(fig: &Fig10) -> Table {

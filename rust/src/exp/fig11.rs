@@ -4,7 +4,7 @@
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
-use crate::sim::{Phase, Trace};
+use crate::sim::{Phase, SimProfile, Trace};
 use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
@@ -94,7 +94,13 @@ pub fn from_results(results: &SweepResults) -> Fig11 {
 }
 
 pub fn run(cfg: &Config) -> Fig11 {
-    from_results(&sweep().run(cfg))
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`); `fast` is bit-identical to `reference`.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Fig11 {
+    from_results(&sweep().profile(profile).run(cfg))
 }
 
 pub fn render(fig: &Fig11) -> Table {

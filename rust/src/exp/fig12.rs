@@ -6,6 +6,7 @@ use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::model::{validate_grid, validate_results, ValidationPoint};
 use crate::offload::RoutineKind;
+use crate::sim::SimProfile;
 use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
@@ -42,6 +43,14 @@ pub fn run(cfg: &Config) -> Fig12 {
         axpy: validate_grid(cfg, &axpy_specs, &CLUSTER_SWEEP),
         atax: validate_grid(cfg, &atax_specs, &CLUSTER_SWEEP),
     }
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`): the simulated runtimes come from a profiled sweep
+/// over this figure's grid, the model estimates are recomputed inline —
+/// the same construction as rendering from merged campaign output.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Fig12 {
+    from_results(cfg, &sweep().profile(profile).run(cfg))
 }
 
 /// The sweep covering this figure's validation grid (Multicast only —

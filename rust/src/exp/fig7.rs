@@ -4,6 +4,7 @@
 //! sweep cache.
 
 use crate::config::Config;
+use crate::sim::SimProfile;
 use crate::sweep::{mean_std, Sweep, SweepResults};
 
 use super::table::Table;
@@ -82,7 +83,13 @@ pub fn from_results(results: &SweepResults) -> Fig7 {
 }
 
 pub fn run(cfg: &Config) -> Fig7 {
-    from_results(&sweep().run(cfg))
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`); `fast` is bit-identical to `reference`.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Fig7 {
+    from_results(&sweep().profile(profile).run(cfg))
 }
 
 pub fn render(fig: &Fig7) -> Table {

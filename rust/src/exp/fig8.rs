@@ -3,6 +3,7 @@
 //! (§5.3, §5.4).
 
 use crate::config::Config;
+use crate::sim::SimProfile;
 use crate::sweep::{Sweep, SweepResults};
 
 use super::table::{f, Table};
@@ -68,7 +69,13 @@ pub fn from_results(results: &SweepResults) -> Fig8 {
 }
 
 pub fn run(cfg: &Config) -> Fig8 {
-    from_results(&sweep().run(cfg))
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`); `fast` is bit-identical to `reference`.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Fig8 {
+    from_results(&sweep().profile(profile).run(cfg))
 }
 
 pub fn render(fig: &Fig8) -> Table {

@@ -4,6 +4,7 @@
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RunTriple;
+use crate::sim::SimProfile;
 use crate::sweep::{Sweep, SweepResults};
 
 use super::table::Table;
@@ -79,7 +80,13 @@ pub fn from_results(results: &SweepResults) -> Fig9 {
 }
 
 pub fn run(cfg: &Config) -> Fig9 {
-    from_results(&sweep().run(cfg))
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`); `fast` is bit-identical to `reference`.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Fig9 {
+    from_results(&sweep().profile(profile).run(cfg))
 }
 
 pub fn render(fig: &Fig9) -> Table {

@@ -13,6 +13,7 @@
 //! the serial coordinator and always shows zero delay.
 
 use crate::config::Config;
+use crate::sim::SimProfile;
 use crate::sweep::{InterferenceSample, Sweep};
 
 use super::benchmark_set;
@@ -40,7 +41,14 @@ pub fn sweep() -> Sweep {
 }
 
 pub fn run(cfg: &Config) -> Vec<InterferenceSample> {
-    sweep().run_interference(cfg, JOBS_PER_POINT, 0)
+    run_with(cfg, SimProfile::default())
+}
+
+/// [`run`] under an explicit engine profile (`occamy experiment
+/// --profile fast`): the isolated traces come from a profiled sweep;
+/// the contention replay on top of them is analytic either way.
+pub fn run_with(cfg: &Config, profile: SimProfile) -> Vec<InterferenceSample> {
+    sweep().profile(profile).run_interference(cfg, JOBS_PER_POINT, 0)
 }
 
 pub fn render(samples: &[InterferenceSample]) -> Table {

@@ -179,6 +179,23 @@ impl JobSpec {
             JobSpec::Bfs { nodes, .. } => format!("bfs_n{nodes}"),
         }
     }
+
+    /// The trace-store spelling of this spec — the grammar shared by the
+    /// campaign store's on-disk filenames, `obs::report::parse_request_key`,
+    /// and the fast profile's timeline memoizer. It differs from
+    /// [`JobSpec::id`] (which predates the store and is frozen for CSV
+    /// compatibility): every dimension is spelled out (`bfs` keeps its
+    /// levels, `montecarlo` uses `s` for samples, `matmul` orders m/n/k).
+    pub fn store_id(&self) -> String {
+        match *self {
+            JobSpec::Axpy { n } => format!("axpy_n{n}"),
+            JobSpec::MonteCarlo { samples } => format!("montecarlo_s{samples}"),
+            JobSpec::Matmul { m, n, k } => format!("matmul_m{m}_n{n}_k{k}"),
+            JobSpec::Atax { m, n } => format!("atax_m{m}_n{n}"),
+            JobSpec::Covariance { m, n } => format!("covariance_m{m}_n{n}"),
+            JobSpec::Bfs { nodes, levels } => format!("bfs_n{nodes}_l{levels}"),
+        }
+    }
 }
 
 /// Evenly partition `total` items over `n` clusters: first `total % n`

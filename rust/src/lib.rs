@@ -77,12 +77,29 @@
 //! registry is scraped through the serve protocol's `metrics` verb
 //! ([`obs::metrics`]).
 //!
+//! ## Engine profiles
+//!
+//! Every timeline runs under a [`sim::SimProfile`] behind the
+//! [`sim::Backend`] seam: `reference` is the event-heap DES, `fast`
+//! ([`sim::fast`]) elides heap work — same-cycle batch drains, stale
+//! completion-poll skips, analytic fast-forward of quiescent gaps —
+//! and memoizes whole specialized timelines keyed by
+//! [`offload::request_key`] + config fingerprint. The profile threads
+//! from [`offload::Executor::with_profile`] through sweeps, campaign
+//! specs, the serve daemon and every CLI entry point (`--profile
+//! fast`), and the two are bit-identical by construction: a
+//! differential harness (`tests/integration_profiles.rs`) and the CI
+//! `des` job compare full traces, event accounting and f64 phase
+//! statistics to the bit. `occamy bench des` measures the elision
+//! (`BENCH_des.json`; `--baseline` is a regression gate), and
+//! [`obs::metrics`] exports the elision counters.
+//!
 //! ## Module map
 //!
 //! | layer | modules |
 //! |---|---|
 //! | SoC model | [`config`], [`cluster`], [`host`], [`mem`], [`noc`], [`dma`], [`interrupt`] |
-//! | simulation | [`sim`] (DES engine, traces), [`offload`] (routines §4), [`kernels`] (workloads §5.1) |
+//! | simulation | [`sim`] (DES engine, `fast` elision profile, traces), [`offload`] (routines §4), [`kernels`] (workloads §5.1) |
 //! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`fleet`] (multi-host scheduler: leases, recovery, auto-merge), [`exp`] (Figs. 7-12, interference), [`bench`] |
 //! | modeling | [`model`] (analytical runtime model §5.6) |
 //! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`serve`] (TCP daemon: admission control, memoization, load generator), [`runtime`] (PJRT numerics, JSON) |

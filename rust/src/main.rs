@@ -1,7 +1,7 @@
 //! `occamy` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F]
+//!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F] [--profile P]
 //!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
 //!   fleet <run|status|watch|cancel|gc> --spec F [--workers N] [--out DIR]
 //!   trace <export|report> (Perfetto/Chrome timeline export; store overhead report)
@@ -10,7 +10,7 @@
 //!   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--slo CYC] [--store DIR]
 //!   serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
 //!   loadgen --connect ADDR [--requests N] [--seed S] [--process poisson|bursty|diurnal]
-//!   bench serve [--requests N] [--inflight W] [--out FILE]
+//!   bench <serve|des> [--requests N] [--inflight W] [--reps R] [--out FILE] [--baseline FILE]
 //!   validate-artifacts [--artifacts DIR]
 //!   model --kernel K --size N [--config F]
 //!   config-dump
@@ -47,7 +47,7 @@ use occamy_offload::serve::{
     self, ArrivalKind, ArrivalProcess, Engine, EngineOptions, LoadgenOptions, Request, ServeSpec,
     Server, Submit,
 };
-use occamy_offload::sim::Phase;
+use occamy_offload::sim::{fast, Phase, SimProfile};
 use occamy_offload::sweep::{self, OffloadRequest, SweepResults};
 
 fn main() -> ExitCode {
@@ -194,6 +194,19 @@ fn resolve_store_root(a: &Args, out_dir: &Path) -> Option<PathBuf> {
     }
 }
 
+/// Parse `--profile` into an engine profile; `None` when the flag is
+/// absent, so callers fall back to their spec's choice or the reference
+/// default. Both profiles produce bit-identical results — `fast` only
+/// changes how much work the DES does to get there.
+fn profile_flag(a: &Args) -> anyhow::Result<Option<SimProfile>> {
+    match a.flag("profile") {
+        None => Ok(None),
+        Some(v) => SimProfile::parse(v).map(Some).ok_or_else(|| {
+            anyhow::anyhow!("unknown profile {v:?} (expected \"reference\" or \"fast\")")
+        }),
+    }
+}
+
 /// Kernel family + single size, via the campaign token grammar (one
 /// mapping for the CLI and campaign specs; `matmul:S` is a cube,
 /// `atax:S` square, `covariance:S` is m=S n=2S, `bfs:S` 4 levels).
@@ -217,8 +230,9 @@ fn emit(table: Table, csv: bool) {
 
 const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfere|serve|loadgen|bench|validate-artifacts|model|config-dump> [options]
   experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|interference|all> [--csv] [--config F]
+             [--profile reference|fast]   (fast = elision engine, bit-identical results)
   campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store] [--max-points N]
-                    [--lease FILE] [--lease-ttl SECS] [--run-id ID] [--attempt K]
+                    [--lease FILE] [--lease-ttl SECS] [--run-id ID] [--attempt K] [--profile P]
   campaign merge    --spec F [--shards N] [--out DIR] [--verify] [--render FIG|interference] [--csv]
   campaign status   --spec F [--shards N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   campaign validate --spec F
@@ -236,13 +250,16 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfer
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
   interfere --kernel K --size N [--clusters C] [--routine R] [--inflight 1,2,4,8] [--jobs 16] [--gap 0] [--csv]
   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--gap G] [--slo CYC]
-        [--summary-every N] [--store DIR] [--config F] [--log FILE]
+        [--summary-every N] [--store DIR] [--config F] [--log FILE] [--profile P]
   serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
   loadgen --connect ADDR [--spec F] [--requests N] [--seed S] [--process poisson|bursty|diurnal]
           [--mean-gap G] [--burst B] [--period P] [--mix K1,K2,..] [--clusters C] [--routine R]
           [--no-stats] [--shutdown] [--metrics]
   bench serve [--requests N] [--inflight W] [--seed S] [--mean-gap G] [--out FILE] [--config F]
-              [--baseline FILE [--max-regress-pct P]]   (exit nonzero on p99 latency regression)
+              [--profile P] [--baseline FILE [--max-regress-pct P]]
+              (exit nonzero on p99-latency or jobs/sim-s regression)
+  bench des   [--reps R] [--clusters C] [--out FILE] [--config F]
+              [--baseline FILE [--max-regress-pct P]]   (fast-engine event-elision benchmark)
   validate-artifacts [--artifacts DIR]
   model --kernel K --size N [--config F]
   config-dump";
@@ -280,20 +297,24 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
-    a.reject_unknown("experiment", &["csv", "config"], 1)?;
+    a.reject_unknown("experiment", &["csv", "config", "profile"], 1)?;
     let which = a.positional.first().map(String::as_str).unwrap_or("all");
     let cfg = load_config(a)?;
+    let profile = profile_flag(a)?.unwrap_or_default();
     let csv = a.has("csv");
     let mut ran = false;
     if which == "ablation" || which == "all" {
         ran = true;
-        let a = exp::ablation::run(&cfg);
+        let a = exp::ablation::run_with(&cfg, profile);
         emit(exp::ablation::render(&a), csv);
         emit(exp::ablation::render_port(&a), csv);
     }
     if which == "interference" || which == "all" {
         ran = true;
-        emit(exp::interference::render(&exp::interference::run(&cfg)), csv);
+        emit(
+            exp::interference::render(&exp::interference::run_with(&cfg, profile)),
+            csv,
+        );
     }
     for fig in ["fig7", "fig8", "fig9", "fig10", "fig11", "fig12"] {
         if which != "all" && which != fig {
@@ -301,12 +322,12 @@ fn cmd_experiment(a: &Args) -> anyhow::Result<()> {
         }
         ran = true;
         let table = match fig {
-            "fig7" => exp::fig7::render(&exp::fig7::run(&cfg)),
-            "fig8" => exp::fig8::render(&exp::fig8::run(&cfg)),
-            "fig9" => exp::fig9::render(&exp::fig9::run(&cfg)),
-            "fig10" => exp::fig10::render(&exp::fig10::run(&cfg)),
-            "fig11" => exp::fig11::render(&exp::fig11::run(&cfg)),
-            "fig12" => exp::fig12::render(&exp::fig12::run(&cfg)),
+            "fig7" => exp::fig7::render(&exp::fig7::run_with(&cfg, profile)),
+            "fig8" => exp::fig8::render(&exp::fig8::run_with(&cfg, profile)),
+            "fig9" => exp::fig9::render(&exp::fig9::run_with(&cfg, profile)),
+            "fig10" => exp::fig10::render(&exp::fig10::run_with(&cfg, profile)),
+            "fig11" => exp::fig11::render(&exp::fig11::run_with(&cfg, profile)),
+            "fig12" => exp::fig12::render(&exp::fig12::run_with(&cfg, profile)),
             _ => unreachable!(),
         };
         emit(table, csv);
@@ -372,6 +393,7 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
         "lease-ttl",
         "run-id",
         "attempt",
+        "profile",
     ];
     let allowed: &[&str] = match action {
         "validate" => &["spec"],
@@ -384,7 +406,12 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
     let spec_path = a
         .flag("spec")
         .ok_or_else(|| anyhow::anyhow!("campaign {action} requires --spec FILE"))?;
-    let spec = CampaignSpec::from_path(&PathBuf::from(spec_path))?;
+    let mut spec = CampaignSpec::from_path(&PathBuf::from(spec_path))?;
+    // `--profile` (run only) beats the spec's `profile` key. Results are
+    // bit-identical either way; only the cache key and DES effort differ.
+    if let Some(p) = profile_flag(a)? {
+        spec.profile = p;
+    }
     let out_dir = a
         .flag("out")
         .map(PathBuf::from)
@@ -999,6 +1026,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             "summary-every",
             "store",
             "log",
+            "profile",
         ],
         0,
     )?;
@@ -1009,7 +1037,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         );
         return cmd_serve_daemon(a, listen);
     }
-    for f in ["spec", "queue-factor", "slo", "summary-every", "store", "log"] {
+    for f in ["spec", "queue-factor", "slo", "summary-every", "store", "log", "profile"] {
         anyhow::ensure!(!a.has(f), "--{f} applies to the daemon (`serve --listen ADDR`)");
     }
     let cfg = load_config(a)?;
@@ -1101,6 +1129,9 @@ fn cmd_serve_daemon(a: &Args, listen: &str) -> anyhow::Result<()> {
     opts.default_gap = a.u64_flag("gap", opts.default_gap)?;
     opts.slo_cycles = a.u64_flag("slo", opts.slo_cycles)?;
     opts.summary_every = a.u64_flag("summary-every", opts.summary_every)?;
+    if let Some(p) = profile_flag(a)? {
+        opts.profile = p;
+    }
     if let Some(p) = a.flag("store") {
         opts.store_root = Some(PathBuf::from(p));
     }
@@ -1111,9 +1142,10 @@ fn cmd_serve_daemon(a: &Args, listen: &str) -> anyhow::Result<()> {
         None => obs::log::init_from_env()?,
     }
     let queue_bound = opts.inflight.saturating_mul(opts.queue_factor);
+    let profile_name = opts.profile.name();
     let server = Server::start(opts, listen)?;
     println!(
-        "serve: listening on {} (inflight bound {queue_bound}; drive with `occamy loadgen --connect {}`)",
+        "serve: listening on {} (inflight bound {queue_bound}, profile {profile_name}; drive with `occamy loadgen --connect {}`)",
         server.addr(),
         server.addr()
     );
@@ -1196,20 +1228,39 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `occamy bench <serve|des>`: the two regression benchmarks, each with
+/// its own checked-in baseline JSON and `--baseline` gate.
+fn cmd_bench(a: &Args) -> anyhow::Result<()> {
+    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("usage: occamy bench <serve|des> [--out FILE] [--baseline FILE]")
+    })?;
+    match action {
+        "serve" => cmd_bench_serve(a),
+        "des" => cmd_bench_des(a),
+        other => anyhow::bail!("unknown bench target {other:?} (expected: serve or des)"),
+    }
+}
+
 /// `occamy bench serve`: benchmark the serve engine's service rate on a
 /// fixed seeded burst and write `BENCH_serve.json` — the regression
 /// baseline for later DES-speed work. The burst is generated once, a
 /// warmup pass primes the process trace cache, and the timed iterations
 /// then measure the request path (admission, scheduling, memoized
 /// lookup) rather than first-run DES cost.
-fn cmd_bench(a: &Args) -> anyhow::Result<()> {
-    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
-        anyhow::anyhow!("usage: occamy bench serve [--requests N] [--inflight W] [--out FILE]")
-    })?;
-    anyhow::ensure!(action == "serve", "unknown bench target {action:?} (expected: serve)");
+fn cmd_bench_serve(a: &Args) -> anyhow::Result<()> {
     a.reject_unknown(
         "bench serve",
-        &["requests", "inflight", "seed", "mean-gap", "out", "config", "baseline", "max-regress-pct"],
+        &[
+            "requests",
+            "inflight",
+            "seed",
+            "mean-gap",
+            "out",
+            "config",
+            "baseline",
+            "max-regress-pct",
+            "profile",
+        ],
         1,
     )?;
     let cfg = load_config(a)?;
@@ -1240,6 +1291,7 @@ fn cmd_bench(a: &Args) -> anyhow::Result<()> {
     let opts = EngineOptions {
         cfg,
         inflight,
+        profile: profile_flag(a)?.unwrap_or_default(),
         ..EngineOptions::default()
     };
     Engine::new(opts.clone())?; // validate the options once, loudly
@@ -1272,6 +1324,13 @@ fn cmd_bench(a: &Args) -> anyhow::Result<()> {
     obj.insert("queue_p99_cyc".to_string(), Json::Num(stats.queue.p99 as f64));
     obj.insert("completed".to_string(), Json::Num(stats.completed as f64));
     obj.insert("rejected".to_string(), Json::Num(stats.rejected as f64));
+    obj.insert("profile".to_string(), Json::Str(stats.profile.clone()));
+    // Simulated throughput is virtual-cycle (seed-deterministic, unlike
+    // jobs_per_s); infinite throughput (all zero-cycle jobs) stays out of
+    // the JSON the same way the wire protocol elides it.
+    if let Some(v) = stats.jobs_per_sim_second.filter(|v| v.is_finite()) {
+        obj.insert("jobs_per_sim_second".to_string(), Json::Num(v));
+    }
     std::fs::write(&out, format!("{}\n", Json::Obj(obj)))
         .map_err(|e| anyhow::anyhow!("write {}: {e}", out.display()))?;
     bench.finish("serve");
@@ -1313,6 +1372,182 @@ fn cmd_bench(a: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(
             regress_pct <= max_pct,
             "p99 latency regressed {regress_pct:.1}% over baseline {base_path} (tolerance {max_pct}%)"
+        );
+        // Simulated throughput gate: a *drop* in jobs/sim-s is the
+        // regression here. Older baselines predate the key (and infinite
+        // throughput is elided from the JSON) — both simply skip the gate.
+        if let Some(base_tput) = base.get("jobs_per_sim_second").and_then(Json::as_f64) {
+            if let Some(now_tput) = stats.jobs_per_sim_second.filter(|v| v.is_finite()) {
+                let drop_pct = if base_tput > 0.0 {
+                    100.0 * (base_tput - now_tput) / base_tput
+                } else {
+                    0.0
+                };
+                println!(
+                    "bench: throughput {now_tput:.0} jobs/sim-s vs baseline {base_tput:.0} ({:+.1}%, tolerance {max_pct}%)",
+                    -drop_pct
+                );
+                anyhow::ensure!(
+                    drop_pct <= max_pct,
+                    "jobs/sim-s dropped {drop_pct:.1}% under baseline {base_path} (tolerance {max_pct}%)"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `occamy bench des`: measure the fast engine's event elision against
+/// the reference DES and write `BENCH_des.json`. Each kernel of the
+/// serve mix runs `--reps` times at one wide geometry: the reference
+/// engine pays the full event-heap cost on every repetition, while the
+/// fast engine simulates once and replays its memoized timeline, so the
+/// elision speedup approaches the rep count. Every elision figure is a
+/// virtual-event count — deterministic for a fixed config — and each
+/// fast trace is asserted bit-identical to its reference twin before
+/// anything is written; only the `*_per_s` rates are wall-clock.
+fn cmd_bench_des(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown(
+        "bench des",
+        &["reps", "clusters", "out", "config", "baseline", "max-regress-pct"],
+        1,
+    )?;
+    let cfg = load_config(a)?;
+    let reps = a.u64_flag("reps", 8)?;
+    anyhow::ensure!(reps >= 1, "--reps must be >= 1");
+    let n_clusters = a.u64_flag("clusters", 32)? as usize;
+    let out = a
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_des.json"));
+
+    // The six-kernel benchmark set at artifact-available sizes, widest
+    // geometry: the configuration with the most heap traffic to elide.
+    let kernels: [(&str, u64); 6] = [
+        ("axpy", 1024),
+        ("matmul", 32),
+        ("atax", 64),
+        ("covariance", 32),
+        ("montecarlo", 16384),
+        ("bfs", 64),
+    ];
+    let mut per_kernel = std::collections::BTreeMap::new();
+    let mut events_reference_total = 0u64;
+    let mut events_simulated_total = 0u64;
+    let mut speedup_max = 0.0f64;
+    let mut reference_wall = Duration::ZERO;
+    let t0 = std::time::Instant::now();
+    for (kernel, size) in kernels {
+        let spec = job_spec(kernel, size)?;
+        let req = OffloadRequest::new(spec, n_clusters, RoutineKind::Multicast);
+        // Reference: the full event-heap DES, paid on every repetition.
+        let t_ref = std::time::Instant::now();
+        let mut reference_events = 0u64;
+        let mut reference = None;
+        for _ in 0..reps {
+            let t = req.run_with(&cfg, SimProfile::Reference);
+            reference_events += t.events;
+            reference = Some(t);
+        }
+        reference_wall += t_ref.elapsed();
+        let reference = reference.expect("reps >= 1");
+        // Fast: one fresh profiled run, then memoized timeline replays.
+        // The counter delta is this kernel's actual dispatch work.
+        let before = fast::stats();
+        let mut fast_trace = None;
+        for _ in 0..reps {
+            fast_trace = Some(req.run_with(&cfg, SimProfile::Fast));
+        }
+        let after = fast::stats();
+        let fast_trace = fast_trace.expect("reps >= 1");
+        anyhow::ensure!(
+            fast_trace == reference,
+            "fast trace diverged from reference for {kernel}:{size} at {n_clusters} clusters"
+        );
+        let simulated = after.events_popped - before.events_popped;
+        let speedup = reference_events as f64 / simulated.max(1) as f64;
+        events_reference_total += reference_events;
+        events_simulated_total += simulated;
+        speedup_max = speedup_max.max(speedup);
+        let mut k = std::collections::BTreeMap::new();
+        k.insert("cycles".to_string(), Json::Num(reference.total as f64));
+        k.insert("events_reference".to_string(), Json::Num(reference_events as f64));
+        k.insert("events_simulated".to_string(), Json::Num(simulated as f64));
+        k.insert(
+            "events_elided".to_string(),
+            Json::Num(reference_events.saturating_sub(simulated) as f64),
+        );
+        k.insert("elision_speedup".to_string(), Json::Num(speedup));
+        per_kernel.insert(kernel.to_string(), Json::Obj(k));
+        println!(
+            "bench: {kernel:<12} {reference_events:>8} reference events, {simulated:>6} simulated ({speedup:.1}x elided)"
+        );
+    }
+    let wall = t0.elapsed();
+
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("des".to_string()));
+    obj.insert("reps".to_string(), Json::Num(reps as f64));
+    obj.insert("clusters".to_string(), Json::Num(n_clusters as f64));
+    obj.insert("kernels".to_string(), Json::Obj(per_kernel));
+    obj.insert(
+        "events_reference".to_string(),
+        Json::Num(events_reference_total as f64),
+    );
+    obj.insert(
+        "events_simulated".to_string(),
+        Json::Num(events_simulated_total as f64),
+    );
+    obj.insert("elision_speedup_max".to_string(), Json::Num(speedup_max));
+    obj.insert("wall_s".to_string(), Json::Num(wall.as_secs_f64()));
+    obj.insert(
+        "events_per_s".to_string(),
+        Json::Num(events_reference_total as f64 / reference_wall.as_secs_f64().max(1e-9)),
+    );
+    obj.insert(
+        "jobs_per_s".to_string(),
+        Json::Num((2 * reps * kernels.len() as u64) as f64 / wall.as_secs_f64().max(1e-9)),
+    );
+    std::fs::write(&out, format!("{}\n", Json::Obj(obj)))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", out.display()))?;
+    println!(
+        "bench: wrote {} (max elision speedup {speedup_max:.1}x over {} kernels)",
+        out.display(),
+        kernels.len()
+    );
+
+    // --baseline: the deterministic elision speedup must not erode. Like
+    // the serve gate, wall-clock rates are never compared.
+    if let Some(base_path) = a.flag("baseline") {
+        let max_pct: f64 = match a.flag("max-regress-pct") {
+            None => 10.0,
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad --max-regress-pct {v:?}: {e}"))?,
+        };
+        anyhow::ensure!(max_pct >= 0.0, "--max-regress-pct must be >= 0");
+        let text = std::fs::read_to_string(base_path)
+            .map_err(|e| anyhow::anyhow!("read baseline {base_path}: {e}"))?;
+        let base = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse baseline {base_path}: {e}"))?;
+        let base_speedup = base
+            .get("elision_speedup_max")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                anyhow::anyhow!("baseline {base_path} has no numeric elision_speedup_max")
+            })?;
+        let drop_pct = if base_speedup > 0.0 {
+            100.0 * (base_speedup - speedup_max) / base_speedup
+        } else {
+            0.0
+        };
+        println!(
+            "bench: elision speedup {speedup_max:.1}x vs baseline {base_speedup:.1}x ({:+.1}%, tolerance {max_pct}%)",
+            -drop_pct
+        );
+        anyhow::ensure!(
+            drop_pct <= max_pct,
+            "elision speedup dropped {drop_pct:.1}% under baseline {base_path} (tolerance {max_pct}%)"
         );
     }
     Ok(())

@@ -18,6 +18,7 @@
 
 use crate::campaign::StoreStats;
 use crate::coordinator::Dist;
+use crate::sim::FastStats;
 
 /// Histogram bounds for cycle-valued distributions (queue, service,
 /// latency): decades from 1k to 10M virtual cycles, spanning a cache
@@ -172,6 +173,48 @@ pub fn register_store_stats(r: &mut Registry, s: &StoreStats) {
     );
 }
 
+/// Register the fast engine's process-wide elision counters — the
+/// numbers behind `bench des` and the fast-profile daemon's exposition
+/// (see [`crate::sim::fast::stats`]).
+pub fn register_fast_stats(r: &mut Registry, s: &FastStats) {
+    r.counter(
+        "occamy_sim_events_popped_total",
+        "Events dispatched by the fast engine (heap, same-cycle run, or slot)",
+        &[],
+        s.events_popped,
+    );
+    r.counter(
+        "occamy_sim_heap_events_elided_total",
+        "Stale replaceable events elided before ever reaching a pop",
+        &[],
+        s.heap_events_elided,
+    );
+    r.counter(
+        "occamy_sim_fast_forward_jumps_total",
+        "Contention-free segments fast-forwarded analytically",
+        &[],
+        s.fast_forward_jumps,
+    );
+    r.counter(
+        "occamy_sim_stale_events_skipped_total",
+        "Stale generation checks short-circuited at dispatch",
+        &[],
+        s.stale_events_skipped,
+    );
+    r.counter(
+        "occamy_sim_timeline_cache_hits_total",
+        "Specialized-timeline memo hits (whole-trace replays)",
+        &[],
+        s.timeline_hits,
+    );
+    r.counter(
+        "occamy_sim_timeline_cache_misses_total",
+        "Specialized-timeline memo misses (fresh fast-engine runs)",
+        &[],
+        s.timeline_misses,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,5 +283,28 @@ mod tests {
         assert!(text.contains("occamy_store_memory_hits_total 1\n"), "{text}");
         assert!(text.contains("occamy_store_disk_hits_total 2\n"), "{text}");
         assert!(text.contains("occamy_store_simulations_total 3\n"), "{text}");
+    }
+
+    #[test]
+    fn fast_stats_cover_every_elision_counter() {
+        let mut r = Registry::new();
+        register_fast_stats(
+            &mut r,
+            &FastStats {
+                fast_forward_jumps: 1,
+                heap_events_elided: 2,
+                stale_events_skipped: 3,
+                events_popped: 4,
+                timeline_hits: 5,
+                timeline_misses: 6,
+            },
+        );
+        let text = r.render();
+        assert!(text.contains("occamy_sim_fast_forward_jumps_total 1\n"), "{text}");
+        assert!(text.contains("occamy_sim_heap_events_elided_total 2\n"), "{text}");
+        assert!(text.contains("occamy_sim_stale_events_skipped_total 3\n"), "{text}");
+        assert!(text.contains("occamy_sim_events_popped_total 4\n"), "{text}");
+        assert!(text.contains("occamy_sim_timeline_cache_hits_total 5\n"), "{text}");
+        assert!(text.contains("occamy_sim_timeline_cache_misses_total 6\n"), "{text}");
     }
 }

@@ -40,13 +40,17 @@ pub struct StoredTrace {
 }
 
 /// Invert [`crate::campaign::store::request_key`]: split
-/// `<spec>-c<clusters>-<routine>` back into its parts. `None` for
+/// `<spec>-c<clusters>-<routine>` back into its parts. Spec ids are
+/// `[a-z0-9_]` only, so the first `-c` is always the separator; the
+/// routine half is taken whole because routine names may themselves
+/// contain `-` (`mcast-only`, `jcu-only` — splitting at the *last* `-`
+/// used to drop every ablation trace from `trace report`). `None` for
 /// anything that is not a store key (foreign files are skipped, not
 /// errors).
 pub fn parse_request_key(stem: &str) -> Option<(String, usize, RoutineKind)> {
-    let (rest, routine) = stem.rsplit_once('-')?;
+    let (spec_key, rest) = stem.split_once("-c")?;
+    let (clusters, routine) = rest.split_once('-')?;
     let routine = RoutineKind::parse(routine)?;
-    let (spec_key, clusters) = rest.rsplit_once("-c")?;
     let n_clusters: usize = clusters.parse().ok()?;
     if spec_key.is_empty() || n_clusters == 0 {
         return None;
@@ -225,6 +229,46 @@ mod tests {
         assert!(parse_request_key("config").is_none());
         assert!(parse_request_key("axpy_n1024-c0-multicast").is_none());
         assert!(parse_request_key("axpy_n1024-cX-multicast").is_none());
+    }
+
+    #[test]
+    fn parse_request_key_round_trips_the_store_grammar() {
+        // Property-style: pseudo-random sizes through every kernel shape
+        // and the whole (clusters × routines) grid must invert exactly —
+        // the spec half back to `JobSpec::store_id`, the rest to the
+        // request's own fields. The grammar embeds `-c` and the sizes in
+        // decimal, so nothing a spec can produce may confuse the split.
+        let mut state: u64 = 0x2545_F491_4F6C_DD1D;
+        let mut next = move |lo: u64, hi: u64| {
+            // xorshift64*, deterministic across runs.
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let r = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            lo + r % (hi - lo + 1)
+        };
+        for _ in 0..64 {
+            let (a, b, c) = (next(1, 1 << 20), next(1, 4096), next(1, 4096));
+            let specs = [
+                JobSpec::Axpy { n: a as usize },
+                JobSpec::MonteCarlo { samples: a as usize },
+                JobSpec::Matmul { m: b as usize, n: c as usize, k: next(1, 512) as usize },
+                JobSpec::Atax { m: b as usize, n: c as usize },
+                JobSpec::Covariance { m: b as usize, n: c as usize },
+                JobSpec::Bfs { nodes: b as usize, levels: next(1, 64) as usize },
+            ];
+            let n_clusters = next(1, 32) as usize;
+            for spec in specs {
+                for routine in RoutineKind::ALL {
+                    let req = OffloadRequest::new(spec, n_clusters, routine);
+                    let key = store::request_key(&req);
+                    let (spec_key, n, r) = parse_request_key(&key)
+                        .unwrap_or_else(|| panic!("key {key} did not parse"));
+                    assert_eq!(spec_key, spec.store_id(), "{key}");
+                    assert_eq!((n, r), (n_clusters, routine), "{key}");
+                }
+            }
+        }
     }
 
     #[test]

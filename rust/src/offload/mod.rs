@@ -8,6 +8,13 @@
 //! raw uncached entry point is [`Executor`] via
 //! `sweep::OffloadRequest::run`. The deprecated positional free
 //! functions `run_offload`/`run_triple` were removed in 0.3.0.
+//!
+//! Every timeline runs under an engine profile
+//! ([`crate::sim::SimProfile`]): [`Executor::new`] is always the
+//! reference event-heap DES; [`Executor::with_profile`] selects the
+//! `fast` engine, which elides heap work and memoizes whole timelines
+//! keyed by [`request_key`] + config — bit-identical to the reference
+//! by construction and enforced by `tests/integration_profiles.rs`.
 
 pub mod baseline;
 pub mod executor;
@@ -16,6 +23,17 @@ pub mod phases;
 
 pub use executor::Executor;
 pub use phases::{RoutineKind, RunTriple};
+
+use crate::kernels::JobSpec;
+
+/// The canonical request-key grammar — `<spec>-c<clusters>-<routine>`
+/// with [`JobSpec::store_id`] spelling out every spec parameter. Shared
+/// by the campaign store's on-disk filenames, `obs::report`'s parser,
+/// and the fast profile's timeline memoizer, so the three can never
+/// drift apart.
+pub fn request_key(spec: &JobSpec, n_clusters: usize, routine: RoutineKind) -> String {
+    format!("{}-c{}-{}", spec.store_id(), n_clusters, routine.name())
+}
 
 #[cfg(test)]
 mod tests {

@@ -38,7 +38,7 @@ use crate::campaign::stream::Source;
 use crate::config::Config;
 use crate::coordinator::{OccupancyModel, OccupancyParams, Placement, Planner, JCU_SLOTS};
 use crate::offload::RoutineKind;
-use crate::sim::Time;
+use crate::sim::{fast, SimProfile, Time};
 use crate::sweep::{cache, OffloadRequest};
 
 use crate::obs::log::{self as obslog, Event, Level};
@@ -64,6 +64,12 @@ pub struct EngineOptions {
     pub store_root: Option<PathBuf>,
     /// Print a summary line every N completions (0 = only at shutdown).
     pub summary_every: u64,
+    /// Engine profile behind `service_cycles`. The fast profile is
+    /// bit-identical to the reference DES (see `sim::fast`); fast runs
+    /// still keep their process-cache entries under a separate key, and
+    /// traces are verified against the reference before any disk
+    /// persist.
+    pub profile: SimProfile,
 }
 
 impl Default for EngineOptions {
@@ -76,6 +82,7 @@ impl Default for EngineOptions {
             slo_cycles: 1_000_000,
             store_root: None,
             summary_every: 0,
+            profile: SimProfile::Reference,
         }
     }
 }
@@ -98,6 +105,7 @@ pub struct Engine {
     default_gap: Time,
     summary_every: u64,
     summary_due: bool,
+    profile: SimProfile,
 }
 
 impl Engine {
@@ -106,7 +114,7 @@ impl Engine {
         anyhow::ensure!(opts.queue_factor >= 1, "queue-factor must be >= 1");
         let store = opts.store_root.map(TraceStore::open).transpose()?;
         let fp = store::fingerprint(&opts.cfg);
-        let mem_key = cache::config_key(&opts.cfg);
+        let mem_key = cache::profiled_config_key(&opts.cfg, opts.profile);
         let model = OccupancyModel::new(OccupancyParams {
             capacity: opts.cfg.soc.n_clusters(),
             jcu_slots: JCU_SLOTS,
@@ -126,6 +134,7 @@ impl Engine {
             default_gap: opts.default_gap,
             summary_every: opts.summary_every,
             summary_due: false,
+            profile: opts.profile,
         })
     }
 
@@ -311,12 +320,13 @@ impl Engine {
     /// Service cycles for one offload, through the memoization tiers.
     fn service_cycles(&mut self, req: OffloadRequest) -> (Time, Source) {
         if let Some(store) = &self.store {
-            let (trace, source) = store.run_sourced(&self.fp, &self.mem_key, &self.cfg, req);
+            let (trace, source) =
+                store.run_sourced_profiled(&self.fp, &self.mem_key, &self.cfg, req, self.profile);
             (trace.total, source)
         } else if let Some(t) = cache::peek(&self.mem_key, req) {
             (t.total, Source::Mem)
         } else {
-            let t = cache::insert(&self.mem_key, req, Arc::new(req.run(&self.cfg)));
+            let t = cache::insert(&self.mem_key, req, Arc::new(req.run_with(&self.cfg, self.profile)));
             (t.total, Source::Sim)
         }
     }
@@ -338,17 +348,24 @@ impl Engine {
 
     /// The metrics snapshot behind the `stats` verb.
     pub fn stats(&self) -> StatsReply {
-        self.metrics.snapshot()
+        let mut s = self.metrics.snapshot();
+        s.profile = self.profile.name().to_string();
+        s
     }
 
     /// The Prometheus text exposition behind the `metrics` verb: every
     /// serve counter/distribution, plus the trace store's three-tier
-    /// counters when a store is attached.
+    /// counters when a store is attached, plus the fast engine's
+    /// process-wide elision counters when this daemon runs the fast
+    /// profile.
     pub fn prometheus(&self) -> String {
         let mut r = Registry::new();
         self.metrics.register(&mut r);
         if let Some(stats) = self.store_stats() {
             register_store_stats(&mut r, &stats);
+        }
+        if self.profile == SimProfile::Fast {
+            crate::obs::metrics::register_fast_stats(&mut r, &fast::stats());
         }
         r.render()
     }
@@ -609,6 +626,43 @@ mod tests {
             assert!(l.contains("\"cycle\":"), "{l}");
             assert!(l.contains("\"src\":\"serve\""), "{l}");
         }
+    }
+
+    #[test]
+    fn fast_profile_serves_identical_cycles_and_reports_itself() {
+        let cfg = cfg_with_gap(9319);
+        let mut reference = Engine::new(EngineOptions {
+            cfg: cfg.clone(),
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        let mut fast = Engine::new(EngineOptions {
+            cfg,
+            profile: SimProfile::Fast,
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        for i in 0..4 {
+            let s = submit(i, "axpy:704", 8, i * 100);
+            let (a, b) = (
+                reference.handle(&Request::Submit(s.clone())),
+                fast.handle(&Request::Submit(s)),
+            );
+            match (&a, &b) {
+                (Reply::Result(r), Reply::Result(f)) => {
+                    assert_eq!((r.cycles, r.latency, r.completion), (f.cycles, f.latency, f.completion));
+                }
+                other => panic!("expected two results, got {other:?}"),
+            }
+        }
+        assert_eq!(reference.stats().profile, "reference");
+        assert_eq!(fast.stats().profile, "fast");
+        // Separate cache keys: the fast engine simulated for itself
+        // rather than borrowing the reference engine's entries.
+        assert!(fast.stats().fresh_sims >= 1, "{:?}", fast.stats());
+        // The fast daemon's exposition carries the elision counters.
+        assert!(fast.prometheus().contains("occamy_sim_events_popped_total"), "{}", fast.prometheus());
+        assert!(!reference.prometheus().contains("occamy_sim_"), "{}", reference.prometheus());
     }
 
     #[test]

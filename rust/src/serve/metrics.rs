@@ -119,6 +119,9 @@ impl ServeMetrics {
             slo_cycles: self.slo_cycles,
             slo_violations: self.slo_violations,
             jobs_per_sim_second: self.jobs_per_sim_second(),
+            // The engine overwrites this with its actual profile; bare
+            // snapshots (tests, summaries) report the default.
+            profile: "reference".to_string(),
         }
     }
 

@@ -194,6 +194,10 @@ pub struct StatsReply {
     /// or zero simulated cycles — the case that used to serialize as
     /// invalid JSON before non-finite floats mapped to `null`).
     pub jobs_per_sim_second: Option<f64>,
+    /// Engine profile the daemon simulates with (`"reference"` or
+    /// `"fast"`). Parses back as `"reference"` when absent, so replies
+    /// from pre-profile daemons still decode.
+    pub profile: String,
 }
 
 fn num(n: u64) -> Json {
@@ -371,6 +375,7 @@ impl Reply {
                         _ => Json::Null,
                     },
                 ),
+                ("profile", Json::Str(s.profile.clone())),
             ]),
             Reply::Metrics(m) => obj(vec![
                 ("reply", Json::Str("metrics".into())),
@@ -447,6 +452,10 @@ impl Reply {
                 jobs_per_sim_second: match v.get("jobs_per_sim_second") {
                     None | Some(Json::Null) => None,
                     Some(j) => Some(j.as_f64().ok_or("non-numeric \"jobs_per_sim_second\"")?),
+                },
+                profile: match v.get("profile") {
+                    None | Some(Json::Null) => "reference".to_string(),
+                    Some(j) => j.as_str().ok_or("non-string \"profile\"")?.to_string(),
                 },
             })),
             "metrics" => Ok(Reply::Metrics(MetricsReply {
@@ -525,6 +534,19 @@ mod tests {
             slo_cycles: 1_000_000,
             slo_violations: 1,
             jobs_per_sim_second: Some(1234.5),
+            profile: "reference".to_string(),
+        }
+    }
+
+    #[test]
+    fn stats_without_a_profile_field_decode_as_reference() {
+        // Replies from pre-profile daemons stay parseable.
+        let mut line = Reply::Stats(sample_stats()).to_line();
+        line = line.replace(",\"profile\":\"reference\"", "");
+        assert!(!line.contains("profile"), "{line}");
+        match Reply::from_line(&line).unwrap() {
+            Reply::Stats(s) => assert_eq!(s.profile, "reference"),
+            other => panic!("expected stats, got {other:?}"),
         }
     }
 

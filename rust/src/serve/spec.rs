@@ -11,6 +11,7 @@
 use std::path::PathBuf;
 
 use crate::offload::RoutineKind;
+use crate::sim::SimProfile;
 
 use super::engine::EngineOptions;
 use super::loadgen::{ArrivalKind, LoadgenOptions};
@@ -29,6 +30,8 @@ pub struct ServeSection {
     /// Structured JSONL event-log path ([`crate::obs::log`]); the CLI's
     /// `--log` flag overrides it.
     pub log: Option<String>,
+    /// Engine profile (`"reference"` or `"fast"`).
+    pub profile: Option<SimProfile>,
 }
 
 /// Parsed `[loadgen]` table: client-side traffic description.
@@ -147,6 +150,15 @@ impl ServeSpec {
                     }
                     "store" => spec.serve.store = Some(parse_string(value, key).map_err(at)?),
                     "log" => spec.serve.log = Some(parse_string(value, key).map_err(at)?),
+                    "profile" => {
+                        let name = parse_string(value, key).map_err(at)?;
+                        let profile = SimProfile::parse(&name).ok_or_else(|| {
+                            at(format!(
+                                "unknown profile {name:?} (expected \"reference\" or \"fast\")"
+                            ))
+                        })?;
+                        spec.serve.profile = Some(profile);
+                    }
                     other => return Err(at(format!("unknown [serve] key {other:?}"))),
                 },
                 Section::Loadgen => match key {
@@ -217,6 +229,9 @@ impl ServeSpec {
         if let Some(v) = &self.serve.store {
             opts.store_root = Some(PathBuf::from(v));
         }
+        if let Some(v) = self.serve.profile {
+            opts.profile = v;
+        }
         opts
     }
 
@@ -268,6 +283,7 @@ slo_cycles = 2000000   # 2M cycles end-to-end
 summary_every = 64
 store = "serve-store"
 log = "serve-events.jsonl"
+profile = "fast"
 
 [loadgen]
 process = "bursty"
@@ -288,6 +304,7 @@ routine = "multicast"
         assert_eq!((e.inflight, e.queue_factor), (8, 2));
         assert_eq!((e.default_gap, e.slo_cycles, e.summary_every), (25_000, 2_000_000, 64));
         assert_eq!(e.store_root, Some(PathBuf::from("serve-store")));
+        assert_eq!(e.profile, SimProfile::Fast);
         // `log` is CLI-side (the daemon installs the global sink before
         // the engine exists), so it rides on the section, not the
         // engine options.
@@ -324,6 +341,7 @@ routine = "multicast"
             ("[serve]\ninflight = \"four\"\n", "non-negative integer"),
             ("[loadgen]\nprocess = \"sawtooth\"\n", "unknown process"),
             ("[loadgen]\nroutine = \"warp\"\n", "unknown routine"),
+            ("[serve]\nprofile = \"warp\"\n", "unknown profile"),
             ("[loadgen]\nmix = [\"frobnicate:9\"]\n", "mix entry"),
         ] {
             let err = ServeSpec::parse(text).unwrap_err();

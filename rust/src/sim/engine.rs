@@ -79,9 +79,10 @@ impl<E> EventQueue<E> {
     pub fn schedule(&mut self, at: Time, event: E) {
         assert!(
             at >= self.now,
-            "event scheduled in the past: {} < {}",
+            "event scheduled in the past: {} < {} ({} events pending)",
             at,
-            self.now
+            self.now,
+            self.heap.len()
         );
         self.heap.push(Entry {
             time: at,
@@ -96,10 +97,19 @@ impl<E> EventQueue<E> {
         self.schedule(self.now + delay, event);
     }
 
-    /// Pop the next event, advancing time.
+    /// Pop the next event, advancing time. Monotonicity is asserted in
+    /// release builds too: the differential profile harness relies on the
+    /// reference engine loudly rejecting ordering bugs rather than
+    /// silently rewinding the clock.
     pub fn pop(&mut self) -> Option<(Time, E)> {
         let e = self.heap.pop()?;
-        debug_assert!(e.time >= self.now);
+        assert!(
+            e.time >= self.now,
+            "event popped out of order: {} < {} ({} events pending)",
+            e.time,
+            self.now,
+            self.heap.len()
+        );
         self.now = e.time;
         self.popped += 1;
         Some((e.time, e.event))

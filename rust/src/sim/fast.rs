@@ -1,0 +1,611 @@
+//! The `fast` engine profile: an event queue that elides heap work the
+//! reference [`EventQueue`](super::engine::EventQueue) would do, while
+//! provably dispatching the *same events in the same order* — plus the
+//! process-wide timeline memoizer that lets repeated grid points replay
+//! a precomputed [`Trace`] skeleton without simulating at all.
+//!
+//! # Why this is bit-identical by construction
+//!
+//! The reference engine is a binary heap ordered by `(time, seq)` where
+//! `seq` is a monotone counter incremented on *every* schedule call.
+//! [`FastQueue`] keeps the same `(time, seq)` assignment but routes
+//! events into three structures:
+//!
+//! * **Same-cycle FIFO** — an event scheduled at `at == now` can never
+//!   be preceded by a later schedule (new entries always take the
+//!   largest `seq`), so it goes into a plain `VecDeque` instead of the
+//!   heap. Batch-draining a same-cycle run is then pointer-chasing a
+//!   deque, not sifting a heap.
+//! * **Replaceable slot** — at most one completion *poll* (the fluid
+//!   port's `PortCheck`) is live at a time; scheduling a new one makes
+//!   any pending one stale (its generation stamp no longer matches, so
+//!   the reference handler pops it and immediately returns). The slot
+//!   holds the single live poll; an overwrite counts the overwritten
+//!   entry as dispatched-and-elided, exactly the no-op pop the
+//!   reference performs.
+//! * **Heap** — everything else, identical to the reference.
+//!
+//! [`FastQueue::pop`] takes the strict `(time, seq)` minimum across the
+//! three sources, so the pop sequence — and therefore every handler
+//! call, every schedule call, and every recorded span — is identical to
+//! the reference's by induction. `dispatched()` counts elided slot
+//! entries too, keeping `Trace::events` byte-identical. The analytic
+//! fast-forward of contention-free segments is inherited from the
+//! contention models themselves ([`FifoServer`](super::FifoServer)
+//! watermarks, [`PsPort`](super::PsPort) closed-form completions): when
+//! the pending set is sparse, a single pop jumps the clock over the
+//! whole quiescent region, and [`FastStats::fast_forward_jumps`] counts
+//! those jumps.
+//!
+//! The differential harness (`tests/integration_profiles.rs`) enforces
+//! the identity over every kernel, geometry, and routine; the
+//! [`Backend`] seam keeps the reference engine untouched as the
+//! authority.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+use super::engine::{EventQueue, Time};
+use super::trace::Trace;
+
+/// Which simulation engine runs an offload timeline.
+///
+/// `Reference` is the event-heap DES, unchanged and authoritative.
+/// `Fast` elides heap work and memoizes whole timelines; it is gated by
+/// a differential bit-identity harness and safe wherever that harness
+/// covers the workload (all shipped kernels, routines and geometries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SimProfile {
+    #[default]
+    Reference,
+    Fast,
+}
+
+impl SimProfile {
+    pub const ALL: [SimProfile; 2] = [SimProfile::Reference, SimProfile::Fast];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimProfile::Reference => "reference",
+            SimProfile::Fast => "fast",
+        }
+    }
+
+    /// Inverse of [`SimProfile::name`]; `None` for unknown tokens.
+    pub fn parse(name: &str) -> Option<SimProfile> {
+        match name {
+            "reference" => Some(SimProfile::Reference),
+            "fast" => Some(SimProfile::Fast),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry<E> {
+    time: Time,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed, exactly like the reference engine's heap entry.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The fast profile's event queue. Same scheduling contract as
+/// [`EventQueue`] (monotonic time, FIFO among equal timestamps), plus
+/// [`FastQueue::schedule_replaceable`] for single-live-poll events.
+#[derive(Debug)]
+pub struct FastQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    /// Events scheduled at the current instant, drained in seq order.
+    fifo: VecDeque<(Time, u64, E)>,
+    /// The single live completion poll, overwritten in place.
+    slot: Option<(Time, u64, E)>,
+    seq: u64,
+    now: Time,
+    popped: u64,
+    /// Slot entries overwritten before popping: dispatched, not executed.
+    elided: u64,
+    /// Events that never entered the binary heap (FIFO + slot).
+    heap_bypassed: u64,
+    /// Pops that advanced the virtual clock (fast-forward jumps).
+    ff_jumps: u64,
+}
+
+impl<E> Default for FastQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> FastQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            fifo: VecDeque::new(),
+            slot: None,
+            seq: 0,
+            now: 0,
+            popped: 0,
+            elided: 0,
+            heap_bypassed: 0,
+            ff_jumps: 0,
+        }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Total events dispatched: popped plus slot-elided, which equals
+    /// the reference engine's pop count for the same schedule sequence.
+    pub fn dispatched(&self) -> u64 {
+        self.popped + self.elided
+    }
+
+    /// Events actually popped (the fast engine's real work).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Stale polls elided by slot overwrites.
+    pub fn elided(&self) -> u64 {
+        self.elided
+    }
+
+    /// Events that bypassed the binary heap entirely.
+    pub fn heap_bypassed(&self) -> u64 {
+        self.heap_bypassed
+    }
+
+    /// Pops that advanced the virtual clock.
+    pub fn ff_jumps(&self) -> u64 {
+        self.ff_jumps
+    }
+
+    /// Schedule `event` at absolute time `at`. Same-cycle events skip
+    /// the heap: a new schedule always takes the largest `seq`, so
+    /// appending to a FIFO preserves the reference pop order.
+    pub fn schedule(&mut self, at: Time, event: E) {
+        assert!(
+            at >= self.now,
+            "event scheduled in the past: {} < {} ({} events pending)",
+            at,
+            self.now,
+            self.len()
+        );
+        if at == self.now {
+            self.fifo.push_back((at, self.seq, event));
+            self.heap_bypassed += 1;
+        } else {
+            self.heap.push(Entry {
+                time: at,
+                seq: self.seq,
+                event,
+            });
+        }
+        self.seq += 1;
+    }
+
+    /// Schedule `event` `delay` cycles from now.
+    pub fn schedule_in(&mut self, delay: Time, event: E) {
+        self.schedule(self.now + delay, event);
+    }
+
+    /// Schedule an event of which at most one is ever *live*: scheduling
+    /// a new one makes any pending one a guaranteed no-op when popped
+    /// (the fluid port's generation-stamped completion poll). The
+    /// overwritten entry is counted as dispatched — the reference
+    /// engine pops it, observes the stale stamp, and returns.
+    pub fn schedule_replaceable(&mut self, at: Time, event: E) {
+        assert!(
+            at >= self.now,
+            "event scheduled in the past: {} < {} ({} events pending)",
+            at,
+            self.now,
+            self.len()
+        );
+        if self.slot.replace((at, self.seq, event)).is_some() {
+            self.elided += 1;
+        }
+        self.heap_bypassed += 1;
+        self.seq += 1;
+    }
+
+    /// Pop the next event: the strict `(time, seq)` minimum over the
+    /// heap, the same-cycle FIFO, and the replaceable slot — the exact
+    /// order the reference heap would produce.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let heap_key = self.heap.peek().map(|e| (e.time, e.seq));
+        let fifo_key = self.fifo.front().map(|(t, s, _)| (*t, *s));
+        let slot_key = self.slot.as_ref().map(|(t, s, _)| (*t, *s));
+        let best = [heap_key, fifo_key, slot_key].into_iter().flatten().min()?;
+        let (time, event) = if heap_key == Some(best) {
+            let e = self.heap.pop().expect("peeked entry present");
+            (e.time, e.event)
+        } else if fifo_key == Some(best) {
+            let (t, _, ev) = self.fifo.pop_front().expect("front entry present");
+            (t, ev)
+        } else {
+            let (t, _, ev) = self.slot.take().expect("slot entry present");
+            (t, ev)
+        };
+        assert!(
+            time >= self.now,
+            "event popped out of order: {} < {} ({} events pending)",
+            time,
+            self.now,
+            self.len()
+        );
+        if time > self.now {
+            self.ff_jumps += 1;
+        }
+        self.now = time;
+        self.popped += 1;
+        Some((time, event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty() && self.fifo.is_empty() && self.slot.is_none()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len() + self.fifo.len() + usize::from(self.slot.is_some())
+    }
+}
+
+/// The engine seam: one executor, two interchangeable queues. Every
+/// method mirrors [`EventQueue`]'s, so swapping the backing queue does
+/// not touch a single call site; [`Backend::schedule_replaceable`] is
+/// plain `schedule` on the reference (the stale poll is popped and
+/// ignored there, which is what makes the elision verifiable).
+#[derive(Debug)]
+pub enum Backend<E> {
+    Reference(EventQueue<E>),
+    Fast(FastQueue<E>),
+}
+
+impl<E> Backend<E> {
+    pub fn new(profile: SimProfile) -> Self {
+        match profile {
+            SimProfile::Reference => Backend::Reference(EventQueue::new()),
+            SimProfile::Fast => Backend::Fast(FastQueue::new()),
+        }
+    }
+
+    pub fn profile(&self) -> SimProfile {
+        match self {
+            Backend::Reference(_) => SimProfile::Reference,
+            Backend::Fast(_) => SimProfile::Fast,
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        match self {
+            Backend::Reference(q) => q.now(),
+            Backend::Fast(q) => q.now(),
+        }
+    }
+
+    pub fn dispatched(&self) -> u64 {
+        match self {
+            Backend::Reference(q) => q.dispatched(),
+            Backend::Fast(q) => q.dispatched(),
+        }
+    }
+
+    pub fn schedule(&mut self, at: Time, event: E) {
+        match self {
+            Backend::Reference(q) => q.schedule(at, event),
+            Backend::Fast(q) => q.schedule(at, event),
+        }
+    }
+
+    pub fn schedule_in(&mut self, delay: Time, event: E) {
+        match self {
+            Backend::Reference(q) => q.schedule_in(delay, event),
+            Backend::Fast(q) => q.schedule_in(delay, event),
+        }
+    }
+
+    /// Schedule an event the caller guarantees is a no-op once a newer
+    /// one is scheduled (generation-stamped polls). Reference: a plain
+    /// schedule. Fast: the replaceable slot.
+    pub fn schedule_replaceable(&mut self, at: Time, event: E) {
+        match self {
+            Backend::Reference(q) => q.schedule(at, event),
+            Backend::Fast(q) => q.schedule_replaceable(at, event),
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        match self {
+            Backend::Reference(q) => q.pop(),
+            Backend::Fast(q) => q.pop(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Backend::Reference(q) => q.is_empty(),
+            Backend::Fast(q) => q.is_empty(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Backend::Reference(q) => q.len(),
+            Backend::Fast(q) => q.len(),
+        }
+    }
+
+    /// Fold this queue's per-run counters into the process-wide
+    /// [`stats`] snapshot. Call exactly once, after the run drains.
+    pub fn flush_counters(&self) {
+        if let Backend::Fast(q) = self {
+            FF_JUMPS.fetch_add(q.ff_jumps, AtomicOrdering::Relaxed);
+            HEAP_ELIDED.fetch_add(q.heap_bypassed, AtomicOrdering::Relaxed);
+            STALE_SKIPPED.fetch_add(q.elided, AtomicOrdering::Relaxed);
+            EVENTS_POPPED.fetch_add(q.popped, AtomicOrdering::Relaxed);
+        }
+    }
+}
+
+static FF_JUMPS: AtomicU64 = AtomicU64::new(0);
+static HEAP_ELIDED: AtomicU64 = AtomicU64::new(0);
+static STALE_SKIPPED: AtomicU64 = AtomicU64::new(0);
+static EVENTS_POPPED: AtomicU64 = AtomicU64::new(0);
+static TIMELINE_HITS: AtomicU64 = AtomicU64::new(0);
+static TIMELINE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide fast-profile counters (monotone since process start).
+/// The deltas between two snapshots attribute one run's speedup:
+/// how often the clock jumped, how much heap work was skipped, and how
+/// many whole timelines replayed from the memoizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FastStats {
+    /// Pops that advanced the virtual clock (analytic fast-forwards
+    /// over quiescent cycles).
+    pub fast_forward_jumps: u64,
+    /// Events that never entered the binary heap (same-cycle FIFO plus
+    /// replaceable-slot schedules).
+    pub heap_events_elided: u64,
+    /// Stale completion polls skipped by slot overwrites (dispatched
+    /// but never executed).
+    pub stale_events_skipped: u64,
+    /// Events actually popped by fast queues.
+    pub events_popped: u64,
+    /// Timeline-memoizer hits (whole runs replayed without simulating).
+    pub timeline_hits: u64,
+    /// Timeline-memoizer misses (runs that simulated and then seeded
+    /// the memoizer).
+    pub timeline_misses: u64,
+}
+
+/// Snapshot the process-wide fast-profile counters.
+pub fn stats() -> FastStats {
+    FastStats {
+        fast_forward_jumps: FF_JUMPS.load(AtomicOrdering::Relaxed),
+        heap_events_elided: HEAP_ELIDED.load(AtomicOrdering::Relaxed),
+        stale_events_skipped: STALE_SKIPPED.load(AtomicOrdering::Relaxed),
+        events_popped: EVENTS_POPPED.load(AtomicOrdering::Relaxed),
+        timeline_hits: TIMELINE_HITS.load(AtomicOrdering::Relaxed),
+        timeline_misses: TIMELINE_MISSES.load(AtomicOrdering::Relaxed),
+    }
+}
+
+fn timeline() -> &'static Mutex<HashMap<String, Arc<Trace>>> {
+    static MEMO: OnceLock<Mutex<HashMap<String, Arc<Trace>>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Poison-recovering lock, same rationale as `sweep::cache`: the map
+/// only ever sees plain inserts of immutable `Arc<Trace>`s.
+fn lock_timeline() -> MutexGuard<'static, HashMap<String, Arc<Trace>>> {
+    timeline().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The memoizer key of one specialized timeline. The caller supplies
+/// the full config serialization (collision-free by construction, like
+/// `sweep::cache::config_key`) and the store request-key grammar
+/// (`<spec>-c<clusters>-<routine>`), joined with a separator neither
+/// side can contain.
+pub fn timeline_key(config_toml: &str, request_key: &str) -> String {
+    format!("{config_toml}\u{1f}{request_key}")
+}
+
+/// Look up a memoized timeline; counts a hit or a miss.
+pub fn timeline_lookup(key: &str) -> Option<Arc<Trace>> {
+    let hit = lock_timeline().get(key).map(Arc::clone);
+    match &hit {
+        Some(_) => TIMELINE_HITS.fetch_add(1, AtomicOrdering::Relaxed),
+        None => TIMELINE_MISSES.fetch_add(1, AtomicOrdering::Relaxed),
+    };
+    hit
+}
+
+/// Seed the memoizer with a freshly simulated timeline. An existing
+/// entry wins (the DES is deterministic, both are equal) so earlier
+/// replays keep their `Arc` sharing.
+pub fn timeline_insert(key: String, trace: Arc<Trace>) -> Arc<Trace> {
+    Arc::clone(lock_timeline().entry(key).or_insert(trace))
+}
+
+/// Memoized timelines currently held (diagnostics).
+pub fn timeline_len() -> usize {
+    lock_timeline().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_names_round_trip() {
+        for p in SimProfile::ALL {
+            assert_eq!(SimProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(SimProfile::parse("warp"), None);
+        assert_eq!(SimProfile::default(), SimProfile::Reference);
+    }
+
+    /// Drive both queues with an identical pseudo-random schedule script
+    /// (no replaceable events) and check the pop streams are identical.
+    #[test]
+    fn fast_queue_matches_reference_pop_order() {
+        let mut reference = EventQueue::new();
+        let mut fast = FastQueue::new();
+        let mut state: u64 = 0x9e3779b97f4a7c15;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut pending = 0u64;
+        let mut label = 0u64;
+        for _ in 0..2000 {
+            if pending == 0 || next() % 3 != 0 {
+                // Schedule 0, same-cycle, or a forward jump.
+                let delay = match next() % 4 {
+                    0 => 0,
+                    1 => 1,
+                    _ => next() % 1000,
+                };
+                reference.schedule_in(delay, label);
+                fast.schedule_in(delay, label);
+                label += 1;
+                pending += 1;
+            } else {
+                assert_eq!(reference.pop(), fast.pop());
+                pending -= 1;
+            }
+        }
+        loop {
+            let (a, b) = (reference.pop(), fast.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(reference.dispatched(), fast.dispatched());
+        assert_eq!(reference.now(), fast.now());
+    }
+
+    #[test]
+    fn same_cycle_events_bypass_the_heap() {
+        let mut q = FastQueue::new();
+        q.schedule(0, "a");
+        q.schedule(0, "b");
+        q.schedule(5, "c");
+        assert_eq!(q.heap_bypassed(), 2);
+        assert_eq!(q.pop(), Some((0, "a")));
+        assert_eq!(q.pop(), Some((0, "b")));
+        assert_eq!(q.ff_jumps(), 0, "no clock movement yet");
+        assert_eq!(q.pop(), Some((5, "c")));
+        assert_eq!(q.ff_jumps(), 1, "the jump to t=5");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn replaceable_slot_counts_overwrites_as_dispatched() {
+        let mut q = FastQueue::new();
+        q.schedule_replaceable(10, "poll@10");
+        q.schedule_replaceable(20, "poll@20"); // overwrites the first
+        q.schedule(15, "work");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((15, "work")));
+        assert_eq!(q.pop(), Some((20, "poll@20")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.elided(), 1);
+        // popped(2) + elided(1) == the 3 schedules a reference engine
+        // would have popped.
+        assert_eq!(q.dispatched(), 3);
+    }
+
+    #[test]
+    fn slot_respects_seq_order_against_heap_ties() {
+        // A slot entry and a heap entry at the same instant pop in
+        // schedule order, exactly like the reference heap.
+        let mut q = FastQueue::new();
+        q.schedule_replaceable(10, "poll");
+        q.schedule(10, "work");
+        assert_eq!(q.pop(), Some((10, "poll")));
+        assert_eq!(q.pop(), Some((10, "work")));
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn fast_queue_rejects_past_events() {
+        let mut q = FastQueue::new();
+        q.schedule(5, ());
+        q.pop();
+        q.schedule(1, ());
+    }
+
+    #[test]
+    fn backend_reference_treats_replaceable_as_plain_schedule() {
+        let mut b: Backend<&str> = Backend::new(SimProfile::Reference);
+        b.schedule_replaceable(10, "poll@10");
+        b.schedule_replaceable(20, "poll@20");
+        // The reference pops both (the stale one is the handler's
+        // problem); dispatched counts agree with the fast profile's
+        // popped + elided.
+        assert_eq!(b.pop(), Some((10, "poll@10")));
+        assert_eq!(b.pop(), Some((20, "poll@20")));
+        assert_eq!(b.dispatched(), 2);
+        let mut f: Backend<&str> = Backend::new(SimProfile::Fast);
+        f.schedule_replaceable(10, "poll@10");
+        f.schedule_replaceable(20, "poll@20");
+        assert_eq!(f.pop(), Some((20, "poll@20")));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.dispatched(), 2);
+    }
+
+    #[test]
+    fn timeline_memo_keeps_the_first_entry_and_counts_tiers() {
+        let key = timeline_key("unit-test-config", "axpy_n1-c1-ideal");
+        let before = stats();
+        assert!(timeline_lookup(&key).is_none());
+        let first = timeline_insert(key.clone(), Arc::new(Trace::new(1)));
+        let second = timeline_insert(key.clone(), Arc::new(Trace::new(1)));
+        assert!(Arc::ptr_eq(&first, &second));
+        let hit = timeline_lookup(&key).expect("present after insert");
+        assert!(Arc::ptr_eq(&first, &hit));
+        let after = stats();
+        assert!(after.timeline_hits >= before.timeline_hits + 1);
+        assert!(after.timeline_misses >= before.timeline_misses + 1);
+        assert!(timeline_len() >= 1);
+    }
+
+    #[test]
+    fn distinct_configs_get_distinct_timeline_keys() {
+        assert_ne!(
+            timeline_key("a = 1\n", "axpy_n8-c1-ideal"),
+            timeline_key("a = 2\n", "axpy_n8-c1-ideal")
+        );
+        assert_ne!(
+            timeline_key("a = 1\n", "axpy_n8-c1-ideal"),
+            timeline_key("a = 1\n", "axpy_n8-c2-ideal")
+        );
+    }
+}

@@ -2,11 +2,20 @@
 //! contention models, and mcycle-style trace instrumentation. Together
 //! these replace the paper's QuestaSim RTL simulation (§5.1) — see
 //! DESIGN.md's substitution table.
+//!
+//! Two engine profiles run every timeline ([`SimProfile`]): the
+//! reference event-heap DES ([`EventQueue`]) and the `fast` profile
+//! ([`fast::FastQueue`] behind the [`Backend`] seam), which batch-drains
+//! same-cycle runs, elides stale completion polls, and memoizes whole
+//! specialized timelines — bit-identical to the reference by
+//! construction and enforced by `tests/integration_profiles.rs`.
 
 pub mod engine;
+pub mod fast;
 pub mod server;
 pub mod trace;
 
 pub use engine::{EventQueue, Time};
+pub use fast::{Backend, FastQueue, FastStats, SimProfile};
 pub use server::{FifoServer, PsPort, RrPort, TransferId};
 pub use trace::{Phase, PhaseSpan, PhaseStats, Trace};

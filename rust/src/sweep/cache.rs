@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 use crate::config::Config;
-use crate::sim::Trace;
+use crate::sim::{SimProfile, Trace};
 
 use super::request::OffloadRequest;
 
@@ -82,6 +82,33 @@ pub fn run_cached_keyed(key: &str, cfg: &Config, req: OffloadRequest) -> Arc<Tra
 /// config per call — use [`run_cached_keyed`] inside loops).
 pub fn run_cached(cfg: &Config, req: OffloadRequest) -> Arc<Trace> {
     run_cached_keyed(&config_key(cfg), cfg, req)
+}
+
+/// The cache key of a configuration under an engine profile. The
+/// reference profile keeps the bare [`config_key`] (every existing
+/// caller stays on it); the fast profile appends a discriminator line
+/// that no flat-TOML serialization can contain, so fast-produced
+/// entries are never served to a reference run — the bit-identity
+/// harness vouches for equality, the cache does not assume it.
+pub fn profiled_config_key(cfg: &Config, profile: SimProfile) -> String {
+    match profile {
+        SimProfile::Reference => config_key(cfg),
+        SimProfile::Fast => format!("{}#profile = \"fast\"\n", cfg.to_toml()),
+    }
+}
+
+/// [`run_cached_keyed`] under an explicit engine profile. `key` must
+/// come from [`profiled_config_key`] with the same profile.
+pub fn run_cached_profiled(
+    key: &str,
+    cfg: &Config,
+    req: OffloadRequest,
+    profile: SimProfile,
+) -> Arc<Trace> {
+    if let Some(t) = peek(key, req) {
+        return t;
+    }
+    insert(key, req, Arc::new(req.run_with(cfg, profile)))
 }
 
 /// Number of traces currently cached, across all configs (diagnostics).

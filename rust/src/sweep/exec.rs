@@ -11,7 +11,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::config::Config;
-use crate::sim::Trace;
+use crate::sim::{SimProfile, Trace};
 
 use super::cache;
 use super::results::{SweepPoint, SweepRecord};
@@ -21,13 +21,14 @@ pub(crate) fn execute(
     points: &[SweepPoint],
     parallel: bool,
     cached: bool,
+    profile: SimProfile,
 ) -> Vec<SweepRecord> {
     // Serialize the config once per campaign, not once per point.
-    let config_key = cached.then(|| cache::config_key(cfg));
+    let config_key = cached.then(|| cache::profiled_config_key(cfg, profile));
     let run_point = |p: &SweepPoint| -> Arc<Trace> {
         match &config_key {
-            Some(key) => cache::run_cached_keyed(key, cfg, p.req),
-            None => Arc::new(p.req.run(cfg)),
+            Some(key) => cache::run_cached_profiled(key, cfg, p.req, profile),
+            None => Arc::new(p.req.run_with(cfg, profile)),
         }
     };
     let workers = if parallel {

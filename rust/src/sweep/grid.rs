@@ -3,6 +3,7 @@
 use crate::config::Config;
 use crate::kernels::JobSpec;
 use crate::offload::RoutineKind;
+use crate::sim::SimProfile;
 
 use super::exec;
 use super::request::{
@@ -34,6 +35,7 @@ pub struct Sweep {
     extra: Vec<SweepPoint>,
     serial: bool,
     uncached: bool,
+    profile: SimProfile,
 }
 
 impl Sweep {
@@ -115,6 +117,15 @@ impl Sweep {
         self
     }
 
+    /// Select the engine profile (default: the reference DES). The fast
+    /// profile is bit-identical — see `sim::fast` and
+    /// `tests/integration_profiles.rs` — but keeps its cache entries
+    /// under a separate key out of caution.
+    pub fn profile(mut self, profile: SimProfile) -> Self {
+        self.profile = profile;
+        self
+    }
+
     /// Expand to the ordered point list without running anything.
     /// Cluster counts and routines are deduplicated (first occurrence
     /// wins), so repeated `clusters`/`routines`/`triples` calls cannot
@@ -146,7 +157,7 @@ impl Sweep {
     /// Execute the campaign and return input-ordered results.
     pub fn run(&self, cfg: &Config) -> SweepResults {
         let points = self.expand();
-        let records = exec::execute(cfg, &points, !self.serial, !self.uncached);
+        let records = exec::execute(cfg, &points, !self.serial, !self.uncached, self.profile);
         SweepResults::new(records)
     }
 

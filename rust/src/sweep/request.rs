@@ -7,7 +7,7 @@ use crate::config::Config;
 use crate::coordinator::{OccupancyModel, OccupancyParams, JCU_SLOTS};
 use crate::kernels::JobSpec;
 use crate::offload::{Executor, RoutineKind};
-use crate::sim::{Time, Trace};
+use crate::sim::{SimProfile, Time, Trace};
 
 /// One fully-specified DES run: which job, on how many clusters, with
 /// which offload routine. Doubles as the trace-cache key (it is
@@ -44,6 +44,13 @@ impl OffloadRequest {
     /// contract as `offload::Executor::new`).
     pub fn run(&self, cfg: &Config) -> Trace {
         Executor::new(cfg, &self.spec, self.n_clusters, self.routine).run()
+    }
+
+    /// Like [`OffloadRequest::run`] but under an explicit engine profile
+    /// (`fast` elides heap work and replays memoized timelines; see
+    /// `sim::fast`).
+    pub fn run_with(&self, cfg: &Config, profile: SimProfile) -> Trace {
+        Executor::with_profile(cfg, &self.spec, self.n_clusters, self.routine, profile).run()
     }
 }
 

@@ -1,0 +1,179 @@
+//! Differential bit-identity harness for the engine-profile seam: the
+//! `fast` profile (heap elision, same-cycle batch drains, memoized
+//! timelines; `sim::fast`) must be *byte-identical* to the `reference`
+//! event-heap DES on every observable — full traces span-for-span,
+//! event accounting, and the f64 phase statistics compared through
+//! `to_bits`, so even a last-ulp drift fails.
+//!
+//! This is the gate that lets every caller (`sweep`, `campaign`,
+//! `serve`, the CLI) treat `--profile fast` as a pure go-faster knob.
+
+mod prop_util;
+
+use occamy_offload::config::Config;
+use occamy_offload::exp;
+use occamy_offload::offload::RoutineKind;
+use occamy_offload::sim::{fast, Phase, SimProfile, Trace};
+use occamy_offload::sweep::OffloadRequest;
+use prop_util::{choose, prop, random_spec};
+
+/// Assert the two traces are byte-identical: whole-struct equality
+/// (`Trace` compares every span bit-for-bit) plus an explicit
+/// `f64::to_bits` pass over the per-phase statistics, which is where a
+/// reassociated floating-point average would hide from `==` on totals.
+fn assert_bit_identical(reference: &Trace, fast_t: &Trace, what: &str) {
+    assert_eq!(reference, fast_t, "{what}: trace mismatch");
+    assert_eq!(reference.total, fast_t.total, "{what}: total");
+    assert_eq!(reference.events, fast_t.events, "{what}: events");
+    for p in Phase::ALL {
+        match (reference.stats(p), fast_t.stats(p)) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.min, b.min, "{what}: {p:?} min");
+                assert_eq!(a.max, b.max, "{what}: {p:?} max");
+                assert_eq!(a.n, b.n, "{what}: {p:?} n");
+                assert_eq!(
+                    a.avg.to_bits(),
+                    b.avg.to_bits(),
+                    "{what}: {p:?} avg {} vs {}",
+                    a.avg,
+                    b.avg
+                );
+            }
+            (a, b) => panic!("{what}: {p:?} present in one profile only ({a:?} vs {b:?})"),
+        }
+        assert_eq!(
+            reference.host_duration(p),
+            fast_t.host_duration(p),
+            "{what}: {p:?} host duration"
+        );
+    }
+}
+
+fn run_both(cfg: &Config, req: OffloadRequest, what: &str) {
+    let reference = req.run_with(cfg, SimProfile::Reference);
+    let fast_t = req.run_with(cfg, SimProfile::Fast);
+    assert_bit_identical(&reference, &fast_t, what);
+}
+
+#[test]
+fn full_kernel_grid_is_bit_identical_across_profiles() {
+    // Every kernel of the benchmark set x the geometry grid x the three
+    // figure routines — the exact surface the experiments and the serve
+    // engine run on.
+    let cfg = Config::default();
+    for (label, spec) in exp::benchmark_set() {
+        for n in [1usize, 2, 8, 32] {
+            for routine in [
+                RoutineKind::Baseline,
+                RoutineKind::Ideal,
+                RoutineKind::Multicast,
+            ] {
+                run_both(
+                    &cfg,
+                    OffloadRequest::new(spec, n, routine),
+                    &format!("{label}@{n} {}", routine.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ablation_routines_are_bit_identical_across_profiles() {
+    // The mcast-only/jcu-only ablations take different event paths
+    // (one extension enabled at a time) — cover all five routines.
+    let cfg = Config::default();
+    for (label, spec) in exp::benchmark_set() {
+        for routine in RoutineKind::ALL {
+            run_both(
+                &cfg,
+                OffloadRequest::new(spec, 8, routine),
+                &format!("{label}@8 {}", routine.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_random_configs_are_bit_identical_across_profiles() {
+    // Randomized (spec, geometry, routine, timing) points: perturbed
+    // timing parameters shift every event's arrival cycle, and the
+    // fluid-port ablation swaps the arbitration model — the fast
+    // engine must track all of it exactly, not just the default config.
+    prop(24, |rng| {
+        let mut cfg = Config::default();
+        cfg.timing.host_ipi_issue_gap = 1 + rng.gen_range_usize(0, 40) as u64;
+        cfg.timing.cluster_wake = 1 + rng.gen_range_usize(0, 300) as u64;
+        cfg.timing.dma_roundtrip = 1 + rng.gen_range_usize(0, 200) as u64;
+        cfg.timing.tcdm_service = 1 + rng.gen_range_usize(0, 4) as u64;
+        cfg.soc.wide_port_fluid = rng.gen_range_usize(0, 2) == 1;
+        let spec = random_spec(rng);
+        let n = *choose(rng, &[1usize, 2, 3, 8, 16, 32]);
+        let routine = *choose(rng, &RoutineKind::ALL);
+        run_both(
+            &cfg,
+            OffloadRequest::new(spec, n, routine),
+            &format!("random {spec:?}@{n} {}", routine.name()),
+        );
+    });
+}
+
+#[test]
+fn memoized_timeline_replays_are_bit_identical() {
+    // A repeated fast-profile request is served from the specialized
+    // timeline memo — the replay must equal both the first fast run and
+    // the reference, and the memo must actually be exercised.
+    let mut cfg = Config::default();
+    cfg.timing.host_ipi_issue_gap = 9501; // unique memo key for this test
+    let req = OffloadRequest::new(
+        occamy_offload::kernels::JobSpec::Axpy { n: 704 },
+        8,
+        RoutineKind::Multicast,
+    );
+    let reference = req.run_with(&cfg, SimProfile::Reference);
+    let before = fast::stats();
+    let first = req.run_with(&cfg, SimProfile::Fast);
+    let replay = req.run_with(&cfg, SimProfile::Fast);
+    let after = fast::stats();
+    assert_bit_identical(&reference, &first, "first fast run");
+    assert_bit_identical(&reference, &replay, "memoized replay");
+    assert!(
+        after.timeline_hits > before.timeline_hits,
+        "replay did not hit the timeline memo ({} -> {})",
+        before.timeline_hits,
+        after.timeline_hits
+    );
+    assert!(
+        after.timeline_misses > before.timeline_misses,
+        "first run did not miss the timeline memo"
+    );
+}
+
+#[test]
+fn fast_profile_elides_heap_work_without_changing_results() {
+    // The point of the profile: identical answers for less heap work.
+    // The elision counters are process-wide and strictly monotonic, so
+    // with tests running in parallel only lower bounds on a delta are
+    // race-free — per-run equality lives in the `sim::fast` unit tests.
+    let mut cfg = Config::default();
+    cfg.timing.host_ipi_issue_gap = 9502; // unique memo key for this test
+    let req = OffloadRequest::new(
+        occamy_offload::kernels::JobSpec::Atax { m: 64, n: 64 },
+        32,
+        RoutineKind::Baseline,
+    );
+    let reference = req.run_with(&cfg, SimProfile::Reference);
+    let before = fast::stats();
+    let fast_t = req.run_with(&cfg, SimProfile::Fast);
+    let after = fast::stats();
+    assert_bit_identical(&reference, &fast_t, "wide baseline atax");
+    assert!(
+        after.events_popped > before.events_popped,
+        "fresh fast run dispatched no events at all"
+    );
+    // Replays simulate nothing; the *accounted* event total still
+    // matches the reference, so downstream event metrics are stable.
+    let replay = req.run_with(&cfg, SimProfile::Fast);
+    assert_eq!(replay.events, reference.events, "replay event accounting");
+}
