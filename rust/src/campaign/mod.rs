@@ -38,7 +38,7 @@
 //! `campaign run --shard i/N` workers, watches their heartbeat leases,
 //! and auto-merges when the last shard lands.
 
-mod codec;
+pub(crate) mod codec;
 pub mod shard;
 pub mod spec;
 pub mod store;

@@ -37,6 +37,9 @@ pub struct WorkerTask {
     /// Cap on points executed this attempt (`--max-points`); the
     /// scheduler's chaos injection sets it to rehearse crash recovery.
     pub max_points: Option<usize>,
+    /// Trace context the worker inherits (`--trace-parent`), so every
+    /// shard's spans — on any host — stitch under the fleet-run root.
+    pub trace_parent: Option<String>,
 }
 
 /// Observed state of a launched worker.
@@ -111,6 +114,10 @@ impl LocalLauncher {
         if let Some(cap) = task.max_points {
             args.push("--max-points".into());
             args.push(cap.to_string().into());
+        }
+        if let Some(tp) = &task.trace_parent {
+            args.push("--trace-parent".into());
+            args.push(tp.clone().into());
         }
         args
     }
@@ -460,6 +467,7 @@ mod tests {
             run_id: "demo".into(),
             attempt: 2,
             max_points: Some(1),
+            trace_parent: Some("0011223344556677-8899aabbccddeeff".into()),
         };
         let args: Vec<String> = LocalLauncher::args_of(&task)
             .into_iter()
@@ -474,11 +482,13 @@ mod tests {
         assert!(joined.contains("--run-id demo"), "{joined}");
         assert!(joined.contains("--attempt 2"), "{joined}");
         assert!(joined.contains("--max-points 1"), "{joined}");
+        assert!(joined.contains("--trace-parent 0011223344556677-8899aabbccddeeff"), "{joined}");
         assert!(!joined.contains("--no-store"), "{joined}");
 
         let mut bare = task.clone();
         bare.store = None;
         bare.max_points = None;
+        bare.trace_parent = None;
         let joined = LocalLauncher::args_of(&bare)
             .into_iter()
             .map(|a| a.to_string_lossy().into_owned())
@@ -486,6 +496,7 @@ mod tests {
             .join(" ");
         assert!(joined.contains("--no-store"), "{joined}");
         assert!(!joined.contains("--max-points"), "{joined}");
+        assert!(!joined.contains("--trace-parent"), "{joined}");
         assert!(!joined.contains("--store "), "{joined}");
     }
 
@@ -500,6 +511,7 @@ mod tests {
             run_id: "demo".into(),
             attempt: 0,
             max_points: None,
+            trace_parent: None,
         }
     }
 

@@ -72,6 +72,7 @@ use std::time::{Duration, Instant};
 use crate::campaign::{self, store, stream, CampaignSpec, CampaignStatus, Shard};
 use crate::obs::log::{self as obslog, Event, Level};
 use crate::obs::metrics::Registry;
+use crate::obs::span::{self, TraceContext};
 use crate::sweep::SweepResults;
 
 /// Scheduler parameters for one fleet run. [`FleetOptions::new`] seeds
@@ -245,6 +246,9 @@ impl Scheduler<'_> {
             run_id: self.opts.run_id.clone(),
             attempt,
             max_points: (self.opts.chaos_kill == Some(shard.index) && attempt == 0).then_some(1),
+            // Every worker inherits the run's root trace context, so
+            // shard spans from every host stitch under one fleet tree.
+            trace_parent: Some(TraceContext::root(&self.opts.run_id).render()),
         }
     }
 
@@ -467,6 +471,16 @@ pub fn run(
     let cancel = cancel_path(&lease_dir);
     // Starting a new run is fresh consent: clear a leftover marker.
     let _ = std::fs::remove_file(&cancel);
+    // The run's root span: every worker's shard span (and, through the
+    // serve path, every request span) parents back to this context.
+    let root = TraceContext::root(&opts.run_id);
+    if obslog::enabled() {
+        obslog::emit(
+            &span::wall_span("fleet_run", root, None)
+                .str("run_id", &opts.run_id)
+                .u64("workers", opts.workers as u64),
+        );
+    }
     let shards: Vec<Shard> = (0..opts.workers)
         .map(|i| Shard::new(i, opts.workers))
         .collect::<anyhow::Result<_>>()?;

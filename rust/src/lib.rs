@@ -75,7 +75,15 @@
 //! fleet, campaign, and store lifecycles ([`obs::log`], off by
 //! default; `--log`/`OCCAMY_LOG`), and a Prometheus-text metrics
 //! registry is scraped through the serve protocol's `metrics` verb
-//! ([`obs::metrics`]).
+//! ([`obs::metrics`]). On top of the log rides distributed tracing
+//! ([`obs::span`]): deterministic span trees per request with
+//! `traceparent` propagation across processes and hosts, merged into
+//! the Perfetto export (`trace export --spans`) and reassembled into
+//! interference curves from recorded traffic ([`obs::curves`],
+//! `trace serve-report` — bit-identical to `occamy interfere` at
+//! matching points). An always-on flight recorder ([`obs::flight`])
+//! dumps the last events to `<store>/flight/` on panic, overload shed
+//! or a mid-shard bail (`trace flight` renders dumps).
 //!
 //! ## Engine profiles
 //!
@@ -103,7 +111,7 @@
 //! | experiments | [`sweep`] (in-process grids + interference), [`campaign`] (sharded + persistent), [`fleet`] (multi-host scheduler: leases, recovery, auto-merge), [`exp`] (Figs. 7-12, interference), [`bench`] |
 //! | modeling | [`model`] (analytical runtime model §5.6) |
 //! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`serve`] (TCP daemon: admission control, memoization, load generator), [`runtime`] (PJRT numerics, JSON) |
-//! | observability | [`obs`] (Perfetto timelines, store-wide overhead reports, JSONL event log, Prometheus metrics) |
+//! | observability | [`obs`] (Perfetto timelines, store-wide overhead reports, JSONL event log, Prometheus metrics, distributed tracing spans, flight recorder, recorded-traffic interference curves) |
 //! | support | [`rng`] |
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment

@@ -4,7 +4,7 @@
 //!   experiment <fig7|fig8|fig9|fig10|fig11|fig12|interference|all> [--csv] [--config F] [--profile P]
 //!   campaign <run|merge|status|validate> --spec F [--shard i/N] [--out DIR]
 //!   fleet <run|status|watch|cancel|gc> --spec F [--workers N] [--out DIR]
-//!   trace <export|report> (Perfetto/Chrome timeline export; store overhead report)
+//!   trace <export|report|flight|serve-report> (Perfetto export; store/flight/span reports)
 //!   sim --kernel K --size N [--clusters C] [--routine R] [--config F]
 //!   interfere --kernel K --size N [--clusters C] [--inflight LIST] [--jobs N] [--gap G]
 //!   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--slo CYC] [--store DIR]
@@ -233,6 +233,7 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfer
              [--profile reference|fast]   (fast = elision engine, bit-identical results)
   campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store] [--max-points N]
                     [--lease FILE] [--lease-ttl SECS] [--run-id ID] [--attempt K] [--profile P]
+                    [--trace-parent CTX]   (or OCCAMY_TRACE_PARENT; stitches shard spans under a fleet root)
   campaign merge    --spec F [--shards N] [--out DIR] [--verify] [--render FIG|interference] [--csv]
   campaign status   --spec F [--shards N] [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   campaign validate --spec F
@@ -245,16 +246,19 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfer
   fleet watch  --spec F [--workers N] [--out DIR] [--store DIR] [--no-store] [--run-id ID] [--interval SECS]
   fleet cancel --spec F [--out DIR] [--store DIR] [--no-store] [--run-id ID]
   trace export --out FILE [--kernel K] [--size N] [--clusters C] [--routine R] [--config F]
-               [--batch N [--inflight W] [--gap G]]   (Perfetto/Chrome trace-event JSON)
+               [--batch N [--inflight W] [--gap G]] [--spans LOG]   (Perfetto/Chrome trace-event JSON;
+               --spans merges recorded request/client span lanes from an event log or --record file)
   trace report --store DIR [--phases] [--csv]         (offload-overhead decomposition of a store)
+  trace flight (--dump FILE | --store DIR)            (render flight-recorder dumps from <store>/flight)
+  trace serve-report --log FILE [--csv]               (interference curves from recorded serve spans)
   sim --kernel K --size N [--clusters C] [--routine baseline|multicast|mcast-only|jcu-only|ideal]
   interfere --kernel K --size N [--clusters C] [--routine R] [--inflight 1,2,4,8] [--jobs 16] [--gap 0] [--csv]
   serve --listen ADDR [--spec F] [--inflight W] [--queue-factor Q] [--gap G] [--slo CYC]
         [--summary-every N] [--store DIR] [--config F] [--log FILE] [--profile P]
   serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--clusters C] [--inflight W] [--gap G]
-  loadgen --connect ADDR [--spec F] [--requests N] [--seed S] [--process poisson|bursty|diurnal]
+  loadgen --connect ADDR [--spec F] [--requests N] [--seed S] [--process poisson|bursty|diurnal|fixed]
           [--mean-gap G] [--burst B] [--period P] [--mix K1,K2,..] [--clusters C] [--routine R]
-          [--no-stats] [--shutdown] [--metrics]
+          [--no-stats] [--shutdown] [--metrics] [--record FILE]   (client-side span log)
   bench serve [--requests N] [--inflight W] [--seed S] [--mean-gap G] [--out FILE] [--config F]
               [--profile P] [--baseline FILE [--max-regress-pct P]]
               (exit nonzero on p99-latency or jobs/sim-s regression)
@@ -394,6 +398,7 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
         "run-id",
         "attempt",
         "profile",
+        "trace-parent",
     ];
     let allowed: &[&str] = match action {
         "validate" => &["spec"],
@@ -429,6 +434,41 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                 Some(s) => Shard::parse(s)?,
                 None => Shard::SINGLE,
             };
+            let attempt = a.u64_flag("attempt", 0)?;
+            // Deliberate-crash chaos hook: the flight-recorder
+            // integration test sets OCCAMY_CHAOS_PANIC to prove a
+            // panicking worker leaves a parseable dump behind.
+            if std::env::var_os("OCCAMY_CHAOS_PANIC").is_some() {
+                if let Some(root) = resolve_store_root(a, &out_dir) {
+                    std::fs::create_dir_all(&root)?;
+                    obs::flight::set_dump_dir(&root.join("flight"));
+                }
+                obs::flight::install_panic_hook();
+                obs::flight::note(
+                    &obs::Event::wall("campaign", "chaos_panic")
+                        .str("shard", &shard.to_string())
+                        .render(),
+                );
+                panic!("OCCAMY_CHAOS_PANIC set — deliberate crash for the flight-recorder test");
+            }
+            // One wall-domain span per shard attempt (the attempt keeps
+            // span ids unique across relaunches), stitched under the
+            // fleet-run root whenever the scheduler passed
+            // --trace-parent / OCCAMY_TRACE_PARENT.
+            if let Some(parent) = obs::span::init_ambient(a.flag("trace-parent")) {
+                if obs::log::enabled() {
+                    obs::log::emit(
+                        &obs::span::wall_span(
+                            "shard",
+                            parent.child(&shard.to_string(), attempt),
+                            Some(parent.span),
+                        )
+                        .str("campaign", &spec.name)
+                        .str("shard", &shard.to_string())
+                        .u64("attempt", attempt),
+                    );
+                }
+            }
             let store = match resolve_store_root(a, &out_dir) {
                 None => None,
                 Some(root) => Some(TraceStore::open(root)?),
@@ -450,11 +490,10 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                 None => None,
                 Some(path) => {
                     let ttl = a.u64_flag("lease-ttl", 30)?.max(1);
-                    let attempt = a.u64_flag("attempt", 0)? as usize;
                     let run_id = a.flag("run-id").unwrap_or(&spec.name).to_string();
                     Some(Heartbeat::start(
                         PathBuf::from(path),
-                        Lease::new(run_id, shard, attempt, ttl),
+                        Lease::new(run_id, shard, attempt as usize, ttl),
                     )?)
                 }
             };
@@ -478,6 +517,23 @@ fn cmd_campaign(a: &Args) -> anyhow::Result<()> {
                 // indistinguishable from a mid-shard kill, which is the
                 // point of --max-points chaos runs.
                 drop(heartbeat);
+                // A mid-shard bail is exactly what the flight recorder
+                // exists for: leave the last-events ring on disk next to
+                // the store the next attempt will resume from.
+                if let Some(root) = resolve_store_root(a, &out_dir) {
+                    obs::flight::set_dump_dir(&root.join("flight"));
+                    obs::flight::note(
+                        &obs::Event::wall("campaign", "shard_incomplete")
+                            .str("shard", &report.shard.to_string())
+                            .u64("resumed", report.resumed as u64)
+                            .u64("executed", report.executed as u64)
+                            .u64("owned", report.owned as u64)
+                            .render(),
+                    );
+                    if let Some(path) = obs::flight::dump("incomplete") {
+                        eprintln!("flight dump: {}", path.display());
+                    }
+                }
                 anyhow::bail!(
                     "shard {} incomplete: --max-points stopped it at {} of {} owned points; re-run to resume",
                     report.shard,
@@ -768,18 +824,26 @@ fn cmd_fleet_gc(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `occamy trace <export|report>`: render recorded simulation as a
-/// Perfetto/Chrome timeline, or aggregate a trace store into the
-/// paper's overhead decomposition — no fresh measurement either way
-/// beyond the one deterministic job `export` simulates.
+/// `occamy trace <export|report|flight|serve-report>`: render recorded
+/// simulation as a Perfetto/Chrome timeline, aggregate a trace store
+/// into the paper's overhead decomposition, render flight-recorder
+/// dumps, or rebuild interference curves from recorded serve spans —
+/// no fresh measurement any way beyond the one deterministic job
+/// `export` simulates.
 fn cmd_trace(a: &Args) -> anyhow::Result<()> {
     let action = a.positional.first().map(String::as_str).ok_or_else(|| {
-        anyhow::anyhow!("usage: occamy trace <export|report> (--out FILE | --store DIR)")
+        anyhow::anyhow!(
+            "usage: occamy trace <export|report|flight|serve-report> (--out FILE | --store DIR | --log FILE)"
+        )
     })?;
     match action {
         "export" => cmd_trace_export(a),
         "report" => cmd_trace_report(a),
-        other => anyhow::bail!("unknown trace action {other:?} (export or report)"),
+        "flight" => cmd_trace_flight(a),
+        "serve-report" => cmd_trace_serve_report(a),
+        other => {
+            anyhow::bail!("unknown trace action {other:?} (export, report, flight or serve-report)")
+        }
     }
 }
 
@@ -790,7 +854,10 @@ fn cmd_trace(a: &Args) -> anyhow::Result<()> {
 fn cmd_trace_export(a: &Args) -> anyhow::Result<()> {
     a.reject_unknown(
         "trace export",
-        &["kernel", "size", "clusters", "routine", "config", "out", "batch", "inflight", "gap"],
+        &[
+            "kernel", "size", "clusters", "routine", "config", "out", "batch", "inflight", "gap",
+            "spans",
+        ],
         1,
     )?;
     let out = PathBuf::from(a.flag("out").ok_or_else(|| {
@@ -812,10 +879,22 @@ fn cmd_trace_export(a: &Args) -> anyhow::Result<()> {
             RoutineKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown routine {r:?}"))?
         }
     };
+    // Recorded spans (a serve event log or a loadgen --record file)
+    // merge into the same timeline as extra lanes on the cycle axis.
+    let spans = match a.flag("spans") {
+        None => Vec::new(),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read --spans {path}: {e}"))?;
+            let spans = obs::span::parse_log(&text);
+            anyhow::ensure!(!spans.is_empty(), "no span records in --spans {path}");
+            spans
+        }
+    };
     let trace = sweep::run_one(&cfg, OffloadRequest::new(spec, n, routine));
     let label = format!("{kernel}:{size} c{n} {}", routine.name());
     let doc = match a.flag("batch") {
-        None => obs::perfetto::job_timeline(&label, &trace),
+        None => obs::perfetto::job_timeline_with_spans(&label, &trace, &spans),
         Some(v) => {
             let jobs: u64 = v.parse().map_err(|e| anyhow::anyhow!("bad --batch {v:?}: {e}"))?;
             anyhow::ensure!(jobs >= 1, "--batch must be >= 1");
@@ -829,7 +908,13 @@ fn cmd_trace_export(a: &Args) -> anyhow::Result<()> {
             let admissions: Vec<_> =
                 (0..jobs).map(|_| model.admit_at(0, n, trace.total)).collect();
             model.finish();
-            obs::perfetto::batch_timeline(&format!("{label} x{jobs}"), &trace, &params, &admissions)
+            obs::perfetto::batch_timeline_with_spans(
+                &format!("{label} x{jobs}"),
+                &trace,
+                &params,
+                &admissions,
+                &spans,
+            )
         }
     };
     std::fs::write(&out, obs::perfetto::render(&doc))
@@ -853,7 +938,15 @@ fn cmd_trace_report(a: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("trace report requires --store DIR (a campaign/serve trace store root)")
     })?);
     let entries = obs::report::scan(&root)?;
-    anyhow::ensure!(!entries.is_empty(), "no decodable traces under {}", root.display());
+    if entries.is_empty() {
+        // An empty or config-only store is a normal state (fresh daemon,
+        // campaign that has not run yet) — report it, don't error.
+        println!(
+            "trace report: 0 traces under {} (store exists but holds no decodable request traces yet)",
+            root.display()
+        );
+        return Ok(());
+    }
     let csv = a.has("csv");
     let mut table = Table::new(
         "Offload overhead per stored request group (cycles)",
@@ -895,6 +988,43 @@ fn cmd_trace_report(a: &Args) -> anyhow::Result<()> {
         }
         emit(bands, csv);
     }
+    Ok(())
+}
+
+/// `occamy trace flight`: render flight-recorder dumps — either one
+/// dump file (`--dump`) or every dump under a store's `flight/`
+/// directory (`--store`), newest state of the last-events ring a
+/// panicking or bailing process left behind.
+fn cmd_trace_flight(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("trace flight", &["dump", "store"], 1)?;
+    match (a.flag("dump"), a.flag("store")) {
+        (Some(path), _) => {
+            print!("{}", obs::flight::render_dump(Path::new(path))?);
+        }
+        (None, Some(root)) => {
+            print!("{}", obs::flight::render_dir(&Path::new(root).join("flight"))?);
+        }
+        (None, None) => anyhow::bail!(
+            "trace flight requires --dump FILE (one dump) or --store DIR (render <store>/flight)"
+        ),
+    }
+    Ok(())
+}
+
+/// `occamy trace serve-report`: reassemble latency-vs-inflight
+/// interference curves from a recorded serve span log. Pure
+/// observation over recorded traffic — at matching (inflight, gap)
+/// points the table is bit-identical to `occamy interfere`.
+fn cmd_trace_serve_report(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("trace serve-report", &["log", "csv"], 1)?;
+    let path = a.flag("log").ok_or_else(|| {
+        anyhow::anyhow!("trace serve-report requires --log FILE (a serve event log with spans)")
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read --log {path}: {e}"))?;
+    let samples = obs::curves::derive(&text)?;
+    anyhow::ensure!(!samples.is_empty(), "no request spans in {path}");
+    emit(exp::interference::render(&samples), a.has("csv"));
     Ok(())
 }
 
@@ -1183,6 +1313,7 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
             "shutdown",
             "spec",
             "metrics",
+            "record",
         ],
         0,
     )?;
@@ -1197,8 +1328,9 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
     opts.requests = a.u64_flag("requests", opts.requests)?;
     opts.seed = a.u64_flag("seed", opts.seed)?;
     if let Some(v) = a.flag("process") {
-        opts.kind = ArrivalKind::parse(v)
-            .ok_or_else(|| anyhow::anyhow!("unknown process {v:?} (poisson, bursty or diurnal)"))?;
+        opts.kind = ArrivalKind::parse(v).ok_or_else(|| {
+            anyhow::anyhow!("unknown process {v:?} (poisson, bursty, diurnal or fixed)")
+        })?;
     }
     opts.mean_gap = a.u64_flag("mean-gap", opts.mean_gap)?;
     opts.burst = a.u64_flag("burst", opts.burst)?;
@@ -1219,6 +1351,9 @@ fn cmd_loadgen(a: &Args) -> anyhow::Result<()> {
     }
     opts.fetch_stats = !a.has("no-stats");
     opts.fetch_metrics = a.has("metrics");
+    if let Some(p) = a.flag("record") {
+        opts.record = Some(PathBuf::from(p));
+    }
     if a.has("shutdown") {
         opts.shutdown = true;
     }
@@ -1285,6 +1420,7 @@ fn cmd_bench_serve(a: &Args) -> anyhow::Result<()> {
             routine: None,
             gap: Some(arrivals.next_gap()),
             seed: Some(seed.wrapping_add(id)),
+            traceparent: None,
         })
         .collect();
 
@@ -1730,7 +1866,7 @@ mod tests {
         let err = run(&["fleet".to_string(), "frobnicate".to_string()]).unwrap_err().to_string();
         assert!(err.contains("unknown fleet action"), "{err}");
         // trace validates per-action too, and names its actions.
-        for action in ["export", "report"] {
+        for action in ["export", "report", "flight", "serve-report"] {
             let raw: Vec<String> = ["trace", action, "--definitely-bogus-flag", "1"]
                 .iter()
                 .map(|s| s.to_string())
@@ -1742,6 +1878,12 @@ mod tests {
         assert!(err.contains("unknown trace action"), "{err}");
         let err = run(&["trace".to_string(), "export".to_string()]).unwrap_err().to_string();
         assert!(err.contains("--out"), "{err}");
+        // Each new action explains its required input when run bare.
+        let err = run(&["trace".to_string(), "flight".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("--dump") && err.contains("--store"), "{err}");
+        let err =
+            run(&["trace".to_string(), "serve-report".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("--log"), "{err}");
         // bench validates per-target, like campaign/fleet per-action.
         let raw: Vec<String> = ["bench", "serve", "--definitely-bogus-flag", "1"]
             .iter()

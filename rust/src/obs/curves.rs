@@ -1,0 +1,324 @@
+//! Interference curves from recorded serve traffic.
+//!
+//! `occamy trace serve-report` replays nothing: it reads the span
+//! stream a serve daemon already emitted (`request` spans with their
+//! `queue`/`execute` children, delimited by the daemon's
+//! `engine_start` line) and reassembles each run's schedule into the
+//! same [`InterferenceOutcome`] the `exp/interference` experiment
+//! computes — isolated service from the `execute` span, per-job
+//! queueing delay from the `queue` spans in admission order, makespan
+//! from the last `request` span's end. Because the serve engine and
+//! [`InterferenceRequest::run_on`] drive the *same* occupancy model,
+//! a homogeneous recorded run at a fixed arrival gap reproduces the
+//! experiment's row bit-identically at the matching (inflight, gap)
+//! point — the CI check diffs the two tables byte-for-byte.
+
+use std::collections::BTreeMap;
+
+use crate::campaign::spec::parse_kernel;
+use crate::obs::span::SpanRecord;
+use crate::offload::RoutineKind;
+use crate::runtime::json::Json;
+use crate::sweep::{
+    InterferenceOutcome, InterferencePoint, InterferenceRequest, InterferenceSample,
+    OffloadRequest,
+};
+
+/// One request reassembled from its span tree.
+#[derive(Debug, Clone)]
+struct ReqSpan {
+    seq: u64,
+    kernel: String,
+    clusters: u64,
+    routine: String,
+    gap: u64,
+    start: u64,
+    dur: u64,
+    queue_dur: Option<u64>,
+    execute_dur: Option<u64>,
+}
+
+/// One daemon run: everything between two `engine_start` lines.
+#[derive(Debug, Default)]
+struct Run {
+    inflight: u64,
+    /// Request span id → reassembled request.
+    requests: BTreeMap<u64, ReqSpan>,
+}
+
+fn req_of<'a>(run: &'a mut Run, parent: u64, name: &str) -> anyhow::Result<&'a mut ReqSpan> {
+    run.requests
+        .get_mut(&parent)
+        .ok_or_else(|| anyhow::anyhow!("{name} span references unknown request span {parent:016x}"))
+}
+
+/// Segment a serve event log into runs and reassemble each request's
+/// span tree. Lines that are neither `engine_start` nor serve-side
+/// spans (client spans, wall spans, plain events) are skipped.
+fn segment(log_text: &str) -> anyhow::Result<Vec<Run>> {
+    let mut runs: Vec<Run> = Vec::new();
+    for (lineno, line) in log_text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rec) = SpanRecord::parse(line) {
+            match rec.name.as_str() {
+                "request" => {
+                    let run = runs.last_mut().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "line {}: request span before any engine_start — not a serve log",
+                            lineno + 1
+                        )
+                    })?;
+                    let field = |k: &str| {
+                        rec.field_u64(k).ok_or_else(|| {
+                            anyhow::anyhow!("line {}: request span missing {k:?}", lineno + 1)
+                        })
+                    };
+                    let text = |k: &str| {
+                        rec.field_str(k).map(str::to_string).ok_or_else(|| {
+                            anyhow::anyhow!("line {}: request span missing {k:?}", lineno + 1)
+                        })
+                    };
+                    let req = ReqSpan {
+                        seq: field("seq")?,
+                        kernel: text("kernel")?,
+                        clusters: field("clusters")?,
+                        routine: text("routine")?,
+                        gap: field("gap")?,
+                        start: rec.cycle.ok_or_else(|| {
+                            anyhow::anyhow!("line {}: wall-domain request span", lineno + 1)
+                        })?,
+                        dur: rec.dur,
+                        queue_dur: None,
+                        execute_dur: None,
+                    };
+                    anyhow::ensure!(
+                        run.requests.insert(rec.span, req).is_none(),
+                        "line {}: duplicate request span id {:016x}",
+                        lineno + 1,
+                        rec.span
+                    );
+                }
+                "queue" | "execute" => {
+                    let run = runs.last_mut().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "line {}: {} span before any engine_start — not a serve log",
+                            lineno + 1,
+                            rec.name
+                        )
+                    })?;
+                    let parent = rec.parent.ok_or_else(|| {
+                        anyhow::anyhow!("line {}: {} span has no parent", lineno + 1, rec.name)
+                    })?;
+                    let req = req_of(run, parent, &rec.name)?;
+                    if rec.name == "queue" {
+                        req.queue_dur = Some(rec.dur);
+                    } else {
+                        req.execute_dur = Some(rec.dur);
+                    }
+                }
+                // Client-side and lifecycle spans carry no schedule.
+                _ => {}
+            }
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else { continue };
+        if v.get("src").and_then(Json::as_str) == Some("serve")
+            && v.get("event").and_then(Json::as_str) == Some("engine_start")
+        {
+            let inflight = v.get("inflight").and_then(Json::as_u64).ok_or_else(|| {
+                anyhow::anyhow!("line {}: engine_start missing inflight", lineno + 1)
+            })?;
+            runs.push(Run {
+                inflight,
+                requests: BTreeMap::new(),
+            });
+        }
+    }
+    Ok(runs)
+}
+
+/// Derive interference samples from a recorded serve span log. Each
+/// daemon run contributes one sample per (kernel, clusters, routine)
+/// group; groups must be internally uniform in arrival gap and service
+/// time (they are whenever the recorded traffic came from one loadgen
+/// mix entry — heterogeneous mixes still derive, one sample per entry,
+/// but only homogeneous fixed-gap runs are bit-comparable to
+/// `occamy interfere`).
+pub fn derive(log_text: &str) -> anyhow::Result<Vec<InterferenceSample>> {
+    let runs = segment(log_text)?;
+    let mut samples = Vec::new();
+    for run in &runs {
+        let mut groups: BTreeMap<(String, u64, String), Vec<&ReqSpan>> = BTreeMap::new();
+        for req in run.requests.values() {
+            groups
+                .entry((req.kernel.clone(), req.clusters, req.routine.clone()))
+                .or_default()
+                .push(req);
+        }
+        for ((kernel, clusters, routine), mut group) in groups {
+            group.sort_by_key(|r| r.seq);
+            let spec = parse_kernel(&kernel)
+                .map_err(|e| anyhow::anyhow!("recorded kernel {kernel:?}: {e}"))?;
+            let routine = RoutineKind::parse(&routine)
+                .ok_or_else(|| anyhow::anyhow!("recorded routine {routine:?} is unknown"))?;
+            let gap = group[0].gap;
+            let mut queue_delays = Vec::with_capacity(group.len());
+            let mut isolated = None;
+            let mut makespan = 0u64;
+            for req in &group {
+                anyhow::ensure!(
+                    req.gap == gap,
+                    "group {kernel} c{clusters}: mixed arrival gaps ({} vs {gap})",
+                    req.gap
+                );
+                let service = req.execute_dur.ok_or_else(|| {
+                    anyhow::anyhow!("request seq {} has no execute span", req.seq)
+                })?;
+                let queue = req.queue_dur.ok_or_else(|| {
+                    anyhow::anyhow!("request seq {} has no queue span", req.seq)
+                })?;
+                match isolated {
+                    None => isolated = Some(service),
+                    Some(prev) => anyhow::ensure!(
+                        prev == service,
+                        "group {kernel} c{clusters}: mixed service times ({service} vs {prev})"
+                    ),
+                }
+                queue_delays.push(queue);
+                makespan = makespan.max(req.start + req.dur);
+            }
+            let ireq = InterferenceRequest::new(
+                OffloadRequest::new(spec, clusters as usize, routine),
+                run.inflight as usize,
+                group.len(),
+                gap,
+            );
+            samples.push(InterferenceSample {
+                point: InterferencePoint {
+                    label: spec.kind().name(),
+                    ireq,
+                },
+                outcome: InterferenceOutcome {
+                    isolated: isolated.expect("non-empty group"),
+                    queue_delays,
+                    makespan,
+                },
+            });
+        }
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::OccupancyModel;
+    use crate::kernels::JobSpec;
+    use crate::obs::log::Event;
+    use crate::obs::span::{child_span, sim_span, TraceContext};
+
+    /// Render the span stream a serve run over `ireq`'s traffic would
+    /// have logged, straight from the occupancy model's schedule.
+    fn synthetic_log(cfg: &Config, ireq: &InterferenceRequest, isolated: u64) -> String {
+        let mut lines = vec![Event::sim("serve", "engine_start", 0)
+            .u64("inflight", ireq.inflight as u64)
+            .u64("queue_factor", 4)
+            .u64("gap", ireq.arrival_gap)
+            .str("profile", "reference")
+            .render()];
+        let mut model = OccupancyModel::new(ireq.params(cfg));
+        let kernel = format!("{}:512", ireq.req.spec.kind().name());
+        for seq in 0..ireq.n_jobs as u64 {
+            let adm = model.admit(ireq.req.n_clusters, isolated);
+            let ctx = TraceContext::root("curves-test").child(&kernel, seq);
+            lines.push(
+                sim_span("request", ctx, None, adm.arrival, adm.completion - adm.arrival)
+                    .u64("id", seq + 1)
+                    .str("kernel", &kernel)
+                    .u64("clusters", ireq.req.n_clusters as u64)
+                    .str("routine", ireq.req.routine.name())
+                    .u64("seq", seq)
+                    .u64("gap", ireq.arrival_gap)
+                    .render(),
+            );
+            let q = TraceContext { trace: ctx.trace, span: child_span(ctx.span, "queue") };
+            let x = TraceContext { trace: ctx.trace, span: child_span(ctx.span, "execute") };
+            lines.push(
+                sim_span("queue", q, Some(ctx.span), adm.arrival, adm.queue_delay)
+                    .u64("id", seq + 1)
+                    .render(),
+            );
+            lines.push(
+                sim_span("execute", x, Some(ctx.span), adm.start, isolated)
+                    .u64("id", seq + 1)
+                    .render(),
+            );
+        }
+        model.finish();
+        lines.join("\n")
+    }
+
+    #[test]
+    fn recorded_schedule_round_trips_through_run_on() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 512 }, 16, RoutineKind::Multicast);
+        for inflight in [1usize, 4] {
+            let ireq = InterferenceRequest::new(req, inflight, 8, 0);
+            let log = synthetic_log(&cfg, &ireq, 1000);
+            let samples = derive(&log).unwrap();
+            assert_eq!(samples.len(), 1);
+            let s = &samples[0];
+            assert_eq!(s.point.label, "axpy");
+            assert_eq!(s.point.ireq, ireq);
+            // The reassembled outcome is the model's own schedule.
+            assert_eq!(s.outcome, ireq.run_on(&cfg, 1000));
+        }
+    }
+
+    #[test]
+    fn two_concatenated_runs_become_two_samples_in_log_order() {
+        let cfg = Config::default();
+        let req = OffloadRequest::new(JobSpec::Axpy { n: 512 }, 16, RoutineKind::Multicast);
+        let a = InterferenceRequest::new(req, 1, 4, 0);
+        let b = InterferenceRequest::new(req, 4, 4, 0);
+        let log = format!(
+            "{}\n{}",
+            synthetic_log(&cfg, &a, 900),
+            synthetic_log(&cfg, &b, 900)
+        );
+        let samples = derive(&log).unwrap();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].point.ireq.inflight, 1);
+        assert_eq!(samples[1].point.ireq.inflight, 4);
+        assert!(samples[0].outcome.total_queue_delay() == 0);
+    }
+
+    #[test]
+    fn malformed_logs_error_instead_of_misreporting() {
+        // Spans before any engine_start are not a serve log.
+        let ctx = TraceContext::root("x").child("axpy:64", 0);
+        let orphan = sim_span("request", ctx, None, 0, 10)
+            .u64("id", 1)
+            .str("kernel", "axpy:64")
+            .u64("clusters", 2)
+            .str("routine", "multicast")
+            .u64("seq", 0)
+            .u64("gap", 0)
+            .render();
+        let err = derive(&orphan).unwrap_err().to_string();
+        assert!(err.contains("engine_start"), "{err}");
+        // A request whose execute child is missing cannot be scored.
+        let start = Event::sim("serve", "engine_start", 0).u64("inflight", 1).render();
+        let q = TraceContext { trace: ctx.trace, span: child_span(ctx.span, "queue") };
+        let queue = sim_span("queue", q, Some(ctx.span), 0, 0).u64("id", 1).render();
+        let err = derive(&format!("{start}\n{orphan}\n{queue}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no execute span"), "{err}");
+        // An empty log has no runs and no samples.
+        assert!(derive("").unwrap().is_empty());
+    }
+}

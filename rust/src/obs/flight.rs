@@ -1,0 +1,215 @@
+//! Always-on flight recorder: the last N events, dumped on failure.
+//!
+//! The event log ([`crate::obs::log`]) is opt-in and unbounded-ish; the
+//! flight recorder is the opposite trade — always on, fixed size, and
+//! read only after something went wrong. Critical sites [`note`] their
+//! rendered event lines into a fixed ring of slots; writers claim a slot
+//! with one `fetch_add` and skip (counting a drop) rather than block if
+//! a slot is contended, so the hot path never takes a blocking lock and
+//! never allocates beyond the line itself.
+//!
+//! A [`dump`] writes the ring to `<dir>/flight/<reason>-<pid>.jsonl`
+//! (header line first, then the retained events, oldest first). Dumps
+//! fire on panic ([`install_panic_hook`]), on an overload-shed burst in
+//! the serve engine, and when a campaign worker bails mid-shard — the
+//! exact paths the fleet's chaos tests exercise, which is what makes
+//! post-mortems of killed workers possible at all. `occamy trace
+//! flight` renders a dump back ([`render_dump`]).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+use crate::runtime::json::Json;
+
+/// Events retained (the "last N"). Small on purpose: a dump is a tail,
+/// not a log.
+pub const CAPACITY: usize = 256;
+
+struct Recorder {
+    slots: Vec<Mutex<Option<String>>>,
+    /// Next slot to claim (monotonic; slot index is `head % CAPACITY`).
+    head: AtomicUsize,
+    noted: AtomicU64,
+    dropped: AtomicU64,
+    dump_dir: Mutex<Option<PathBuf>>,
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        slots: (0..CAPACITY).map(|_| Mutex::new(None)).collect(),
+        head: AtomicUsize::new(0),
+        noted: AtomicU64::new(0),
+        dropped: AtomicU64::new(0),
+        dump_dir: Mutex::new(None),
+    })
+}
+
+/// Record one event line (no trailing newline). Never blocks: a slot
+/// still being written by another thread is skipped and counted in the
+/// dump header's `dropped`.
+pub fn note(line: &str) {
+    let r = recorder();
+    let i = r.head.fetch_add(1, Ordering::Relaxed) % CAPACITY;
+    r.noted.fetch_add(1, Ordering::Relaxed);
+    match r.slots[i].try_lock() {
+        Ok(mut slot) => *slot = Some(line.to_string()),
+        Err(_) => {
+            r.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Where dumps land (`<dir>/<reason>-<pid>.jsonl`); callers pass
+/// `<store>/flight`. Last set wins; no dump is written until set.
+pub fn set_dump_dir(dir: &Path) {
+    let r = recorder();
+    *r.dump_dir.lock().unwrap_or_else(PoisonError::into_inner) = Some(dir.to_path_buf());
+}
+
+/// Install a panic hook that dumps the ring (reason `panic`) before the
+/// previous hook runs. Idempotent.
+pub fn install_panic_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let _ = dump("panic");
+            prev(info);
+        }));
+    });
+}
+
+/// Write the ring to `<dump dir>/<reason>-<pid>.jsonl`: one JSON header
+/// line (`{"capacity":..,"dropped":..,"flight":"<reason>","noted":..}`)
+/// followed by the retained lines, oldest first. Returns the path, or
+/// `None` when no dump dir is set or the write fails — a failing dump
+/// must never take the workload down with it.
+pub fn dump(reason: &str) -> Option<PathBuf> {
+    let r = recorder();
+    let dir = r.dump_dir.lock().unwrap_or_else(PoisonError::into_inner).clone()?;
+    std::fs::create_dir_all(&dir).ok()?;
+    let path = dir.join(format!("{reason}-{}.jsonl", std::process::id()));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"capacity\":{CAPACITY},\"dropped\":{},\"flight\":{},\"noted\":{}}}\n",
+        r.dropped.load(Ordering::Relaxed),
+        Json::Str(reason.to_string()),
+        r.noted.load(Ordering::Relaxed),
+    ));
+    for line in snapshot() {
+        out.push_str(&line);
+        out.push('\n');
+    }
+    std::fs::write(&path, out).ok()?;
+    Some(path)
+}
+
+/// The retained lines, oldest first.
+pub fn snapshot() -> Vec<String> {
+    let r = recorder();
+    let head = r.head.load(Ordering::Relaxed);
+    let mut out = Vec::new();
+    for k in 0..CAPACITY {
+        let i = (head + k) % CAPACITY;
+        if let Ok(slot) = r.slots[i].try_lock() {
+            if let Some(line) = slot.as_ref() {
+                out.push(line.clone());
+            }
+        }
+    }
+    out
+}
+
+/// Render one dump file for `occamy trace flight`: the header summary
+/// plus every retained line.
+pub fn render_dump(path: &Path) -> anyhow::Result<String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read flight dump {}: {e}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("{}: empty dump", path.display()))?;
+    let h = Json::parse(header)
+        .map_err(|e| anyhow::anyhow!("{}: bad dump header: {e}", path.display()))?;
+    let reason = h
+        .get("flight")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("{}: header has no \"flight\" reason", path.display()))?
+        .to_string();
+    let noted = h.get("noted").and_then(Json::as_u64).unwrap_or(0);
+    let dropped = h.get("dropped").and_then(Json::as_u64).unwrap_or(0);
+    let capacity = h.get("capacity").and_then(Json::as_u64).unwrap_or(CAPACITY as u64);
+    let body: Vec<&str> = lines.collect();
+    let mut out = format!(
+        "Flight dump {} — reason: {reason}\n{noted} event(s) noted, {} retained (capacity {capacity}), {dropped} contended write(s) dropped\n",
+        path.display(),
+        body.len(),
+    );
+    for l in &body {
+        out.push_str("  ");
+        out.push_str(l);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Render every `*.jsonl` dump under a directory (sorted by file name),
+/// for `occamy trace flight --store ROOT`.
+pub fn render_dir(dir: &Path) -> anyhow::Result<String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read flight dir {}: {e}", dir.display()))?;
+    let mut names: Vec<PathBuf> = entries
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    names.sort();
+    anyhow::ensure!(!names.is_empty(), "no flight dumps under {}", dir.display());
+    let mut out = String::new();
+    for p in names {
+        out.push_str(&render_dump(&p)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global, and tests in one binary share it:
+    // assertions use distinctive markers and tolerate unrelated lines.
+    #[test]
+    fn dump_round_trips_through_render() {
+        let dir = std::env::temp_dir()
+            .join(format!("occamy-flight-test-{}", std::process::id()))
+            .join("flight");
+        let _ = std::fs::remove_dir_all(&dir);
+        set_dump_dir(&dir);
+        for i in 0..CAPACITY + 7 {
+            note(&format!("{{\"event\":\"flight_test\",\"i\":{i}}}"));
+        }
+        let path = dump("unit").expect("dump dir is set");
+        assert!(path.file_name().unwrap().to_string_lossy().starts_with("unit-"));
+        let snap = snapshot();
+        assert!(snap.len() <= CAPACITY);
+        // The oldest marker lines were evicted by the wrap.
+        assert!(!snap.iter().any(|l| l == "{\"event\":\"flight_test\",\"i\":0}"));
+        assert!(snap.iter().any(|l| l.contains("flight_test")));
+        let rendered = render_dump(&path).unwrap();
+        assert!(rendered.contains("reason: unit"), "{rendered}");
+        assert!(rendered.contains("flight_test"), "{rendered}");
+        let all = render_dir(&dir).unwrap();
+        assert!(all.contains("reason: unit"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn render_dump_rejects_garbage() {
+        let p = std::env::temp_dir().join(format!("occamy-flight-bad-{}.jsonl", std::process::id()));
+        std::fs::write(&p, "not json\n").unwrap();
+        assert!(render_dump(&p).is_err());
+        std::fs::write(&p, "{\"no_reason\":1}\n").unwrap();
+        assert!(render_dump(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

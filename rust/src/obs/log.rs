@@ -103,7 +103,9 @@ impl Event {
     /// Render to one JSON line (no trailing newline). Reserved keys
     /// (`event`, `src`, `level`, `cycle`, `t_ms`) win over same-named
     /// payload fields — the BTreeMap insert order below guarantees it.
-    fn render(&self) -> String {
+    /// Public so the flight recorder and the loadgen `--record` sink can
+    /// reuse the exact sink byte format without going through a log.
+    pub fn render(&self) -> String {
         let mut obj = self.fields.clone();
         obj.insert("event".to_string(), Json::Str(self.event.to_string()));
         obj.insert("src".to_string(), Json::Str(self.src.to_string()));
@@ -131,6 +133,9 @@ struct Inner {
     /// Write failures (full/readonly disk) — logging degrades, never
     /// fails the workload.
     write_errors: u64,
+    /// Lines evicted from the ring because it was full. A non-zero
+    /// count means `recent()` is a tail, not the whole story.
+    dropped: u64,
 }
 
 /// A JSONL event sink: a bounded in-memory ring plus an optional file.
@@ -148,6 +153,7 @@ impl EventLog {
                 ring: VecDeque::new(),
                 file: None,
                 write_errors: 0,
+                dropped: 0,
             }),
         }
     }
@@ -175,6 +181,7 @@ impl EventLog {
         let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         if inner.ring.len() == RING_CAPACITY {
             inner.ring.pop_front();
+            inner.dropped += 1;
         }
         inner.ring.push_back(line.clone());
         if let Some(file) = inner.file.as_mut() {
@@ -194,6 +201,13 @@ impl EventLog {
     pub fn write_errors(&self) -> u64 {
         let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         inner.write_errors
+    }
+
+    /// Lines evicted from the ring so far (the file sink, when present,
+    /// still has them — only `recent()` forgets).
+    pub fn dropped(&self) -> u64 {
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        inner.dropped
     }
 }
 
@@ -249,6 +263,12 @@ pub fn recent() -> Vec<String> {
     GLOBAL.get().map(EventLog::recent).unwrap_or_default()
 }
 
+/// Ring evictions in the process-wide sink (0 when uninitialized).
+/// Exported as `occamy_log_dropped_total` by the serve metrics verb.
+pub fn dropped() -> u64 {
+    GLOBAL.get().map(EventLog::dropped).unwrap_or(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +316,21 @@ mod tests {
         let lines = log.recent();
         assert_eq!(lines.len(), RING_CAPACITY);
         assert!(lines[0].contains("\"cycle\":10"), "oldest evicted: {}", lines[0]);
+    }
+
+    #[test]
+    fn saturating_the_ring_counts_drops() {
+        let log = EventLog::in_memory();
+        assert_eq!(log.dropped(), 0);
+        for i in 0..(RING_CAPACITY as u64) {
+            log.emit(&Event::sim("t", "fill", i));
+        }
+        assert_eq!(log.dropped(), 0, "exactly full is not yet a drop");
+        for i in 0..17u64 {
+            log.emit(&Event::sim("t", "overflow", i));
+        }
+        assert_eq!(log.dropped(), 17);
+        assert_eq!(log.recent().len(), RING_CAPACITY);
     }
 
     #[test]

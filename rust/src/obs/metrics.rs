@@ -215,6 +215,19 @@ pub fn register_fast_stats(r: &mut Registry, s: &FastStats) {
     );
 }
 
+/// Register the event-log sink's health counters — ring evictions and
+/// file write failures. A rising `occamy_log_dropped_total` means the
+/// in-memory tail (`recent()`) no longer covers the window a scraper
+/// might care about.
+pub fn register_log_stats(r: &mut Registry) {
+    r.counter(
+        "occamy_log_dropped_total",
+        "Event lines evicted from the in-memory log ring",
+        &[],
+        crate::obs::log::dropped(),
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +296,15 @@ mod tests {
         assert!(text.contains("occamy_store_memory_hits_total 1\n"), "{text}");
         assert!(text.contains("occamy_store_disk_hits_total 2\n"), "{text}");
         assert!(text.contains("occamy_store_simulations_total 3\n"), "{text}");
+    }
+
+    #[test]
+    fn log_stats_expose_the_drop_counter() {
+        let mut r = Registry::new();
+        register_log_stats(&mut r);
+        let text = r.render();
+        assert!(text.contains("# TYPE occamy_log_dropped_total counter\n"), "{text}");
+        assert!(text.contains("occamy_log_dropped_total "), "{text}");
     }
 
     #[test]

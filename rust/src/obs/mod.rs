@@ -29,11 +29,31 @@
 //!   protocol exposes it through the `metrics` verb (alongside the
 //!   JSON `stats` verb), so a standard scraper can watch a long-lived
 //!   daemon: `occamy loadgen --connect HOST:PORT --requests 0 --metrics`.
+//! * [`span`] — deterministic distributed-tracing spans: every request
+//!   carries a trace/span id derived from its key and admission seq (no
+//!   wall-clock entropy), with parent/child spans at each layer boundary
+//!   and `traceparent` propagation across processes and hosts
+//!   (`--trace-parent` / `OCCAMY_TRACE_PARENT`). Spans ride the [`log`]
+//!   stream; `occamy trace export --spans` merges them into the
+//!   Perfetto timeline and `occamy trace serve-report` derives
+//!   interference curves from them.
+//! * [`flight`] — an always-on flight recorder: the last N event lines
+//!   in a fixed lock-free ring, dumped to `<store>/flight/` on panic,
+//!   overload shed, or a worker bailing mid-shard; `occamy trace
+//!   flight` renders a dump.
+//! * [`curves`] — latency-vs-inflight interference curves reassembled
+//!   from recorded serve span streams (`occamy trace serve-report`),
+//!   bit-identical to `exp/interference` at matching (inflight, gap)
+//!   points.
 
+pub mod curves;
+pub mod flight;
 pub mod log;
 pub mod metrics;
 pub mod perfetto;
 pub mod report;
+pub mod span;
 
 pub use log::{Event, EventLog, Level};
 pub use metrics::Registry;
+pub use span::{SpanRecord, TraceContext};

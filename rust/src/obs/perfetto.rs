@@ -15,6 +15,13 @@
 //!   plus `queue` lanes holding the arrival → dispatch waits
 //!   ([`Admission::queue_delay`]), packed greedily so overlapping waits
 //!   never share a lane.
+//! * **pids 4–6 — recorded spans:** when a span log rides along
+//!   (`trace export --spans`), pid 4 carries `request` spans greedily
+//!   packed onto lanes, pid 5 their `queue`/`execute` children on the
+//!   lane index of their parent request, and pid 6 the client-side
+//!   `loadgen`/`client` spans from a `--record` file. Wall-domain spans
+//!   (no cycle stamp) have no place on the virtual-cycle axis and are
+//!   skipped.
 //!
 //! Timestamps are **virtual cycles** (1 cycle rendered as 1 µs — the
 //! format's native unit; wall time never appears), and every container
@@ -27,6 +34,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::{Admission, OccupancyParams};
+use crate::obs::span::SpanRecord;
 use crate::runtime::json::Json;
 use crate::sim::{Phase, Time, Trace};
 
@@ -34,6 +42,11 @@ use crate::sim::{Phase, Time, Trace};
 pub const HOST_PID: u64 = 1;
 pub const CLUSTER_PID: u64 = 2;
 pub const COORD_PID: u64 = 3;
+/// Process ids of the recorded-span lane groups: serve-side `request`
+/// spans, their `queue`/`execute` children, and client-side spans.
+pub const SPAN_REQUEST_PID: u64 = 4;
+pub const SPAN_DETAIL_PID: u64 = 5;
+pub const SPAN_CLIENT_PID: u64 = 6;
 
 fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(
@@ -172,6 +185,157 @@ fn batch_events(params: &OccupancyParams, admissions: &[Admission], events: &mut
     }
 }
 
+fn hex16(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn span_args(s: &SpanRecord) -> Json {
+    let mut fields = vec![
+        ("span", Json::Str(hex16(s.span))),
+        ("trace", Json::Str(hex16(s.trace))),
+    ];
+    if let Some(id) = s.field_u64("id") {
+        fields.push(("id", num(id)));
+    }
+    if let Some(k) = s.field_str("kernel") {
+        fields.push(("kernel", Json::Str(k.to_string())));
+    }
+    obj(fields)
+}
+
+fn span_label(s: &SpanRecord) -> String {
+    match s.field_u64("id") {
+        Some(id) => format!("{} {id}", s.name),
+        None => s.name.clone(),
+    }
+}
+
+/// Recorded-span lanes. `request` spans are packed greedily (sorted by
+/// start, admission seq, span id; first lane whose previous span has
+/// ended) so concurrent requests never share a lane. `queue`/`execute`
+/// children reuse their parent request's lane index on the detail pid —
+/// they tile arrival → dispatch → complete inside the parent, so a
+/// detail lane can never overlap either. Client-side spans get their
+/// own greedy packing; wall-domain spans (no cycle) are skipped.
+fn span_events(spans: &[SpanRecord], events: &mut Vec<Json>) {
+    let mut requests: Vec<&SpanRecord> = spans
+        .iter()
+        .filter(|s| s.name == "request" && s.cycle.is_some())
+        .collect();
+    requests.sort_by_key(|s| (s.cycle, s.field_u64("seq"), s.span));
+    let mut lane_ends: Vec<Time> = Vec::new();
+    let mut lane_of: BTreeMap<u64, usize> = BTreeMap::new();
+    for r in &requests {
+        let start = r.cycle.unwrap();
+        let lane = match lane_ends.iter().position(|&end| end <= start) {
+            Some(lane) => lane,
+            None => {
+                lane_ends.push(0);
+                lane_ends.len() - 1
+            }
+        };
+        lane_ends[lane] = start + r.dur;
+        lane_of.insert(r.span, lane);
+    }
+    let mut children: Vec<&SpanRecord> = spans
+        .iter()
+        .filter(|s| {
+            (s.name == "queue" || s.name == "execute")
+                && s.cycle.is_some()
+                && s.parent.is_some_and(|p| lane_of.contains_key(&p))
+        })
+        .collect();
+    children.sort_by_key(|s| (s.cycle, s.span));
+    let mut clients: Vec<&SpanRecord> = spans
+        .iter()
+        .filter(|s| (s.name == "client" || s.name == "loadgen") && s.cycle.is_some())
+        .collect();
+    clients.sort_by_key(|s| (s.cycle, s.span));
+    let mut client_lane_ends: Vec<Time> = Vec::new();
+    let mut client_lanes: Vec<usize> = Vec::new();
+    for c in &clients {
+        let start = c.cycle.unwrap();
+        let lane = match client_lane_ends.iter().position(|&end| end <= start) {
+            Some(lane) => lane,
+            None => {
+                client_lane_ends.push(0);
+                client_lane_ends.len() - 1
+            }
+        };
+        client_lane_ends[lane] = start + c.dur;
+        client_lanes.push(lane);
+    }
+    if !requests.is_empty() {
+        events.push(meta(SPAN_REQUEST_PID, 0, "process_name", "requests (recorded spans)"));
+        for lane in 0..lane_ends.len() {
+            events.push(meta(
+                SPAN_REQUEST_PID,
+                lane as u64,
+                "thread_name",
+                &format!("request lane {lane}"),
+            ));
+        }
+    }
+    if !children.is_empty() {
+        events.push(meta(SPAN_DETAIL_PID, 0, "process_name", "queue/execute (recorded spans)"));
+        for lane in 0..lane_ends.len() {
+            events.push(meta(
+                SPAN_DETAIL_PID,
+                lane as u64,
+                "thread_name",
+                &format!("detail lane {lane}"),
+            ));
+        }
+    }
+    if !clients.is_empty() {
+        events.push(meta(SPAN_CLIENT_PID, 0, "process_name", "clients (recorded spans)"));
+        for lane in 0..client_lane_ends.len() {
+            events.push(meta(
+                SPAN_CLIENT_PID,
+                lane as u64,
+                "thread_name",
+                &format!("client lane {lane}"),
+            ));
+        }
+    }
+    for r in &requests {
+        let start = r.cycle.unwrap();
+        events.push(span(
+            SPAN_REQUEST_PID,
+            lane_of[&r.span] as u64,
+            &span_label(r),
+            "request",
+            start,
+            start + r.dur,
+            span_args(r),
+        ));
+    }
+    for c in &children {
+        let start = c.cycle.unwrap();
+        events.push(span(
+            SPAN_DETAIL_PID,
+            lane_of[&c.parent.unwrap()] as u64,
+            &span_label(c),
+            "detail",
+            start,
+            start + c.dur,
+            span_args(c),
+        ));
+    }
+    for (c, lane) in clients.iter().zip(client_lanes) {
+        let start = c.cycle.unwrap();
+        events.push(span(
+            SPAN_CLIENT_PID,
+            lane as u64,
+            &span_label(c),
+            "client",
+            start,
+            start + c.dur,
+            span_args(c),
+        ));
+    }
+}
+
 fn document(label: &str, events: Vec<Json>) -> Json {
     obj(vec![
         ("displayTimeUnit", Json::Str("ms".to_string())),
@@ -205,6 +369,39 @@ pub fn batch_timeline(
     let mut events = Vec::new();
     job_events(trace, &mut events);
     batch_events(params, admissions, &mut events);
+    document(label, events)
+}
+
+/// Recorded spans alone as a timeline document (pids 4–6).
+pub fn spans_timeline(label: &str, spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::new();
+    span_events(spans, &mut events);
+    document(label, events)
+}
+
+/// A job timeline with recorded span lanes merged in: one request's
+/// journey (client → request → queue/execute) rendered next to the
+/// phase anatomy it executes, on the shared virtual-cycle axis.
+pub fn job_timeline_with_spans(label: &str, trace: &Trace, spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::new();
+    job_events(trace, &mut events);
+    span_events(spans, &mut events);
+    document(label, events)
+}
+
+/// A batch timeline with recorded span lanes merged in (pids 4–6
+/// alongside the host/cluster/coordinator lanes).
+pub fn batch_timeline_with_spans(
+    label: &str,
+    trace: &Trace,
+    params: &OccupancyParams,
+    admissions: &[Admission],
+    spans: &[SpanRecord],
+) -> Json {
+    let mut events = Vec::new();
+    job_events(trace, &mut events);
+    batch_events(params, admissions, &mut events);
+    span_events(spans, &mut events);
     document(label, events)
 }
 
@@ -344,6 +541,56 @@ mod tests {
             render(&batch_timeline("batch", &trace, &params, &admissions)),
             render(&doc)
         );
+    }
+
+    fn rec(ev: crate::obs::log::Event) -> SpanRecord {
+        SpanRecord::parse(&ev.render()).unwrap()
+    }
+
+    #[test]
+    fn recorded_span_lanes_pack_and_stay_child_aligned() {
+        use crate::obs::span::{child_span, sim_span, TraceContext};
+        let root = TraceContext::root("perfetto-test");
+        let r1 = root.child("a", 0);
+        let r2 = root.child("a", 1);
+        let q1 = TraceContext { trace: r1.trace, span: child_span(r1.span, "queue") };
+        let x1 = TraceContext { trace: r1.trace, span: child_span(r1.span, "execute") };
+        let spans = vec![
+            rec(sim_span("request", r1, None, 0, 100).u64("id", 1).u64("seq", 0)),
+            rec(sim_span("queue", q1, Some(r1.span), 0, 20).u64("id", 1)),
+            rec(sim_span("execute", x1, Some(r1.span), 20, 80).u64("id", 1)),
+            rec(sim_span("request", r2, None, 10, 100).u64("id", 2).u64("seq", 1)),
+            rec(sim_span("client", root.child("c", 0), Some(root.span), 0, 100).u64("id", 1)),
+        ];
+        let doc = spans_timeline("spans", &spans);
+        assert_lanes_non_overlapping(&doc);
+        let lanes = lanes(&doc);
+        assert!(lanes.contains_key(&(SPAN_REQUEST_PID, 0)));
+        assert!(
+            lanes.contains_key(&(SPAN_REQUEST_PID, 1)),
+            "overlapping requests must split onto two lanes"
+        );
+        // The queue/execute children tile their parent request's
+        // interval on the matching detail lane.
+        assert_eq!(lanes[&(SPAN_DETAIL_PID, 0)], vec![(0, 20), (20, 100)]);
+        assert!(lanes.contains_key(&(SPAN_CLIENT_PID, 0)));
+        assert_eq!(span_count(&doc), 5);
+        // Deterministic bytes, merged or standalone.
+        assert_eq!(render(&spans_timeline("spans", &spans)), render(&doc));
+        let merged = job_timeline_with_spans("merged", &small_trace(), &spans);
+        assert_lanes_non_overlapping(&merged);
+        assert_eq!(
+            render(&job_timeline_with_spans("merged", &small_trace(), &spans)),
+            render(&merged)
+        );
+    }
+
+    #[test]
+    fn wall_spans_are_left_off_the_cycle_axis() {
+        use crate::obs::span::{wall_span, TraceContext};
+        let root = TraceContext::root("wall");
+        let spans = vec![rec(wall_span("fleet_run", root, None))];
+        assert_eq!(span_count(&spans_timeline("spans", &spans)), 0);
     }
 
     #[test]

@@ -272,6 +272,32 @@ mod tests {
     }
 
     #[test]
+    fn empty_and_config_only_stores_scan_to_zero_traces() {
+        let dir = std::env::temp_dir().join(format!(
+            "occamy-obs-report-empty-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Brand-new store root: no fingerprint dirs at all.
+        assert!(scan(&dir).unwrap().is_empty());
+        // A fingerprint dir holding only the config sidecar and foreign
+        // files scans clean too — nothing parses as a request key, and
+        // none of it is an error.
+        let fp = dir.join("0123456789abcdef");
+        std::fs::create_dir_all(&fp).unwrap();
+        std::fs::write(fp.join("config.json"), "{}").unwrap();
+        std::fs::write(fp.join("not-a-key.json"), "{}").unwrap();
+        std::fs::write(fp.join("x-c2-bogusroutine.json"), "{}").unwrap();
+        std::fs::write(fp.join("README.txt"), "hi").unwrap();
+        assert!(scan(&dir).unwrap().is_empty());
+        // A missing root stays a hard error, hint intact.
+        let err = scan(&dir.join("nope")).unwrap_err().to_string();
+        assert!(err.contains("--store"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn store_report_reproduces_fig11_bit_identically() {
         // A config distinct from every other test's cache namespace.
         let mut cfg = Config::default();

@@ -42,7 +42,9 @@ use crate::sim::{fast, SimProfile, Time};
 use crate::sweep::{cache, OffloadRequest};
 
 use crate::obs::log::{self as obslog, Event, Level};
-use crate::obs::metrics::{register_store_stats, Registry};
+use crate::obs::metrics::{register_log_stats, register_store_stats, Registry};
+use crate::obs::span::{self, TraceContext};
+use crate::obs::flight;
 
 use super::metrics::ServeMetrics;
 use super::proto::{ErrorReply, JobReply, MetricsReply, Rejected, Reply, Request, StatsReply, Submit};
@@ -106,12 +108,30 @@ pub struct Engine {
     summary_every: u64,
     summary_due: bool,
     profile: SimProfile,
+    /// Admission sequence number for accelerator placements — the
+    /// deterministic half of every span id.
+    seq: u64,
+    /// One flight dump per overload burst, not one per shed request.
+    shed_dumped: bool,
 }
 
 impl Engine {
     pub fn new(opts: EngineOptions) -> anyhow::Result<Self> {
         anyhow::ensure!(opts.inflight >= 1, "inflight must be >= 1");
         anyhow::ensure!(opts.queue_factor >= 1, "queue-factor must be >= 1");
+        if let Some(root) = &opts.store_root {
+            flight::set_dump_dir(&root.join("flight"));
+            flight::install_panic_hook();
+        }
+        // Config banner: serve-report uses it as the group delimiter
+        // when several daemon logs are concatenated. Not a span.
+        obslog::emit(
+            &Event::sim("serve", "engine_start", 0)
+                .u64("inflight", opts.inflight as u64)
+                .u64("queue_factor", opts.queue_factor as u64)
+                .u64("gap", opts.default_gap)
+                .str("profile", opts.profile.name()),
+        );
         let store = opts.store_root.map(TraceStore::open).transpose()?;
         let fp = store::fingerprint(&opts.cfg);
         let mem_key = cache::profiled_config_key(&opts.cfg, opts.profile);
@@ -135,6 +155,8 @@ impl Engine {
             summary_every: opts.summary_every,
             summary_due: false,
             profile: opts.profile,
+            seq: 0,
+            shed_dumped: false,
         })
     }
 
@@ -194,7 +216,8 @@ impl Engine {
 
         // Advance the open-loop arrival clock, then retire everything
         // the fabric finished before this arrival.
-        self.clock = self.clock.saturating_add(s.gap.unwrap_or(self.default_gap));
+        let gap = s.gap.unwrap_or(self.default_gap);
+        self.clock = self.clock.saturating_add(gap);
         while let Some(&Reverse(c)) = self.outstanding.peek() {
             if c > self.clock {
                 break;
@@ -205,15 +228,21 @@ impl Engine {
         // Admission control: the bounded queue. Full → shed, visibly.
         if self.outstanding.len() >= self.queue_bound {
             self.metrics.record_rejection();
+            let ev = Event::sim("serve", "reject", self.clock)
+                .level(Level::Warn)
+                .u64("id", s.id)
+                .str("kernel", &s.kernel)
+                .u64("backlog", self.outstanding.len() as u64)
+                .u64("bound", self.queue_bound as u64);
+            flight::note(&ev.render());
             if obslog::enabled() {
-                obslog::emit(
-                    &Event::sim("serve", "reject", self.clock)
-                        .level(Level::Warn)
-                        .u64("id", s.id)
-                        .str("kernel", &s.kernel)
-                        .u64("backlog", self.outstanding.len() as u64)
-                        .u64("bound", self.queue_bound as u64),
-                );
+                obslog::emit(&ev);
+            }
+            // First shed of a burst dumps the flight ring: the requests
+            // leading into the overload are exactly the post-mortem.
+            if !self.shed_dumped {
+                self.shed_dumped = true;
+                flight::dump("overload");
             }
             return Reply::Rejected(Rejected {
                 id: s.id,
@@ -261,9 +290,10 @@ impl Engine {
             }
             Placement::Accelerator { n_clusters } => {
                 let req = OffloadRequest::new(spec, n_clusters, routine);
+                let arrival = self.clock;
                 if obslog::enabled() {
                     obslog::emit(
-                        &Event::sim("serve", "accept", self.clock)
+                        &Event::sim("serve", "accept", arrival)
                             .u64("id", s.id)
                             .str("kernel", &s.kernel)
                             .u64("clusters", n_clusters as u64)
@@ -271,12 +301,39 @@ impl Engine {
                     );
                 }
                 let (service, source) = self.service_cycles(req);
-                let adm = self.model.admit_at(self.clock, n_clusters, service);
+                let adm = self.model.admit_at(arrival, n_clusters, service);
                 self.outstanding.push(Reverse(adm.completion));
                 // End-to-end wait from the *open-loop* arrival, which
                 // includes any window-floor deferral the model applied.
-                let queue_delay = adm.start - self.clock;
+                let queue_delay = adm.start - arrival;
                 self.metrics.record_accel(service, queue_delay, source);
+                self.shed_dumped = false;
+
+                // Span tree for this request: derived ids only — the
+                // submit's traceparent (when present) parents the
+                // request span; otherwise the request roots its own
+                // trace, so server-only logs still form complete trees.
+                let seq = self.seq;
+                self.seq += 1;
+                let span_key = format!("{}|c{}|{}", s.kernel, n_clusters, routine.name());
+                let (ctx, parent) = match s.traceparent.as_deref().and_then(TraceContext::parse) {
+                    Some(tp) => (tp.child(&span_key, seq), Some(tp.span)),
+                    None => (span::self_rooted(&self.fp, &span_key, seq), None),
+                };
+                let request_span = span::sim_span(
+                    "request",
+                    ctx,
+                    parent,
+                    arrival,
+                    adm.completion - arrival,
+                )
+                .u64("id", s.id)
+                .str("kernel", &s.kernel)
+                .u64("clusters", n_clusters as u64)
+                .str("routine", routine.name())
+                .u64("seq", seq)
+                .u64("gap", gap);
+                flight::note(&request_span.render());
                 if obslog::enabled() {
                     let tier = match source {
                         Source::Mem => "hit_mem",
@@ -284,7 +341,7 @@ impl Engine {
                         Source::Sim => "fresh_sim",
                     };
                     obslog::emit(
-                        &Event::sim("serve", tier, self.clock)
+                        &Event::sim("serve", tier, arrival)
                             .u64("id", s.id)
                             .u64("cycles", service),
                     );
@@ -297,6 +354,24 @@ impl Engine {
                         &Event::sim("serve", "complete", adm.completion)
                             .u64("id", s.id)
                             .u64("latency", service + queue_delay),
+                    );
+                    obslog::emit(&request_span);
+                    let queue_ctx = TraceContext {
+                        trace: ctx.trace,
+                        span: span::child_span(ctx.span, "queue"),
+                    };
+                    obslog::emit(
+                        &span::sim_span("queue", queue_ctx, Some(ctx.span), arrival, queue_delay)
+                            .u64("id", s.id),
+                    );
+                    let exec_ctx = TraceContext {
+                        trace: ctx.trace,
+                        span: span::child_span(ctx.span, "execute"),
+                    };
+                    obslog::emit(
+                        &span::sim_span("execute", exec_ctx, Some(ctx.span), adm.start, service)
+                            .u64("id", s.id)
+                            .str("source", source.name()),
                     );
                 }
                 self.after_completion();
@@ -367,6 +442,7 @@ impl Engine {
         if self.profile == SimProfile::Fast {
             crate::obs::metrics::register_fast_stats(&mut r, &fast::stats());
         }
+        register_log_stats(&mut r);
         r.render()
     }
 
@@ -412,6 +488,7 @@ mod tests {
             routine: Some(RoutineKind::Multicast),
             gap: Some(gap),
             seed: None,
+            traceparent: None,
         }
     }
 
@@ -529,6 +606,7 @@ mod tests {
                 routine: None,
                 gap: None,
                 seed: None,
+                traceparent: None,
             };
             match e.handle(&Request::Submit(s)) {
                 Reply::Error(err) => assert_eq!(err.id, Some(id)),
@@ -555,6 +633,7 @@ mod tests {
             routine: None,
             gap: None,
             seed: None,
+            traceparent: None,
         };
         match e.handle(&Request::Submit(s)) {
             Reply::Result(r) => {
@@ -620,12 +699,68 @@ mod tests {
         assert!(has(987_001, "dispatch"), "{mine:?}");
         assert!(has(987_001, "complete"), "{mine:?}");
         assert!(has(987_002, "reject"), "second job overflows the bound: {mine:?}");
+        // The admitted request also left its span tree.
+        assert!(has(987_001, "request"), "{mine:?}");
+        assert!(has(987_001, "queue"), "{mine:?}");
+        assert!(has(987_001, "execute"), "{mine:?}");
         // Sim-domain lines are wall-free and cycle-stamped.
         for l in &mine {
             assert!(!l.contains("t_ms"), "{l}");
             assert!(l.contains("\"cycle\":"), "{l}");
-            assert!(l.contains("\"src\":\"serve\""), "{l}");
+            assert!(
+                l.contains("\"src\":\"serve\"") || l.contains("\"src\":\"span\""),
+                "{l}"
+            );
         }
+    }
+
+    #[test]
+    fn admitted_requests_emit_well_formed_span_trees() {
+        crate::obs::log::init(crate::obs::log::EventLog::in_memory());
+        let parent = crate::obs::TraceContext::root("engine-span-test");
+        let mut e = Engine::new(EngineOptions {
+            cfg: cfg_with_gap(9321),
+            inflight: 2,
+            ..EngineOptions::default()
+        })
+        .unwrap();
+        // One inherited trace, one self-rooted.
+        let mut inherited = submit(988_001, "axpy:832", 4, 0);
+        inherited.traceparent = Some(parent.render());
+        e.handle(&Request::Submit(inherited));
+        e.handle(&Request::Submit(submit(988_002, "axpy:832", 4, 100)));
+        let spans: Vec<crate::obs::SpanRecord> = crate::obs::log::recent()
+            .iter()
+            .filter(|l| l.contains("\"id\":988"))
+            .filter_map(|l| crate::obs::SpanRecord::parse(l))
+            .collect();
+        assert_eq!(spans.len(), 6, "two requests x request/queue/execute");
+        let req1 = spans
+            .iter()
+            .find(|s| s.name == "request" && s.field_u64("id") == Some(988_001))
+            .unwrap();
+        assert_eq!(req1.trace, parent.trace, "inherited trace id");
+        assert_eq!(req1.parent, Some(parent.span));
+        let req2 = spans
+            .iter()
+            .find(|s| s.name == "request" && s.field_u64("id") == Some(988_002))
+            .unwrap();
+        assert_eq!(req2.parent, None, "no traceparent: self-rooted");
+        assert_ne!(req2.trace, req1.trace);
+        // The self-rooted trace is a complete, well-formed tree; the
+        // inherited one only becomes complete once the client's root
+        // span joins it, so check it with the root grafted in.
+        let mut all: Vec<crate::obs::SpanRecord> = spans
+            .iter()
+            .filter(|s| s.trace == req2.trace)
+            .cloned()
+            .collect();
+        crate::obs::span::check_trees(&all).unwrap();
+        all = spans.iter().filter(|s| s.trace == req1.trace).cloned().collect();
+        let root_line = crate::obs::span::sim_span("client_root", parent, None, 0, u32::MAX as u64)
+            .render();
+        all.push(crate::obs::SpanRecord::parse(&root_line).unwrap());
+        crate::obs::span::check_trees(&all).unwrap();
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! shed them, which is precisely the behavior admission control exists
 //! to make visible.
 //!
-//! Three arrival shapes, all seeded and deterministic:
+//! Four arrival shapes, all seeded and deterministic:
 //! - **poisson**: exponential gaps around a mean — memoryless baseline.
 //! - **bursty**: on/off. Requests arrive in dense bursts (gaps at a
 //!   quarter of the mean) separated by long off-gaps sized so the
@@ -18,11 +18,18 @@
 //! - **diurnal**: exponential gaps whose rate swings sinusoidally over
 //!   a virtual "day", modeling the daily load curve a shared
 //!   simulation service actually sees.
+//! - **fixed**: every gap is exactly `mean_gap` — including 0, the
+//!   saturating burst `exp/interference` sweeps. The recording path
+//!   (`--record`) leans on this: a fixed-gap run reproduces the
+//!   interference experiment's schedule on the daemon.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::path::PathBuf;
 
 use crate::coordinator::Dist;
+use crate::obs::span;
+use crate::obs::TraceContext;
 use crate::offload::RoutineKind;
 use crate::rng::Rng64;
 
@@ -34,6 +41,7 @@ pub enum ArrivalKind {
     Poisson,
     Bursty,
     Diurnal,
+    Fixed,
 }
 
 impl ArrivalKind {
@@ -42,6 +50,7 @@ impl ArrivalKind {
             "poisson" => Some(ArrivalKind::Poisson),
             "bursty" => Some(ArrivalKind::Bursty),
             "diurnal" => Some(ArrivalKind::Diurnal),
+            "fixed" => Some(ArrivalKind::Fixed),
             _ => None,
         }
     }
@@ -51,6 +60,7 @@ impl ArrivalKind {
             ArrivalKind::Poisson => "poisson",
             ArrivalKind::Bursty => "bursty",
             ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::Fixed => "fixed",
         }
     }
 }
@@ -62,6 +72,8 @@ pub struct ArrivalProcess {
     kind: ArrivalKind,
     /// Long-run mean inter-arrival gap (cycles).
     mean_gap: f64,
+    /// Fixed: the exact gap, unclamped — 0 is the saturating burst.
+    fixed: u64,
     /// Bursty: requests per on-burst.
     burst: u64,
     /// Diurnal: virtual cycles per full rate oscillation.
@@ -78,6 +90,7 @@ impl ArrivalProcess {
         Self {
             kind,
             mean_gap: (mean_gap.max(1)) as f64,
+            fixed: mean_gap,
             burst: burst.max(2),
             period: (period.max(1)) as f64,
             rng: Rng64::seed_from_u64(seed),
@@ -94,7 +107,13 @@ impl ArrivalProcess {
 
     /// The next inter-arrival gap, in virtual cycles.
     pub fn next_gap(&mut self) -> u64 {
+        if self.kind == ArrivalKind::Fixed {
+            self.emitted += 1;
+            self.elapsed += self.fixed as f64;
+            return self.fixed;
+        }
         let gap = match self.kind {
+            ArrivalKind::Fixed => unreachable!("handled above"),
             ArrivalKind::Poisson => self.exp(self.mean_gap),
             ArrivalKind::Bursty => {
                 // Every `burst`-th arrival opens a new burst after a
@@ -147,6 +166,11 @@ pub struct LoadgenOptions {
     pub fetch_metrics: bool,
     /// Send `shutdown` after the burst (and the stats fetch).
     pub shutdown: bool,
+    /// Write a client-side span log (JSONL) of send/reply instants on
+    /// the virtual arrival timeline: one `client` span per completed
+    /// request under one `loadgen` root span. Deterministic under the
+    /// seeded arrival process — no wall clocks.
+    pub record: Option<PathBuf>,
 }
 
 impl Default for LoadgenOptions {
@@ -170,6 +194,7 @@ impl Default for LoadgenOptions {
             fetch_stats: true,
             fetch_metrics: false,
             shutdown: false,
+            record: None,
         }
     }
 }
@@ -258,15 +283,28 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
     let mut mix_rng = Rng64::seed_from_u64(opts.seed ^ 0x6D69_785F_7365_6564);
     let mut report = LoadgenReport::default();
 
+    // Every request carries a trace context derived from the seed, so
+    // the daemon's request spans stitch under this run's root span.
+    let root = TraceContext::root(&format!("loadgen-{}", opts.seed));
+    let mut record_lines: Vec<String> = Vec::new();
+    // The client's virtual send clock mirrors the daemon's arrival
+    // clock exactly: both advance by the same per-request gaps.
+    let mut send_clock: u64 = 0;
+    let mut last_end: u64 = 0;
+
     for id in 0..opts.requests {
         let kernel = opts.mix[mix_rng.gen_range_usize(0, opts.mix.len())].clone();
+        let gap = arrivals.next_gap();
+        send_clock = send_clock.saturating_add(gap);
+        let ctx = root.child(&kernel, id);
         let submit = Submit {
             id,
             kernel,
             clusters: opts.clusters,
             routine: opts.routine,
-            gap: Some(arrivals.next_gap()),
+            gap: Some(gap),
             seed: Some(opts.seed.wrapping_add(id)),
+            traceparent: Some(ctx.render()),
         };
         report.submitted += 1;
         match exchange(&mut writer, &mut reader, &Request::Submit(submit))? {
@@ -276,6 +314,18 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
                 if r.hit {
                     report.hits += 1;
                 }
+                if opts.record.is_some() {
+                    // Send instant and client-observed latency, both on
+                    // the virtual timeline: the client span encloses the
+                    // daemon's request span byte-deterministically.
+                    record_lines.push(
+                        span::sim_span("client", ctx, Some(root.span), send_clock, r.latency)
+                            .u64("id", id)
+                            .str("kernel", &r.kernel)
+                            .render(),
+                    );
+                    last_end = last_end.max(send_clock.saturating_add(r.latency));
+                }
             }
             Reply::Rejected(_) => report.rejected += 1,
             Reply::Error(_) => report.failures += 1,
@@ -284,6 +334,20 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
                 eprintln!("loadgen: unexpected reply to submit: {other:?}");
             }
         }
+    }
+
+    if let Some(path) = &opts.record {
+        let mut out = String::new();
+        // Root span first, spanning the whole recorded run, so the file
+        // alone forms a complete tree.
+        out.push_str(&span::sim_span("loadgen", root, None, 0, last_end).render());
+        out.push('\n');
+        for l in &record_lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        std::fs::write(path, out)
+            .map_err(|e| anyhow::anyhow!("write record {}: {e}", path.display()))?;
     }
 
     if opts.fetch_stats {
@@ -445,6 +509,25 @@ mod tests {
             slo_cycles: 1_000_000,
             slo_violations: 0,
             jobs_per_sim_second: None,
+            profile: "reference".to_string(),
         }
+    }
+
+    #[test]
+    fn fixed_gaps_are_raw_and_constant() {
+        // No clamp, no rng: gap 0 stays 0 — the saturating burst the
+        // interference sweep uses — and any other value repeats exactly.
+        let mut zero = ArrivalProcess::new(ArrivalKind::Fixed, 0, 8, 1_000_000, 42);
+        let mut paced = ArrivalProcess::new(ArrivalKind::Fixed, 777, 8, 1_000_000, 42);
+        for _ in 0..64 {
+            assert_eq!(zero.next_gap(), 0);
+            assert_eq!(paced.next_gap(), 777);
+        }
+    }
+
+    #[test]
+    fn arrival_kind_fixed_round_trips() {
+        assert_eq!(ArrivalKind::parse("fixed"), Some(ArrivalKind::Fixed));
+        assert_eq!(ArrivalKind::Fixed.name(), "fixed");
     }
 }

@@ -25,9 +25,13 @@
 //!   dispatch, complete, reject — stamped in virtual cycles.
 //! * [`server`] — the TCP front end: concurrent sessions, graceful
 //!   drain on shutdown, nothing a client writes can take it down.
-//! * [`loadgen`] — a seeded open-loop client: Poisson, bursty and
-//!   diurnal arrivals over a kernel mix, reporting client-side
-//!   latency percentiles next to the server's own stats.
+//! * [`loadgen`] — a seeded open-loop client: Poisson, bursty, diurnal
+//!   and fixed arrivals over a kernel mix, reporting client-side
+//!   latency percentiles next to the server's own stats. Every submit
+//!   carries a deterministic `traceparent`, so the daemon's
+//!   request/queue/execute spans ([`obs::span`](crate::obs::span))
+//!   stitch under the client's trace; `--record FILE` writes the
+//!   client-side span log on the same virtual clock.
 //!
 //! Because time is virtual and arrivals ride in the requests, a serve
 //! run is a *reproducible experiment*: the same seed and mix produce the

@@ -61,6 +61,12 @@ pub struct Submit {
     /// accepts and ignores it (kept so submissions stay
     /// `JobRequest`-shaped).
     pub seed: Option<u64>,
+    /// Inherited trace context, `<trace:016x>-<span:016x>`
+    /// ([`crate::obs::TraceContext`]). When present the daemon parents
+    /// this request's span under it; when absent the request gets a
+    /// self-rooted trace. Unparseable values are ignored, not errors —
+    /// tracing never fails a submission.
+    pub traceparent: Option<String>,
 }
 
 /// A daemon → client message.
@@ -255,6 +261,9 @@ impl Request {
                 if let Some(seed) = s.seed {
                     pairs.push(("seed", num(seed)));
                 }
+                if let Some(tp) = &s.traceparent {
+                    pairs.push(("traceparent", Json::Str(tp.clone())));
+                }
                 obj(pairs)
             }
             Request::Stats => obj(vec![("op", Json::Str("stats".into()))]),
@@ -277,6 +286,12 @@ impl Request {
                         )
                     }
                 };
+                let traceparent = match v.get("traceparent") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(
+                        j.as_str().ok_or("non-string \"traceparent\"")?.to_string(),
+                    ),
+                };
                 Ok(Request::Submit(Submit {
                     id: need_u64(v, "id")?,
                     kernel: need_str(v, "kernel")?.to_string(),
@@ -284,6 +299,7 @@ impl Request {
                     routine,
                     gap: opt_u64(v, "gap")?,
                     seed: opt_u64(v, "seed")?,
+                    traceparent,
                 }))
             }
             "stats" => Ok(Request::Stats),
@@ -560,6 +576,7 @@ mod tests {
                 routine: Some(RoutineKind::Multicast),
                 gap: Some(120),
                 seed: Some(99),
+                traceparent: Some("00f1e2d3c4b5a697-0123456789abcdef".into()),
             }),
             Request::Submit(Submit {
                 id: 0,
@@ -568,6 +585,7 @@ mod tests {
                 routine: None,
                 gap: None,
                 seed: None,
+                traceparent: None,
             }),
             Request::Stats,
             Request::Metrics,

@@ -168,7 +168,7 @@ impl ServeSpec {
                             Some(kind) => spec.loadgen.process = Some(kind),
                             None => {
                                 return Err(at(format!(
-                                    "unknown process {name:?} (poisson, bursty or diurnal)"
+                                    "unknown process {name:?} (poisson, bursty, diurnal or fixed)"
                                 )))
                             }
                         }

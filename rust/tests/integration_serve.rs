@@ -58,6 +58,7 @@ fn submit(id: u64, kernel: &str, clusters: usize, gap: u64) -> Request {
         routine: Some(RoutineKind::Multicast),
         gap: Some(gap),
         seed: None,
+        traceparent: None,
     })
 }
 

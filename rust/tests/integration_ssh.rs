@@ -140,6 +140,7 @@ fn ssh_worker_pid_banner_arrives_and_kill_terminates_the_remote_process() {
         run_id: "pid-test".into(),
         attempt: 0,
         max_points: None,
+        trace_parent: None,
     };
     let mut handle = launcher.launch(&task).unwrap();
     // The pid banner is the first stdout line; wait for the reader

@@ -1,0 +1,238 @@
+//! End-to-end tests of the distributed-tracing surface: span-merged
+//! Perfetto exports are byte-identical across runs, recorded span trees
+//! stay well-formed across seeded serve bursts, and a worker subprocess
+//! that panics (or bails mid-shard) leaves a flight-recorder dump that
+//! `occamy trace flight` renders.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use occamy_offload::config::Config;
+use occamy_offload::obs::{self, SpanRecord};
+use occamy_offload::serve::{Engine, EngineOptions, Request, Submit};
+
+/// The occamy binary built for this test run.
+fn occamy_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_occamy"))
+}
+
+/// Unique scratch directory per call (tests run in parallel).
+fn temp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "occamy-tracing-it-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Unique timing offset per test so the process-wide cache never
+/// aliases across parallel tests (the campaign test idiom).
+fn cfg_with_gap(gap: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.timing.host_ipi_issue_gap = gap;
+    cfg
+}
+
+fn submit(id: u64, kernel: &str, clusters: usize, gap: u64) -> Submit {
+    Submit {
+        id,
+        kernel: kernel.into(),
+        clusters: Some(clusters),
+        routine: None,
+        gap: Some(gap),
+        seed: None,
+        traceparent: None,
+    }
+}
+
+/// Run a seeded burst through an in-process engine and return the event
+/// lines it logged, filtered by the burst's id prefix (other tests in
+/// this binary share the process-wide in-memory ring).
+fn burst_lines(cfg_gap: u64, inflight: usize, ids: std::ops::Range<u64>, kernel: &str) -> Vec<String> {
+    obs::log::init(obs::log::EventLog::in_memory());
+    let mut e = Engine::new(EngineOptions {
+        cfg: cfg_with_gap(cfg_gap),
+        inflight,
+        ..EngineOptions::default()
+    })
+    .unwrap();
+    let prefix = format!("\"id\":{}", ids.start / 1000);
+    for (k, id) in ids.clone().enumerate() {
+        e.handle(&Request::Submit(submit(id, kernel, 4, (k as u64) * 60)));
+    }
+    obs::log::recent().into_iter().filter(|l| l.contains(&prefix)).collect()
+}
+
+#[test]
+fn span_merged_export_is_byte_identical_across_runs() {
+    let lines = burst_lines(9401, 2, 991_000..991_004, "axpy:288");
+    let spans: Vec<SpanRecord> =
+        lines.iter().filter_map(|l| SpanRecord::parse(l)).collect();
+    assert!(
+        spans.iter().any(|s| s.name == "request"),
+        "the burst recorded request spans: {lines:?}"
+    );
+
+    let dir = temp_dir("export");
+    let log_path = dir.join("spans.jsonl");
+    std::fs::write(&log_path, lines.join("\n") + "\n").unwrap();
+
+    let export = |out: &Path| {
+        let output = Command::new(occamy_exe())
+            .args(["trace", "export", "--batch", "4", "--inflight", "2"])
+            .arg("--out")
+            .arg(out)
+            .arg("--spans")
+            .arg(&log_path)
+            .output()
+            .unwrap();
+        assert!(
+            output.status.success(),
+            "trace export failed: {}",
+            String::from_utf8_lossy(&output.stderr)
+        );
+        std::fs::read(out).unwrap()
+    };
+    let a = export(&dir.join("a.json"));
+    let b = export(&dir.join("b.json"));
+    assert_eq!(a, b, "span-merged export is byte-identical across runs");
+
+    let text = String::from_utf8(a).unwrap();
+    assert!(text.contains("request lane 0"), "recorded request lane present");
+    assert!(text.contains("detail lane 0"), "queue/execute child lane present");
+    assert!(text.contains("\"cat\":\"request\""), "request spans carry their category");
+}
+
+#[test]
+fn recorded_span_trees_stay_well_formed_across_seeded_bursts() {
+    let mut spans: Vec<SpanRecord> = Vec::new();
+    for b in 0..3u64 {
+        let kernel = format!("axpy:{}", 320 + 32 * b);
+        // Distinct thousands per burst: the id prefix is the ring filter.
+        let base = 992_000 + 1_000 * b;
+        let lines = burst_lines(9411 + b, 1 + b as usize, base..(base + 5), &kernel);
+        spans.extend(lines.iter().filter_map(|l| SpanRecord::parse(l)));
+    }
+    // Without a traceparent each admitted request roots its own trace,
+    // so the whole recorded set must already form complete trees.
+    obs::span::check_trees(&spans).unwrap();
+    let requests: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "request").collect();
+    assert!(requests.len() >= 3, "several bursts admitted requests: {}", requests.len());
+    for req in requests {
+        assert_eq!(req.parent, None, "self-rooted without a traceparent");
+        let queue = spans
+            .iter()
+            .find(|s| s.name == "queue" && s.trace == req.trace && s.parent == Some(req.span))
+            .expect("every request span has a queue child");
+        let execute = spans
+            .iter()
+            .find(|s| s.name == "execute" && s.trace == req.trace && s.parent == Some(req.span))
+            .expect("every request span has an execute child");
+        // queue + execute tile the request exactly: arrival -> dispatch
+        // -> completion on the virtual-cycle clock.
+        assert_eq!(queue.cycle, req.cycle);
+        assert_eq!(queue.end().map(|e| Some(e) == execute.cycle), Some(true));
+        assert_eq!(execute.end(), req.end());
+    }
+}
+
+/// Write a small campaign spec for the subprocess tests; two points so
+/// `--max-points 1` always stops mid-shard.
+fn write_spec(dir: &Path, tag: &str, gap: u64) -> PathBuf {
+    let path = dir.join("campaign.toml");
+    let text = format!(
+        "[campaign]\nname = \"tracing-it-{tag}\"\n\n[grid]\nkernels = [\"axpy:96\"]\n\
+         clusters = [1, 2]\nroutines = [\"baseline\"]\n\n\
+         [timing]\nhost_ipi_issue_gap = {gap}\n"
+    );
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+#[test]
+fn a_panicking_worker_leaves_a_renderable_flight_dump() {
+    let dir = temp_dir("panic");
+    let spec = write_spec(&dir, "panic", 9421);
+    let out = dir.join("out");
+    let output = Command::new(occamy_exe())
+        .args(["campaign", "run"])
+        .arg("--spec")
+        .arg(&spec)
+        .arg("--out")
+        .arg(&out)
+        .env("OCCAMY_CHAOS_PANIC", "1")
+        .output()
+        .unwrap();
+    assert!(!output.status.success(), "the chaos hook panics the worker");
+
+    // The panic hook dumped the flight ring next to the store.
+    let flight = out.join("store").join("flight");
+    let dumps: Vec<PathBuf> = std::fs::read_dir(&flight)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with("panic-"))
+        })
+        .collect();
+    assert_eq!(dumps.len(), 1, "exactly one panic dump: {dumps:?}");
+
+    // `occamy trace flight` renders it, both directly and via --store.
+    let rendered = Command::new(occamy_exe())
+        .args(["trace", "flight"])
+        .arg("--dump")
+        .arg(&dumps[0])
+        .output()
+        .unwrap();
+    assert!(rendered.status.success());
+    let text = String::from_utf8(rendered.stdout).unwrap();
+    assert!(text.contains("reason: panic"), "{text}");
+    assert!(text.contains("chaos_panic"), "the noted event survived: {text}");
+
+    let via_store = Command::new(occamy_exe())
+        .args(["trace", "flight"])
+        .arg("--store")
+        .arg(out.join("store"))
+        .output()
+        .unwrap();
+    assert!(via_store.status.success());
+    assert!(String::from_utf8(via_store.stdout).unwrap().contains("reason: panic"));
+}
+
+#[test]
+fn a_mid_shard_bail_leaves_an_incomplete_flight_dump() {
+    let dir = temp_dir("bail");
+    let spec = write_spec(&dir, "bail", 9423);
+    let out = dir.join("out");
+    let output = Command::new(occamy_exe())
+        .args(["campaign", "run", "--max-points", "1"])
+        .arg("--spec")
+        .arg(&spec)
+        .arg("--out")
+        .arg(&out)
+        .output()
+        .unwrap();
+    assert!(!output.status.success(), "--max-points stops the shard mid-way");
+    assert!(
+        String::from_utf8_lossy(&output.stderr).contains("incomplete"),
+        "{}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+
+    let flight = out.join("store").join("flight");
+    let dumps: Vec<PathBuf> = std::fs::read_dir(&flight)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with("incomplete-"))
+        })
+        .collect();
+    assert_eq!(dumps.len(), 1, "exactly one incomplete dump: {dumps:?}");
+    let text = obs::flight::render_dump(&dumps[0]).unwrap();
+    assert!(text.contains("reason: incomplete"), "{text}");
+    assert!(text.contains("shard_incomplete"), "the bail event was noted: {text}");
+}
