@@ -1,0 +1,219 @@
+//! Determinism domains and the module manifest that assigns them.
+//!
+//! The manifest (`rust/analysis.toml`, compiled into the binary) maps
+//! every module path under `rust/src` to a [`Domain`]. Classification is
+//! longest-prefix on `/` boundaries, so `coordinator = "sim"` plus
+//! `coordinator/service = "mixed"` carves one file out of a subtree. A
+//! module no prefix covers is reported as `unknown-module` — growing the
+//! tree forces a conscious classification decision.
+
+use std::collections::BTreeMap;
+
+/// Which determinism contract a module lives under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Domain {
+    /// Virtual-clock code: output must be bit-deterministic. All rules
+    /// apply.
+    Sim,
+    /// Daemon/fleet/OS code: wall clock and entropy are its job. Only
+    /// the ordering-justification rule applies.
+    Wall,
+    /// Both worlds (wall-clock timing around a deterministic core):
+    /// unordered iteration and float-reduction order stay forbidden;
+    /// wall clock and env reads are allowed.
+    Mixed,
+}
+
+impl Domain {
+    pub fn name(self) -> &'static str {
+        match self {
+            Domain::Sim => "sim",
+            Domain::Wall => "wall",
+            Domain::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Domain> {
+        match s {
+            "sim" => Some(Domain::Sim),
+            "wall" => Some(Domain::Wall),
+            "mixed" => Some(Domain::Mixed),
+            _ => None,
+        }
+    }
+}
+
+/// The module → domain table.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Prefix → domain; ordered so diagnostics and iteration are
+    /// deterministic.
+    modules: BTreeMap<String, Domain>,
+}
+
+impl Manifest {
+    /// The manifest checked in at `rust/analysis.toml`, compiled into
+    /// the binary so `occamy audit` needs no files at run time.
+    pub fn builtin() -> Manifest {
+        Manifest::parse(include_str!("../../analysis.toml"))
+            .expect("built-in analysis.toml must parse")
+    }
+
+    /// Parse the minimal manifest grammar: comments, one `[modules]`
+    /// section, `key = "domain"` entries with optionally-quoted keys.
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut modules = BTreeMap::new();
+        let mut in_modules = false;
+        for (idx, raw) in text.lines().enumerate() {
+            let n = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(section) = line.strip_prefix('[') {
+                let section = section
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("manifest line {n}: unterminated section header"))?;
+                if section != "modules" {
+                    return Err(format!("manifest line {n}: unknown section [{section}]"));
+                }
+                in_modules = true;
+                continue;
+            }
+            if !in_modules {
+                return Err(format!("manifest line {n}: entry before [modules]"));
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("manifest line {n}: expected `key = \"domain\"`"))?;
+            let key = unquote(key.trim())
+                .ok_or_else(|| format!("manifest line {n}: bad key {:?}", key.trim()))?;
+            let value = value.trim();
+            let value = value
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| format!("manifest line {n}: domain must be quoted"))?;
+            let domain = Domain::parse(value).ok_or_else(|| {
+                format!("manifest line {n}: unknown domain {value:?} (sim|wall|mixed)")
+            })?;
+            if modules.insert(key.to_string(), domain).is_some() {
+                return Err(format!("manifest line {n}: duplicate module {key:?}"));
+            }
+        }
+        if modules.is_empty() {
+            return Err("manifest has no [modules] entries".to_string());
+        }
+        Ok(Manifest { modules })
+    }
+
+    /// Classify a module path (e.g. `campaign/store`): the longest
+    /// prefix matching on a `/` boundary wins; `None` means unknown.
+    pub fn classify(&self, module: &str) -> Option<Domain> {
+        let mut best_len = 0;
+        let mut best = None;
+        for (prefix, &domain) in &self.modules {
+            let matches = module == prefix
+                || (module.len() > prefix.len()
+                    && module.starts_with(prefix.as_str())
+                    && module.as_bytes()[prefix.len()] == b'/');
+            if matches && (best.is_none() || prefix.len() > best_len) {
+                best_len = prefix.len();
+                best = Some(domain);
+            }
+        }
+        best
+    }
+
+    /// Number of classified prefixes (diagnostics).
+    pub fn len(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.modules.is_empty()
+    }
+}
+
+fn unquote(s: &str) -> Option<&str> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"')?;
+        if inner.is_empty() {
+            return None;
+        }
+        return Some(inner);
+    }
+    let bare = |c: char| c.is_ascii_alphanumeric() || c == '_' || c == '-';
+    if !s.is_empty() && s.chars().all(bare) {
+        Some(s)
+    } else {
+        None
+    }
+}
+
+/// The module path of a source file: path separators normalized, the
+/// crate-layout `src/` prefix stripped, the `.rs` suffix and a trailing
+/// `/mod` collapsed. `lib.rs` and `main.rs` stay `lib`/`main`.
+pub fn module_of(path: &str) -> String {
+    let mut s = path.replace('\\', "/");
+    if let Some(i) = s.rfind("/src/") {
+        s = s[i + 5..].to_string();
+    } else if let Some(rest) = s.strip_prefix("src/") {
+        s = rest.to_string();
+    }
+    if let Some(rest) = s.strip_suffix(".rs") {
+        s = rest.to_string();
+    }
+    if let Some(rest) = s.strip_suffix("/mod") {
+        s = rest.to_string();
+    } else if s == "mod" {
+        s = String::new();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_parses_and_covers_core_modules() {
+        let m = Manifest::builtin();
+        assert!(m.len() > 20);
+        assert_eq!(m.classify("sim/engine"), Some(Domain::Sim));
+        assert_eq!(m.classify("fleet/lease"), Some(Domain::Wall));
+        assert_eq!(m.classify("campaign/store"), Some(Domain::Mixed));
+    }
+
+    #[test]
+    fn longest_prefix_wins_on_segment_boundaries() {
+        let src = "[modules]\ncoordinator = \"sim\"\n\"coordinator/service\" = \"mixed\"\n";
+        let m = Manifest::parse(src).unwrap();
+        assert_eq!(m.classify("coordinator"), Some(Domain::Sim));
+        assert_eq!(m.classify("coordinator/metrics"), Some(Domain::Sim));
+        assert_eq!(m.classify("coordinator/service"), Some(Domain::Mixed));
+        // `coordinators` must not match the `coordinator` prefix.
+        assert_eq!(m.classify("coordinators"), None);
+    }
+
+    #[test]
+    fn bad_manifests_are_rejected() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("a = \"sim\"\n").is_err(), "entry before section");
+        assert!(Manifest::parse("[mods]\na = \"sim\"\n").is_err(), "unknown section");
+        assert!(Manifest::parse("[modules]\na = \"simulated\"\n").is_err(), "bad domain");
+        assert!(Manifest::parse("[modules]\na = sim\n").is_err(), "unquoted domain");
+        assert!(
+            Manifest::parse("[modules]\na = \"sim\"\na = \"wall\"\n").is_err(),
+            "duplicate key"
+        );
+    }
+
+    #[test]
+    fn module_of_strips_layout() {
+        assert_eq!(module_of("rust/src/campaign/store.rs"), "campaign/store");
+        assert_eq!(module_of("src/lib.rs"), "lib");
+        assert_eq!(module_of("rust/src/obs/mod.rs"), "obs");
+        assert_eq!(module_of("campaign/store.rs"), "campaign/store");
+        assert_eq!(module_of("main.rs"), "main");
+    }
+}

@@ -1,0 +1,225 @@
+//! Determinism-domain static analysis over this repository's own
+//! sources (`occamy audit`).
+//!
+//! The simulator's contract is bit-identical output for identical
+//! inputs: trace-store memoization, campaign resume and recorded
+//! interference curves all reuse or compare bytes across runs. The
+//! classes of Rust code that silently break that contract are known —
+//! wall-clock reads, unordered `HashMap`/`HashSet` iteration, entropy
+//! sources, unjustified atomic orderings, order-sensitive float
+//! reductions — and every one of them type-checks fine, so they arrive
+//! by accident and surface weeks later as a flaky cache hit. This
+//! module gates them in CI instead.
+//!
+//! Layout:
+//! - [`domains`]: the `sim`/`wall`/`mixed` classification and the
+//!   `rust/analysis.toml` manifest (compiled in, longest-prefix match).
+//! - [`rules`]: the comment/string stripper and the per-line rules,
+//!   with `// audit:allow(<rule>) -- reason` suppression pragmas.
+//! - This file: the sorted filesystem walk, finding aggregation, and
+//!   byte-deterministic text/JSON renderers (findings sorted by
+//!   position, JSON keys sorted by `runtime::json`).
+//!
+//! The pass is intentionally dependency-free (no `syn`, no `serde`) and
+//! conservative: what it cannot type it does not flag, and every
+//! finding names an exact `path:line` a reviewer can check in seconds.
+
+pub mod domains;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::runtime::json::Json;
+
+pub use domains::{module_of, Domain, Manifest};
+pub use rules::{scan_source, Scan};
+
+/// One rule violation (or meta finding) at an exact source location.
+///
+/// The derived `Ord` (path, line, rule, message) is the report order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// File path as given to the audit, normalized to `/` separators.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name: one of [`rules::RULES`] or a meta rule
+    /// ([`rules::BAD_PRAGMA`], [`rules::UNKNOWN_MODULE`]).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// The aggregated result of auditing a set of paths.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, sorted by (path, line, rule, message).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by valid `audit:allow` pragmas.
+    pub suppressed: usize,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+/// Audit every `.rs` file under `paths` (files or directories) against
+/// the manifest. Directories are walked in sorted order so the report
+/// is byte-identical across runs and machines.
+pub fn audit_paths(manifest: &Manifest, paths: &[PathBuf]) -> anyhow::Result<Report> {
+    let mut files = Vec::new();
+    for path in paths {
+        collect_rs_files(path, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+
+    let mut report = Report::default();
+    for file in &files {
+        let rel = file.to_string_lossy().replace('\\', "/");
+        let module = module_of(&rel);
+        let text = fs::read_to_string(file).with_context(|| format!("read {}", file.display()))?;
+        match manifest.classify(&module) {
+            Some(domain) => {
+                let scan = scan_source(&rel, domain, &text);
+                report.findings.extend(scan.findings);
+                report.suppressed += scan.suppressed;
+            }
+            None => report.findings.push(Finding {
+                path: rel.clone(),
+                line: 1,
+                rule: rules::UNKNOWN_MODULE,
+                message: format!(
+                    "module `{module}` is not classified in analysis.toml; add it to [modules]"
+                ),
+            }),
+        }
+        report.files += 1;
+    }
+    report.findings.sort();
+    Ok(report)
+}
+
+fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if path.is_dir() {
+        let mut entries = Vec::new();
+        let dir = fs::read_dir(path).with_context(|| format!("read dir {}", path.display()))?;
+        for entry in dir {
+            entries.push(entry?.path());
+        }
+        entries.sort();
+        for child in entries {
+            collect_rs_files(&child, out)?;
+        }
+        return Ok(());
+    }
+    if !path.exists() {
+        anyhow::bail!("audit path {} does not exist", path.display());
+    }
+    if path.extension().is_some_and(|e| e == "rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Render the human-readable report: one `path:line: rule: message`
+/// line per finding plus a one-line summary trailer.
+pub fn render_text(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: {}: {}\n", f.path, f.line, f.rule, f.message));
+    }
+    out.push_str(&format!(
+        "audit: {} finding(s), {} suppressed, {} file(s) scanned\n",
+        report.findings.len(),
+        report.suppressed,
+        report.files
+    ));
+    out
+}
+
+/// Render the machine-readable report as a single line of JSON with
+/// sorted keys: byte-identical across runs for identical inputs.
+pub fn render_json(report: &Report) -> String {
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            let mut o = BTreeMap::new();
+            o.insert("line".to_string(), Json::Num(f.line as f64));
+            o.insert("message".to_string(), Json::Str(f.message.clone()));
+            o.insert("path".to_string(), Json::Str(f.path.clone()));
+            o.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("version".to_string(), Json::Num(1.0));
+    root.insert("files".to_string(), Json::Num(report.files as f64));
+    root.insert("suppressed".to_string(), Json::Num(report.suppressed as f64));
+    root.insert("findings".to_string(), Json::Arr(findings));
+    format!("{}\n", Json::Obj(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut report = Report {
+            findings: vec![
+                Finding {
+                    path: "src/b.rs".to_string(),
+                    line: 3,
+                    rule: rules::WALL_CLOCK_IN_SIM,
+                    message: "b".to_string(),
+                },
+                Finding {
+                    path: "src/a.rs".to_string(),
+                    line: 9,
+                    rule: rules::ENTROPY_IN_SIM,
+                    message: "a".to_string(),
+                },
+            ],
+            suppressed: 1,
+            files: 2,
+        };
+        report.findings.sort();
+        report
+    }
+
+    #[test]
+    fn text_report_is_sorted_and_has_trailer() {
+        let text = render_text(&sample());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("src/a.rs:9: entropy-in-sim:"), "{text}");
+        assert!(lines[1].starts_with("src/b.rs:3: wall-clock-in-sim:"), "{text}");
+        assert_eq!(lines[2], "audit: 2 finding(s), 1 suppressed, 2 file(s) scanned");
+    }
+
+    #[test]
+    fn json_report_is_single_line_and_stable() {
+        let a = render_json(&sample());
+        let b = render_json(&sample());
+        assert_eq!(a, b, "render must be byte-deterministic");
+        assert!(a.ends_with('\n'));
+        assert_eq!(a.lines().count(), 1);
+        let parsed = Json::parse(a.trim()).unwrap();
+        assert_eq!(parsed.get("version").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("files").and_then(Json::as_u64), Some(2));
+        let findings = parsed.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(findings.len(), 2);
+        assert_eq!(findings[0].get("rule").and_then(Json::as_str), Some("entropy-in-sim"));
+    }
+
+    #[test]
+    fn empty_report_renders_cleanly() {
+        let report = Report::default();
+        assert_eq!(render_text(&report), "audit: 0 finding(s), 0 suppressed, 0 file(s) scanned\n");
+        let json = render_json(&report);
+        let parsed = Json::parse(json.trim()).unwrap();
+        assert_eq!(parsed.get("findings").and_then(Json::as_arr).map(<[Json]>::len), Some(0));
+    }
+}

@@ -1,0 +1,879 @@
+//! The line/token-level rule engine.
+//!
+//! No `syn`, no parsing beyond what the rules need (the same
+//! vendored-minimal philosophy as `runtime/json`): a comment/string
+//! stripper normalizes each line to bare code, `#[cfg(test)]` items are
+//! skipped by brace tracking, and per-file identifier collection types
+//! receivers well enough to tell `map.values()` on a `HashMap` from the
+//! same call on a `BTreeMap`. The engine is conservative by design —
+//! what it cannot type it does not flag — and every finding it does
+//! emit names an exact line a human can check in seconds.
+//!
+//! Suppression: `// audit:allow(<rule>[,<rule>]) -- reason` silences the
+//! listed rules on the pragma's line and the next line. The reason is
+//! mandatory; a malformed pragma is itself a (non-suppressible)
+//! `bad-pragma` finding.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::domains::Domain;
+use super::Finding;
+
+/// `Instant::now`/`SystemTime::now` in a `sim` module.
+pub const WALL_CLOCK_IN_SIM: &str = "wall-clock-in-sim";
+/// Iterating a `HashMap`/`HashSet` in a `sim` or `mixed` module.
+pub const UNORDERED_ITERATION: &str = "unordered-iteration";
+/// An atomic `Ordering::` use without an adjacent `// ordering:`
+/// justification comment (all domains; mirrors `// SAFETY:`).
+pub const RELAXED_ORDERING: &str = "relaxed-ordering";
+/// Entropy sources (default hashers, rng seeding, env reads) in `sim`.
+pub const ENTROPY_IN_SIM: &str = "entropy-in-sim";
+/// Order-sensitive float reduction over an unordered iterator in `sim`
+/// or `mixed`.
+pub const FLOAT_REDUCTION_ORDER: &str = "float-reduction-order";
+/// Meta: a malformed or reason-less suppression pragma.
+pub const BAD_PRAGMA: &str = "bad-pragma";
+/// Meta: a file whose module the manifest does not classify.
+pub const UNKNOWN_MODULE: &str = "unknown-module";
+
+/// The suppressible rules, in report order. The meta findings
+/// ([`BAD_PRAGMA`], [`UNKNOWN_MODULE`]) are intentionally absent: they
+/// cannot be `audit:allow`ed away.
+pub const RULES: &[&str] = &[
+    ENTROPY_IN_SIM,
+    FLOAT_REDUCTION_ORDER,
+    RELAXED_ORDERING,
+    UNORDERED_ITERATION,
+    WALL_CLOCK_IN_SIM,
+];
+
+const WALL_CLOCK_PATTERNS: &[&str] = &["Instant::now", "SystemTime::now"];
+
+const ENTROPY_PATTERNS: &[&str] = &[
+    "DefaultHasher",
+    "OsRng",
+    "RandomState",
+    "env::var",
+    "env::vars",
+    "from_entropy",
+    "getrandom",
+    "process::id",
+    "thread_rng",
+];
+
+const ATOMIC_ORDERINGS: &[&str] = &[
+    "Ordering::AcqRel",
+    "Ordering::Acquire",
+    "Ordering::Relaxed",
+    "Ordering::Release",
+    "Ordering::SeqCst",
+];
+
+const ITER_METHODS: &[&str] = &[
+    ".drain(",
+    ".into_iter()",
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+];
+
+const FLOAT_REDUCTIONS: &[&str] = &[".fold(", ".reduce(", ".sum::<f32>", ".sum::<f64>"];
+
+/// The result of scanning one file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a valid `audit:allow` pragma.
+    pub suppressed: usize,
+}
+
+/// One source line after comment/string stripping.
+struct Line {
+    /// The line with comments removed and literal contents blanked.
+    code: String,
+    /// Text of a `//` comment starting on this line, if any.
+    comment: Option<String>,
+}
+
+/// Scan one file's source under the given domain.
+pub fn scan_source(path: &str, domain: Domain, text: &str) -> Scan {
+    let lines = strip(text);
+    let skipped = test_mask(&lines);
+    let idents = collect_idents(&lines, &skipped);
+    let mut scan = Scan::default();
+    let allow = pragmas(path, &lines, &mut scan);
+
+    let sim = domain == Domain::Sim;
+    let ordered_output = domain != Domain::Wall;
+    let mut justified = false;
+    for (idx, line) in lines.iter().enumerate() {
+        let n = idx + 1;
+        if let Some(c) = &line.comment {
+            if c.contains("ordering:") {
+                justified = true;
+            }
+        }
+        if skipped[idx] {
+            continue;
+        }
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        let mut emit = |rule: &'static str, message: String| {
+            let silenced = allow.get(&n).is_some_and(|rules| rules.contains(rule));
+            if silenced {
+                scan.suppressed += 1;
+            } else {
+                scan.findings.push(Finding {
+                    path: path.to_string(),
+                    line: n,
+                    rule,
+                    message,
+                });
+            }
+        };
+        if sim {
+            if let Some(p) = first_match(code, WALL_CLOCK_PATTERNS) {
+                emit(
+                    WALL_CLOCK_IN_SIM,
+                    format!("`{p}` in a sim-domain module; wall-clock reads belong to wall code"),
+                );
+            }
+            if let Some(p) = first_match(code, ENTROPY_PATTERNS) {
+                emit(
+                    ENTROPY_IN_SIM,
+                    format!("`{p}` in a sim-domain module; sim code must stay entropy-free"),
+                );
+            }
+        }
+        if let Some(p) = first_match(code, ATOMIC_ORDERINGS) {
+            if !justified {
+                emit(
+                    RELAXED_ORDERING,
+                    format!("`{p}` without an adjacent `// ordering:` justification comment"),
+                );
+            }
+        } else {
+            justified = false;
+        }
+        if ordered_output {
+            if let Some(ident) = hash_iteration(code, &idents) {
+                emit(
+                    UNORDERED_ITERATION,
+                    format!("iteration over unordered `{ident}`; use an ordered container or sort"),
+                );
+                if chain_has_reduction(&lines, idx) {
+                    emit(
+                        FLOAT_REDUCTION_ORDER,
+                        format!("order-sensitive reduction over unordered `{ident}`"),
+                    );
+                }
+            }
+        }
+    }
+    scan
+}
+
+/// Strip comments and literal contents from every line, tracking state
+/// (block comments, multi-line strings) across lines.
+fn strip(text: &str) -> Vec<Line> {
+    let mut state = State::Normal;
+    text.lines().map(|l| strip_line(l, &mut state)).collect()
+}
+
+enum State {
+    Normal,
+    /// Inside `/* */`, with nesting depth.
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string, closed by `"` followed by this many `#`s.
+    Raw(u8),
+}
+
+fn strip_line(line: &str, state: &mut State) -> Line {
+    let chars: Vec<char> = line.chars().collect();
+    let mut code = String::new();
+    let mut comment = None;
+    let mut i = 0;
+    while i < chars.len() {
+        match *state {
+            State::Block(depth) => {
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    *state = match depth {
+                        0 | 1 => State::Normal,
+                        d => State::Block(d - 1),
+                    };
+                    i += 2;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    *state = State::Block(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    *state = State::Normal;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Raw(h) => {
+                let closes = chars[i] == '"'
+                    && (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#'));
+                if closes {
+                    *state = State::Normal;
+                    i += 1 + h as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Normal => {
+                let c = chars[i];
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    comment = Some(chars[i + 2..].iter().collect());
+                    break;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    *state = State::Block(1);
+                    i += 2;
+                    continue;
+                }
+                if let Some(consumed) = raw_or_byte_string(&chars, i, state) {
+                    i += consumed;
+                    continue;
+                }
+                if c == '"' {
+                    *state = State::Str;
+                    code.push('"');
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    i += char_literal(&chars, i, &mut code);
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    Line { code, comment }
+}
+
+/// Detect `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` starts at `i`; returns the
+/// prefix length consumed and updates the state.
+fn raw_or_byte_string(chars: &[char], i: usize, state: &mut State) -> Option<usize> {
+    let c = chars[i];
+    if c != 'r' && c != 'b' {
+        return None;
+    }
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None; // tail of an identifier like `for` or `sub`
+    }
+    let mut j = i + 1;
+    let mut raw = c == 'r';
+    if c == 'b' && chars.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    let mut hashes = 0u8;
+    while raw && chars.get(j) == Some(&'#') && hashes < 255 {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    *state = if raw { State::Raw(hashes) } else { State::Str };
+    Some(j + 1 - i)
+}
+
+/// Consume a char literal (or a lone lifetime tick) at `i`; returns the
+/// number of chars consumed.
+fn char_literal(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // '\n', '\u{1f}', '\\': skip the backslash and its escape, then
+        // scan to the closing quote.
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' {
+            j += 1;
+        }
+        code.push('\'');
+        code.push('\'');
+        j + 1 - i
+    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        // 'x'
+        code.push('\'');
+        code.push('\'');
+        3
+    } else {
+        // A lifetime ('a) or stray tick: plain code.
+        code.push('\'');
+        1
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Mark the lines belonging to `#[cfg(test)]` items (the attribute line
+/// through the end of the attributed braced item, or through the first
+/// `;` for braceless items).
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut skip = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        'item: while j < lines.len() {
+            skip[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            break 'item;
+                        }
+                    }
+                    ';' if !opened => break 'item,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    skip
+}
+
+/// Per-file identifier typing: names whose declared type (or
+/// initializer) mentions an unordered hash container, and functions
+/// returning one. Type aliases propagate (`type Shard = HashMap<…>`
+/// makes `Shard` a marker for the rest of the file).
+struct HashIdents {
+    idents: BTreeSet<String>,
+    fns: BTreeSet<String>,
+}
+
+fn collect_idents(lines: &[Line], skipped: &[bool]) -> HashIdents {
+    let mut markers: BTreeSet<String> = BTreeSet::new();
+    markers.insert("HashMap".to_string());
+    markers.insert("HashSet".to_string());
+    // Two rounds so an alias-of-an-alias still resolves.
+    for _ in 0..2 {
+        for (idx, line) in lines.iter().enumerate() {
+            if skipped[idx] {
+                continue;
+            }
+            let code = line.code.trim();
+            let rest = code
+                .strip_prefix("pub type ")
+                .or_else(|| code.strip_prefix("pub(crate) type "))
+                .or_else(|| code.strip_prefix("type "));
+            if let Some(rest) = rest {
+                if let Some((name, rhs)) = rest.split_once('=') {
+                    let name = name.trim().split('<').next().unwrap_or("").trim();
+                    if !name.is_empty() && mentions_marker(rhs, &markers) {
+                        markers.insert(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    let mut idents = BTreeSet::new();
+    let mut fns = BTreeSet::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if skipped[idx] {
+            continue;
+        }
+        let code = line.code.as_str();
+        if !mentions_marker(code, &markers) {
+            continue;
+        }
+        // `fn name(…) -> …Hash…`
+        if let Some(fn_pos) = find_token(code, "fn ") {
+            let name: String = code[fn_pos + 3..]
+                .chars()
+                .take_while(|&c| is_ident_char(c))
+                .collect();
+            if let Some(arrow) = code.find("->") {
+                if !name.is_empty() && mentions_marker(&code[arrow..], &markers) {
+                    fns.insert(name);
+                }
+            }
+        }
+        // `name: …Hash…` (fields, params, lets, statics) and
+        // `let name = Hash…::new()`-style initializers.
+        for m in marker_positions(code, &markers) {
+            if let Some(name) = owner_ident(code, m) {
+                idents.insert(name);
+            }
+        }
+    }
+    HashIdents { idents, fns }
+}
+
+/// Whether `text` contains any marker as a whole identifier.
+fn mentions_marker(text: &str, markers: &BTreeSet<String>) -> bool {
+    markers.iter().any(|m| find_token(text, m).is_some())
+}
+
+/// Start offsets of every marker occurring as a whole identifier.
+fn marker_positions(code: &str, markers: &BTreeSet<String>) -> Vec<usize> {
+    let mut out = Vec::new();
+    for m in markers {
+        let mut from = 0;
+        while let Some(rel) = code[from..].find(m.as_str()) {
+            let pos = from + rel;
+            from = pos + m.len();
+            let before_ok = pos == 0 || !is_ident_char(code[..pos].chars().next_back().unwrap());
+            let next = code[pos + m.len()..].chars().next();
+            let after_ok = !next.is_some_and(is_ident_char);
+            if before_ok && after_ok {
+                out.push(pos);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Find `pat` at an identifier boundary (so `fn ` does not match in
+/// `long_fn `, and `HashMap` does not match in `MyHashMapLike`).
+fn find_token(code: &str, pat: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(pat) {
+        let pos = from + rel;
+        from = pos + 1;
+        let before_ok = pos == 0 || !is_ident_char(code[..pos].chars().next_back().unwrap());
+        if before_ok {
+            return Some(pos);
+        }
+    }
+    None
+}
+
+/// The identifier a marker occurrence types: walk left over type syntax
+/// to a `:` (not `::`) or `=`, then read the name before it. Returns
+/// `None` for occurrences in other positions (turbofish, paths).
+fn owner_ident(code: &str, marker_pos: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut i = marker_pos;
+    while i > 0 {
+        let c = b[i - 1] as char;
+        match c {
+            ':' => {
+                // `::` is a path, keep walking left past it.
+                if i >= 2 && b[i - 2] == b':' {
+                    i -= 2;
+                    continue;
+                }
+                return ident_before(code, i - 1);
+            }
+            '=' => return ident_before(code, i - 1),
+            c if is_ident_char(c) => i -= 1,
+            '<' | '>' | '&' | '\'' | ' ' | ',' | '(' => i -= 1,
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// The identifier ending just before byte `end` (skipping trailing
+/// whitespace and `mut`/`static`-style keywords are left to the caller's
+/// patterns: we only read one identifier).
+fn ident_before(code: &str, end: usize) -> Option<String> {
+    let trimmed = code[..end].trim_end();
+    let s = trimmed.rfind(|c: char| !is_ident_char(c)).map_or(0, |p| p + 1);
+    let name = &trimmed[s..];
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    if matches!(name, "mut" | "let" | "pub" | "static" | "const" | "type" | "fn") {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// Detect iteration over a hash-typed receiver on this code line:
+/// `recv.iter()`-style method calls and `for … in recv` loops. Returns
+/// the receiver name.
+fn hash_iteration(code: &str, idents: &HashIdents) -> Option<String> {
+    for m in ITER_METHODS {
+        let mut from = 0;
+        while let Some(rel) = code[from..].find(m) {
+            let dot = from + rel;
+            from = dot + m.len();
+            if let Some(ident) = hash_receiver(code, dot, idents) {
+                return Some(ident);
+            }
+        }
+    }
+    // `for … in &mut recv {` / `for … in recv {`
+    if let Some(for_pos) = find_token(code, "for ") {
+        if let Some(in_rel) = code[for_pos..].find(" in ") {
+            let after = &code[for_pos + in_rel + 4..];
+            let expr = match after.find('{') {
+                Some(b) => &after[..b],
+                None => after,
+            };
+            let expr = expr.trim().trim_start_matches("&mut ").trim_start_matches('&');
+            let s = expr.rfind(|c: char| !is_ident_char(c)).map_or(0, |p| p + 1);
+            let name = &expr[s..];
+            // Only a bare trailing identifier: method-call receivers are
+            // covered above, and `0..n` ranges must not resolve to `n`.
+            let simple = expr[..s].chars().all(|c| c == '.' || c == ':' || is_ident_char(c));
+            if simple && idents.idents.contains(name) {
+                return Some(name.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// Resolve the receiver of a `.method(` at `dot`: either a trailing
+/// identifier (`map.iter()`) or a call (`lock().values()`), checked
+/// against the file's hash-typed names.
+fn hash_receiver(code: &str, dot: usize, idents: &HashIdents) -> Option<String> {
+    let b = code.as_bytes();
+    let mut end = dot;
+    let called = end > 0 && b[end - 1] == b')';
+    if called {
+        let mut depth: i64 = 0;
+        while end > 0 {
+            end -= 1;
+            match b[end] {
+                b')' => depth += 1,
+                b'(' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let s = code[..end].rfind(|c: char| !is_ident_char(c)).map_or(0, |p| p + 1);
+    let name = &code[s..end];
+    if name.is_empty() {
+        return None;
+    }
+    let hash = if called {
+        idents.fns.contains(name)
+    } else {
+        idents.idents.contains(name)
+    };
+    if hash {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// Whether the iteration starting at line `idx` chains into a float (or
+/// otherwise order-sensitive) reduction, looking through the standard
+/// rustfmt layout of one chained call per continuation line.
+fn chain_has_reduction(lines: &[Line], idx: usize) -> bool {
+    let mut chain = lines[idx].code.clone();
+    for line in lines.iter().skip(idx + 1).take(8) {
+        let t = line.code.trim();
+        if !t.starts_with('.') {
+            break;
+        }
+        chain.push_str(t);
+    }
+    FLOAT_REDUCTIONS.iter().any(|p| chain.contains(p))
+}
+
+fn first_match<'p>(code: &str, patterns: &[&'p str]) -> Option<&'p str> {
+    patterns.iter().copied().find(|p| code.contains(p))
+}
+
+/// Parse every `audit:allow` pragma: valid ones populate the
+/// line → silenced-rules map (the pragma's line and the next line);
+/// malformed ones become `bad-pragma` findings.
+fn pragmas(
+    path: &str,
+    lines: &[Line],
+    scan: &mut Scan,
+) -> BTreeMap<usize, BTreeSet<&'static str>> {
+    let mut allow: BTreeMap<usize, BTreeSet<&'static str>> = BTreeMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let n = idx + 1;
+        let Some(comment) = &line.comment else {
+            continue;
+        };
+        // Doc comments (`///`, `//!` — a `/` or `!` right after the
+        // `//`) are documentation, not pragmas: they may legitimately
+        // *describe* the pragma grammar, as this module's own docs do.
+        if comment.starts_with('/') || comment.starts_with('!') {
+            continue;
+        }
+        let Some(at) = comment.find("audit:allow") else {
+            continue;
+        };
+        let mut bad = |message: &str| {
+            scan.findings.push(Finding {
+                path: path.to_string(),
+                line: n,
+                rule: BAD_PRAGMA,
+                message: message.to_string(),
+            });
+        };
+        let rest = &comment[at + "audit:allow".len()..];
+        let Some(args) = rest.strip_prefix('(') else {
+            bad("malformed pragma: expected `audit:allow(<rules>) -- reason`");
+            continue;
+        };
+        let Some((list, tail)) = args.split_once(')') else {
+            bad("malformed pragma: unterminated rule list");
+            continue;
+        };
+        let mut rules = BTreeSet::new();
+        let mut ok = true;
+        for raw in list.split(',') {
+            let name = raw.trim();
+            match RULES.iter().find(|r| **r == name) {
+                Some(r) => {
+                    rules.insert(*r);
+                }
+                None => {
+                    bad(&format!("unknown rule `{name}` in audit:allow"));
+                    ok = false;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let reason = tail.split_once("--").map(|(_, r)| r.trim()).unwrap_or("");
+        if reason.is_empty() {
+            bad("audit:allow requires a reason: `audit:allow(<rules>) -- reason`");
+            continue;
+        }
+        for target in [n, n + 1] {
+            allow.entry(target).or_default().extend(rules.iter().copied());
+        }
+    }
+    allow
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_sim(text: &str) -> Scan {
+        scan_source("t.rs", Domain::Sim, text)
+    }
+
+    fn rules_at(scan: &Scan, line: usize) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        for f in &scan.findings {
+            if f.line == line {
+                out.push(f.rule);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn stripper_blanks_comments_and_literals() {
+        let src = concat!(
+            "let a = \"Instant::now\"; // Instant::now\n",
+            "let b = r#\"SystemTime::now\"#;\n",
+            "/* Instant::now\n",
+            "still comment */ let c = 1;\n",
+        );
+        let lines = strip(src);
+        assert!(!lines[0].code.contains("Instant"));
+        assert!(lines[0].comment.as_deref().unwrap().contains("Instant::now"));
+        assert!(!lines[1].code.contains("SystemTime"));
+        assert!(!lines[2].code.contains("Instant"));
+        assert!(lines[3].code.contains("let c = 1;"));
+    }
+
+    #[test]
+    fn char_literals_do_not_eat_lifetimes() {
+        let lines = strip("fn f<'a>(v: &'a str) -> char { 'q' }\nlet y = '\\n';\n");
+        assert!(lines[0].code.contains("&'a str"));
+        assert!(!lines[0].code.contains('q'), "{}", lines[0].code);
+        assert!(lines[1].code.contains("let y ="));
+    }
+
+    #[test]
+    fn wall_clock_flagged_only_in_sim() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_at(&scan_sim(src), 1), vec![WALL_CLOCK_IN_SIM]);
+        assert!(scan_source("t.rs", Domain::Mixed, src).findings.is_empty());
+        assert!(scan_source("t.rs", Domain::Wall, src).findings.is_empty());
+    }
+
+    #[test]
+    fn entropy_flagged_in_sim() {
+        let src = "fn f() { let v = std::env::var(\"X\"); }\n";
+        assert_eq!(rules_at(&scan_sim(src), 1), vec![ENTROPY_IN_SIM]);
+        assert!(scan_source("t.rs", Domain::Wall, src).findings.is_empty());
+    }
+
+    #[test]
+    fn unordered_iteration_needs_a_hash_receiver() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "fn f(m: &HashMap<u32, u32>, v: &[u32]) {\n",
+            "    for x in v.iter() {}\n",
+            "    for (k, _) in m.iter() {}\n",
+            "}\n",
+        );
+        let scan = scan_sim(src);
+        assert_eq!(scan.findings.len(), 1, "{:?}", scan.findings);
+        assert_eq!(scan.findings[0].line, 4);
+        assert_eq!(scan.findings[0].rule, UNORDERED_ITERATION);
+    }
+
+    #[test]
+    fn for_loop_over_hash_ident_flagged() {
+        let src = concat!(
+            "use std::collections::HashSet;\n",
+            "fn f(s: HashSet<u32>) {\n",
+            "    for x in &s {}\n",
+            "    for i in 0..10 {}\n",
+            "}\n",
+        );
+        let scan = scan_sim(src);
+        assert_eq!(scan.findings.len(), 1, "{:?}", scan.findings);
+        assert_eq!(scan.findings[0].line, 3);
+    }
+
+    #[test]
+    fn type_alias_and_fn_return_propagate() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "type Shard = HashMap<u32, u32>;\n",
+            "fn lock() -> Shard { Shard::new() }\n",
+            "fn g() { let n: usize = lock().values().count(); }\n",
+        );
+        let scan = scan_sim(src);
+        assert_eq!(rules_at(&scan, 4), vec![UNORDERED_ITERATION]);
+    }
+
+    #[test]
+    fn float_reduction_over_hash_iter_flagged() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "fn f(m: &HashMap<u32, f64>) -> f64 {\n",
+            "    m.values().sum::<f64>()\n",
+            "}\n",
+        );
+        let scan = scan_sim(src);
+        let rules = rules_at(&scan, 3);
+        assert!(rules.contains(&UNORDERED_ITERATION), "{rules:?}");
+        assert!(rules.contains(&FLOAT_REDUCTION_ORDER), "{rules:?}");
+    }
+
+    #[test]
+    fn ordering_without_justification_flagged_everywhere() {
+        let src = concat!(
+            "fn f(x: &std::sync::atomic::AtomicU64) {\n",
+            "    x.store(1, Ordering::Relaxed);\n",
+            "}\n",
+        );
+        for d in [Domain::Sim, Domain::Wall, Domain::Mixed] {
+            let scan = scan_source("t.rs", d, src);
+            assert_eq!(scan.findings.len(), 1, "{d:?}");
+            assert_eq!(scan.findings[0].rule, RELAXED_ORDERING);
+        }
+    }
+
+    #[test]
+    fn ordering_comment_justifies_contiguous_uses() {
+        let src = concat!(
+            "fn f(x: &A, y: &A) {\n",
+            "    // ordering: Relaxed -- independent counters.\n",
+            "    x.store(1, Ordering::Relaxed);\n",
+            "    y.store(2, Ordering::Relaxed);\n",
+            "    let z = 1;\n",
+            "    y.store(3, Ordering::Relaxed);\n",
+            "}\n",
+        );
+        let scan = scan_source("t.rs", Domain::Wall, src);
+        assert_eq!(scan.findings.len(), 1, "{:?}", scan.findings);
+        assert_eq!(scan.findings[0].line, 6, "the use after plain code lost the justification");
+    }
+
+    #[test]
+    fn pragma_suppresses_own_and_next_line() {
+        let src = concat!(
+            "fn f() {\n",
+            "    // audit:allow(entropy-in-sim) -- inherited handle stays deterministic\n",
+            "    let v = std::env::var(\"X\");\n",
+            "}\n",
+        );
+        let scan = scan_sim(src);
+        assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+        assert_eq!(scan.suppressed, 1);
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_finding() {
+        let src = "// audit:allow(entropy-in-sim)\nlet v = std::env::var(\"X\");\n";
+        let scan = scan_sim(src);
+        assert!(scan.findings.iter().any(|f| f.rule == BAD_PRAGMA && f.line == 1));
+        // The violation itself is NOT suppressed by a malformed pragma.
+        assert!(scan.findings.iter().any(|f| f.rule == ENTROPY_IN_SIM && f.line == 2));
+    }
+
+    #[test]
+    fn pragma_with_unknown_rule_is_a_finding() {
+        let src = "// audit:allow(warp-factor) -- because\nlet x = 1;\n";
+        let scan = scan_sim(src);
+        assert_eq!(scan.findings.len(), 1);
+        assert_eq!(scan.findings[0].rule, BAD_PRAGMA);
+    }
+
+    #[test]
+    fn doc_comments_describing_pragmas_are_not_pragmas() {
+        let src = "/// Suppress with `audit:allow(<rule>) -- reason`.\nfn f() {}\n";
+        let scan = scan_sim(src);
+        assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_skipped() {
+        let src = concat!(
+            "fn f() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { let t0 = std::time::Instant::now(); }\n",
+            "}\n",
+        );
+        assert!(scan_sim(src).findings.is_empty());
+    }
+
+    #[test]
+    fn patterns_inside_strings_do_not_fire() {
+        let src = "fn f() -> &'static str { \"Instant::now HashMap env::var\" }\n";
+        assert!(scan_sim(src).findings.is_empty());
+    }
+}

@@ -318,6 +318,9 @@ pub fn run_shard_limited(
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
+                    // ordering: Relaxed — the RMW atomicity alone hands
+                    // each worker a unique task index; results go
+                    // through the writer mutex, not this counter.
                     let t = next.fetch_add(1, Ordering::Relaxed);
                     if t >= todo.len() {
                         break;

@@ -17,7 +17,7 @@
 //! miss and re-simulated (then rewritten atomically via a temp file +
 //! rename, so a killed shard can never publish a half-written trace).
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -76,7 +76,7 @@ pub struct TraceStore {
     /// verified (or written): the byte-compare healing check runs once
     /// per config per handle, not once per trace save — a fresh process
     /// (the only thing that can outlive a torn writer) re-verifies.
-    verified_manifests: Mutex<HashSet<String>>,
+    verified_manifests: Mutex<BTreeSet<String>>,
 }
 
 impl TraceStore {
@@ -90,7 +90,7 @@ impl TraceStore {
             memory_hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             simulations: AtomicU64::new(0),
-            verified_manifests: Mutex::new(HashSet::new()),
+            verified_manifests: Mutex::new(BTreeSet::new()),
         })
     }
 
@@ -177,16 +177,20 @@ impl TraceStore {
         req: OffloadRequest,
     ) -> (Arc<Trace>, Source) {
         if let Some(t) = cache::peek(mem_key, req) {
+            // ordering: Relaxed — hit/miss tallies only; traces are
+            // published through the cache/store, never through these.
             self.memory_hits.fetch_add(1, Ordering::Relaxed);
             self.emit_tier("hit_mem", &req);
             return (t, Source::Mem);
         }
         if let Some(t) = self.load(fp, &req) {
+            // ordering: Relaxed — same as memory_hits above.
             self.disk_hits.fetch_add(1, Ordering::Relaxed);
             self.emit_tier("hit_disk", &req);
             return (cache::insert(mem_key, req, t), Source::Disk);
         }
         let trace = Arc::new(req.run(cfg));
+        // ordering: Relaxed — same as memory_hits above.
         self.simulations.fetch_add(1, Ordering::Relaxed);
         self.emit_tier("fresh_sim", &req);
         if let Err(e) = self.save(fp, cfg, &req, &trace) {
@@ -218,11 +222,14 @@ impl TraceStore {
             return self.run_sourced(fp, mem_key, cfg, req);
         }
         if let Some(t) = cache::peek(mem_key, req) {
+            // ordering: Relaxed — hit/miss tallies only; traces are
+            // published through the cache/store, never through these.
             self.memory_hits.fetch_add(1, Ordering::Relaxed);
             self.emit_tier("hit_mem", &req);
             return (t, Source::Mem);
         }
         if let Some(t) = self.load(fp, &req) {
+            // ordering: Relaxed — same as memory_hits above.
             self.disk_hits.fetch_add(1, Ordering::Relaxed);
             self.emit_tier("hit_disk", &req);
             return (cache::insert(mem_key, req, t), Source::Disk);
@@ -238,6 +245,7 @@ impl TraceStore {
             );
             Arc::new(reference)
         };
+        // ordering: Relaxed — same as memory_hits above.
         self.simulations.fetch_add(1, Ordering::Relaxed);
         self.emit_tier("fresh_sim", &req);
         if let Err(e) = self.save(fp, cfg, &req, &trace) {
@@ -262,6 +270,8 @@ impl TraceStore {
     /// Counters since this handle was opened.
     pub fn stats(&self) -> StoreStats {
         StoreStats {
+            // ordering: Relaxed — diagnostic snapshot; callers get no
+            // cross-counter consistency guarantee and need none.
             memory_hits: self.memory_hits.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
             simulations: self.simulations.load(Ordering::Relaxed),
@@ -290,11 +300,10 @@ pub(crate) fn atomic_write(
     text: &str,
 ) -> anyhow::Result<()> {
     static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-    let tmp = dir.join(format!(
-        ".{stem}.tmp-{}-{}",
-        std::process::id(),
-        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
+    // ordering: Relaxed — the fetch_add's RMW atomicity alone guarantees
+    // unique temp names; no other memory is synchronized through it.
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = dir.join(format!(".{stem}.tmp-{}-{seq}", std::process::id()));
     let written = std::fs::write(&tmp, text)
         .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))
         .and_then(|()| {

@@ -1,7 +1,7 @@
 //! Coordinator metrics: completion counters, cycle totals and a simple
 //! latency distribution (min/mean/p50/p99/max over recorded values).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::kernels::KernelKind;
 
@@ -80,7 +80,10 @@ pub struct Metrics {
     /// Requests rejected at validation (no simulation ran).
     pub rejected: u64,
     /// Simulated offload cycles per kernel kind (isolated service time).
-    pub cycles_by_kernel: HashMap<&'static str, Dist>,
+    /// Ordered map: `summary` renders it, and keyed output must iterate
+    /// in a deterministic order (see `occamy audit`'s unordered-iteration
+    /// rule).
+    pub cycles_by_kernel: BTreeMap<&'static str, Dist>,
     /// Isolated service time of every job (DES cycles, no contention).
     pub service: Dist,
     /// Queueing delay of every job (wait for clusters + JCU slot).
@@ -189,9 +192,7 @@ impl Metrics {
             self.sim_events.sum(),
             self.sim_events.mean()
         ));
-        let mut kinds: Vec<_> = self.cycles_by_kernel.iter().collect();
-        kinds.sort_by_key(|(k, _)| **k);
-        for (k, d) in kinds {
+        for (k, d) in &self.cycles_by_kernel {
             out.push_str(&format!(
                 "  {:<12} n={:<4} mean {:.0} cycles\n",
                 k,
@@ -304,6 +305,24 @@ mod tests {
             ]
         );
         assert_eq!(Dist::default().quantiles(&[0.5, 0.9]), vec![0, 0]);
+    }
+
+    #[test]
+    fn summary_bytes_are_insertion_order_independent() {
+        // Regression for the audit's unordered-iteration rule: the
+        // per-kernel table must render identically no matter which
+        // kernel completed first.
+        let mut forward = Metrics::default();
+        forward.record_completion(KernelKind::Axpy, 1000, 0, 10, 0, true, false);
+        forward.record_completion(KernelKind::Bfs, 2000, 0, 10, 0, true, false);
+        forward.record_completion(KernelKind::Matmul, 3000, 0, 10, 0, true, false);
+        let mut reverse = Metrics::default();
+        reverse.record_completion(KernelKind::Matmul, 3000, 0, 10, 0, true, false);
+        reverse.record_completion(KernelKind::Bfs, 2000, 0, 10, 0, true, false);
+        reverse.record_completion(KernelKind::Axpy, 1000, 0, 10, 0, true, false);
+        assert_eq!(forward.summary(), reverse.summary());
+        // And twice from the same state is byte-identical.
+        assert_eq!(forward.summary(), forward.summary());
     }
 
     #[test]

@@ -208,8 +208,8 @@ fn dispatch_loop(
     // peek of the sweep cache, so a long-lived service never grows the
     // process-wide cache.
     let sim_cache_key = crate::sweep::cache::config_key(&cfg);
-    let mut sim_totals: std::collections::HashMap<OffloadRequest, (crate::sim::Time, u64)> =
-        std::collections::HashMap::new();
+    let mut sim_totals: std::collections::BTreeMap<OffloadRequest, (crate::sim::Time, u64)> =
+        std::collections::BTreeMap::new();
 
     while let Some(req) = queue.pop() {
         let routine = req.routine.unwrap_or(RoutineKind::Multicast);

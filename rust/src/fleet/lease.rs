@@ -197,19 +197,26 @@ impl Heartbeat {
             let (path, lease) = (path.clone(), lease.clone());
             let (stop, seq) = (Arc::clone(&stop), Arc::clone(&seq));
             std::thread::spawn(move || {
+                // ordering: Relaxed — stop is an advisory quit flag; halt
+                // joins the thread, and the join itself orders everything
+                // the beater wrote before any post-halt reads.
                 while !stop.load(Ordering::Relaxed) {
                     // Sleep in small slices so finish()/drop return
                     // promptly even with a long TTL.
                     let mut slept = Duration::ZERO;
+                    // ordering: Relaxed — same advisory stop flag.
                     while slept < period && !stop.load(Ordering::Relaxed) {
                         let slice = (period - slept).min(Duration::from_millis(20));
                         std::thread::sleep(slice);
                         slept += slice;
                     }
+                    // ordering: Relaxed — same advisory stop flag.
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
                     let mut beat = lease.clone();
+                    // ordering: Relaxed — seq is only a beat counter; the
+                    // lease itself is published via the file write.
                     beat.seq = seq.fetch_add(1, Ordering::Relaxed) + 1;
                     // A transiently unwritable shared directory must not
                     // kill the worker; a few missed beats only risk one
@@ -229,10 +236,13 @@ impl Heartbeat {
 
     /// Heartbeats written so far (the initial write is seq 0).
     pub fn seq(&self) -> u64 {
+        // ordering: Relaxed — diagnostic beat count, no payload behind it.
         self.seq.load(Ordering::Relaxed)
     }
 
     fn halt(&mut self) {
+        // ordering: Relaxed — advisory quit flag; the join below is the
+        // real synchronization point with the beater thread.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
@@ -244,6 +254,8 @@ impl Heartbeat {
     pub fn finish(mut self) -> anyhow::Result<()> {
         self.halt();
         let mut fin = self.lease.clone();
+        // ordering: Relaxed — halt() joined the beater, so this read is
+        // already ordered after its last fetch_add.
         fin.seq = self.seq.load(Ordering::Relaxed) + 1;
         fin.state = LeaseState::Done;
         write(&self.path, &fin)

@@ -767,6 +767,7 @@ mod tests {
 
     impl Launcher for InProcess {
         fn launch(&self, task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+            // ordering: Relaxed — test-only launch tally.
             self.launches.fetch_add(1, Ordering::Relaxed);
             Ok(Box::new(InProcessWorker {
                 spec: self.spec.clone(),
@@ -797,6 +798,7 @@ mod tests {
 
     impl Launcher for NeverExits {
         fn launch(&self, _task: &WorkerTask) -> anyhow::Result<Box<dyn WorkerHandle>> {
+            // ordering: Relaxed — test-only launch tally.
             self.launches.fetch_add(1, Ordering::Relaxed);
             Ok(Box::new(Immortal))
         }
@@ -820,6 +822,7 @@ mod tests {
         assert_eq!(report.shards[0].restarts, 0);
         assert_eq!(report.shards[1].restarts, 1, "the failed attempt was relaunched");
         assert_eq!(report.restarts(), 1);
+        // ordering: Relaxed — test-only tally; the run has joined.
         assert_eq!(launcher.launches.load(Ordering::Relaxed), 3);
         assert!(report.merged.exists());
         // Cache-only run: every line is labelled, nothing read from disk.
@@ -920,9 +923,11 @@ mod tests {
             // Wait until the scheduler is live (it has launched), then
             // outlast several TTLs to prove heartbeats keep it alive.
             let deadline = Instant::now() + Duration::from_secs(30);
+            // ordering: Relaxed — test-only poll of the launch tally.
             while launches.load(Ordering::Relaxed) == 0 && Instant::now() < deadline {
                 std::thread::sleep(Duration::from_millis(10));
             }
+            // ordering: Relaxed — same test-only tally.
             assert!(launches.load(Ordering::Relaxed) >= 1, "scheduler never launched");
             std::thread::sleep(Duration::from_millis(2500));
             std::fs::write(cancel_path(&o.lease_dir()), "cancel\n").unwrap();

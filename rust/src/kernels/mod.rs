@@ -21,7 +21,7 @@ pub mod matmul;
 pub mod montecarlo;
 
 /// Kernel families.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum KernelKind {
     Axpy,
     MonteCarlo,
@@ -53,8 +53,10 @@ impl KernelKind {
     }
 }
 
-/// A fully-specified job: kernel + problem size.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// A fully-specified job: kernel + problem size. `Ord` (derived, so
+/// variant order then field order) lets sim-domain containers key on
+/// jobs deterministically instead of in hash order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum JobSpec {
     /// AXPY over vectors of length `n` (paper's running example).
     Axpy { n: u64 },

@@ -113,10 +113,12 @@
 //! | serving | [`coordinator`] (overlapped job scheduling, occupancy model), [`serve`] (TCP daemon: admission control, memoization, load generator), [`runtime`] (PJRT numerics, JSON) |
 //! | observability | [`obs`] (Perfetto timelines, store-wide overhead reports, JSONL event log, Prometheus metrics, distributed tracing spans, flight recorder, recorded-traffic interference curves) |
 //! | support | [`rng`] |
+//! | static analysis | [`analysis`] (determinism-domain audit: manifest, rule engine, deterministic reports; `occamy audit`) |
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod analysis;
 pub mod bench;
 pub mod campaign;
 pub mod cluster;

@@ -11,6 +11,7 @@
 //!   serve [--oneshot] --jobs N [--artifacts DIR] [--timing-only] [--seed S] [--inflight W]
 //!   loadgen --connect ADDR [--requests N] [--seed S] [--process poisson|bursty|diurnal]
 //!   bench <serve|des> [--requests N] [--inflight W] [--reps R] [--out FILE] [--baseline FILE]
+//!   audit [--json] [--deny] [--manifest F] [PATHS..]
 //!   validate-artifacts [--artifacts DIR]
 //!   model --kernel K --size N [--config F]
 //!   config-dump
@@ -21,11 +22,12 @@
 //! The binary is self-contained after `make artifacts`: python never runs
 //! on the request path.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::time::Duration;
 
+use occamy_offload::analysis;
 use occamy_offload::bench::Bench;
 use occamy_offload::campaign::{self, CampaignSpec, HostSpec, Shard, TraceStore};
 use occamy_offload::config::Config;
@@ -64,7 +66,9 @@ fn main() -> ExitCode {
 /// Tiny flag parser: positionals + `--key value` + `--flag`.
 struct Args {
     positional: Vec<String>,
-    flags: HashMap<String, String>,
+    // Ordered so diagnostics that list flags (reject_unknown) render in a
+    // deterministic order without an explicit sort.
+    flags: BTreeMap<String, String>,
 }
 
 /// Flags that never take a value, across every subcommand: a bare token
@@ -72,8 +76,10 @@ struct Args {
 /// (`fleet gc --dry-run spec.toml` must not swallow the spec).
 const BOOLEAN_FLAGS: &[&str] = &[
     "csv",
+    "deny",
     "dry-run",
     "help",
+    "json",
     "local",
     "metrics",
     "no-stats",
@@ -89,7 +95,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
 impl Args {
     fn parse(args: &[String]) -> Self {
         let mut positional = Vec::new();
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         let mut i = 0;
         while i < args.len() {
             if let Some(name) = args[i].strip_prefix("--") {
@@ -139,13 +145,13 @@ impl Args {
         if self.has("help") {
             anyhow::bail!("{USAGE}");
         }
-        let mut unknown: Vec<&str> = self
+        // BTreeMap keys iterate sorted, so the message is deterministic.
+        let unknown: Vec<&str> = self
             .flags
             .keys()
             .map(String::as_str)
             .filter(|f| !allowed.contains(f))
             .collect();
-        unknown.sort_unstable();
         if !unknown.is_empty() {
             let unknown: Vec<String> = unknown.iter().map(|f| format!("--{f}")).collect();
             let allowed: Vec<String> = allowed.iter().map(|f| format!("--{f}")).collect();
@@ -228,7 +234,7 @@ fn emit(table: Table, csv: bool) {
     }
 }
 
-const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfere|serve|loadgen|bench|validate-artifacts|model|config-dump> [options]
+const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfere|serve|loadgen|bench|audit|validate-artifacts|model|config-dump> [options]
   experiment <fig7|fig8|fig9|fig10|fig11|fig12|ablation|interference|all> [--csv] [--config F]
              [--profile reference|fast]   (fast = elision engine, bit-identical results)
   campaign run      --spec F [--shard i/N] [--out DIR] [--store DIR] [--no-store] [--max-points N]
@@ -264,6 +270,9 @@ const USAGE: &str = "usage: occamy <experiment|campaign|fleet|trace|sim|interfer
               (exit nonzero on p99-latency or jobs/sim-s regression)
   bench des   [--reps R] [--clusters C] [--out FILE] [--config F]
               [--baseline FILE [--max-regress-pct P]]   (fast-engine event-elision benchmark)
+  audit [--json] [--deny] [--manifest F] [PATHS..]
+        (determinism-domain static analysis of the repo's own sources against rust/analysis.toml;
+        default path rust/src, --deny exits nonzero on any finding, --json is byte-deterministic)
   validate-artifacts [--artifacts DIR]
   model --kernel K --size N [--config F]
   config-dump";
@@ -285,6 +294,7 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         "serve" => cmd_serve(&a),
         "loadgen" => cmd_loadgen(&a),
         "bench" => cmd_bench(&a),
+        "audit" => cmd_audit(&a),
         "validate-artifacts" => cmd_validate(&a),
         "model" => cmd_model(&a),
         "config-dump" => {
@@ -1687,6 +1697,50 @@ fn cmd_bench_des(a: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `occamy audit`: run the determinism-domain static analysis over the
+/// given paths (default: the crate's own sources) and render the report.
+/// With `--deny`, any finding makes the process exit nonzero — the CI
+/// gate. The report is byte-deterministic: findings sorted by position,
+/// `--json` rendered with sorted keys on a single line.
+fn cmd_audit(a: &Args) -> anyhow::Result<()> {
+    a.reject_unknown("audit", &["deny", "json", "manifest"], usize::MAX)?;
+    let manifest = match a.flag("manifest") {
+        None => analysis::Manifest::builtin(),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read manifest {path}: {e}"))?;
+            analysis::Manifest::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?
+        }
+    };
+    let paths: Vec<PathBuf> = if a.positional.is_empty() {
+        vec![default_audit_root()?]
+    } else {
+        a.positional.iter().map(PathBuf::from).collect()
+    };
+    let report = analysis::audit_paths(&manifest, &paths)?;
+    if a.has("json") {
+        print!("{}", analysis::render_json(&report));
+    } else {
+        print!("{}", analysis::render_text(&report));
+    }
+    if a.has("deny") && !report.findings.is_empty() {
+        anyhow::bail!("audit --deny: {} finding(s)", report.findings.len());
+    }
+    Ok(())
+}
+
+/// The default audit root: the crate sources relative to the repo root
+/// (`rust/src`) or to the crate directory (`src`), whichever exists.
+fn default_audit_root() -> anyhow::Result<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!("no rust/src or src directory here; pass audit paths explicitly")
 }
 
 fn cmd_validate(a: &Args) -> anyhow::Result<()> {

@@ -51,11 +51,15 @@ fn recorder() -> &'static Recorder {
 /// dump header's `dropped`.
 pub fn note(line: &str) {
     let r = recorder();
+    // ordering: Relaxed — the fetch_add's RMW atomicity alone hands each
+    // writer a distinct slot index; the line itself is published through
+    // the slot Mutex, so the head carries no payload to synchronize.
     let i = r.head.fetch_add(1, Ordering::Relaxed) % CAPACITY;
     r.noted.fetch_add(1, Ordering::Relaxed);
     match r.slots[i].try_lock() {
         Ok(mut slot) => *slot = Some(line.to_string()),
         Err(_) => {
+            // ordering: Relaxed — diagnostic tally for the dump header.
             r.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -92,11 +96,13 @@ pub fn dump(reason: &str) -> Option<PathBuf> {
     std::fs::create_dir_all(&dir).ok()?;
     let path = dir.join(format!("{reason}-{}.jsonl", std::process::id()));
     let mut out = String::new();
+    // ordering: Relaxed — best-effort counter snapshot for the header;
+    // a dump racing live writers is inherently approximate.
+    let dropped = r.dropped.load(Ordering::Relaxed);
+    let noted = r.noted.load(Ordering::Relaxed);
     out.push_str(&format!(
-        "{{\"capacity\":{CAPACITY},\"dropped\":{},\"flight\":{},\"noted\":{}}}\n",
-        r.dropped.load(Ordering::Relaxed),
+        "{{\"capacity\":{CAPACITY},\"dropped\":{dropped},\"flight\":{},\"noted\":{noted}}}\n",
         Json::Str(reason.to_string()),
-        r.noted.load(Ordering::Relaxed),
     ));
     for line in snapshot() {
         out.push_str(&line);
@@ -109,6 +115,8 @@ pub fn dump(reason: &str) -> Option<PathBuf> {
 /// The retained lines, oldest first.
 pub fn snapshot() -> Vec<String> {
     let r = recorder();
+    // ordering: Relaxed — head only picks the oldest-first walk order;
+    // the lines themselves are read under each slot's Mutex.
     let head = r.head.load(Ordering::Relaxed);
     let mut out = Vec::new();
     for k in 0..CAPACITY {

@@ -219,6 +219,11 @@ static GLOBAL: OnceLock<EventLog> = OnceLock::new();
 pub fn init(log: EventLog) -> bool {
     let installed = GLOBAL.set(log).is_ok();
     if installed {
+        // ordering: Release — pairs with the Acquire load in `enabled`;
+        // a thread that observes the flag must also observe the fully
+        // initialized GLOBAL sink it gates. (OnceLock::get synchronizes
+        // too, so this is belt-and-braces, but the pairing keeps the
+        // fast-path flag self-sufficient.)
         ENABLED.store(true, Ordering::Release);
     }
     installed
@@ -246,6 +251,8 @@ pub fn init_from_env() -> anyhow::Result<()> {
 
 /// Fast-path check for call sites: one atomic load when logging is off.
 pub fn enabled() -> bool {
+    // ordering: Acquire — pairs with the Release store in `init`: seeing
+    // `true` here happens-after the sink installation completed.
     ENABLED.load(Ordering::Acquire)
 }
 

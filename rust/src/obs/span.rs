@@ -128,9 +128,10 @@ static AMBIENT: OnceLock<Option<TraceContext>> = OnceLock::new();
 /// effect. An unparseable value is ignored rather than fatal — tracing
 /// must never fail a workload.
 pub fn init_ambient(flag: Option<&str>) -> Option<TraceContext> {
-    let parsed = flag
-        .and_then(TraceContext::parse)
-        .or_else(|| std::env::var(ENV_TRACE_PARENT).ok().as_deref().and_then(TraceContext::parse));
+    let parsed = flag.and_then(TraceContext::parse).or_else(|| {
+        // audit:allow(entropy-in-sim) -- traceparent inheritance from the parent process; span ids derived from it stay deterministic
+        std::env::var(ENV_TRACE_PARENT).ok().as_deref().and_then(TraceContext::parse)
+    });
     let _ = AMBIENT.set(parsed);
     ambient()
 }

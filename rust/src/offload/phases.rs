@@ -4,7 +4,9 @@
 use crate::sim::Time;
 
 /// Which implementation of the offload process to execute (§4.1/§4.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` so requests can key ordered (`BTreeMap`) containers — sim-domain
+/// code must never iterate hash order into its output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum RoutineKind {
     /// The bare-metal baseline: job info to cluster 0, sequential IPIs,
     /// remote pointer/argument retrieval, central-counter software

@@ -64,6 +64,10 @@ impl Server {
             let shutdown = Arc::clone(&shutdown);
             let sessions = Arc::clone(&sessions);
             std::thread::spawn(move || {
+                // ordering: SeqCst — rare single-flag transition (one
+                // store at shutdown, polled at accept/read timeouts);
+                // the total order costs nothing here and spares every
+                // reader a pairing argument.
                 while !shutdown.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
@@ -102,6 +106,8 @@ impl Server {
 
     /// True once a client has requested shutdown.
     pub fn is_shutting_down(&self) -> bool {
+        // ordering: SeqCst — see the accept loop: one rare flag, total
+        // order by policy.
         self.shutdown.load(Ordering::SeqCst)
     }
 
@@ -157,6 +163,8 @@ fn session(stream: TcpStream, engine: Arc<Mutex<Engine>>, shutdown: Arc<AtomicBo
                 }
             }
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // ordering: SeqCst — same shutdown flag as the accept
+                // loop; total order by policy.
                 if shutdown.load(Ordering::SeqCst) {
                     return;
                 }
@@ -197,6 +205,8 @@ fn answer(
     if is_shutdown {
         // Stop the accept loop; other sessions notice on their next
         // read-timeout poll.
+        // ordering: SeqCst — the single store of the shutdown flag; all
+        // pollers use SeqCst, so every thread agrees on the transition.
         shutdown.store(true, Ordering::SeqCst);
         return true;
     }

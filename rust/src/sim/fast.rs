@@ -43,7 +43,7 @@
 //! authority.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
@@ -364,6 +364,8 @@ impl<E> Backend<E> {
     /// [`stats`] snapshot. Call exactly once, after the run drains.
     pub fn flush_counters(&self) {
         if let Backend::Fast(q) = self {
+            // ordering: Relaxed — independent monotone counters; no other
+            // memory is published through them, totals-only semantics.
             FF_JUMPS.fetch_add(q.ff_jumps, AtomicOrdering::Relaxed);
             HEAP_ELIDED.fetch_add(q.heap_bypassed, AtomicOrdering::Relaxed);
             STALE_SKIPPED.fetch_add(q.elided, AtomicOrdering::Relaxed);
@@ -406,6 +408,8 @@ pub struct FastStats {
 /// Snapshot the process-wide fast-profile counters.
 pub fn stats() -> FastStats {
     FastStats {
+        // ordering: Relaxed — diagnostic snapshot of independent counters;
+        // no cross-counter consistency is promised to callers.
         fast_forward_jumps: FF_JUMPS.load(AtomicOrdering::Relaxed),
         heap_events_elided: HEAP_ELIDED.load(AtomicOrdering::Relaxed),
         stale_events_skipped: STALE_SKIPPED.load(AtomicOrdering::Relaxed),
@@ -415,14 +419,17 @@ pub fn stats() -> FastStats {
     }
 }
 
-fn timeline() -> &'static Mutex<HashMap<String, Arc<Trace>>> {
-    static MEMO: OnceLock<Mutex<HashMap<String, Arc<Trace>>>> = OnceLock::new();
-    MEMO.get_or_init(|| Mutex::new(HashMap::new()))
+// Ordered map, not a hash map: the memoizer lives in the sim domain
+// (audit forbids unordered iteration there), and keeping it a BTreeMap
+// means any future walk over it is deterministic by construction.
+fn timeline() -> &'static Mutex<BTreeMap<String, Arc<Trace>>> {
+    static MEMO: OnceLock<Mutex<BTreeMap<String, Arc<Trace>>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(BTreeMap::new()))
 }
 
 /// Poison-recovering lock, same rationale as `sweep::cache`: the map
 /// only ever sees plain inserts of immutable `Arc<Trace>`s.
-fn lock_timeline() -> MutexGuard<'static, HashMap<String, Arc<Trace>>> {
+fn lock_timeline() -> MutexGuard<'static, BTreeMap<String, Arc<Trace>>> {
     timeline().lock().unwrap_or_else(PoisonError::into_inner)
 }
 
@@ -439,6 +446,8 @@ pub fn timeline_key(config_toml: &str, request_key: &str) -> String {
 pub fn timeline_lookup(key: &str) -> Option<Arc<Trace>> {
     let hit = lock_timeline().get(key).map(Arc::clone);
     match &hit {
+        // ordering: Relaxed — hit/miss tallies are diagnostics only;
+        // nothing reads them to order access to the memoized traces.
         Some(_) => TIMELINE_HITS.fetch_add(1, AtomicOrdering::Relaxed),
         None => TIMELINE_MISSES.fetch_add(1, AtomicOrdering::Relaxed),
     };

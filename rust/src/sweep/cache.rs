@@ -11,7 +11,7 @@
 //! coordinator use [`peek`] + their own lightweight totals memo instead
 //! of inserting full traces here, and [`clear`] exists for tests.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 use crate::config::Config;
@@ -19,11 +19,15 @@ use crate::sim::{SimProfile, Trace};
 
 use super::request::OffloadRequest;
 
-type Shard = HashMap<OffloadRequest, Arc<Trace>>;
+// Ordered maps, not hash maps: the cache sits in the sim domain, where
+// `occamy audit` forbids unordered iteration — `cached_runs` walks the
+// shards, and a BTreeMap makes that walk (and any future one)
+// deterministic by construction.
+type Shard = BTreeMap<OffloadRequest, Arc<Trace>>;
 
-fn cache() -> &'static Mutex<HashMap<String, Shard>> {
-    static CACHE: OnceLock<Mutex<HashMap<String, Shard>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn cache() -> &'static Mutex<BTreeMap<String, Shard>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<String, Shard>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
 }
 
 /// Lock the cache, recovering from poisoning. A worker that panics while
@@ -31,7 +35,7 @@ fn cache() -> &'static Mutex<HashMap<String, Shard>> {
 /// inserts of immutable `Arc<Trace>`s), so the poison flag carries no
 /// information — and propagating it would wedge every remaining worker of
 /// a campaign shard behind one panicking sweep.
-fn lock() -> MutexGuard<'static, HashMap<String, Shard>> {
+fn lock() -> MutexGuard<'static, BTreeMap<String, Shard>> {
     cache().lock().unwrap_or_else(PoisonError::into_inner)
 }
 

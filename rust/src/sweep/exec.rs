@@ -53,6 +53,9 @@ pub(crate) fn execute(
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
+                // ordering: Relaxed — the RMW atomicity alone hands each
+                // worker a unique index; results are published through
+                // the per-slot OnceLock, not through this counter.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= points.len() {
                     break;

@@ -11,9 +11,10 @@ use crate::sim::{SimProfile, Time, Trace};
 
 /// One fully-specified DES run: which job, on how many clusters, with
 /// which offload routine. Doubles as the trace-cache key (it is
-/// `Copy + Eq + Hash`) and as the point identity of the campaign
-/// store's on-disk layout.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Copy + Eq + Ord + Hash`) and as the point identity of the campaign
+/// store's on-disk layout; `Ord` keeps every container keyed on
+/// requests iterable in a deterministic order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct OffloadRequest {
     pub spec: JobSpec,
     pub n_clusters: usize,

@@ -1,0 +1,198 @@
+//! End-to-end tests of the determinism-domain auditor: planted
+//! violations are found at exact `path:line`, pragmas suppress (and
+//! malformed pragmas are themselves findings), unclassified modules are
+//! rejected, the report renders byte-identically across runs, and —
+//! the actual gate — the crate's own sources scan clean under the
+//! built-in manifest.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use occamy_offload::analysis::{self, rules, Manifest};
+
+fn occamy<S: AsRef<std::ffi::OsStr>>(args: &[S], cwd: Option<&Path>) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_occamy"));
+    cmd.args(args);
+    if let Some(dir) = cwd {
+        cmd.current_dir(dir);
+    }
+    cmd.output().expect("spawn occamy")
+}
+
+/// A scratch tree with one planted fixture per rule plus an
+/// unclassified module; returns (root, manifest text).
+fn plant_fixtures(tag: &str) -> (PathBuf, String) {
+    let dir = std::env::temp_dir().join(format!("occamy-audit-it-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    let src = dir.join("src");
+    fs::create_dir_all(&src).unwrap();
+
+    let sim_src = concat!(
+        "use std::collections::HashMap;\n",
+        "pub fn f(x: &std::sync::atomic::AtomicU64) -> f64 {\n",
+        "    let _t = std::time::Instant::now();\n",
+        "    let _e = std::env::var(\"SEED\");\n",
+        "    let m: HashMap<u32, f64> = HashMap::new();\n",
+        "    for (_k, _v) in m.iter() {}\n",
+        "    x.store(1, Ordering::Relaxed);\n",
+        "    m.values().sum::<f64>()\n",
+        "}\n",
+    );
+    fs::write(src.join("simmod.rs"), sim_src).unwrap();
+
+    let wall_src = concat!(
+        "pub fn stop(f: &std::sync::atomic::AtomicBool) {\n",
+        "    let _t = std::time::Instant::now();\n",
+        "    f.store(true, Ordering::SeqCst);\n",
+        "}\n",
+    );
+    fs::write(src.join("wallmod.rs"), wall_src).unwrap();
+
+    let pragma_src = concat!(
+        "pub fn f() {\n",
+        "    // audit:allow(entropy-in-sim) -- fixture: seed comes from the env\n",
+        "    let _a = std::env::var(\"A\");\n",
+        "    // audit:allow(entropy-in-sim)\n",
+        "    let _b = std::env::var(\"B\");\n",
+        "}\n",
+    );
+    fs::write(src.join("pragmamod.rs"), pragma_src).unwrap();
+
+    fs::write(src.join("mystery.rs"), "pub fn nothing() {}\n").unwrap();
+
+    let manifest = concat!(
+        "[modules]\n",
+        "pragmamod = \"sim\"\n",
+        "simmod = \"sim\"\n",
+        "wallmod = \"wall\"\n",
+    );
+    (dir, manifest.to_string())
+}
+
+/// (file-name suffix, line, rule) triples of a report, for compact
+/// comparison against the planted expectations.
+fn triples(report: &analysis::Report) -> Vec<(String, usize, &'static str)> {
+    let mut out = Vec::new();
+    for f in &report.findings {
+        let name = f.path.rsplit('/').next().unwrap_or(&f.path).to_string();
+        out.push((name, f.line, f.rule));
+    }
+    out
+}
+
+#[test]
+fn planted_violations_are_found_at_exact_lines() {
+    let (dir, manifest) = plant_fixtures("planted");
+    let m = Manifest::parse(&manifest).unwrap();
+    let report = analysis::audit_paths(&m, &[dir.join("src")]).unwrap();
+
+    let expected: Vec<(String, usize, &'static str)> = vec![
+        ("mystery.rs".to_string(), 1, rules::UNKNOWN_MODULE),
+        ("pragmamod.rs".to_string(), 4, rules::BAD_PRAGMA),
+        ("pragmamod.rs".to_string(), 5, rules::ENTROPY_IN_SIM),
+        ("simmod.rs".to_string(), 3, rules::WALL_CLOCK_IN_SIM),
+        ("simmod.rs".to_string(), 4, rules::ENTROPY_IN_SIM),
+        ("simmod.rs".to_string(), 6, rules::UNORDERED_ITERATION),
+        ("simmod.rs".to_string(), 7, rules::RELAXED_ORDERING),
+        ("simmod.rs".to_string(), 8, rules::FLOAT_REDUCTION_ORDER),
+        ("simmod.rs".to_string(), 8, rules::UNORDERED_ITERATION),
+        ("wallmod.rs".to_string(), 3, rules::RELAXED_ORDERING),
+    ];
+    assert_eq!(triples(&report), expected, "{}", analysis::render_text(&report));
+    // The valid pragma silenced exactly one finding; 4 files scanned.
+    assert_eq!(report.suppressed, 1);
+    assert_eq!(report.files, 4);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reports_are_byte_identical_across_runs() {
+    let (dir, manifest) = plant_fixtures("stable");
+    let m = Manifest::parse(&manifest).unwrap();
+    let a = analysis::audit_paths(&m, &[dir.join("src")]).unwrap();
+    let b = analysis::audit_paths(&m, &[dir.join("src")]).unwrap();
+    assert_eq!(analysis::render_json(&a), analysis::render_json(&b));
+    assert_eq!(analysis::render_text(&a), analysis::render_text(&b));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The gate: this repository's own sources must scan clean under the
+/// built-in manifest. A new finding here means either fix the code or
+/// justify it with an `audit:allow(<rule>) -- reason` pragma.
+#[test]
+fn self_scan_of_crate_sources_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = analysis::audit_paths(&Manifest::builtin(), &[src]).unwrap();
+    assert!(report.findings.is_empty(), "\n{}", analysis::render_text(&report));
+    assert!(report.files > 40, "expected the whole tree, scanned {}", report.files);
+}
+
+#[test]
+fn cli_deny_gates_on_findings() {
+    let (dir, manifest) = plant_fixtures("cli-deny");
+    let manifest_path = dir.join("analysis.toml");
+    fs::write(&manifest_path, &manifest).unwrap();
+    let src = dir.join("src");
+    let margs = ["--manifest", manifest_path.to_str().unwrap()];
+
+    // Without --deny: findings are reported but the exit is zero.
+    let out = occamy(&["audit", margs[0], margs[1], src.to_str().unwrap()], None);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(stdout.contains("wall-clock-in-sim"), "{stdout}");
+    assert!(stdout.contains("simmod.rs:3:"), "{stdout}");
+    assert!(stdout.contains("file(s) scanned"), "{stdout}");
+
+    // With --deny: same report, nonzero exit.
+    let out = occamy(&["audit", "--deny", margs[0], margs[1], src.to_str().unwrap()], None);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("finding(s)"));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_json_is_byte_identical_across_runs() {
+    let (dir, manifest) = plant_fixtures("cli-json");
+    let manifest_path = dir.join("analysis.toml");
+    fs::write(&manifest_path, &manifest).unwrap();
+    let src = dir.join("src");
+    let args = [
+        "audit",
+        "--json",
+        "--manifest",
+        manifest_path.to_str().unwrap(),
+        src.to_str().unwrap(),
+    ];
+    let a = occamy(&args, None);
+    let b = occamy(&args, None);
+    assert!(a.status.success() && b.status.success());
+    assert_eq!(a.stdout, b.stdout, "JSON report must be byte-deterministic");
+    let text = String::from_utf8_lossy(&a.stdout).into_owned();
+    assert_eq!(text.lines().count(), 1, "single-line JSON: {text}");
+    assert!(text.starts_with('{'), "{text}");
+    assert!(text.contains("\"unordered-iteration\""), "{text}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_self_scan_passes_under_deny() {
+    // From the crate directory, `audit --deny` resolves `src` and must
+    // exit zero — the same invocation CI runs from the repo root.
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let out = occamy(&["audit", "--deny"], Some(crate_dir));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(out.status.success(), "{stdout}{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("audit: 0 finding(s)"), "{stdout}");
+}
+
+#[test]
+fn cli_rejects_unknown_flags_and_bad_paths() {
+    let out = occamy(&["audit", "--frobnicate"], None);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag(s)"));
+
+    let out = occamy(&["audit", "definitely/not/a/dir"], None);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("does not exist"));
+}
